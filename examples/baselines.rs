@@ -1,0 +1,66 @@
+//! FLoCoRA vs the conventional-compression baselines of Table IV:
+//! magnitude pruning [4] and a ZeroFL-style sparse upload [12], all
+//! through the identical aggregation loop (the paper's
+//! aggregation-agnostic claim, demonstrated).
+//!
+//! ```bash
+//! cargo run --release --example baselines [-- --rounds 60]
+//! ```
+
+use flocora::cli::Args;
+use flocora::compression::CodecKind;
+use flocora::config::presets;
+use flocora::coordinator::Simulation;
+use flocora::metrics::Recorder;
+use flocora::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rounds = args.usize_or("rounds", 60).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::new("artifacts")?;
+
+    // (label, tag, rank, codec) — the Table IV method matrix at the
+    // scaled profile. Sparse baselines compress the *full* model's
+    // messages; FLoCoRA ships adapters (optionally quantized).
+    let matrix: &[(&str, &str, usize, CodecKind)] = &[
+        ("FedAvg", "micro8_full", 0, CodecKind::Fp32),
+        ("MagPrune 40%", "micro8_full", 0, CodecKind::TopK(0.6)),
+        ("MagPrune 80%", "micro8_full", 0, CodecKind::TopK(0.2)),
+        ("ZeroFL 90/0.2", "micro8_full", 0, CodecKind::ZeroFl(0.9, 0.2)),
+        ("ZeroFL 90/0.0", "micro8_full", 0, CodecKind::ZeroFl(0.9, 0.0)),
+        ("FLoCoRA r=4", "micro8_lora_fc_r4", 4, CodecKind::Fp32),
+        ("FLoCoRA r=4 Q8", "micro8_lora_fc_r4", 4, CodecKind::Affine(8)),
+    ];
+
+    println!("{:<16} {:>10} {:>12} {:>10}", "method", "final acc",
+             "msg (kB)", "vs full");
+    let mut full_msg = None;
+    for &(label, tag, rank, codec) in matrix {
+        let mut cfg = presets::scaled_micro(tag, rank, codec);
+        cfg.rounds = rounds;
+        cfg.samples_per_client = 64;
+        cfg.eval_every = 4;
+        let mut sim = Simulation::new(&engine, cfg)?;
+        let mut rec = Recorder::new(label);
+        let summary = sim.run(&mut rec)?;
+        let msg = summary.mean_up_msg_bytes;
+        let ratio = match full_msg {
+            None => {
+                full_msg = Some(msg);
+                1.0
+            }
+            Some(full) => full / msg,
+        };
+        println!(
+            "{:<16} {:>10.3} {:>9.1} kB {:>9}",
+            label, summary.final_acc, msg / 1e3, format!("÷{ratio:.1}")
+        );
+    }
+    println!(
+        "\nTable IV shape: FLoCoRA reaches the best accuracy-per-byte; the\n\
+         sparse baselines pay index/bitmap overhead and degrade faster at\n\
+         equal message size."
+    );
+    Ok(())
+}

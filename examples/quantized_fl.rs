@@ -1,0 +1,56 @@
+//! FLoCoRA + affine quantization (paper Table III / Fig. 3 shape): run
+//! the same federation at fp32 / int8 / int4 / int2 wire formats and
+//! print accuracy-vs-TCC, writing one convergence CSV per setting.
+//!
+//! ```bash
+//! cargo run --release --example quantized_fl [-- --rounds 60]
+//! ```
+
+use flocora::cli::Args;
+use flocora::compression::CodecKind;
+use flocora::config::presets;
+use flocora::coordinator::Simulation;
+use flocora::metrics::Recorder;
+use flocora::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rounds = args.usize_or("rounds", 60).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = Engine::new("artifacts")?;
+
+    println!("{:<10} {:>10} {:>14} {:>12}", "codec", "final acc",
+             "per-client TCC", "vs fp32");
+    let mut fp_tcc = None;
+    for codec in [CodecKind::Fp32, CodecKind::Affine(8), CodecKind::Affine(4),
+                  CodecKind::Affine(2)] {
+        let mut cfg = presets::scaled_micro("micro8_lora_fc_r4", 4, codec);
+        cfg.rounds = rounds;
+        cfg.samples_per_client = 64;
+        cfg.eval_every = 4;
+        let mut sim = Simulation::new(&engine, cfg)?;
+        let mut rec = Recorder::new(codec.label());
+        let summary = sim.run(&mut rec)?;
+        rec.write_csv(format!("target/quantized_fl_{}.csv", codec.label()))?;
+        let tcc = summary.per_client_tcc_bytes;
+        let ratio = match fp_tcc {
+            None => {
+                fp_tcc = Some(tcc);
+                1.0
+            }
+            Some(fp) => fp / tcc,
+        };
+        println!(
+            "{:<10} {:>10.3} {:>11.2} kB {:>11}",
+            codec.label(),
+            summary.final_acc,
+            tcc / 1e3,
+            format!("÷{ratio:.1}")
+        );
+    }
+    println!(
+        "\nPaper Table III shape: int8 tracks fp32 closely; int4 degrades \
+         mildly; int2 collapses. Convergence CSVs in target/."
+    );
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""L2 performance analysis (build-time tooling, EXPERIMENTS.md §Perf).
+
+For a given (model, variant, rank) this prints:
+* XLA cost analysis of the compiled train step (flops, bytes accessed);
+* an HLO instruction histogram of the lowered module (fusion health:
+  dominated by fusion/convolution/dot ops, no stray gathers);
+* steady-state step wallclock on this host, pallas-kernel adapters vs
+  the pure-jnp reference path (set by FLOCORA_ADAPTER_IMPL before
+  import — this script re-execs itself to compare both).
+
+Usage:
+    python -m compile.analyze --model micro8 --variant lora_fc --rank 4
+"""
+
+import argparse
+import collections
+import os
+import re
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def build(model: str, variant: str, rank: int):
+    from .configs import MODELS, build_spec
+    from .train import example_shapes, make_train_step
+
+    spec = build_spec(MODELS[model], variant, rank)
+    return spec, make_train_step(spec), example_shapes(spec)
+
+
+def hlo_histogram(hlo_text: str) -> collections.Counter:
+    ops = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+\S+\s+([a-z0-9-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def steady_state_ms(fn, args, iters: int = 15) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e3
+
+
+def analyze(model: str, variant: str, rank: int) -> None:
+    impl = os.environ.get("FLOCORA_ADAPTER_IMPL", "pallas")
+    spec, step, shapes = build(model, variant, rank)
+    jitted = jax.jit(step, keep_unused=True)
+    lowered = jitted.lower(*shapes)
+    compiled = lowered.compile()
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = cost.get("flops", float("nan"))
+    bytes_acc = cost.get("bytes accessed", float("nan"))
+    print(f"[{impl}] {model}/{variant}/r{rank}: "
+          f"P={spec.num_trainable} F={spec.num_frozen}")
+    print(f"[{impl}]   flops/step       : {flops:.3e}")
+    print(f"[{impl}]   bytes accessed   : {bytes_acc:.3e}")
+    if flops == flops and bytes_acc == bytes_acc and bytes_acc > 0:
+        print(f"[{impl}]   arith intensity  : {flops / bytes_acc:.2f}")
+
+    hist = hlo_histogram(lowered.compiler_ir("hlo").as_hlo_text())
+    top = ", ".join(f"{op}:{n}" for op, n in hist.most_common(8))
+    print(f"[{impl}]   hlo ops          : {top}")
+    dyn = hist.get("dynamic-update-slice", 0) + hist.get("dynamic-slice", 0)
+    print(f"[{impl}]   dynamic slices   : {dyn} "
+          f"(pallas interpret-mode grid loops)")
+
+    # Steady-state step time on this host.
+    key = jax.random.PRNGKey(0)
+    args = []
+    for s in shapes:
+        if s.dtype == jnp.int32:
+            args.append(jax.random.randint(key, s.shape, 0, 10))
+        else:
+            args.append(jnp.zeros(s.shape, s.dtype) + 0.1)
+    ms = steady_state_ms(jitted, args)
+    print(f"[{impl}]   step wallclock   : {ms:.1f} ms (this host, CPU)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="micro8")
+    ap.add_argument("--variant", default="lora_fc")
+    ap.add_argument("--rank", type=int, default=4)
+    ap.add_argument("--compare-impls", action="store_true",
+                    help="run both pallas and jnp adapter paths")
+    args = ap.parse_args()
+
+    if args.compare_impls:
+        for impl in ("pallas", "jnp"):
+            env = dict(os.environ, FLOCORA_ADAPTER_IMPL=impl)
+            subprocess.run(
+                [sys.executable, "-m", "compile.analyze",
+                 "--model", args.model, "--variant", args.variant,
+                 "--rank", str(args.rank)],
+                env=env, check=True)
+        return
+    analyze(args.model, args.variant, args.rank)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""AOT pipeline: lower every (model, variant, rank) entry point to HLO
+*text* + write ``artifacts/manifest.json`` for the rust coordinator.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--set core|full] [--only TAG]
+
+Artifact set
+  core: micro8 (all four variants, r=4) + tiny8 (full, lora_fc r{4,8},
+        lora_all/lora_norm r4) + resnet8 (full + lora_fc r32) + quant
+        oracles.  Enough for tests, examples and the scaled experiments.
+  full: + resnet8 lora_fc r{8,16,64,128} (Fig. 2 sweep) + resnet18
+        (full + lora_fc r{16,32,64}) for Table IV paper-scale runs.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs
+from .configs import MODELS, build_spec, spec_tag
+from .kernels.quant import fake_quant
+from .train import (example_eval_shapes, example_shapes, make_eval_step,
+                    make_init, make_train_step)
+
+# (model, variant, rank) triples per set.  rank is ignored for "full".
+CORE_SET = [
+    ("micro8", "full", 0),
+    ("micro8", "lora_all", 4),
+    ("micro8", "lora_norm", 4),
+    ("micro8", "lora_fc", 4),
+    ("micro8", "lora_fc", 2),
+    ("micro8", "lora_fc", 8),
+    ("micro8", "lora_fc", 16),
+    ("tiny8", "full", 0),
+    ("tiny8", "lora_all", 8),
+    ("tiny8", "lora_norm", 8),
+    ("tiny8", "lora_fc", 4),
+    ("tiny8", "lora_fc", 8),
+    ("tiny8", "lora_fc", 16),
+    ("resnet8", "full", 0),
+    ("resnet8", "lora_fc", 32),
+]
+FULL_SET = CORE_SET + [
+    ("resnet8", "lora_fc", 8),
+    ("resnet8", "lora_fc", 16),
+    ("resnet8", "lora_fc", 64),
+    ("resnet8", "lora_fc", 128),
+    ("resnet18", "full", 0),
+    ("resnet18", "lora_fc", 16),
+    ("resnet18", "lora_fc", 32),
+    ("resnet18", "lora_fc", 64),
+]
+
+# Shape of the quant-oracle artifacts: odd column count + a mix of row
+# patterns exercises padding and degenerate rows in the rust parity test.
+QUANT_SHAPE = (64, 129)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> int:
+    # keep_unused=True: the rust runtime always supplies the full typed
+    # argument list; jit's default dead-argument pruning would silently
+    # change the call ABI per variant (e.g. `full` ignores lora_scale).
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*example_args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def segment_json(entries):
+    return [
+        {
+            "name": e.info.name,
+            "shape": list(e.info.shape),
+            "numel": e.info.numel,
+            "kind": e.info.kind,
+            "offset": e.offset,
+            "quant_rows": e.info.quant_rows,
+        }
+        for e in entries
+    ]
+
+
+def emit_spec(spec, out_dir: str, manifest: dict) -> None:
+    tag = spec_tag(spec.config.name, spec.variant, spec.rank)
+    print(f"[aot] lowering {tag} "
+          f"(P={spec.num_trainable} F={spec.num_frozen})", flush=True)
+
+    train_path = f"{tag}.train.hlo.txt"
+    eval_path = f"{tag}.eval.hlo.txt"
+    init_path = f"{tag}.init.hlo.txt"
+
+    lower_to_file(make_train_step(spec), example_shapes(spec),
+                  os.path.join(out_dir, train_path))
+    lower_to_file(make_eval_step(spec), example_eval_shapes(spec),
+                  os.path.join(out_dir, eval_path))
+    key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    lower_to_file(make_init(spec), (key_shape,),
+                  os.path.join(out_dir, init_path))
+
+    cfg = spec.config
+    manifest["specs"][tag] = {
+        "model": cfg.name,
+        "variant": spec.variant,
+        "rank": spec.rank,
+        "image_size": cfg.image_size,
+        "batch_size": cfg.batch_size,
+        "num_classes": cfg.num_classes,
+        "widths": list(cfg.widths),
+        "blocks_per_stage": cfg.blocks_per_stage,
+        "num_trainable": spec.num_trainable,
+        "num_frozen": spec.num_frozen,
+        "files": {"train": train_path, "eval": eval_path, "init": init_path},
+        "trainable_segments": segment_json(spec.trainable),
+        "frozen_segments": segment_json(spec.frozen),
+    }
+
+
+def emit_quant_oracles(out_dir: str, manifest: dict) -> None:
+    rows, cols = QUANT_SHAPE
+    sd = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    for bits in (2, 4, 8):
+        name = f"quant_rt{bits}.hlo.txt"
+        print(f"[aot] lowering quant oracle bits={bits}", flush=True)
+        lower_to_file(lambda w, b=bits: fake_quant(w, b), (sd,),
+                      os.path.join(out_dir, name))
+        manifest["quant_oracles"][str(bits)] = {
+            "file": name, "rows": rows, "cols": cols,
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", choices=("core", "full"), default="core")
+    ap.add_argument("--only", default=None,
+                    help="lower just this tag (plus quant oracles)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    triples = CORE_SET if args.set == "core" else FULL_SET
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    # Incremental: merge into an existing manifest so `--only` additions
+    # and core->full upgrades do not drop earlier entries.
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    else:
+        manifest = {"version": 1, "specs": {}, "quant_oracles": {}}
+
+    for model, variant, rank in triples:
+        spec = build_spec(MODELS[model], variant, rank)
+        tag = spec_tag(model, variant, rank)
+        if args.only and tag != args.only:
+            continue
+        emit_spec(spec, args.out_dir, manifest)
+
+    emit_quant_oracles(args.out_dir, manifest)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {manifest_path} "
+          f"({len(manifest['specs'])} specs)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,230 @@
+"""Model / experiment presets shared between the build path and the rust
+coordinator (via ``artifacts/manifest.json``).
+
+The paper (FLoCoRA, EUSIPCO 2024) evaluates two CIFAR-10 models:
+
+* **ResNet-8** — conv1 + three stages of one BasicBlock, widths
+  (64, 128, 256), GroupNorm instead of BatchNorm (per Hsu et al. [20]),
+  1.23 M parameters (Table I).
+* **ResNet-18** — conv1 + four stages of two BasicBlocks, widths
+  (64, 128, 256, 512), 11.17 M parameters (44.7 MB messages, Table IV).
+
+Because this testbed is CPU-only, we additionally define two scaled
+variants used for tests and reduced-scale accuracy runs (DESIGN.md §2):
+
+* **micro8** — ResNet-8 topology, widths (4, 8, 16), 16x16 images.
+* **tiny8**  — ResNet-8 topology, widths (8, 16, 32), 32x32 images.
+
+Every model is described by a :class:`ModelConfig`; the LoRA *variant*
+axis reproduces Table II's ablation:
+
+* ``full``      — everything trainable (FedAvg baseline).
+* ``lora_all``  — "FLoCoRA Vanilla": LoRA adapters on every conv and on
+                  the final FC; norm layers and FC frozen.
+* ``lora_norm`` — + normalization layers trained.
+* ``lora_fc``   — + final FC trained directly, no FC adapter.  This is
+                  the configuration the paper uses everywhere after
+                  Table II.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+VARIANTS = ("full", "lora_all", "lora_norm", "lora_fc")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (shared with rust)."""
+
+    name: str
+    widths: Tuple[int, ...]          # stage widths; conv1 uses widths[0]
+    blocks_per_stage: int            # 1 => ResNet-8 family, 2 => ResNet-18
+    image_size: int                  # square input, 3 channels
+    num_classes: int = 10
+    batch_size: int = 32
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.widths)
+
+
+MODELS = {
+    "micro8": ModelConfig("micro8", (4, 8, 16), 1, 16, batch_size=8),
+    "tiny8": ModelConfig("tiny8", (8, 16, 32), 1, 32, batch_size=32),
+    "resnet8": ModelConfig("resnet8", (64, 128, 256), 1, 32, batch_size=32),
+    "resnet18": ModelConfig("resnet18", (64, 128, 256, 512), 2, 32, batch_size=32),
+}
+
+
+def group_count(channels: int) -> int:
+    """GroupNorm group count: 8 when divisible, else the largest of
+    (4, 2, 1) that divides ``channels`` (matches the rust mirror)."""
+    for g in (8, 4, 2, 1):
+        if channels % g == 0:
+            return g
+    return 1
+
+
+@dataclass(frozen=True)
+class ParamInfo:
+    """One parameter tensor in the deterministic flat layout.
+
+    ``kind`` drives both trainability (per variant) and the wire-codec
+    quantization grouping on the rust side:
+
+    * ``conv``/``fc_w``/``fc_b``            — base model weights
+    * ``lora_b``  — B in R^{r x I x K x K}  (down-projection conv)
+    * ``lora_a``  — A in R^{O x r x 1 x 1}  (up-projection, zero-init)
+    * ``norm_w``/``norm_b``                 — GroupNorm affine params
+    * ``fc_lora_b``/``fc_lora_a``           — FC adapter (lora_all only)
+    """
+
+    name: str
+    shape: Tuple[int, ...]
+    kind: str
+    # Quantization grouping: number of leading-dim rows ("per channel" for
+    # convs, "per column" i.e. per output unit for FC).  None => never
+    # quantized (norm layers, per paper §IV).
+    quant_rows: Optional[int] = None
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclass
+class LayoutEntry:
+    info: ParamInfo
+    offset: int  # element offset in its flat vector (trainable or frozen)
+
+
+@dataclass
+class ModelSpec:
+    """Fully resolved parameter layout for (model config, variant, rank)."""
+
+    config: ModelConfig
+    variant: str
+    rank: int
+    trainable: List[LayoutEntry] = field(default_factory=list)
+    frozen: List[LayoutEntry] = field(default_factory=list)
+
+    @property
+    def num_trainable(self) -> int:
+        return sum(e.info.numel for e in self.trainable)
+
+    @property
+    def num_frozen(self) -> int:
+        return sum(e.info.numel for e in self.frozen)
+
+    @property
+    def num_total(self) -> int:
+        return self.num_trainable + self.num_frozen
+
+
+def _conv_params(name: str, o: int, i: int, k: int) -> ParamInfo:
+    return ParamInfo(name, (o, i, k, k), "conv", quant_rows=o)
+
+
+def _norm_params(name: str, c: int) -> List[ParamInfo]:
+    return [
+        ParamInfo(f"{name}.w", (c,), "norm_w", quant_rows=None),
+        ParamInfo(f"{name}.b", (c,), "norm_b", quant_rows=None),
+    ]
+
+
+def iter_convs(cfg: ModelConfig):
+    """Yield (name, out_ch, in_ch, kernel, stride) for every conv in the
+    model, in deterministic order.  Downsample (1x1 stride-2) convs on the
+    residual path are included — they are adapted too (DESIGN.md §4)."""
+    w0 = cfg.widths[0]
+    yield ("conv1", w0, 3, 3, 1)
+    in_ch = w0
+    for s, width in enumerate(cfg.widths):
+        stride = 1 if s == 0 else 2
+        for b in range(cfg.blocks_per_stage):
+            bs = stride if b == 0 else 1
+            pre = f"s{s}.b{b}"
+            yield (f"{pre}.conv1", width, in_ch, 3, bs)
+            yield (f"{pre}.conv2", width, width, 3, 1)
+            if bs != 1 or in_ch != width:
+                yield (f"{pre}.down", width, in_ch, 1, bs)
+            in_ch = width
+
+
+def build_spec(cfg: ModelConfig, variant: str, rank: int) -> ModelSpec:
+    """Construct the deterministic parameter layout.
+
+    Ordering rule (mirrored in rust/src/model/spec.rs): parameters are
+    visited conv-by-conv (base conv, then its LoRA pair, then its norm),
+    then the final FC (and its adapter under ``lora_all``).  Within each
+    vector (trainable / frozen) offsets are assigned in visit order.
+    """
+    assert variant in VARIANTS, variant
+    spec = ModelSpec(cfg, variant, rank)
+
+    def add(info: ParamInfo, trainable: bool):
+        side = spec.trainable if trainable else spec.frozen
+        off = sum(e.info.numel for e in side)
+        side.append(LayoutEntry(info, off))
+
+    lora = variant != "full"
+    train_norm = variant in ("full", "lora_norm", "lora_fc")
+    train_fc = variant in ("full", "lora_fc")
+
+    for name, o, i, k, _stride in iter_convs(cfg):
+        add(_conv_params(name, o, i, k), trainable=not lora)
+        if lora:
+            add(ParamInfo(f"{name}.lora_b", (rank, i, k, k), "lora_b",
+                          quant_rows=rank), trainable=True)
+            add(ParamInfo(f"{name}.lora_a", (o, rank, 1, 1), "lora_a",
+                          quant_rows=o), trainable=True)
+        for p in _norm_params(f"{name}.gn", o):
+            add(p, trainable=train_norm)
+
+    d = cfg.widths[-1]
+    c = cfg.num_classes
+    add(ParamInfo("fc.w", (d, c), "fc_w", quant_rows=c), trainable=train_fc)
+    add(ParamInfo("fc.b", (c,), "fc_b", quant_rows=c), trainable=train_fc)
+    if variant == "lora_all":
+        add(ParamInfo("fc.lora_b", (d, rank), "fc_lora_b", quant_rows=rank),
+            trainable=True)
+        add(ParamInfo("fc.lora_a", (rank, c), "fc_lora_a", quant_rows=c),
+            trainable=True)
+    return spec
+
+
+def spec_tag(model: str, variant: str, rank: int) -> str:
+    """Artifact tag, e.g. ``resnet8_lora_fc_r32`` or ``tiny8_full``."""
+    if variant == "full":
+        return f"{model}_full"
+    return f"{model}_{variant}_r{rank}"
+
+
+# ---------------------------------------------------------------------------
+# Paper-reported values (encoded once; used by python tests and exported to
+# the manifest so the rust `experiments::paper` module shares one source).
+# ---------------------------------------------------------------------------
+
+# Table I — ResNet-8 parameter counts (millions / thousands as printed).
+PAPER_TABLE1 = {
+    # rank: (total_params, trained_params)
+    0: (1.23e6, 1.23e6),  # FedAvg row
+    8: (1.30e6, 69.45e3),
+    16: (1.36e6, 131.92e3),
+    32: (1.48e6, 256.84e3),
+    64: (1.73e6, 506.70e3),
+    128: (2.23e6, 1.00e6),
+}
+
+# Table III — TCC over 100 rounds, ResNet-8, r=32, alpha=512.
+PAPER_TABLE3 = {
+    "fedavg_fp": 982.07e6,
+    "flocora_fp": 205.47e6,
+    "flocora_q8": 55.56e6,
+    "flocora_q4": 30.15e6,
+    "flocora_q2": 17.44e6,
+}

@@ -1,0 +1,204 @@
+"""L1 Pallas kernels: the fused low-rank (LoRA) matmul hot path.
+
+The paper's compute insight is the rank-``r`` bottleneck: an adapter
+touches ``r (I K^2 + O)`` weights instead of ``O I K^2``.  On TPU the
+natural expression (DESIGN.md §5) is a fused two-stage matmul
+
+    Y = (X @ B) @ A * scale        X:(M,K)  B:(K,r)  A:(r,N)
+
+where the rank-``r`` intermediate ``T = X @ B`` lives in a VMEM scratch
+accumulator and is fed straight to the MXU for the up-projection — it is
+never materialized to HBM.  The grid iterates over (M-tiles, N-tiles); K
+is kept whole per tile because ``r`` is small (<= 128), so ``T`` is a
+(block_m, r) tile that fits comfortably in VMEM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO (see
+/opt/xla-example/README.md).  Real-TPU performance is *estimated* in
+DESIGN.md §Perf from the VMEM footprint / MXU utilization of these block
+shapes.
+
+Autodiff: ``pallas_call`` has no automatic transpose rule, so
+:func:`lora_matmul` carries a ``custom_vjp`` whose backward pass is built
+from the same fused primitive (the gradients of a low-rank product are
+themselves low-rank products):
+
+    dX = dY @ A^T @ B^T * scale        (fused low-rank, rank r)
+    dB = X^T @ (dY @ A^T) * scale      (tall matmul, r columns)
+    dA = (X @ B)^T @ dY * scale        (tall matmul, r rows)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: N tiles at the MXU native 128; M tiles chosen VMEM-aware
+# (perf pass, EXPERIMENTS.md §Perf): target a ~2 MiB X tile so small-K
+# adapters (K = I*k*k of shallow convs) use few grid steps — fewer
+# HBM<->VMEM handoffs on TPU and ~15% faster interpret-mode steps on CPU
+# — while large-K adapters stay well inside VMEM with double buffering.
+_BN = 128
+_X_TILE_BYTES = 2 << 20
+_BM_MIN = 256
+_BM_MAX = 4096
+
+
+def _pick_block_m(m: int, k: int) -> int:
+    pref = _X_TILE_BYTES // (4 * max(k, 1))
+    pref = max(_BM_MIN, min(_BM_MAX, pref))
+    # round down to a power of two
+    b = 1
+    while b * 2 <= pref:
+        b *= 2
+    while b > m and b > 8:
+        b //= 2
+    return b
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest power-of-two block <= pref that is <= dim (min 8)."""
+    b = pref
+    while b > dim and b > 8:
+        b //= 2
+    return b
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` of ``x`` up to a multiple of ``mult``."""
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _lora_kernel(x_ref, b_ref, a_ref, scale_ref, o_ref):
+    """One (block_m, block_n) output tile.
+
+    x_ref: (bm, K) — an M-tile of X with the full contraction dim.
+    b_ref: (K, r)  — whole B (replicated across the grid).
+    a_ref: (r, bn) — an N-tile of A.
+    scale_ref: (1, 1) scalar in SMEM-like memory.
+    The rank-r intermediate is a (bm, r) register/VMEM value: computed,
+    consumed, discarded — the fusion the docstring describes.
+    """
+    t = jnp.dot(x_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(t, a_ref[...],
+                         preferred_element_type=jnp.float32) * scale_ref[0, 0]
+
+
+def _lora_matmul_raw(x, b, a, scale, *, block_m=None, block_n=None):
+    """Fused (X @ B) @ A * scale via pallas.  Handles ragged M/N by
+    padding to the block grid and slicing the result back."""
+    m, k = x.shape
+    k2, r = b.shape
+    r2, n = a.shape
+    assert k == k2 and r == r2, (x.shape, b.shape, a.shape)
+
+    bm = block_m or _pick_block_m(m, k)
+    bn = block_n or _pick_block(n, _BN)
+    xp = _pad_to(x, 0, bm)
+    ap = _pad_to(a, 1, bn)
+    mp, np_ = xp.shape[0], ap.shape[1]
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _lora_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, b, ap, scale_arr)
+    return out[:m, :n]
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def _matmul_raw(x, y, *, block_m=None, block_n=None):
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm = block_m or _pick_block_m(m, k)
+    bn = block_n or _pick_block(n, _BN)
+    xp = _pad_to(x, 0, bm)
+    yp = _pad_to(y, 1, bn)
+    mp, np_ = xp.shape[0], yp.shape[1]
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable tiled pallas matmul.  Used directly in the forward
+    path (the 1x1 up-projection after a K x K ``B`` conv) and by the
+    fused kernel's VJP, so it needs its own transpose rule — the
+    cotangents are themselves plain matmuls on the raw kernel."""
+    return _matmul_raw(x, y)
+
+
+def _mm_fwd(x, y):
+    return _matmul_raw(x, y), (x, y)
+
+
+def _mm_bwd(res, do):
+    x, y = res
+    return _matmul_raw(do, y.T), _matmul_raw(x.T, do)
+
+
+matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def lora_matmul(x, b, a, scale):
+    """Differentiable fused low-rank product ``(x @ b) @ a * scale``.
+
+    x: (M, K) activations; b: (K, r) down-projection; a: (r, N)
+    up-projection; scale: scalar ``alpha / r``.
+    """
+    return _lora_matmul_raw(x, b, a, scale)
+
+
+def _fwd(x, b, a, scale):
+    return _lora_matmul_raw(x, b, a, scale), (x, b, a, scale)
+
+
+def _bwd(res, dy):
+    x, b, a, scale = res
+    # dX = dY @ A^T @ B^T * scale — itself a fused low-rank product.
+    dx = _lora_matmul_raw(dy, a.T, b.T, scale)
+    # dY @ A^T: (M, r) — small; then dB = X^T @ that.
+    dya = _matmul_raw(dy, a.T)
+    db = _matmul_raw(x.T, dya) * scale
+    # T = X @ B: (M, r); dA = T^T @ dY.
+    t = _matmul_raw(x, b)
+    da = _matmul_raw(t.T, dy) * scale
+    # scale is a hyperparameter constant at runtime; grad not needed but
+    # custom_vjp must return a cotangent for it.
+    dscale = jnp.sum(dy * _lora_matmul_raw(x, b, a, 1.0))
+    return dx, db, da, dscale
+
+
+lora_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,130 @@
+"""L1 performance model: VMEM footprint + MXU utilization estimates for
+the fused low-rank kernel's BlockSpec choices.
+
+``interpret=True`` wallclock on CPU is *not* a TPU proxy (DESIGN.md §5),
+so kernel optimization is structural: pick (block_m, block_n) so that
+
+* the working set fits comfortably in VMEM (~16 MiB/core on TPUv4);
+* the MXU (128x128 systolic array) sees well-shaped matmuls;
+* the rank-r intermediate tile (block_m, r) never round-trips to HBM.
+
+This module computes those numbers; `DESIGN.md` §Perf and
+EXPERIMENTS.md §Perf record the resulting estimates for the shapes the
+paper's models actually run.
+"""
+
+from dataclasses import dataclass
+
+MXU = 128  # systolic array edge
+VMEM_BYTES = 16 * 2 ** 20
+
+
+@dataclass
+class KernelEstimate:
+    m: int
+    k: int
+    r: int
+    n: int
+    block_m: int
+    block_n: int
+    vmem_bytes: int
+    vmem_frac: float
+    mxu_util_stage1: float   # X@B: (bm, k) x (k, r)
+    mxu_util_stage2: float   # T@A: (bm, r) x (r, bn)
+    flops: int
+    hbm_bytes_fused: int     # X, B, A read + Y write (T stays in VMEM)
+    hbm_bytes_unfused: int   # + T write/read round trip
+    arithmetic_intensity_fused: float
+
+    @property
+    def hbm_savings(self) -> float:
+        return self.hbm_bytes_unfused / self.hbm_bytes_fused
+
+
+def _util(dim: int) -> float:
+    """Fraction of the MXU edge filled by a dimension of size ``dim``
+    (a dim above 128 pipelines fully; below, the array idles)."""
+    return min(dim, MXU) / MXU
+
+
+def estimate(m: int, k: int, r: int, n: int,
+             block_m: int, block_n: int) -> KernelEstimate:
+    """Estimate one (block_m, block_n) tiling of ``(X@B)@A``."""
+    f32 = 4
+    # Per-grid-step VMEM working set: X tile + whole B + A tile +
+    # rank-r intermediate + output tile (double-buffered inputs).
+    x_tile = block_m * k * f32
+    b_whole = k * r * f32
+    a_tile = r * block_n * f32
+    t_tile = block_m * r * f32
+    y_tile = block_m * block_n * f32
+    vmem = 2 * (x_tile + b_whole + a_tile) + t_tile + y_tile
+
+    flops = 2 * m * k * r + 2 * m * r * n
+    hbm_fused = (m * k + k * r + r * n + m * n) * f32
+    hbm_unfused = hbm_fused + 2 * m * r * f32
+
+    return KernelEstimate(
+        m=m, k=k, r=r, n=n, block_m=block_m, block_n=block_n,
+        vmem_bytes=vmem,
+        vmem_frac=vmem / VMEM_BYTES,
+        # Stage 1 contracts over k and feeds r output lanes; stage 2
+        # contracts over r. The short dimension gates utilization.
+        mxu_util_stage1=_util(min(block_m, k)) * _util(r),
+        mxu_util_stage2=_util(min(block_m, r)) * _util(block_n),
+        flops=flops,
+        hbm_bytes_fused=hbm_fused,
+        hbm_bytes_unfused=hbm_unfused,
+        arithmetic_intensity_fused=flops / hbm_fused,
+    )
+
+
+def paper_shapes():
+    """The adapter matmuls the paper's models actually execute
+    (batch 32, 32x32 inputs): (label, m, k, r, n)."""
+    return [
+        # ResNet-8 r=32: A-projection after the 3x3 B conv, stage 1.
+        ("resnet8 s0 A-proj", 32 * 32 * 32, 32, 32, 64),
+        # Stage 3 (8x8 spatial, 256 channels).
+        ("resnet8 s2 A-proj", 32 * 8 * 8, 32, 32, 256),
+        # Downsample fused B/A (1x1 conv), stage 2.
+        ("resnet8 s1 down fused", 32 * 16 * 16, 64, 32, 128),
+        # ResNet-18 r=16 deepest stage.
+        ("resnet18 s3 A-proj", 32 * 4 * 4, 16, 16, 512),
+    ]
+
+
+def default_blocks(m: int, n: int, k: int = 64) -> tuple:
+    """Mirror of lora_matmul's VMEM-aware block choice: ~2 MiB X tile,
+    power of two, clamped to [256, 4096] then to the problem size."""
+    pref = max(256, min(4096, (2 << 20) // (4 * max(k, 1))))
+    bm = 1
+    while bm * 2 <= pref:
+        bm *= 2
+    while bm > m and bm > 8:
+        bm //= 2
+    bn = 128
+    while bn > n and bn > 8:
+        bn //= 2
+    return bm, bn
+
+
+def report() -> str:
+    lines = [
+        f"{'shape':<24} {'(m,k,r,n)':<22} {'blk':<10} {'VMEM':>8} "
+        f"{'MXU1':>6} {'MXU2':>6} {'AI':>6} {'HBMx':>6}"
+    ]
+    for label, m, k, r, n in paper_shapes():
+        bm, bn = default_blocks(m, n, k)
+        e = estimate(m, k, r, n, bm, bn)
+        lines.append(
+            f"{label:<24} {str((m, k, r, n)):<22} {f'{bm}x{bn}':<10} "
+            f"{e.vmem_bytes / 1024:>6.0f}KB {e.mxu_util_stage1:>6.2f} "
+            f"{e.mxu_util_stage2:>6.2f} {e.arithmetic_intensity_fused:>6.1f} "
+            f"{e.hbm_savings:>6.2f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: affine round-to-nearest fake-quantization.
+
+Implements the paper's §IV quantization scheme (after Nagel et al. [22]):
+per-row (— "per channel" for convs, "per column" for the FC, once the
+tensor is reshaped to (rows, cols)) asymmetric affine quantization
+
+    scale = (max - min) / (2^bits - 1)
+    zp    = clip(floor(-min / scale + 0.5), 0, 2^bits - 1)
+    q     = clip(floor(w / scale + 0.5) + zp, 0, 2^bits - 1)
+    deq   = (q - zp) * scale
+
+Rounding is *floor(x + 0.5)* (round-half-up), chosen deliberately so the
+rust wire codec (rust/src/compression/affine.rs) can reproduce it
+bit-for-bit; ``jnp.round``'s half-to-even would not match ``f32::round``.
+
+The kernel is the numerical oracle for the rust codec: ``make artifacts``
+emits ``quant_rt{2,4,8}`` HLO from :func:`fake_quant`, and a rust
+integration test asserts ``decode(encode(x)) == HLO(x)`` elementwise.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_half_up(x):
+    return jnp.floor(x + 0.5)
+
+
+def _quant_kernel(w_ref, o_ref, scale_ref, zp_ref, *, bits: int):
+    """One block of rows.  Row-wise min/max reductions stay in VMEM."""
+    w = w_ref[...]
+    qmax = float(2 ** bits - 1)
+    # Extend the row range to include 0 (Nagel et al. [22]): keeps the
+    # zero-point inside [0, qmax] so the grid never shifts and the RTN
+    # error stays bounded by scale/2.
+    wmin = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
+    wmax = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    rng = wmax - wmin
+    # Degenerate all-zero rows: scale would be 0/0; use 1.0 (the row
+    # quantizes to q == zp == 0 and dequantizes to exactly 0).
+    scale = jnp.where(rng > 0, rng / qmax, jnp.ones_like(rng))
+    zp = jnp.clip(_round_half_up(-wmin / scale), 0.0, qmax)
+    q = jnp.clip(_round_half_up(w / scale) + zp, 0.0, qmax)
+    o_ref[...] = (q - zp) * scale
+    scale_ref[...] = scale
+    zp_ref[...] = zp
+
+
+def fake_quant(w: jnp.ndarray, bits: int, *, block_rows: int = 64):
+    """Affine RTN fake-quant over rows of ``w`` (rows, cols).
+
+    Returns ``(deq, scale, zp)`` with ``scale``/``zp`` of shape (rows, 1).
+    """
+    rows, cols = w.shape
+    br = min(block_rows, rows)
+    rem = (-rows) % br
+    wp = jnp.pad(w, ((0, rem), (0, 0))) if rem else w
+    rp = wp.shape[0]
+
+    deq, scale, zp = pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits),
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, cols), jnp.float32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(wp)
+    return deq[:rows], scale[:rows], zp[:rows]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the L1 pallas kernels (the CORE correctness
+signal: python/tests asserts kernel == ref to float tolerance, and the
+rust wire codec is parity-tested against the lowered quant kernel)."""
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, b, a, scale):
+    """(X @ B) @ A * scale, plain jnp."""
+    return (x @ b) @ a * scale
+
+
+def matmul_ref(x, y):
+    return x @ y
+
+
+def fake_quant_ref(w, bits):
+    """Affine RTN fake-quant, row-wise; mirrors kernels/quant.py exactly
+    (floor(x+0.5) rounding, degenerate-row scale := 1.0)."""
+    qmax = float(2 ** bits - 1)
+    wmin = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
+    wmax = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    rng = wmax - wmin
+    scale = jnp.where(rng > 0, rng / qmax, jnp.ones_like(rng))
+    zp = jnp.clip(jnp.floor(-wmin / scale + 0.5), 0.0, qmax)
+    q = jnp.clip(jnp.floor(w / scale + 0.5) + zp, 0.0, qmax)
+    return (q - zp) * scale, scale, zp

@@ -1,0 +1,87 @@
+"""L2 building blocks: conv / GroupNorm / LoRA-adapted conv and FC.
+
+Data layout is NHWC; conv weights are OIHW (matching the manifest layout
+the rust side indexes into).  The adapter decomposition follows Huh et
+al. [19] as used by the paper §III:
+
+    P_l in R^{O x I x K x K}  ->  B in R^{r x I x K x K}   (K x K conv I->r)
+                                  A in R^{O x r x 1 x 1}   (1 x 1 conv r->O)
+
+The frozen base conv runs through ``lax.conv_general_dilated``; the
+adapter's up-projection (and, for 1x1 convs, the whole fused B/A pair)
+runs through the L1 pallas kernels so the low-rank hot path in the lowered
+HLO is the kernel of DESIGN.md §5.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.lora_matmul import lora_matmul as _lora_matmul_pallas
+from .kernels.lora_matmul import matmul as _matmul_pallas
+from .kernels.ref import lora_matmul_ref, matmul_ref
+
+# L2 perf ablation (EXPERIMENTS.md §Perf): FLOCORA_ADAPTER_IMPL=jnp swaps
+# the pallas kernels for the pure-jnp reference at trace time.  Default
+# is the pallas path — the TPU-structured kernel of DESIGN.md §5.
+_IMPL = os.environ.get("FLOCORA_ADAPTER_IMPL", "pallas")
+if _IMPL == "jnp":
+    lora_matmul, matmul = lora_matmul_ref, matmul_ref
+else:
+    lora_matmul, matmul = _lora_matmul_pallas, _matmul_pallas
+
+_DIMNUMS = ("NHWC", "OIHW", "NHWC")
+
+
+def conv2d(x, w, stride=1):
+    """SAME-padded conv, NHWC activations, OIHW weights."""
+    return lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=_DIMNUMS,
+    )
+
+
+def group_norm(x, w, b, groups, eps=1e-5):
+    """GroupNorm over (H, W, C/g) per group; affine (w, b) per channel."""
+    n, h, wd, c = x.shape
+    g = groups
+    xg = x.reshape(n, h, wd, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * lax.rsqrt(var + eps)
+    x = xg.reshape(n, h, wd, c)
+    return x * w.reshape(1, 1, 1, c) + b.reshape(1, 1, 1, c)
+
+
+def lora_conv_delta(x, lora_b, lora_a, scale, stride=1):
+    """Adapter branch of a conv: ``(alpha/r) * A(B(x))``.
+
+    * K x K convs: B via lax.conv (I -> r), then the 1 x 1 up-projection as
+      a pallas matmul over the channel dim (the rank bottleneck).
+    * 1 x 1 convs (residual downsample): the entire B/A pair collapses to
+      the fused low-rank pallas kernel on spatially-subsampled activations
+      — the never-materialize-the-intermediate path.
+    """
+    r, i, kh, kw = lora_b.shape
+    o = lora_a.shape[0]
+    if kh == 1 and kw == 1:
+        xs = x[:, ::stride, ::stride, :]
+        n, h, w, _ = xs.shape
+        b_mat = lora_b.reshape(r, i).T          # (I, r)
+        a_mat = lora_a.reshape(o, r).T          # (r, O)
+        out = lora_matmul(xs.reshape(n * h * w, i), b_mat, a_mat, scale)
+        return out.reshape(n, h, w, o)
+    z = conv2d(x, lora_b, stride)               # (N, H', W', r)
+    n, h, w, _ = z.shape
+    a_mat = lora_a.reshape(o, r).T               # (r, O)
+    out = matmul(z.reshape(n * h * w, r), a_mat) * scale
+    return out.reshape(n, h, w, o)
+
+
+def lora_fc_delta(feats, fc_lora_b, fc_lora_a, scale):
+    """FC adapter (``lora_all`` variant): fused low-rank pallas product."""
+    return lora_matmul(feats, fc_lora_b, fc_lora_a, scale)

@@ -1,0 +1,106 @@
+"""L2 model: CIFAR-style ResNet family with GroupNorm and LoRA adapters.
+
+The forward pass consumes two flat f32 vectors — ``trainable`` and
+``frozen`` — whose segmentation is defined by :mod:`compile.configs`
+(`build_spec`) and exported to the rust coordinator via
+``artifacts/manifest.json``.  Unflattening uses static offsets, so the
+whole model lowers to one fused HLO module with no gather traffic.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import ModelSpec, group_count, iter_convs
+from .layers import conv2d, group_norm, lora_conv_delta, lora_fc_delta
+
+
+def unflatten(spec: ModelSpec, trainable: jnp.ndarray,
+              frozen: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vectors into named parameter tensors."""
+    params = {}
+    for vec, entries in ((trainable, spec.trainable), (frozen, spec.frozen)):
+        for e in entries:
+            seg = vec[e.offset:e.offset + e.info.numel]
+            params[e.info.name] = seg.reshape(e.info.shape)
+    return params
+
+
+def forward(spec: ModelSpec, trainable: jnp.ndarray, frozen: jnp.ndarray,
+            x: jnp.ndarray, lora_scale: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch ``x`` (N, H, W, 3) in [0, 1]."""
+    cfg = spec.config
+    p = unflatten(spec, trainable, frozen)
+    lora = spec.variant != "full"
+
+    def conv(name, h, stride):
+        out = conv2d(h, p[name], stride)
+        if lora:
+            out = out + lora_conv_delta(
+                h, p[f"{name}.lora_b"], p[f"{name}.lora_a"],
+                lora_scale, stride)
+        return group_norm(out, p[f"{name}.gn.w"], p[f"{name}.gn.b"],
+                          group_count(p[name].shape[0]))
+
+    convs = {name: (o, i, k, s) for name, o, i, k, s in iter_convs(cfg)}
+
+    h = jnp.maximum(conv("conv1", x, 1), 0.0)
+    in_ch = cfg.widths[0]
+    for s, width in enumerate(cfg.widths):
+        stride = 1 if s == 0 else 2
+        for b in range(cfg.blocks_per_stage):
+            bs = stride if b == 0 else 1
+            pre = f"s{s}.b{b}"
+            out = jnp.maximum(conv(f"{pre}.conv1", h, bs), 0.0)
+            out = conv(f"{pre}.conv2", out, 1)
+            skip = conv(f"{pre}.down", h, bs) if f"{pre}.down" in convs else h
+            h = jnp.maximum(out + skip, 0.0)
+            in_ch = width
+
+    feats = jnp.mean(h, axis=(1, 2))                     # global avg pool
+    logits = feats @ p["fc.w"] + p["fc.b"]
+    if spec.variant == "lora_all":
+        logits = logits + lora_fc_delta(
+            feats, p["fc.lora_b"], p["fc.lora_a"], lora_scale)
+    return logits
+
+
+def init_params(spec: ModelSpec, key: jnp.ndarray):
+    """He-style init matching the paper's from-scratch setting.
+
+    LoRA pairs follow the standard LoRA convention translated to this
+    naming: the down-projection (``lora_b``) gets a He-normal init, the
+    up-projection (``lora_a``) is zero — the adapter starts as an exact
+    no-op, so every client's round-0 model *is* W_initial.
+    Returns ``(trainable_flat, frozen_flat)``.
+    """
+    sides = []
+    for entries in (spec.trainable, spec.frozen):
+        parts = []
+        for e in entries:
+            info = e.info
+            key, sub = jax.random.split(key)
+            if info.kind == "conv":
+                fan_in = info.shape[1] * info.shape[2] * info.shape[3]
+                w = jax.random.normal(sub, info.shape) * jnp.sqrt(2.0 / fan_in)
+            elif info.kind in ("lora_b", "fc_lora_b"):
+                fan_in = (info.shape[1] * info.shape[2] * info.shape[3]
+                          if len(info.shape) == 4 else info.shape[0])
+                w = jax.random.normal(sub, info.shape) * jnp.sqrt(2.0 / fan_in)
+            elif info.kind in ("lora_a", "fc_lora_a"):
+                w = jnp.zeros(info.shape)
+            elif info.kind == "norm_w":
+                w = jnp.ones(info.shape)
+            elif info.kind in ("norm_b", "fc_b"):
+                w = jnp.zeros(info.shape)
+            elif info.kind == "fc_w":
+                d = info.shape[0]
+                w = jax.random.normal(sub, info.shape) * jnp.sqrt(1.0 / d)
+            else:
+                raise ValueError(info.kind)
+            parts.append(w.reshape(-1).astype(jnp.float32))
+        sides.append(jnp.concatenate(parts) if parts
+                     else jnp.zeros((0,), jnp.float32))
+    return sides[0], sides[1]

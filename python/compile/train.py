@@ -1,0 +1,105 @@
+"""L2 training/eval/init entry points, shaped for AOT lowering.
+
+Each function closes over a :class:`ModelSpec` and takes/returns only
+arrays, so ``aot.py`` can lower it with example ``ShapeDtypeStruct``s and
+the rust coordinator can call it through PJRT with flat buffers:
+
+* ``train_step(trainable, momentum, frozen, x, y, lr, lora_scale)``
+    -> ``(trainable', momentum', loss, acc)``
+  One SGD-with-momentum minibatch step (paper §IV: momentum 0.9; lr and
+  the LoRA ``alpha/r`` scale are runtime scalars so Fig. 2's alpha-sweep
+  and lr schedules need no artifact rebuild).
+
+* ``eval_step(trainable, frozen, x, y, mask)`` -> ``(loss_sum, correct)``
+  Masked so the rust side can pad the ragged final batch.
+
+* ``init(key)`` -> ``(trainable, frozen)``
+  He init with zero up-projections (round-0 model == W_initial).
+"""
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelSpec
+from .model import forward, init_params
+
+MOMENTUM = 0.9
+
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Per-example CE with integer labels (stable log-softmax)."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logz, y[:, None], axis=-1)[:, 0]
+
+
+def make_train_step(spec: ModelSpec):
+    def train_step(trainable, momentum, frozen, x, y, lr, lora_scale):
+        def loss_fn(tr):
+            logits = forward(spec, tr, frozen, x, lora_scale)
+            loss = jnp.mean(cross_entropy(logits, y))
+            acc = jnp.mean((jnp.argmax(logits, axis=-1) == y)
+                           .astype(jnp.float32))
+            return loss, acc
+
+        (loss, acc), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            trainable)
+        new_m = MOMENTUM * momentum + grad
+        new_p = trainable - lr * new_m
+        return new_p, new_m, loss, acc
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec):
+    """Eval step with an explicit lora_scale argument (eval must use the
+    same alpha/r as training — matters for Fig. 2's alpha-sweep)."""
+
+    def eval_step(trainable, frozen, x, y, mask, lora_scale):
+        logits = forward(spec, trainable, frozen, x, lora_scale)
+        loss = jnp.sum(cross_entropy(logits, y) * mask)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32) * mask)
+        return loss, correct
+
+    return eval_step
+
+
+def make_init(spec: ModelSpec):
+    def init(key):
+        return init_params(spec, key)
+
+    return init
+
+
+def example_shapes(spec: ModelSpec) -> Tuple:
+    """ShapeDtypeStructs for lowering ``train_step``."""
+    cfg = spec.config
+    p = spec.num_trainable
+    f = spec.num_frozen
+    b, s = cfg.batch_size, cfg.image_size
+    sd = jax.ShapeDtypeStruct
+    return (
+        sd((p,), jnp.float32),            # trainable
+        sd((p,), jnp.float32),            # momentum
+        sd((f,), jnp.float32),            # frozen
+        sd((b, s, s, 3), jnp.float32),    # x
+        sd((b,), jnp.int32),              # y
+        sd((), jnp.float32),              # lr
+        sd((), jnp.float32),              # lora_scale
+    )
+
+
+def example_eval_shapes(spec: ModelSpec) -> Tuple:
+    cfg = spec.config
+    sd = jax.ShapeDtypeStruct
+    b, s = cfg.batch_size, cfg.image_size
+    return (
+        sd((spec.num_trainable,), jnp.float32),
+        sd((spec.num_frozen,), jnp.float32),
+        sd((b, s, s, 3), jnp.float32),
+        sd((b,), jnp.int32),
+        sd((b,), jnp.float32),            # mask
+        sd((), jnp.float32),              # lora_scale
+    )

@@ -1,0 +1,170 @@
+"""L1 kernel correctness: pallas (interpret) vs pure-jnp oracle.
+
+Includes randomized shape sweeps (the environment has no `hypothesis`
+package, so we drive the sweep from a seeded numpy RNG — same coverage
+intent: many shapes/ranks/scales, deterministic replay via the seed).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.lora_matmul import lora_matmul, matmul, _lora_matmul_raw
+from compile.kernels.quant import fake_quant
+from compile.kernels.ref import fake_quant_ref, lora_matmul_ref, matmul_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# lora_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,r,n", [
+    (8, 16, 4, 10),       # FC-adapter-like
+    (64, 27, 8, 32),      # conv1-adapter-like (I*K*K = 27)
+    (256, 64, 16, 128),   # block-aligned
+    (257, 65, 3, 129),    # ragged everything
+    (1, 1, 1, 1),         # degenerate
+    (300, 8, 128, 8),     # rank > dims (paper's r=128 on 64-ch convs)
+])
+def test_lora_matmul_matches_ref(m, k, r, n):
+    x, b, a = rand(m, k), rand(k, r), rand(r, n)
+    got = lora_matmul(x, b, a, 16.0)
+    want = lora_matmul_ref(x, b, a, 16.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_lora_matmul_shape_sweep():
+    """Randomized sweep over 25 shape/scale combos."""
+    for _ in range(25):
+        m = int(RNG.integers(1, 300))
+        k = int(RNG.integers(1, 80))
+        r = int(RNG.integers(1, 33))
+        n = int(RNG.integers(1, 140))
+        scale = float(RNG.uniform(0.1, 32.0))
+        x, b, a = rand(m, k), rand(k, r), rand(r, n)
+        got = lora_matmul(x, b, a, scale)
+        want = lora_matmul_ref(x, b, a, scale)
+        # f32 accumulation-order differences scale with K*r*|scale|.
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-3)
+
+
+def test_lora_matmul_zero_up_projection_is_noop():
+    """LoRA init invariant: A = 0 => adapter contributes exactly 0."""
+    x, b = rand(32, 16), rand(16, 8)
+    a = jnp.zeros((8, 12), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(lora_matmul(x, b, a, 16.0)),
+                                  np.zeros((32, 12), np.float32))
+
+
+def test_lora_matmul_grads_match_ref():
+    """custom_vjp vs autodiff of the jnp reference."""
+    x, b, a = rand(24, 12), rand(12, 4), rand(4, 18)
+
+    def loss_kernel(x, b, a):
+        return jnp.sum(jnp.sin(lora_matmul(x, b, a, 2.5)))
+
+    def loss_ref(x, b, a):
+        return jnp.sum(jnp.sin(lora_matmul_ref(x, b, a, 2.5)))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, b, a)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, b, a)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lora_matmul_jit_and_block_override():
+    x, b, a = rand(100, 20, ), rand(20, 8), rand(8, 30)
+    got = jax.jit(lambda *t: lora_matmul(*t, 1.0))(x, b, a)
+    np.testing.assert_allclose(got, lora_matmul_ref(x, b, a, 1.0),
+                               rtol=1e-5, atol=1e-5)
+    got2 = _lora_matmul_raw(x, b, a, 1.0, block_m=16, block_n=16)
+    np.testing.assert_allclose(got2, lora_matmul_ref(x, b, a, 1.0),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (257, 31, 63), (1, 5, 1),
+                                   (512, 4, 512)])
+def test_matmul_matches_ref(m, k, n):
+    x, y = rand(m, k), rand(k, n)
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_grads():
+    x, y = rand(30, 7), rand(7, 11)
+    gk = jax.grad(lambda x, y: jnp.sum(matmul(x, y) ** 2),
+                  argnums=(0, 1))(x, y)
+    gr = jax.grad(lambda x, y: jnp.sum((x @ y) ** 2), argnums=(0, 1))(x, y)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("rows,cols", [(4, 16), (64, 129), (3, 1), (100, 7)])
+def test_fake_quant_matches_ref(bits, rows, cols):
+    w = rand(rows, cols) * 3.0
+    dq, s, z = fake_quant(w, bits)
+    dqr, sr, zr = fake_quant_ref(w, bits)
+    # 1-ulp slack: XLA compiles the division differently in the pallas
+    # program vs the plain-jnp program (reciprocal-multiply fusion).
+    np.testing.assert_allclose(dq, dqr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(s, sr, rtol=1e-6, atol=0)
+    np.testing.assert_allclose(z, zr, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_fake_quant_error_bound(bits):
+    """RTN error is bounded by scale/2 per element."""
+    w = rand(32, 64)
+    dq, s, _ = fake_quant(w, bits)
+    err = np.abs(np.asarray(dq) - np.asarray(w))
+    bound = np.asarray(s) * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_fake_quant_constant_rows():
+    """Degenerate rows (zero range) must not produce NaNs and must
+    round-trip near-exactly for values inside the clip range."""
+    w = jnp.stack([jnp.full((16,), v) for v in (-3.0, 0.0, 5.0)])
+    dq, s, z = fake_quant(w, 8)
+    assert not np.isnan(np.asarray(dq)).any()
+    np.testing.assert_allclose(dq, w, atol=0)
+
+
+def test_fake_quant_monotone_bits():
+    """More bits => no worse max reconstruction error."""
+    w = rand(16, 100)
+    errs = []
+    for bits in (2, 4, 8):
+        dq, _, _ = fake_quant(w, bits)
+        errs.append(float(jnp.max(jnp.abs(dq - w))))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+def test_fake_quant_randomized_sweep():
+    for _ in range(15):
+        rows = int(RNG.integers(1, 80))
+        cols = int(RNG.integers(1, 200))
+        bits = int(RNG.choice([2, 4, 8]))
+        w = rand(rows, cols) * float(RNG.uniform(0.01, 10))
+        dq, s, z = fake_quant(w, bits)
+        dqr, sr, zr = fake_quant_ref(w, bits)
+        np.testing.assert_allclose(np.asarray(dq), np.asarray(dqr),
+                                   rtol=1e-6, atol=1e-5)
+        qmax = 2 ** bits - 1
+        assert (np.asarray(z) >= 0).all() and (np.asarray(z) <= qmax).all()

@@ -1,0 +1,148 @@
+"""Layer-level semantics tests, including the paper's §II-C merge claim:
+"the matrix BA can be incorporated back into the original pretrained
+weights W* without any additional latency" — we verify that running the
+adapter branch is *numerically equivalent* to folding the low-rank
+product into the conv/FC weight."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.layers import (conv2d, group_norm, lora_conv_delta,
+                            lora_fc_delta)
+from compile.configs import group_count
+
+RNG = np.random.default_rng(77)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# conv2d basics
+# ---------------------------------------------------------------------------
+
+def test_conv2d_identity_kernel():
+    """A centered 1-hot 3x3 kernel is the identity under SAME padding."""
+    x = rand(2, 8, 8, 3)
+    w = jnp.zeros((3, 3, 3, 3), jnp.float32)
+    for c in range(3):
+        w = w.at[c, c, 1, 1].set(1.0)
+    np.testing.assert_allclose(conv2d(x, w, 1), x, atol=1e-6)
+
+
+def test_conv2d_stride_downsamples():
+    x = rand(1, 8, 8, 2)
+    w = rand(4, 2, 3, 3)
+    assert conv2d(x, w, 2).shape == (1, 4, 4, 4)
+
+
+def test_conv2d_matches_manual_dot_for_1x1():
+    x = rand(2, 5, 5, 6)
+    w = rand(7, 6, 1, 1)
+    got = conv2d(x, w, 1)
+    want = jnp.einsum("nhwc,oc->nhwo", x, w.reshape(7, 6))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# group norm
+# ---------------------------------------------------------------------------
+
+def test_group_norm_normalizes_per_group():
+    x = rand(3, 6, 6, 8) * 5.0 + 2.0
+    out = group_norm(x, jnp.ones(8), jnp.zeros(8), groups=4)
+    g = np.asarray(out).reshape(3, 6, 6, 4, 2)
+    mean = g.mean(axis=(1, 2, 4))
+    std = g.std(axis=(1, 2, 4))
+    np.testing.assert_allclose(mean, 0.0, atol=1e-4)
+    np.testing.assert_allclose(std, 1.0, atol=1e-3)
+
+
+def test_group_norm_affine_applies():
+    x = rand(1, 4, 4, 4)
+    w = jnp.array([2.0, 2.0, 2.0, 2.0])
+    b = jnp.array([1.0, 1.0, 1.0, 1.0])
+    base = group_norm(x, jnp.ones(4), jnp.zeros(4), groups=2)
+    out = group_norm(x, w, b, groups=2)
+    np.testing.assert_allclose(out, base * 2.0 + 1.0, atol=1e-5)
+
+
+def test_group_count_rules():
+    assert group_count(64) == 8
+    assert group_count(4) == 4
+    assert group_count(6) == 2
+    assert group_count(7) == 1
+
+
+# ---------------------------------------------------------------------------
+# adapter merge equivalence (paper §II-C)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("o,i,k,stride", [(8, 4, 3, 1), (8, 4, 3, 2),
+                                          (16, 8, 1, 1), (16, 8, 1, 2)])
+def test_conv_adapter_equals_merged_weight(o, i, k, stride):
+    """W x + scale * A(B(x))  ==  (W + scale * merge(B, A)) x.
+
+    The merged kernel is the 1x1 conv A applied across B's output
+    channels: merged[o, i, :, :] = sum_r A[o, r] * B[r, i, :, :].
+    """
+    x = rand(2, 8, 8, i)
+    w = rand(o, i, k, k) * 0.3
+    lora_b = rand(4, i, k, k) * 0.3          # r = 4
+    lora_a = rand(o, 4, 1, 1) * 0.3
+    scale = 16.0
+
+    adapted = conv2d(x, w, stride) + lora_conv_delta(
+        x, lora_b, lora_a, scale, stride)
+
+    merged = w + scale * jnp.einsum(
+        "or,rikl->oikl", lora_a.reshape(o, 4), lora_b)
+    folded = conv2d(x, merged, stride)
+    np.testing.assert_allclose(adapted, folded, rtol=2e-4, atol=2e-4)
+
+
+def test_fc_adapter_equals_merged_weight():
+    feats = rand(16, 32)
+    w = rand(32, 10) * 0.3
+    b_mat = rand(32, 4) * 0.3
+    a_mat = rand(4, 10) * 0.3
+    scale = 8.0
+    adapted = feats @ w + lora_fc_delta(feats, b_mat, a_mat, scale)
+    folded = feats @ (w + scale * (b_mat @ a_mat))
+    np.testing.assert_allclose(adapted, folded, rtol=2e-4, atol=2e-4)
+
+
+def test_adapter_scale_linearity():
+    """The adapter branch is linear in alpha/r — doubling the scale
+    doubles the delta (Fig. 2's knob is exactly an lr rescale)."""
+    x = rand(1, 6, 6, 4)
+    lora_b = rand(3, 4, 3, 3)
+    lora_a = rand(8, 3, 1, 1)
+    d1 = lora_conv_delta(x, lora_b, lora_a, 1.0, 1)
+    d2 = lora_conv_delta(x, lora_b, lora_a, 2.0, 1)
+    np.testing.assert_allclose(np.asarray(d2), 2.0 * np.asarray(d1),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_adapter_zero_up_projection_exact_zero():
+    x = rand(1, 6, 6, 4)
+    lora_b = rand(3, 4, 3, 3)
+    lora_a = jnp.zeros((8, 3, 1, 1), jnp.float32)
+    d = lora_conv_delta(x, lora_b, lora_a, 16.0, 1)
+    np.testing.assert_array_equal(np.asarray(d),
+                                  np.zeros_like(np.asarray(d)))
+
+
+def test_downsample_adapter_subsamples_consistently():
+    """The fused 1x1 path must subsample exactly like the strided conv."""
+    x = rand(1, 8, 8, 4)
+    lora_b = rand(2, 4, 1, 1)
+    lora_a = rand(6, 2, 1, 1)
+    d2 = lora_conv_delta(x, lora_b, lora_a, 1.0, 2)
+    assert d2.shape == (1, 4, 4, 6)
+    # Strided output equals dense output sampled at even pixels.
+    d1 = lora_conv_delta(x, lora_b, lora_a, 1.0, 1)
+    np.testing.assert_allclose(d2, d1[:, ::2, ::2, :], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,76 @@
+"""Manifest integrity: what aot.py exported must exactly describe the
+specs the rust coordinator will index into.  Skipped when artifacts have
+not been built yet (`make artifacts`)."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import MODELS, build_spec
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_has_core_specs(manifest):
+    for tag in ("micro8_full", "micro8_lora_fc_r4", "tiny8_lora_fc_r8",
+                "resnet8_full", "resnet8_lora_fc_r32"):
+        assert tag in manifest["specs"], tag
+
+
+def test_manifest_files_exist(manifest):
+    for tag, spec in manifest["specs"].items():
+        for role, fname in spec["files"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), (tag, role, fname)
+            assert os.path.getsize(path) > 100
+
+
+def test_manifest_segments_match_python_spec(manifest):
+    for tag, mspec in manifest["specs"].items():
+        spec = build_spec(MODELS[mspec["model"]], mspec["variant"],
+                          mspec["rank"])
+        assert mspec["num_trainable"] == spec.num_trainable, tag
+        assert mspec["num_frozen"] == spec.num_frozen, tag
+        assert len(mspec["trainable_segments"]) == len(spec.trainable)
+        for mseg, e in zip(mspec["trainable_segments"], spec.trainable):
+            assert mseg["name"] == e.info.name
+            assert mseg["offset"] == e.offset
+            assert tuple(mseg["shape"]) == e.info.shape
+            assert mseg["numel"] == e.info.numel
+
+
+def test_manifest_segments_cover_vector_exactly(manifest):
+    for tag, mspec in manifest["specs"].items():
+        for side, total in (("trainable_segments", "num_trainable"),
+                            ("frozen_segments", "num_frozen")):
+            end = 0
+            for seg in mspec[side]:
+                assert seg["offset"] == end, (tag, side, seg["name"])
+                end += seg["numel"]
+            assert end == mspec[total], (tag, side)
+
+
+def test_quant_oracles_present(manifest):
+    assert set(manifest["quant_oracles"]) == {"2", "4", "8"}
+    for meta in manifest["quant_oracles"].values():
+        assert os.path.exists(os.path.join(ART, meta["file"]))
+
+
+def test_hlo_text_is_parseable_header(manifest):
+    """Sanity: HLO text artifacts start with an HloModule header (the
+    format HloModuleProto::from_text_file expects)."""
+    one = next(iter(manifest["specs"].values()))
+    with open(os.path.join(ART, one["files"]["train"])) as f:
+        head = f.read(200)
+    assert head.startswith("HloModule"), head[:50]

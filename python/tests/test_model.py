@@ -1,0 +1,196 @@
+"""L2 model tests: parameter layout arithmetic (the exact numbers behind
+the paper's Table I), forward shapes, init invariants and variant
+semantics (Table II's ablation axes)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import (MODELS, PAPER_TABLE1, VARIANTS, build_spec,
+                             iter_convs, spec_tag)
+from compile.model import forward, init_params, unflatten
+from compile.train import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Parameter arithmetic vs the paper
+# ---------------------------------------------------------------------------
+
+def test_resnet8_base_param_count_matches_paper():
+    """Paper Table I: FedAvg ResNet-8 has 1.23 M parameters."""
+    spec = build_spec(MODELS["resnet8"], "full", 0)
+    assert spec.num_frozen == 0
+    assert abs(spec.num_trainable - 1.23e6) / 1.23e6 < 0.005
+
+
+@pytest.mark.parametrize("rank", [8, 16, 32, 64, 128])
+def test_resnet8_lora_param_counts_near_paper(rank):
+    """Table I trained/total params for each rank.  We allow 2% slack:
+    the paper does not fully specify its ResNet-8 (e.g. downsample-conv
+    adapters); our architecture reproduces every count within ~1.5%."""
+    spec = build_spec(MODELS["resnet8"], "lora_fc", rank)
+    total_paper, trained_paper = PAPER_TABLE1[rank]
+    assert abs(spec.num_total - total_paper) / total_paper < 0.02
+    assert abs(spec.num_trainable - trained_paper) / trained_paper < 0.02
+
+
+def test_resnet18_message_size_matches_table4():
+    """Table IV: full ResNet-18 message is 44.7 MB (fp32)."""
+    spec = build_spec(MODELS["resnet18"], "full", 0)
+    mb = spec.num_trainable * 4 / 1e6
+    assert abs(mb - 44.7) / 44.7 < 0.01
+
+
+@pytest.mark.parametrize("rank,msg_mb", [(64, 9.2), (32, 4.6), (16, 2.4)])
+def test_resnet18_lora_message_sizes_match_table4(rank, msg_mb):
+    spec = build_spec(MODELS["resnet18"], "lora_fc", rank)
+    mb = spec.num_trainable * 4 / 1e6
+    assert abs(mb - msg_mb) / msg_mb < 0.06
+
+
+def test_layout_offsets_are_contiguous():
+    for model in MODELS:
+        for variant in VARIANTS:
+            spec = build_spec(MODELS[model], variant, 4)
+            for side in (spec.trainable, spec.frozen):
+                off = 0
+                for e in side:
+                    assert e.offset == off
+                    off += e.info.numel
+
+
+def test_variant_trainability_semantics():
+    """Table II rows: which kinds are trainable under each variant."""
+    cfg = MODELS["micro8"]
+
+    def kinds(side):
+        return {e.info.kind for e in side}
+
+    full = build_spec(cfg, "full", 0)
+    assert kinds(full.frozen) == set()
+
+    vanilla = build_spec(cfg, "lora_all", 4)
+    assert kinds(vanilla.trainable) == {"lora_b", "lora_a",
+                                        "fc_lora_b", "fc_lora_a"}
+    assert "norm_w" in kinds(vanilla.frozen)
+    assert "fc_w" in kinds(vanilla.frozen)
+
+    norm = build_spec(cfg, "lora_norm", 4)
+    assert {"norm_w", "norm_b"} <= kinds(norm.trainable)
+    assert "fc_w" in kinds(norm.frozen)
+
+    fc = build_spec(cfg, "lora_fc", 4)
+    assert {"fc_w", "fc_b", "norm_w"} <= kinds(fc.trainable)
+    assert "fc_lora_b" not in kinds(fc.trainable)
+
+
+def test_conv_enumeration_resnet8():
+    convs = list(iter_convs(MODELS["resnet8"]))
+    names = [c[0] for c in convs]
+    # conv1 + 3 stages x (2 block convs) + 2 downsamples (stages 1, 2)
+    assert len(convs) == 9
+    assert names[0] == "conv1"
+    assert "s1.b0.down" in names and "s2.b0.down" in names
+    assert "s0.b0.down" not in names
+
+
+def test_conv_enumeration_resnet18():
+    convs = list(iter_convs(MODELS["resnet18"]))
+    # conv1 + 4 stages x 2 blocks x 2 convs + 3 downsamples
+    assert len(convs) == 1 + 16 + 3
+
+
+def test_spec_tags():
+    assert spec_tag("resnet8", "full", 0) == "resnet8_full"
+    assert spec_tag("tiny8", "lora_fc", 8) == "tiny8_lora_fc_r8"
+
+
+# ---------------------------------------------------------------------------
+# Forward / init behaviour
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def micro_spec():
+    return build_spec(MODELS["micro8"], "lora_fc", 4)
+
+
+@pytest.fixture(scope="module")
+def micro_params(micro_spec):
+    return init_params(micro_spec, jax.random.PRNGKey(7))
+
+
+def test_forward_shapes(micro_spec, micro_params):
+    tr, fr = micro_params
+    x = jnp.zeros((8, 16, 16, 3), jnp.float32)
+    logits = forward(micro_spec, tr, fr, x, jnp.float32(16.0))
+    assert logits.shape == (8, 10)
+    assert not np.isnan(np.asarray(logits)).any()
+
+
+def test_init_zero_up_projection_makes_adapters_noop(micro_spec,
+                                                     micro_params):
+    """Round-0 invariant: with A = 0 the adapted model equals the frozen
+    base model — changing lora_scale must not change the logits."""
+    tr, fr = micro_params
+    x = jax.random.uniform(jax.random.PRNGKey(3), (4, 16, 16, 3))
+    l1 = forward(micro_spec, tr, fr, x, jnp.float32(16.0))
+    l2 = forward(micro_spec, tr, fr, x, jnp.float32(512.0))
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+
+def test_init_determinism(micro_spec):
+    a = init_params(micro_spec, jax.random.PRNGKey(5))
+    b = init_params(micro_spec, jax.random.PRNGKey(5))
+    c = init_params(micro_spec, jax.random.PRNGKey(6))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert np.abs(np.asarray(a[0]) - np.asarray(c[0])).max() > 0
+
+
+def test_unflatten_round_trip(micro_spec, micro_params):
+    tr, fr = micro_params
+    p = unflatten(micro_spec, tr, fr)
+    assert len(p) == len(micro_spec.trainable) + len(micro_spec.frozen)
+    for e in micro_spec.trainable:
+        assert p[e.info.name].shape == e.info.shape
+    # Spot-check one segment's content.
+    e = micro_spec.trainable[0]
+    np.testing.assert_array_equal(
+        np.asarray(p[e.info.name]).reshape(-1),
+        np.asarray(tr[e.offset:e.offset + e.info.numel]))
+
+
+def test_frozen_params_do_not_change_under_training(micro_spec,
+                                                    micro_params):
+    tr, fr = micro_params
+    step = jax.jit(make_train_step(micro_spec))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    m = jnp.zeros_like(tr)
+    tr2, m2, loss, acc = step(tr, m, fr, x, y, jnp.float32(0.01),
+                              jnp.float32(16.0))
+    # frozen vector is an input, untouched by construction; the trainable
+    # vector must actually move.
+    assert np.abs(np.asarray(tr2) - np.asarray(tr)).max() > 0
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_one_batch_overfit(variant):
+    """Descent sanity for every Table II variant: 30 steps on one batch
+    must cut the loss substantially (lora_all uses a smaller lr — the
+    paper itself reports Vanilla's instability)."""
+    spec = build_spec(MODELS["micro8"], variant, 4)
+    tr, fr = init_params(spec, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(spec))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    m = jnp.zeros_like(tr)
+    lr = jnp.float32(0.005 if variant == "lora_all" else 0.02)
+    first = last = None
+    for i in range(30):
+        tr, m, loss, acc = step(tr, m, fr, x, y, lr, jnp.float32(16.0))
+        if i == 0:
+            first = float(loss)
+        last = float(loss)
+    assert last < first * 0.7, (variant, first, last)

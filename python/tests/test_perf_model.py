@@ -1,0 +1,47 @@
+"""Sanity tests on the L1 kernel performance model (the structural
+numbers DESIGN.md §Perf quotes)."""
+
+from compile.kernels.perf_model import (VMEM_BYTES, default_blocks,
+                                        estimate, paper_shapes, report)
+
+
+def test_all_paper_shapes_fit_vmem():
+    """The chosen default blocks must keep every paper shape's working
+    set well under VMEM (leaving room for the surrounding model)."""
+    for label, m, k, r, n in paper_shapes():
+        bm, bn = default_blocks(m, n, k)
+        e = estimate(m, k, r, n, bm, bn)
+        assert e.vmem_frac < 0.6, (label, e.vmem_frac)
+
+
+def test_fusion_saves_hbm_traffic():
+    """Keeping the rank-r intermediate in VMEM must strictly reduce HBM
+    bytes, and the saving grows with m (the intermediate is (m, r))."""
+    small = estimate(1024, 64, 32, 128, 256, 128)
+    large = estimate(32768, 64, 32, 128, 256, 128)
+    assert small.hbm_savings > 1.0
+    assert large.hbm_savings > small.hbm_savings
+
+
+def test_mxu_util_monotone_in_rank():
+    """Higher rank fills more MXU lanes in stage 1."""
+    lo = estimate(4096, 64, 8, 128, 256, 128)
+    hi = estimate(4096, 64, 64, 128, 256, 128)
+    assert hi.mxu_util_stage1 > lo.mxu_util_stage1
+
+
+def test_block_shrinks_for_small_problems():
+    assert default_blocks(8, 10) == (8, 8)
+    # large K => small tile to bound VMEM; small K => big tile.
+    assert default_blocks(100_000, 512, k=2304) == (256, 128)
+    assert default_blocks(100_000, 512, k=27) == (4096, 128)
+
+
+def test_report_renders():
+    r = report()
+    assert "resnet8" in r and "VMEM" in r
+    assert len(r.splitlines()) == len(paper_shapes()) + 1
+
+
+def test_vmem_budget_constant_sane():
+    assert VMEM_BYTES == 16 * 2 ** 20

@@ -1,0 +1,106 @@
+"""Training-semantics tests: the SGD+momentum step, eval masking, and the
+FedAvg-compatibility invariant at the heart of the paper's
+"aggregation-agnostic" claim."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import MODELS, build_spec
+from compile.model import init_params
+from compile.train import MOMENTUM, cross_entropy, make_eval_step, \
+    make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = build_spec(MODELS["micro8"], "lora_fc", 4)
+    tr, fr = init_params(spec, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(spec))
+    ev = jax.jit(make_eval_step(spec))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    return spec, tr, fr, step, ev, x, y
+
+
+def test_momentum_update_rule(setup):
+    """p' = p - lr (m rho + g); m' = m rho + g — verified against a
+    hand-computed step from a zero-momentum start (m' = g)."""
+    spec, tr, fr, step, ev, x, y = setup
+    m0 = jnp.zeros_like(tr)
+    lr = jnp.float32(0.01)
+    p1, m1, _, _ = step(tr, m0, fr, x, y, lr, jnp.float32(16.0))
+    # From m=0: m1 == grad, p1 == p - lr*grad.
+    np.testing.assert_allclose(np.asarray(p1),
+                               np.asarray(tr - lr * m1), atol=1e-7)
+    # Second step with zero grad impossible; instead verify rho folding:
+    p2, m2, _, _ = step(p1, m1, fr, x, y, lr, jnp.float32(16.0))
+    g2 = m2 - MOMENTUM * m1
+    np.testing.assert_allclose(np.asarray(p2),
+                               np.asarray(p1 - lr * (MOMENTUM * m1 + g2)),
+                               atol=1e-6)
+
+
+def test_zero_lr_is_identity(setup):
+    spec, tr, fr, step, ev, x, y = setup
+    m = jnp.zeros_like(tr)
+    p1, m1, loss, acc = step(tr, m, fr, x, y, jnp.float32(0.0),
+                             jnp.float32(16.0))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(tr))
+    assert np.abs(np.asarray(m1)).max() > 0  # momentum still accumulates
+
+
+def test_eval_mask_semantics(setup):
+    """Masked-out examples contribute exactly nothing (ragged batches)."""
+    spec, tr, fr, step, ev, x, y = setup
+    full = ev(tr, fr, x, y, jnp.ones(8), jnp.float32(16.0))
+    half_mask = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    half = ev(tr, fr, x, y, half_mask, jnp.float32(16.0))
+    # Recompute the first-half-only numbers by zero-masking a shuffled
+    # second half: results must be independent of masked content.
+    x2 = x.at[4:].set(jax.random.uniform(jax.random.PRNGKey(9),
+                                         (4, 16, 16, 3)))
+    half2 = ev(tr, fr, x2, y, half_mask, jnp.float32(16.0))
+    np.testing.assert_allclose(np.asarray(half), np.asarray(half2),
+                               rtol=1e-5, atol=1e-5)
+    assert float(half[1]) <= float(full[1])
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.array([[2.0, 1.0, 0.1], [0.0, 0.0, 0.0]])
+    y = jnp.array([0, 2])
+    ce = cross_entropy(logits, y)
+    probs = np.exp(np.asarray(logits))
+    probs /= probs.sum(axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(ce),
+                               -np.log(probs[[0, 1], [0, 2]]), rtol=1e-6)
+
+
+def test_aggregation_agnostic_invariant(setup):
+    """The paper's central systems claim (§III): averaging *adapter
+    vectors* then evaluating == the server never needs to know the
+    vector is not a full model.  We verify that a weighted average of two
+    trained vectors is a valid parameter vector producing finite loss,
+    and that averaging identical vectors is exact identity."""
+    spec, tr, fr, step, ev, x, y = setup
+    m = jnp.zeros_like(tr)
+    a1, _, _, _ = step(tr, m, fr, x, y, jnp.float32(0.02), jnp.float32(16.0))
+    a2, _, _, _ = step(tr, m, fr, x[::-1], y[::-1], jnp.float32(0.02),
+                       jnp.float32(16.0))
+    avg = 0.25 * a1 + 0.75 * a2
+    loss, correct = ev(avg, fr, x, y, jnp.ones(8), jnp.float32(16.0))
+    assert np.isfinite(float(loss))
+    same = 0.5 * a1 + 0.5 * a1
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(a1))
+
+
+def test_train_full_vs_lora_touch_disjoint_state():
+    """In `full` the frozen vector is empty; in lora variants the
+    trainable vector is much smaller — the memory-saving claim of §II-C
+    in concrete terms."""
+    full = build_spec(MODELS["micro8"], "full", 0)
+    lora = build_spec(MODELS["micro8"], "lora_fc", 4)
+    assert full.num_frozen == 0
+    assert lora.num_trainable < full.num_trainable / 2
+    assert lora.num_total >= full.num_trainable

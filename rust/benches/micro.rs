@@ -1,0 +1,112 @@
+//! Micro-benchmarks for the L3 hot paths (DESIGN.md §7): wire codecs,
+//! FedAvg accumulation, data generation, and the PJRT train-step
+//! round trip. These are the numbers the §Perf log in EXPERIMENTS.md
+//! tracks before/after optimization.
+
+use flocora::compression::{AffineCodec, Codec, Fp32Codec, TopKCodec,
+                           ZeroFlCodec};
+use flocora::coordinator::aggregator::FedAvg;
+use flocora::data::{gen_image, lda_partition};
+use flocora::model::{build_spec, ModelCfg, Variant};
+use flocora::runtime::{Batch, Engine};
+use flocora::tensor;
+use flocora::util::benchkit::{bench, env_usize, header};
+use flocora::util::rng::Rng;
+
+fn main() {
+    println!("{}", header());
+
+    // ---- codecs on the real ResNet-8 r=32 adapter layout ---------------
+    let spec = build_spec(ModelCfg::by_name("resnet8").unwrap(),
+                          Variant::LoraFc, 32);
+    let n = spec.num_trainable();
+    let mut rng = Rng::new(1);
+    let v: Vec<f32> = (0..n).map(|_| 0.05 * rng.normal() as f32).collect();
+
+    let fp = Fp32Codec;
+    let st = bench("fp32 encode (258K params)", 3, 50,
+                   || { std::hint::black_box(
+                        fp.encode(&v, &spec.trainable).unwrap()); });
+    println!("{}   ({:.2} GB/s)", st.row(),
+             (n * 4) as f64 / st.mean_s / 1e9);
+
+    for bits in [8u32, 4, 2] {
+        let c = AffineCodec::new(bits);
+        let st = bench(&format!("affine q{bits} encode (258K params)"), 3, 30,
+                       || { std::hint::black_box(
+                            c.encode(&v, &spec.trainable).unwrap()); });
+        println!("{}   ({:.0} Mparam/s)", st.row(),
+                 n as f64 / st.mean_s / 1e6);
+        let msg = c.encode(&v, &spec.trainable).unwrap();
+        let st = bench(&format!("affine q{bits} decode"), 3, 30,
+                       || { std::hint::black_box(
+                            c.decode(&msg, &spec.trainable).unwrap()); });
+        println!("{}", st.row());
+    }
+
+    let tk = TopKCodec::new(0.2);
+    let st = bench("topk 20% encode (258K params)", 3, 30,
+                   || { std::hint::black_box(tk.encode(&v, &[]).unwrap()); });
+    println!("{}", st.row());
+    let zf = ZeroFlCodec::new(0.9, 0.2);
+    let st = bench("zerofl 0.9/0.2 encode (258K)", 3, 30,
+                   || { std::hint::black_box(zf.encode(&v, &[]).unwrap()); });
+    println!("{}", st.row());
+
+    // ---- aggregation ----------------------------------------------------
+    let st = bench("fedavg add (258K params)", 3, 100, || {
+        let mut agg = FedAvg::new(n);
+        agg.add(&v, 10.0).unwrap();
+        std::hint::black_box(agg.contributions());
+    });
+    println!("{}   ({:.2} GB/s)", st.row(),
+             (n * 4) as f64 / st.mean_s / 1e9);
+    let st = bench("axpy_weighted (1.23M f32)", 3, 100, || {
+        let mut acc = vec![0.0f32; 1_227_594];
+        tensor::axpy_weighted(&mut acc, &vec![1.0f32; 1_227_594], 0.5);
+        std::hint::black_box(acc[0]);
+    });
+    println!("{}", st.row());
+
+    // ---- data substrate -------------------------------------------------
+    let st = bench("cifar-s gen_image 32x32", 3, 200, || {
+        let mut out = vec![0.0f32; 32 * 32 * 3];
+        gen_image(3, 32, &mut Rng::new(7), &mut out);
+        std::hint::black_box(out[0]);
+    });
+    println!("{}", st.row());
+    let st = bench("lda_partition 16x64 @32px", 1, 5, || {
+        std::hint::black_box(lda_partition(16, 64, 10, 32, 0.5, 3)
+            .total_samples());
+    });
+    println!("{}", st.row());
+
+    // ---- PJRT train-step round trip (the L2/L1 hot path) ----------------
+    let engine = Engine::new("artifacts").expect("make artifacts");
+    for tag in ["micro8_lora_fc_r4", "micro8_full", "tiny8_lora_fc_r8"] {
+        let session = engine.session(tag).expect("session");
+        let s = &session.spec;
+        let (mut p, f) = session.init(1).unwrap();
+        let mut m = vec![0.0f32; p.len()];
+        let px = s.image_size * s.image_size * 3;
+        let mut rng = Rng::new(2);
+        let batch = Batch {
+            x: (0..s.batch_size * px).map(|_| rng.f32()).collect(),
+            y: (0..s.batch_size).map(|_| rng.below(10) as i32).collect(),
+            mask: vec![1.0; s.batch_size],
+            n: s.batch_size,
+        };
+        let iters = env_usize("FLOCORA_BENCH_STEP_ITERS", 15);
+        let st = bench(&format!("pjrt train_step {tag}"), 2, iters, || {
+            session.train_step(&mut p, &mut m, &f, &batch, 0.01, 16.0)
+                .unwrap();
+        });
+        println!("{}   ({:.1} img/s)", st.row(),
+                 s.batch_size as f64 / st.mean_s);
+        let st = bench(&format!("pjrt eval_step {tag}"), 2, iters, || {
+            session.eval_step(&p, &f, &batch, 16.0).unwrap();
+        });
+        println!("{}", st.row());
+    }
+    println!("\nmicro bench OK");
+}

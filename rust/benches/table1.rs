@@ -1,0 +1,36 @@
+//! Bench target for **paper Table I**: ResNet-8 parameter counts across
+//! the rank ladder. Fully analytic (the counts are architecture
+//! arithmetic) — printed ours-vs-paper, plus a timing of the spec
+//! builder itself for regression tracking.
+
+use flocora::experiments::{paper, tables};
+use flocora::model::{build_spec, ModelCfg, Variant};
+use flocora::util::benchkit;
+
+fn main() {
+    print!("{}", tables::table1().render());
+    println!();
+
+    // Verify every row against the paper within 2%.
+    let mut worst: f64 = 0.0;
+    for &(rank, total_p, trained_p) in &paper::TABLE1[1..] {
+        let spec = build_spec(ModelCfg::by_name("resnet8").unwrap(),
+                              Variant::LoraFc, rank);
+        let dt = (spec.num_total() as f64 - total_p).abs() / total_p;
+        let dr = (spec.num_trainable() as f64 - trained_p).abs() / trained_p;
+        worst = worst.max(dt).max(dr);
+        assert!(dt < 0.02 && dr < 0.02, "r={rank} drifted from paper");
+    }
+    println!("max relative deviation from paper Table I: {:.2}%\n",
+             worst * 100.0);
+
+    println!("{}", benchkit::header());
+    let st = benchkit::bench("build_spec(resnet8, lora_fc, r=32)", 10, 200,
+                             || {
+        let s = build_spec(ModelCfg::by_name("resnet8").unwrap(),
+                           Variant::LoraFc, 32);
+        std::hint::black_box(s.num_trainable());
+    });
+    println!("{}", st.row());
+    println!("\ntable1 bench OK");
+}

@@ -1,0 +1,67 @@
+//! Bench target for **paper Table III**: total communication cost for
+//! FP / int8 / int4 / int2 FLoCoRA on ResNet-8 (r=32, 100 rounds).
+//!
+//! The TCC column is exact analytic arithmetic (printed vs the paper).
+//! The accuracy column is measured live at the scaled profile
+//! (DESIGN.md §2) with the real wire codecs in the loop:
+//! set FLOCORA_BENCH_ROUNDS / FLOCORA_BENCH_SEEDS to rescale.
+
+use flocora::compression::CodecKind;
+use flocora::config::presets;
+use flocora::experiments::{paper, runners, tables};
+use flocora::runtime::Engine;
+use flocora::util::benchkit::env_usize;
+
+fn main() {
+    let (table, pairs) = tables::table3();
+    print!("{}", table.render());
+    let fedavg = pairs[0].1;
+    for (label, ratio) in [("FLoCoRA FP", 4.8), ("FLoCoRA int8", 17.7),
+                           ("FLoCoRA int4", 32.6), ("FLoCoRA int2", 56.3)] {
+        let ours = fedavg / pairs.iter().find(|(l, _)| l == label).unwrap().1;
+        assert!((ours - ratio).abs() / ratio < 0.06,
+                "{label} ratio ÷{ours:.1} vs paper ÷{ratio}");
+    }
+    println!("analytic ratios within 6% of paper\n");
+
+    // ---- scaled accuracy runs (live stack) -----------------------------
+    let rounds = env_usize("FLOCORA_BENCH_ROUNDS", 60);
+    let nseeds = env_usize("FLOCORA_BENCH_SEEDS", 2);
+    let seeds: Vec<u64> = (0..nseeds as u64).map(|i| 42 + i).collect();
+    let engine = Engine::new("artifacts").expect("make artifacts");
+
+    println!("scaled accuracy runs (micro8, {rounds} rounds, {nseeds} seeds) \
+              — paper accuracies shown for shape comparison:");
+    println!("{:<16} {:>16} {:>18}", "method", "acc (scaled)", "paper (CIFAR)");
+    let matrix: Vec<(&str, &str, usize, CodecKind, f64, f64)> = vec![
+        ("FedAvg FP", "micro8_full", 0, CodecKind::Fp32,
+         paper::TABLE3[0].3, paper::TABLE3[0].4),
+        ("FLoCoRA FP", "micro8_lora_fc_r8", 8, CodecKind::Fp32,
+         paper::TABLE3[1].3, paper::TABLE3[1].4),
+        ("FLoCoRA int8", "micro8_lora_fc_r8", 8, CodecKind::Affine(8),
+         paper::TABLE3[2].3, paper::TABLE3[2].4),
+        ("FLoCoRA int4", "micro8_lora_fc_r8", 8, CodecKind::Affine(4),
+         paper::TABLE3[3].3, paper::TABLE3[3].4),
+        ("FLoCoRA int2", "micro8_lora_fc_r8", 8, CodecKind::Affine(2),
+         paper::TABLE3[4].3, paper::TABLE3[4].4),
+    ];
+    let mut results = Vec::new();
+    for (label, tag, rank, codec, pm, ps) in matrix {
+        let mut cfg = presets::scaled_micro(tag, rank, codec);
+        cfg.rounds = rounds;
+        cfg.samples_per_client = 64;
+        let sweep = runners::run_seeds(&engine, &cfg, label, &seeds)
+            .expect("run failed");
+        println!("{:<16} {:>16} {:>13.2} ± {:.2}", label,
+                 runners::cell(&sweep), pm, ps);
+        results.push((label, sweep.acc_mean));
+    }
+
+    // Shape assertions (the paper's qualitative ordering):
+    let get = |l: &str| results.iter().find(|(a, _)| *a == l).unwrap().1;
+    assert!(get("FLoCoRA int8") > get("FLoCoRA int2"),
+            "int8 must beat int2");
+    assert!(get("FedAvg FP") > get("FLoCoRA int2"),
+            "int2 must show real degradation");
+    println!("\ntable3 bench OK (ordering matches paper shape)");
+}

@@ -1,0 +1,77 @@
+//! Bench target for **paper Table IV**: FLoCoRA (± int8) vs ZeroFL vs
+//! magnitude pruning on the larger model.
+//!
+//! Message sizes / TCC are exact analytic reproductions on the real
+//! ResNet-18 layout (printed vs paper). Accuracies are measured live at
+//! the scaled profile with every method flowing through the identical
+//! aggregation loop.
+
+use flocora::compression::CodecKind;
+use flocora::config::presets;
+use flocora::experiments::{runners, tables};
+use flocora::runtime::Engine;
+use flocora::util::benchkit::env_usize;
+
+fn main() {
+    let (table, pairs) = tables::table4_sizes();
+    print!("{}", table.render());
+    // Headline: FLoCoRA r=16 FP is the paper's ÷18.6 row.
+    let full = pairs[0].1;
+    let r16 = pairs.iter().find(|(l, _)| l == "FLoCoRA r=16").unwrap().1;
+    let ratio = full / r16;
+    assert!((ratio - 18.6).abs() / 18.6 < 0.06,
+            "headline ratio ÷{ratio:.1} vs paper ÷18.6");
+    println!("headline reduction at r=16: ÷{ratio:.1} (paper ÷18.6)\n");
+
+    // ---- scaled accuracy runs ------------------------------------------
+    let rounds = env_usize("FLOCORA_BENCH_ROUNDS", 60);
+    let nseeds = env_usize("FLOCORA_BENCH_SEEDS", 2);
+    let seeds: Vec<u64> = (0..nseeds as u64).map(|i| 42 + i).collect();
+    let engine = Engine::new("artifacts").expect("make artifacts");
+
+    println!("scaled accuracy (micro8, {rounds} rounds, LDA 1.0 as in \
+              Table IV):");
+    println!("{:<16} {:>16} {:>12}", "method", "acc (scaled)", "msg kB");
+    let matrix: Vec<(&str, &str, usize, CodecKind)> = vec![
+        ("FedAvg", "micro8_full", 0, CodecKind::Fp32),
+        ("ZeroFL 90/0.2", "micro8_full", 0, CodecKind::ZeroFl(0.9, 0.2)),
+        ("MagPrune 40%", "micro8_full", 0, CodecKind::TopK(0.6)),
+        ("MagPrune 80%", "micro8_full", 0, CodecKind::TopK(0.2)),
+        ("FLoCoRA r=8", "micro8_lora_fc_r8", 8, CodecKind::Fp32),
+        ("FLoCoRA r=8 Q8", "micro8_lora_fc_r8", 8, CodecKind::Affine(8)),
+    ];
+    let mut results = Vec::new();
+    for (label, tag, rank, codec) in matrix {
+        let mut cfg = presets::scaled_micro(tag, rank, codec);
+        cfg.rounds = rounds;
+        cfg.samples_per_client = 64;
+        cfg.lda_alpha = 1.0; // Table IV's easier distribution
+        let sweep = runners::run_seeds(&engine, &cfg, label, &seeds)
+            .expect("run failed");
+        println!("{:<16} {:>16} {:>12.1}", label, runners::cell(&sweep),
+                 sweep.mean_up_msg_bytes / 1e3);
+        results.push((label, sweep.acc_mean, sweep.mean_up_msg_bytes));
+    }
+
+    // Shape assertions. At paper scale the Q8 ladder is the smallest
+    // message outright (analytic table above, exact); at the micro
+    // profile the adapters are so small that per-row scale/zp overhead
+    // keeps Q8 above MagPrune-80%'s bitmap, so the live-run claim is the
+    // paper's *trade-off* claim instead: among all compressed methods,
+    // FLoCoRA Q8 reaches the best accuracy, and it beats every baseline
+    // that ships a smaller-or-similar message by a wide margin.
+    let get = |l: &str| results.iter().find(|(a, _, _)| *a == l).unwrap();
+    let q8 = get("FLoCoRA r=8 Q8");
+    // Q8 must beat every *sparse baseline* (in the paper, same-rank FP
+    // rows can edge out Q8 — Table IV r=16: 82.33 vs 81.89 — so FLoCoRA
+    // FP is not part of the dominance claim).
+    for baseline in ["ZeroFL 90/0.2", "MagPrune 40%", "MagPrune 80%"] {
+        let b = get(baseline);
+        assert!(q8.1 > b.1,
+                "FLoCoRA Q8 ({:.1}) must beat {baseline} ({:.1})", q8.1, b.1);
+    }
+    let prune80 = get("MagPrune 80%");
+    assert!(q8.1 - prune80.1 > 10.0,
+            "Q8 must dominate the similarly-sized MagPrune 80% baseline");
+    println!("\ntable4 bench OK");
+}

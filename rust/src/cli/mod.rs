@@ -1,0 +1,144 @@
+//! Hand-rolled CLI argument parser (the offline vendor set has no
+//! `clap`): `binary <subcommand> [--key value]... [--flag]...` with
+//! typed accessors and unknown-argument rejection.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::parse(format!("unexpected argument `{a}`")))?
+                .to_string();
+            if key.is_empty() {
+                return Err(Error::parse("empty option name"));
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    if args.options.insert(key.clone(), v).is_some() {
+                        return Err(Error::parse(format!("duplicate --{key}")));
+                    }
+                }
+                _ => args.flags.push(key),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        let hit = self.flags.iter().any(|f| f == name);
+        if hit {
+            self.consumed.borrow_mut().push(name.to_string());
+        }
+        hit
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        let v = self.options.get(name).cloned();
+        if v.is_some() {
+            self.consumed.borrow_mut().push(name.to_string());
+        }
+        v
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                Error::parse(format!("bad value `{v}` for --{name}"))
+            }),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.parse_opt(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        Ok(self.parse_opt(name)?.unwrap_or(default))
+    }
+
+    /// Remaining (unconsumed) option keys — for strict validation.
+    pub fn unused(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect()
+    }
+
+    /// All `--key value` options, for generic pass-through into
+    /// `FlConfig::set` overrides.
+    pub fn options(&self) -> &BTreeMap<String, String> {
+        &self.options
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = mk(&["train", "--rounds", "10", "--verbose", "--lr", "0.1"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("rounds", 1).unwrap(), 10);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.unused().is_empty());
+    }
+
+    #[test]
+    fn tracks_unused() {
+        let a = mk(&["x", "--weird", "1"]);
+        assert_eq!(a.unused(), vec!["weird".to_string()]);
+    }
+
+    #[test]
+    fn rejects_bad_forms() {
+        assert!(Args::parse(["train".into(), "stray".into()]).is_err());
+        assert!(Args::parse(["--a".into(), "1".into(), "--a".into(),
+                             "2".into()]).is_err());
+        let a = mk(&["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = mk(&["--x", "1"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.opt_str("x").as_deref(), Some("1"));
+    }
+}

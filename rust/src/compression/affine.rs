@@ -1,0 +1,280 @@
+//! Affine RTN quantization codec — the paper's §IV scheme, byte-exact
+//! with the L1 pallas kernel (`python/compile/kernels/quant.py`):
+//!
+//! ```text
+//! lo = min(min(w), 0);  hi = max(max(w), 0)     (range includes 0)
+//! scale = (hi - lo) / (2^bits - 1)          (1.0 if the row is constant)
+//! zp    = clip(floor(-min / scale + 0.5), 0, 2^bits - 1)
+//! q     = clip(floor(w / scale + 0.5) + zp, 0, 2^bits - 1)
+//! deq   = (q - zp) * scale
+//! ```
+//!
+//! Grouping follows the paper: per *channel* for conv-shaped tensors,
+//! per *column* for the FC (both expressed as `Segment::quant_rows` —
+//! the leading dim after the python side reshapes); normalization
+//! layers (`quant_rows == None`) travel in fp32.
+//!
+//! Wire format, per segment, in layout order:
+//! * quantized segment: `[scale f32 x rows][zp u8/u16-packed? no — f32 x rows][codes packed bits]`
+//!   (scales and zero-points in f32, exactly the overhead the paper
+//!   says it includes in its TCC numbers)
+//! * fp segment: raw f32 little-endian.
+//!
+//! An `Engine::quant_oracle` integration test asserts
+//! `decode(encode(x)) == HLO fake_quant(x)` to float tolerance.
+
+use crate::compression::pack::{pack, packed_len, unpack};
+use crate::compression::{Codec, Message};
+use crate::error::{Error, Result};
+use crate::model::Segment;
+
+pub struct AffineCodec {
+    bits: u32,
+}
+
+impl AffineCodec {
+    pub fn new(bits: u32) -> AffineCodec {
+        assert!(matches!(bits, 2 | 4 | 8), "supported widths: 2/4/8");
+        AffineCodec { bits }
+    }
+
+    fn qmax(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Quantize one row; returns (scale, zp) and appends codes.
+    fn quant_row(&self, row: &[f32], codes: &mut Vec<u8>) -> (f32, f32) {
+        let qmax = self.qmax();
+        // Range extended to include 0 (Nagel et al. [22]) so the
+        // zero-point never clamps and RTN error stays <= scale/2.
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let rng = hi - lo;
+        let scale = if rng > 0.0 { rng / qmax } else { 1.0 };
+        let zp = (-lo / scale + 0.5).floor().clamp(0.0, qmax);
+        for &v in row {
+            let q = ((v / scale + 0.5).floor() + zp).clamp(0.0, qmax);
+            codes.push(q as u8);
+        }
+        (scale, zp)
+    }
+}
+
+/// Exact encoded size of one segment under `bits` (used by the analytic
+/// TCC calculators — keep in sync with `encode`).
+pub fn segment_encoded_size(seg: &Segment, bits: u32) -> usize {
+    match seg.quant_rows {
+        None => seg.numel * 4,
+        Some(rows) => rows * 8 + packed_len(seg.numel, bits),
+    }
+}
+
+impl Codec for AffineCodec {
+    fn name(&self) -> String {
+        format!("q{}", self.bits)
+    }
+
+    fn encode(&self, v: &[f32], segments: &[Segment]) -> Result<Message> {
+        let total: usize = segments.iter().map(|s| s.numel).sum();
+        if total != v.len() {
+            return Err(Error::invalid(format!(
+                "affine encode: layout {} vs vector {}",
+                total,
+                v.len()
+            )));
+        }
+        let mut payload = Vec::new();
+        for seg in segments {
+            let data = &v[seg.offset..seg.offset + seg.numel];
+            match seg.quant_rows {
+                None => {
+                    for x in data {
+                        payload.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Some(rows) => {
+                    debug_assert_eq!(seg.numel % rows, 0, "{}", seg.name);
+                    let cols = seg.numel / rows;
+                    let mut scales = Vec::with_capacity(rows);
+                    let mut zps = Vec::with_capacity(rows);
+                    let mut codes = Vec::with_capacity(seg.numel);
+                    for r in 0..rows {
+                        let (s, z) =
+                            self.quant_row(&data[r * cols..(r + 1) * cols],
+                                           &mut codes);
+                        scales.push(s);
+                        zps.push(z);
+                    }
+                    for s in &scales {
+                        payload.extend_from_slice(&s.to_le_bytes());
+                    }
+                    for z in &zps {
+                        payload.extend_from_slice(&z.to_le_bytes());
+                    }
+                    payload.extend_from_slice(&pack(&codes, self.bits));
+                }
+            }
+        }
+        Ok(Message { payload, codec: self.name() })
+    }
+
+    fn decode(&self, msg: &Message, segments: &[Segment]) -> Result<Vec<f32>> {
+        let total: usize = segments.iter().map(|s| s.numel).sum();
+        let mut out = vec![0.0f32; total];
+        let b = &msg.payload;
+        let mut pos = 0usize;
+        let rd_f32 = |b: &[u8], pos: &mut usize| -> Result<f32> {
+            if *pos + 4 > b.len() {
+                return Err(Error::parse("affine decode: truncated payload"));
+            }
+            let v = f32::from_le_bytes(b[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        for seg in segments {
+            let dst = &mut out[seg.offset..seg.offset + seg.numel];
+            match seg.quant_rows {
+                None => {
+                    for d in dst.iter_mut() {
+                        *d = rd_f32(b, &mut pos)?;
+                    }
+                }
+                Some(rows) => {
+                    let cols = seg.numel / rows;
+                    let mut scales = Vec::with_capacity(rows);
+                    let mut zps = Vec::with_capacity(rows);
+                    for _ in 0..rows {
+                        scales.push(rd_f32(b, &mut pos)?);
+                    }
+                    for _ in 0..rows {
+                        zps.push(rd_f32(b, &mut pos)?);
+                    }
+                    let plen = packed_len(seg.numel, self.bits);
+                    if pos + plen > b.len() {
+                        return Err(Error::parse("affine decode: truncated codes"));
+                    }
+                    let codes = unpack(&b[pos..pos + plen], self.bits, seg.numel);
+                    pos += plen;
+                    for r in 0..rows {
+                        let s = scales[r];
+                        let z = zps[r];
+                        for c in 0..cols {
+                            dst[r * cols + c] =
+                                (codes[r * cols + c] as f32 - z) * s;
+                        }
+                    }
+                }
+            }
+        }
+        if pos != b.len() {
+            return Err(Error::parse(format!(
+                "affine decode: {} trailing bytes",
+                b.len() - pos
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamKind;
+    use crate::util::rng::Rng;
+
+    fn seg(name: &str, numel: usize, offset: usize,
+           quant_rows: Option<usize>) -> Segment {
+        Segment { name: name.into(), shape: vec![numel], numel,
+                  kind: ParamKind::Conv, offset, quant_rows }
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| 3.0 * rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_half_scale() {
+        for bits in [2u32, 4, 8] {
+            let c = AffineCodec::new(bits);
+            let segs = vec![seg("a", 64, 0, Some(8)), seg("n", 10, 64, None),
+                            seg("b", 30, 74, Some(10))];
+            let v = randv(104, bits as u64);
+            let msg = c.encode(&v, &segs).unwrap();
+            let out = c.decode(&msg, &segs).unwrap();
+            // fp segment exact:
+            assert_eq!(&out[64..74], &v[64..74]);
+            // quantized segments bounded by scale/2 per row; scale is
+            // range/qmax <= (2*maxabs)/qmax.
+            let qmax = ((1u32 << bits) - 1) as f32;
+            for (seg_range, rows) in [(0..64, 8), (74..104, 10)] {
+                let cols = seg_range.len() / rows;
+                for r in 0..rows {
+                    let row: Vec<f32> = v[seg_range.clone()]
+                        [r * cols..(r + 1) * cols].to_vec();
+                    let lo = row.iter().cloned().fold(0.0f32, f32::min);
+                    let hi = row.iter().cloned().fold(0.0f32, f32::max);
+                    let scale = ((hi - lo) / qmax).max(1e-12);
+                    for c_ in 0..cols {
+                        let i = seg_range.start + r * cols + c_;
+                        assert!((out[i] - v[i]).abs() <= scale * 0.5 + 1e-5,
+                                "bits={bits} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_match_formula() {
+        for bits in [2u32, 4, 8] {
+            let c = AffineCodec::new(bits);
+            let segs = vec![seg("a", 64, 0, Some(8)), seg("n", 10, 64, None)];
+            let v = randv(74, 9);
+            let msg = c.encode(&v, &segs).unwrap();
+            let expect: usize =
+                segs.iter().map(|s| segment_encoded_size(s, bits)).sum();
+            assert_eq!(msg.size_bytes(), expect);
+        }
+    }
+
+    #[test]
+    fn compression_ratio_roughly_bits_over_32() {
+        // For a large all-quantized layout the ratio approaches 32/bits.
+        let c = AffineCodec::new(8);
+        let segs = vec![seg("a", 64 * 256, 0, Some(64))];
+        let v = randv(64 * 256, 3);
+        let msg = c.encode(&v, &segs).unwrap();
+        let ratio = (v.len() * 4) as f64 / msg.size_bytes() as f64;
+        assert!(ratio > 3.7 && ratio < 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn constant_rows_round_trip_exactly() {
+        let c = AffineCodec::new(8);
+        let segs = vec![seg("a", 16, 0, Some(4))];
+        let v = vec![-3.0f32; 4].into_iter()
+            .chain(vec![0.0; 4])
+            .chain(vec![5.0; 4])
+            .chain(vec![120.0; 4])
+            .collect::<Vec<_>>();
+        let out = c.decode(&c.encode(&v, &segs).unwrap(), &segs).unwrap();
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let c = AffineCodec::new(4);
+        let segs = vec![seg("a", 64, 0, Some(8))];
+        let v = randv(64, 4);
+        let mut msg = c.encode(&v, &segs).unwrap();
+        msg.payload.truncate(msg.payload.len() - 3);
+        assert!(c.decode(&msg, &segs).is_err());
+        msg.payload.extend_from_slice(&[0; 10]);
+        assert!(c.decode(&msg, &segs).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Wire codecs: how a flat parameter vector becomes bytes on the
+//! (simulated) network.
+//!
+//! The paper's method stack maps to:
+//! * [`CodecKind::Fp32`]    — FedAvg / FLoCoRA-FP baseline rows.
+//! * [`CodecKind::Affine`]  — FLoCoRA + affine RTN quantization (§IV),
+//!   per-channel scale/zero-point for convs, per-column for the FC,
+//!   norm layers kept FP; 8/4/2-bit packed codes.
+//! * [`CodecKind::TopK`]    — Magnitude Pruning baseline [4]: keep the
+//!   largest-|w| fraction, bitmap + packed survivors.
+//! * [`CodecKind::ZeroFl`]  — ZeroFL-style baseline [12]: SP sparsity +
+//!   mask-ratio extra upload, (index, value)-pair encoding.
+//!
+//! Every codec is *lossy-transparent*: `decode(encode(v))` returns a
+//! dense vector the aggregator can consume; message size is the exact
+//! byte length of the encoded payload (no hidden framing).
+
+pub mod affine;
+pub mod pack;
+pub mod sparse;
+
+use crate::error::Result;
+use crate::model::Segment;
+
+pub use affine::AffineCodec;
+pub use sparse::{TopKCodec, ZeroFlCodec};
+
+/// An encoded message plus provenance.
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub payload: Vec<u8>,
+    pub codec: String,
+}
+
+impl Message {
+    pub fn size_bytes(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+/// A parameter-vector codec.
+pub trait Codec {
+    fn name(&self) -> String;
+
+    /// Encode `v` (layout described by `segments`, whose `numel`s must
+    /// sum to `v.len()`).
+    fn encode(&self, v: &[f32], segments: &[Segment]) -> Result<Message>;
+
+    /// Decode back to a dense vector of the layout's total length.
+    fn decode(&self, msg: &Message, segments: &[Segment]) -> Result<Vec<f32>>;
+}
+
+/// Plain little-endian fp32 — the uncompressed baseline (Q_p = 32).
+pub struct Fp32Codec;
+
+impl Codec for Fp32Codec {
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+
+    fn encode(&self, v: &[f32], _segments: &[Segment]) -> Result<Message> {
+        let mut payload = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(Message { payload, codec: self.name() })
+    }
+
+    fn decode(&self, msg: &Message, _segments: &[Segment]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(msg.payload.len() / 4);
+        for chunk in msg.payload.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+/// Codec selection, parseable from CLI/config strings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CodecKind {
+    Fp32,
+    /// bits ∈ {2, 4, 8}
+    Affine(u32),
+    /// keep fraction ∈ (0, 1]; paper rows: 0.6 (40% prune), 0.2 (80%).
+    TopK(f32),
+    /// (sparsity SP, mask ratio MR); paper rows: (0.9, 0.2), (0.9, 0.0).
+    ZeroFl(f32, f32),
+}
+
+impl CodecKind {
+    /// Parse `fp32 | q8 | q4 | q2 | topk:<keep> | zerofl:<sp>:<mr>`.
+    pub fn parse(s: &str) -> Option<CodecKind> {
+        match s {
+            "fp32" => return Some(CodecKind::Fp32),
+            "q8" => return Some(CodecKind::Affine(8)),
+            "q4" => return Some(CodecKind::Affine(4)),
+            "q2" => return Some(CodecKind::Affine(2)),
+            _ => {}
+        }
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["topk", keep] => keep.parse().ok().map(CodecKind::TopK),
+            ["zerofl", sp, mr] => {
+                Some(CodecKind::ZeroFl(sp.parse().ok()?, mr.parse().ok()?))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Codec> {
+        match *self {
+            CodecKind::Fp32 => Box::new(Fp32Codec),
+            CodecKind::Affine(bits) => Box::new(AffineCodec::new(bits)),
+            CodecKind::TopK(keep) => Box::new(TopKCodec::new(keep)),
+            CodecKind::ZeroFl(sp, mr) => Box::new(ZeroFlCodec::new(sp, mr)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            CodecKind::Fp32 => "fp32".into(),
+            CodecKind::Affine(b) => format!("q{b}"),
+            CodecKind::TopK(k) => format!("topk:{k}"),
+            CodecKind::ZeroFl(sp, mr) => format!("zerofl:{sp}:{mr}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build_spec, ModelCfg, Variant};
+    use crate::util::rng::Rng;
+
+    fn test_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn fp32_round_trip_exact() {
+        let spec = build_spec(ModelCfg::by_name("micro8").unwrap(),
+                              Variant::LoraFc, 4);
+        let v = test_vec(spec.num_trainable(), 1);
+        let c = Fp32Codec;
+        let msg = c.encode(&v, &spec.trainable).unwrap();
+        assert_eq!(msg.size_bytes(), v.len() * 4);
+        assert_eq!(c.decode(&msg, &spec.trainable).unwrap(), v);
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(CodecKind::parse("fp32"), Some(CodecKind::Fp32));
+        assert_eq!(CodecKind::parse("q4"), Some(CodecKind::Affine(4)));
+        assert_eq!(CodecKind::parse("topk:0.6"), Some(CodecKind::TopK(0.6)));
+        assert_eq!(CodecKind::parse("zerofl:0.9:0.2"),
+                   Some(CodecKind::ZeroFl(0.9, 0.2)));
+        assert_eq!(CodecKind::parse("nope"), None);
+        assert_eq!(CodecKind::parse("topk:x"), None);
+    }
+
+    #[test]
+    fn all_kinds_round_trip_to_correct_length() {
+        let spec = build_spec(ModelCfg::by_name("micro8").unwrap(),
+                              Variant::LoraFc, 4);
+        let v = test_vec(spec.num_trainable(), 2);
+        for kind in [CodecKind::Fp32, CodecKind::Affine(8),
+                     CodecKind::Affine(4), CodecKind::Affine(2),
+                     CodecKind::TopK(0.5), CodecKind::ZeroFl(0.9, 0.2)] {
+            let c = kind.build();
+            let msg = c.encode(&v, &spec.trainable).unwrap();
+            let out = c.decode(&msg, &spec.trainable).unwrap();
+            assert_eq!(out.len(), v.len(), "{:?}", kind);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Sub-byte integer packing: 2/4/8-bit codes, little-endian within the
+//! byte (code 0 in the lowest bits). 8-bit is a plain byte per code.
+
+/// Pack `codes` (each < 2^bits) at `bits` per element.
+pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let per = 8 / bits as usize;
+    let mut out = vec![0u8; codes.len().div_ceil(per)];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(u32::from(c) < (1 << bits), "code {c} exceeds {bits} bits");
+        let byte = i / per;
+        let slot = (i % per) as u32;
+        out[byte] |= c << (slot * bits);
+    }
+    out
+}
+
+/// Unpack `n` codes at `bits` per element.
+pub fn unpack(bytes: &[u8], bits: u32, n: usize) -> Vec<u8> {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let per = 8 / bits as usize;
+    assert!(bytes.len() >= n.div_ceil(per), "not enough packed bytes");
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte = bytes[i / per];
+        let slot = (i % per) as u32;
+        out.push((byte >> (slot * bits)) & mask);
+    }
+    out
+}
+
+/// Packed byte length for `n` codes at `bits`.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    n.div_ceil((8 / bits) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_all_widths() {
+        let mut rng = Rng::new(11);
+        for bits in [2u32, 4, 8] {
+            let max = (1u16 << bits) as usize;
+            for n in [0usize, 1, 3, 8, 9, 255, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.below(max) as u8).collect();
+                let packed = pack(&codes, bits);
+                assert_eq!(packed.len(), packed_len(n, bits));
+                assert_eq!(unpack(&packed, bits, n), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn density() {
+        assert_eq!(packed_len(8, 2), 2);
+        assert_eq!(packed_len(8, 4), 4);
+        assert_eq!(packed_len(8, 8), 8);
+        assert_eq!(packed_len(9, 2), 3);
+    }
+
+    #[test]
+    fn known_layout() {
+        // codes [1, 2, 3, 0] at 2 bits -> 0b00_11_10_01.
+        assert_eq!(pack(&[1, 2, 3, 0], 2), vec![0b0011_1001]);
+        // codes [0xA, 0x5] at 4 bits -> 0b0101_1010.
+        assert_eq!(pack(&[0xA, 0x5], 4), vec![0b0101_1010]);
+    }
+}

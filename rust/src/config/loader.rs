@@ -1,0 +1,76 @@
+//! TOML-subset config loader: flat `key = value` lines, `#` comments,
+//! optional quoting for strings. Section headers are accepted and
+//! flattened (`[section]` is ignored — the config namespace is flat).
+
+use std::path::Path;
+
+use crate::config::FlConfig;
+use crate::error::{Error, Result};
+
+/// Parse `key = value` lines into an existing config.
+pub fn apply_str(cfg: &mut FlConfig, text: &str) -> Result<()> {
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            Error::parse(format!("line {}: expected key = value", lineno + 1))
+        })?;
+        let key = key.trim();
+        let value = value.trim().trim_matches('"');
+        cfg.set(key, value).map_err(|e| {
+            Error::parse(format!("line {}: {e}", lineno + 1))
+        })?;
+    }
+    Ok(())
+}
+
+/// Load a config file on top of defaults.
+pub fn load(path: impl AsRef<Path>) -> Result<FlConfig> {
+    let text = std::fs::read_to_string(path)?;
+    let mut cfg = FlConfig::default();
+    apply_str(&mut cfg, &text)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::CodecKind;
+
+    #[test]
+    fn parses_typical_file() {
+        let mut cfg = FlConfig::default();
+        apply_str(
+            &mut cfg,
+            r#"
+            # FLoCoRA scaled run
+            [federation]
+            tag = "tiny8_lora_fc_r8"
+            rounds = 30
+            codec = q8          # quantized uplink+downlink
+            lora_alpha = 128.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.tag, "tiny8_lora_fc_r8");
+        assert_eq!(cfg.rounds, 30);
+        assert_eq!(cfg.codec, CodecKind::Affine(8));
+        assert_eq!(cfg.lora_alpha, 128.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let mut cfg = FlConfig::default();
+        assert!(apply_str(&mut cfg, "rounds 30").is_err());
+        assert!(apply_str(&mut cfg, "unknown = 1").is_err());
+        let err = apply_str(&mut cfg, "\n\nrounds = x").unwrap_err();
+        assert!(err.to_string().contains("line 3"), "{err}");
+    }
+}

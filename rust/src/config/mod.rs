@@ -1,0 +1,167 @@
+//! Experiment configuration: typed config struct, named presets
+//! (paper-scale and scaled profiles), and a TOML-subset file loader so
+//! runs are launchable as `flocora train --config exp.toml` with CLI
+//! overrides on top.
+
+pub mod loader;
+pub mod presets;
+
+use crate::compression::CodecKind;
+use crate::error::{Error, Result};
+
+/// Full description of one FL run.
+#[derive(Debug, Clone)]
+pub struct FlConfig {
+    /// Manifest tag, e.g. `tiny8_lora_fc_r8`.
+    pub tag: String,
+    pub num_clients: usize,
+    /// Clients sampled per round (paper: 10% of 100).
+    pub clients_per_round: usize,
+    pub rounds: usize,
+    pub local_epochs: usize,
+    /// Client SGD learning rate (paper: 0.01).
+    pub lr: f32,
+    /// LoRA alpha; the runtime scale is `alpha / rank`. Ignored by
+    /// `full` variants. Paper main setting: alpha = 16 r.
+    pub lora_alpha: f32,
+    pub codec: CodecKind,
+    /// Dirichlet concentration for the LDA partitioner.
+    pub lda_alpha: f64,
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+    pub seed: u64,
+    /// Evaluate every k rounds (always evaluates the final round).
+    pub eval_every: usize,
+    /// Per-round probability that a sampled client fails before
+    /// uploading (straggler/failure injection; FedAvg simply averages
+    /// the survivors). 0.0 disables.
+    pub dropout: f64,
+    /// Multiplicative per-round learning-rate decay (1.0 = constant;
+    /// e.g. 0.99 halves the lr every ~69 rounds).
+    pub lr_decay: f32,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        FlConfig {
+            tag: "micro8_lora_fc_r4".into(),
+            num_clients: 16,
+            clients_per_round: 4,
+            rounds: 20,
+            local_epochs: 2,
+            lr: 0.02,
+            lora_alpha: 64.0, // 16 * r for r = 4
+            codec: CodecKind::Fp32,
+            lda_alpha: 0.5,
+            samples_per_client: 48,
+            test_samples: 240,
+            seed: 42,
+            eval_every: 2,
+            dropout: 0.0,
+            lr_decay: 1.0,
+        }
+    }
+}
+
+impl FlConfig {
+    /// Effective `alpha / r` scale for a given rank (1.0 for full).
+    pub fn lora_scale(&self, rank: usize) -> f32 {
+        if rank == 0 {
+            1.0
+        } else {
+            self.lora_alpha / rank as f32
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients_per_round == 0 || self.clients_per_round > self.num_clients {
+            return Err(Error::invalid(format!(
+                "clients_per_round {} must be in [1, {}]",
+                self.clients_per_round, self.num_clients
+            )));
+        }
+        if self.rounds == 0 || self.local_epochs == 0 {
+            return Err(Error::invalid("rounds/local_epochs must be > 0"));
+        }
+        if self.samples_per_client == 0 || self.test_samples == 0 {
+            return Err(Error::invalid("dataset sizes must be > 0"));
+        }
+        if self.eval_every == 0 {
+            return Err(Error::invalid("eval_every must be > 0"));
+        }
+        if !(self.lr > 0.0) || !(self.lda_alpha > 0.0) {
+            return Err(Error::invalid("lr and lda_alpha must be > 0"));
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            return Err(Error::invalid("dropout must be in [0, 1)"));
+        }
+        if !(self.lr_decay > 0.0 && self.lr_decay <= 1.0) {
+            return Err(Error::invalid("lr_decay must be in (0, 1]"));
+        }
+        Ok(())
+    }
+
+    /// Apply one `key = value` setting (config file or CLI override).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
+            v.parse().map_err(|_| {
+                Error::parse(format!("bad value `{v}` for `{k}`"))
+            })
+        }
+        match key {
+            "tag" => self.tag = value.to_string(),
+            "num_clients" => self.num_clients = p(key, value)?,
+            "clients_per_round" => self.clients_per_round = p(key, value)?,
+            "rounds" => self.rounds = p(key, value)?,
+            "local_epochs" => self.local_epochs = p(key, value)?,
+            "lr" => self.lr = p(key, value)?,
+            "lora_alpha" => self.lora_alpha = p(key, value)?,
+            "lda_alpha" => self.lda_alpha = p(key, value)?,
+            "samples_per_client" => self.samples_per_client = p(key, value)?,
+            "test_samples" => self.test_samples = p(key, value)?,
+            "seed" => self.seed = p(key, value)?,
+            "eval_every" => self.eval_every = p(key, value)?,
+            "dropout" => self.dropout = p(key, value)?,
+            "lr_decay" => self.lr_decay = p(key, value)?,
+            "codec" => {
+                self.codec = CodecKind::parse(value).ok_or_else(|| {
+                    Error::parse(format!("unknown codec `{value}`"))
+                })?
+            }
+            _ => return Err(Error::parse(format!("unknown config key `{key}`"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        FlConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_validate() {
+        let mut c = FlConfig::default();
+        c.set("rounds", "7").unwrap();
+        c.set("codec", "q4").unwrap();
+        c.set("lr", "0.5").unwrap();
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.codec, CodecKind::Affine(4));
+        assert!(c.set("codec", "bogus").is_err());
+        assert!(c.set("nope", "1").is_err());
+        c.set("clients_per_round", "100").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lora_scale_math() {
+        let mut c = FlConfig::default();
+        c.lora_alpha = 512.0;
+        assert_eq!(c.lora_scale(32), 16.0);
+        assert_eq!(c.lora_scale(0), 1.0);
+    }
+}

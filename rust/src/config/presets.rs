@@ -1,0 +1,119 @@
+//! Named experiment presets.
+//!
+//! `paper_*` presets reproduce the paper's §IV setup verbatim (100
+//! clients, 10% sampling, batch 32, lr 0.01, momentum 0.9) — they are
+//! what the analytic tables use, and can be run end-to-end given enough
+//! CPU-hours. `scaled_*` presets keep every ratio (10% sampling, same
+//! optimizer, same LDA) at a size this testbed trains in minutes; the
+//! benches use them for the accuracy columns (DESIGN.md §2).
+
+use crate::compression::CodecKind;
+use crate::config::FlConfig;
+
+/// Paper §IV main setup: ResNet-8, CIFAR-10-scale, LDA 0.5, 100 rounds.
+pub fn paper_resnet8(rank: usize, codec: CodecKind) -> FlConfig {
+    FlConfig {
+        tag: if rank == 0 {
+            "resnet8_full".into()
+        } else {
+            format!("resnet8_lora_fc_r{rank}")
+        },
+        num_clients: 100,
+        clients_per_round: 10,
+        rounds: 100,
+        local_epochs: 5,
+        lr: 0.01,
+        lora_alpha: 16.0 * rank.max(1) as f32, // paper: alpha = 16 r (512 at r=32)
+        codec,
+        lda_alpha: 0.5,
+        samples_per_client: 500, // 50k CIFAR train / 100 clients
+        test_samples: 10_000,
+        seed: 42,
+        eval_every: 5,
+        dropout: 0.0,
+        lr_decay: 1.0,
+    }
+}
+
+/// Paper Table IV setup: ResNet-18, 700 rounds, 1 local epoch, LDA 1.0.
+pub fn paper_resnet18(rank: usize, codec: CodecKind) -> FlConfig {
+    let mut cfg = paper_resnet8(rank, codec);
+    cfg.tag = if rank == 0 {
+        "resnet18_full".into()
+    } else {
+        format!("resnet18_lora_fc_r{rank}")
+    };
+    cfg.rounds = 700;
+    cfg.local_epochs = 1;
+    cfg.lda_alpha = 1.0;
+    cfg
+}
+
+/// Scaled profile on micro8 (16x16 images): minutes on this CPU.
+/// Keeps the paper's ratios: 25% sampling is raised from 10% so each
+/// round still averages >= 4 clients at the small federation size.
+pub fn scaled_micro(variant_tag: &str, rank: usize, codec: CodecKind) -> FlConfig {
+    FlConfig {
+        tag: variant_tag.into(),
+        num_clients: 16,
+        clients_per_round: 4,
+        rounds: 24,
+        local_epochs: 2,
+        lr: 0.02,
+        lora_alpha: 16.0 * rank.max(1) as f32,
+        codec,
+        lda_alpha: 0.5,
+        samples_per_client: 48,
+        test_samples: 240,
+        seed: 42,
+        eval_every: 2,
+        dropout: 0.0,
+        lr_decay: 1.0,
+    }
+}
+
+/// Scaled profile on tiny8 (32x32 images, ~0.2 s/step): tens of minutes.
+pub fn scaled_tiny(variant_tag: &str, rank: usize, codec: CodecKind) -> FlConfig {
+    let mut cfg = scaled_micro(variant_tag, rank, codec);
+    cfg.tag = variant_tag.into();
+    cfg.num_clients = 12;
+    cfg.clients_per_round = 3;
+    cfg.rounds = 16;
+    cfg.samples_per_client = 64;
+    cfg.test_samples = 200;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_presets_match_section_iv() {
+        let cfg = paper_resnet8(32, CodecKind::Fp32);
+        assert_eq!(cfg.num_clients, 100);
+        assert_eq!(cfg.clients_per_round, 10);
+        assert_eq!(cfg.rounds, 100);
+        assert_eq!(cfg.local_epochs, 5);
+        assert_eq!(cfg.lr, 0.01);
+        assert_eq!(cfg.lora_alpha, 512.0); // alpha = 16 r at r = 32
+        assert_eq!(cfg.lora_scale(32), 16.0);
+        cfg.validate().unwrap();
+
+        let t4 = paper_resnet18(16, CodecKind::Affine(8));
+        assert_eq!(t4.rounds, 700);
+        assert_eq!(t4.local_epochs, 1);
+        assert_eq!(t4.lda_alpha, 1.0);
+        t4.validate().unwrap();
+    }
+
+    #[test]
+    fn scaled_presets_valid() {
+        scaled_micro("micro8_lora_fc_r4", 4, CodecKind::Fp32)
+            .validate()
+            .unwrap();
+        scaled_tiny("tiny8_lora_fc_r8", 8, CodecKind::Affine(4))
+            .validate()
+            .unwrap();
+    }
+}

@@ -1,0 +1,86 @@
+//! FedAvg aggregation over opaque flat vectors.
+//!
+//! `w_{t+1} = Σ_k (n_k / n) w_k` (paper Eq. 1's minimizer step). The
+//! accumulator is f64-free by design — the paper's method aggregates in
+//! the same precision the messages arrive in (f32), and the weighted
+//! accumulation is the per-round O(K·P) hot loop (DESIGN.md §7).
+
+use crate::error::{Error, Result};
+use crate::tensor;
+
+/// Streaming weighted-average accumulator.
+pub struct FedAvg {
+    acc: Vec<f32>,
+    total_weight: f64,
+}
+
+impl FedAvg {
+    pub fn new(dim: usize) -> FedAvg {
+        FedAvg { acc: vec![0.0; dim], total_weight: 0.0 }
+    }
+
+    /// Add one client's vector with sample-count weight `n_k`.
+    pub fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
+        if v.len() != self.acc.len() {
+            return Err(Error::invalid(format!(
+                "aggregator dim {} vs contribution {}",
+                self.acc.len(),
+                v.len()
+            )));
+        }
+        if !(weight > 0.0) {
+            return Err(Error::invalid(format!("bad weight {weight}")));
+        }
+        tensor::axpy_weighted(&mut self.acc, v, weight as f32);
+        self.total_weight += weight;
+        Ok(())
+    }
+
+    pub fn contributions(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Finish: divide by total weight.
+    pub fn finish(mut self) -> Result<Vec<f32>> {
+        if self.total_weight <= 0.0 {
+            return Err(Error::invalid("aggregating zero contributions"));
+        }
+        tensor::scale(&mut self.acc, (1.0 / self.total_weight) as f32);
+        Ok(self.acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_mean() {
+        let mut agg = FedAvg::new(2);
+        agg.add(&[1.0, 0.0], 1.0).unwrap();
+        agg.add(&[4.0, 3.0], 3.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert_eq!(out, vec![3.25, 2.25]);
+    }
+
+    #[test]
+    fn identity_on_identical_inputs() {
+        let v = vec![0.5f32, -1.5, 2.0];
+        let mut agg = FedAvg::new(3);
+        for w in [1.0, 2.0, 5.0] {
+            agg.add(&v, w).unwrap();
+        }
+        let out = agg.finish().unwrap();
+        for (a, b) in out.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rejects_errors() {
+        let mut agg = FedAvg::new(2);
+        assert!(agg.add(&[1.0], 1.0).is_err());
+        assert!(agg.add(&[1.0, 2.0], 0.0).is_err());
+        assert!(FedAvg::new(2).finish().is_err());
+    }
+}

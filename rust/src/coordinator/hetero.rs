@@ -1,0 +1,194 @@
+//! Rank-heterogeneous federation — the extension the paper's conclusion
+//! sketches ("explore … rank heterogeneity to further reduce the
+//! communication cost"), in the spirit of HLoRA [8]: each client trains
+//! adapters at its own rank `r_k <= r_server`, and the server projects
+//! between rank spaces by zero-padding / truncating the rank dimension
+//! of each adapter pair.
+//!
+//! Projection rules per segment kind (matching the adapter shapes of
+//! paper §III):
+//! * `lora_b (r, I, K, K)`      — pad/truncate leading `r` rows;
+//! * `lora_a (O, r, 1, 1)`      — pad/truncate the per-output-row `r`
+//!   columns;
+//! * `fc_lora_b (d, r)`         — per-row columns;
+//! * `fc_lora_a (r, c)`         — leading rows;
+//! * everything else (norm, fc) — shapes match, copied verbatim.
+//!
+//! Zero-padding is exact for the B·A product: extra rank slots
+//! contribute `0 · x = 0`, so an `r`-rank adapter embedded in an
+//! `r' > r` space computes the identical function.
+
+use crate::error::{Error, Result};
+use crate::model::{ParamKind, Segment};
+
+fn rank_geometry(seg: &Segment) -> Option<(usize, usize, bool)> {
+    // Returns (rank, inner_block, rank_is_leading):
+    // leading => memory is rank-major ([r][inner]);
+    // trailing => per-row rank columns ([outer][r]).
+    match seg.kind {
+        ParamKind::LoraB => {
+            // (r, I, K, K): rank-major.
+            let r = seg.shape[0];
+            Some((r, seg.numel / r, true))
+        }
+        ParamKind::FcLoraA => {
+            // (r, c): rank-major.
+            let r = seg.shape[0];
+            Some((r, seg.numel / r, true))
+        }
+        ParamKind::LoraA => {
+            // (O, r, 1, 1): rank-minor.
+            let r = seg.shape[1];
+            Some((r, seg.shape[0], false))
+        }
+        ParamKind::FcLoraB => {
+            // (d, r): rank-minor.
+            let r = seg.shape[1];
+            Some((r, seg.shape[0], false))
+        }
+        _ => None,
+    }
+}
+
+/// Project a trainable vector from `src` segment layout to `dst`
+/// (zero-padding or truncating every adapter's rank dimension).
+pub fn project_ranks(
+    v: &[f32],
+    src: &[Segment],
+    dst: &[Segment],
+) -> Result<Vec<f32>> {
+    if src.len() != dst.len() {
+        return Err(Error::invalid(format!(
+            "segment count mismatch: {} vs {}",
+            src.len(),
+            dst.len()
+        )));
+    }
+    let dst_total: usize = dst.iter().map(|s| s.numel).sum();
+    let mut out = vec![0.0f32; dst_total];
+    for (s, d) in src.iter().zip(dst.iter()) {
+        if s.name != d.name || s.kind != d.kind {
+            return Err(Error::invalid(format!(
+                "segment mismatch: {} vs {}",
+                s.name, d.name
+            )));
+        }
+        let sv = &v[s.offset..s.offset + s.numel];
+        let dv = &mut out[d.offset..d.offset + d.numel];
+        match (rank_geometry(s), rank_geometry(d)) {
+            (None, None) => {
+                if s.numel != d.numel {
+                    return Err(Error::invalid(format!(
+                        "non-adapter segment {} changed size",
+                        s.name
+                    )));
+                }
+                dv.copy_from_slice(sv);
+            }
+            (Some((rs, inner_s, lead_s)), Some((rd, inner_d, lead_d))) => {
+                if inner_s != inner_d || lead_s != lead_d {
+                    return Err(Error::invalid(format!(
+                        "adapter {} inner geometry mismatch",
+                        s.name
+                    )));
+                }
+                let r = rs.min(rd);
+                if lead_s {
+                    // rank-major: copy the first r blocks of `inner`.
+                    dv[..r * inner_s].copy_from_slice(&sv[..r * inner_s]);
+                } else {
+                    // rank-minor: per outer row, copy first r columns.
+                    for o in 0..inner_s {
+                        dv[o * rd..o * rd + r]
+                            .copy_from_slice(&sv[o * rs..o * rs + r]);
+                    }
+                }
+            }
+            _ => {
+                return Err(Error::invalid(format!(
+                    "segment {} is an adapter on one side only",
+                    s.name
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build_spec, ModelCfg, Variant};
+    use crate::util::rng::Rng;
+
+    fn specs(r: usize) -> Vec<Segment> {
+        build_spec(ModelCfg::by_name("micro8").unwrap(), Variant::LoraFc, r)
+            .trainable
+    }
+
+    fn randv(n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(4);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn down_then_up_is_identity_on_shared_rank_slots() {
+        let s4 = specs(4);
+        let s8 = specs(8);
+        let n4: usize = s4.iter().map(|s| s.numel).sum();
+        let v4 = randv(n4);
+        let v8 = project_ranks(&v4, &s4, &s8).unwrap();
+        let back = project_ranks(&v8, &s8, &s4).unwrap();
+        assert_eq!(back, v4);
+    }
+
+    #[test]
+    fn up_projection_pads_with_zeros() {
+        let s4 = specs(4);
+        let s8 = specs(8);
+        let n4: usize = s4.iter().map(|s| s.numel).sum();
+        let v8 = project_ranks(&randv(n4), &s4, &s8).unwrap();
+        // Every lora_b segment: rows 4..8 must be zero.
+        for seg in &s8 {
+            if seg.kind == ParamKind::LoraB {
+                let inner = seg.numel / seg.shape[0];
+                let sl = &v8[seg.offset..seg.offset + seg.numel];
+                assert!(sl[4 * inner..].iter().all(|&x| x == 0.0),
+                        "{}", seg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn same_rank_is_identity() {
+        let s4 = specs(4);
+        let n4: usize = s4.iter().map(|s| s.numel).sum();
+        let v = randv(n4);
+        assert_eq!(project_ranks(&v, &s4, &s4).unwrap(), v);
+    }
+
+    #[test]
+    fn norm_and_fc_segments_survive_projection() {
+        let s4 = specs(4);
+        let s8 = specs(8);
+        let n4: usize = s4.iter().map(|s| s.numel).sum();
+        let v4 = randv(n4);
+        let v8 = project_ranks(&v4, &s4, &s8).unwrap();
+        for (a, b) in s4.iter().zip(s8.iter()) {
+            if matches!(a.kind, ParamKind::NormW | ParamKind::NormB
+                        | ParamKind::FcW | ParamKind::FcB) {
+                assert_eq!(&v4[a.offset..a.offset + a.numel],
+                           &v8[b.offset..b.offset + b.numel], "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_layouts() {
+        let s4 = specs(4);
+        let full = build_spec(ModelCfg::by_name("micro8").unwrap(),
+                              Variant::Full, 0).trainable;
+        let n4: usize = s4.iter().map(|s| s.numel).sum();
+        assert!(project_ranks(&randv(n4), &s4, &full).is_err());
+    }
+}

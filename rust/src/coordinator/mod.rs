@@ -1,0 +1,30 @@
+//! The FL coordinator — the paper's system contribution at Layer 3.
+//!
+//! FLoCoRA's protocol (paper §III, Fig. 1) per round `t`:
+//!
+//! 1. the server **downloads** the global adapter vector `Δ̄_t L`
+//!    (encoded by the active wire codec — fp32 or affine-quantized) to
+//!    the sampled subset `K` of clients;
+//! 2. each client trains **only** the adapter vector locally (the frozen
+//!    base `W_initial` never moves and is never re-transmitted);
+//! 3. clients **upload** their updated adapter vectors `Δ_{t+1}^k L`
+//!    (same codec);
+//! 4. the server **aggregates** with FedAvg's `n_k / n` weighted mean.
+//!
+//! The aggregator never inspects what the vector means — full model
+//! (FedAvg baseline), adapters (FLoCoRA), or a sparsified variant
+//! (pruning/ZeroFL baselines) all flow through the identical loop,
+//! which is exactly the paper's "implementable in any FL optimization
+//! method" claim, here enforced by the type system: [`server::Server`]
+//! only sees `&[f32]` + a [`crate::compression::Codec`].
+
+pub mod aggregator;
+pub mod hetero;
+pub mod sampler;
+pub mod server;
+pub mod trainer;
+
+pub use aggregator::FedAvg;
+pub use sampler::UniformSampler;
+pub use server::{RunSummary, Simulation};
+pub use trainer::LocalTrainer;

@@ -1,0 +1,235 @@
+//! The simulation driver: server state + round loop (paper Fig. 1).
+//!
+//! [`Simulation::run`] executes the full federated protocol against the
+//! AOT artifacts: every byte that would cross the network goes through
+//! the configured wire codec in **both** directions (the paper
+//! quantizes server→client and client→server messages alike) and is
+//! recorded in the [`CommLedger`]; the frozen base `W_initial` is
+//! distributed once at round 0 and never re-sent — exactly the FLoCoRA
+//! protocol (and, with a `full` variant + fp32 codec, exactly FedAvg).
+
+use std::time::Instant;
+
+use crate::compression::Codec;
+use crate::config::FlConfig;
+use crate::coordinator::aggregator::FedAvg;
+use crate::coordinator::sampler::UniformSampler;
+use crate::coordinator::trainer::LocalTrainer;
+use crate::data::batcher::Tail;
+use crate::data::{lda_partition, BatchIter, Federation, TestSet};
+use crate::error::Result;
+use crate::metrics::{Recorder, RoundRecord};
+use crate::runtime::{Engine, ModelSession};
+use crate::transport::{CommLedger, Direction};
+use crate::util::rng::Rng;
+
+/// Aggregate results of one run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub final_acc: f64,
+    pub tail_acc: f64,
+    pub total_bytes: u64,
+    pub mean_up_msg_bytes: f64,
+    pub per_client_tcc_bytes: f64,
+    pub rounds: usize,
+    pub wall_s: f64,
+}
+
+/// One federated-learning simulation.
+pub struct Simulation {
+    cfg: FlConfig,
+    session: ModelSession,
+    federation: Federation,
+    test: TestSet,
+    codec: Box<dyn Codec>,
+    sampler: UniformSampler,
+    rng: Rng,
+    /// Global trainable vector (`Δ̄_t L` for LoRA variants; the whole
+    /// model for `full`).
+    pub global: Vec<f32>,
+    /// Frozen `W_initial` — broadcast once, never updated (paper §III).
+    pub frozen: Vec<f32>,
+    pub ledger: CommLedger,
+    lora_scale: f32,
+    rounds_done: usize,
+    /// Clients that failed mid-round (failure injection diagnostics).
+    pub dropped_clients: u64,
+}
+
+impl Simulation {
+    pub fn new(engine: &Engine, cfg: FlConfig) -> Result<Simulation> {
+        cfg.validate()?;
+        let session = engine.session(&cfg.tag)?;
+        let spec = &session.spec;
+        let federation = lda_partition(
+            cfg.num_clients,
+            cfg.samples_per_client,
+            spec.num_classes,
+            spec.image_size,
+            cfg.lda_alpha,
+            cfg.seed,
+        );
+        let test = TestSet::generate(
+            cfg.test_samples,
+            spec.image_size,
+            spec.num_classes,
+            cfg.seed.wrapping_add(0x7E57),
+        );
+        // W_initial: both sides of the split come from the init artifact
+        // with the run seed — every client starts from the same frozen
+        // base, like the paper's single initial broadcast.
+        let (global, frozen) = session.init(cfg.seed)?;
+        let lora_scale = cfg.lora_scale(spec.rank);
+        Ok(Simulation {
+            sampler: UniformSampler::new(cfg.num_clients, cfg.seed),
+            rng: Rng::new(cfg.seed ^ 0xF1F1),
+            codec: cfg.codec.build(),
+            cfg,
+            session,
+            federation,
+            test,
+            global,
+            frozen,
+            ledger: CommLedger::new(),
+            lora_scale,
+            rounds_done: 0,
+            dropped_clients: 0,
+        })
+    }
+
+    pub fn config(&self) -> &FlConfig {
+        &self.cfg
+    }
+
+    pub fn spec_rank(&self) -> usize {
+        self.session.spec.rank
+    }
+
+    /// Evaluate the current global model on the held-out test set.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let batches = BatchIter::new(
+            &self.test.images,
+            &self.test.labels,
+            self.session.spec.image_size,
+            self.session.spec.batch_size,
+            None,
+            Tail::PadZero,
+        );
+        for batch in batches {
+            let (l, c) = self.session.eval_step(
+                &self.global,
+                &self.frozen,
+                &batch,
+                self.lora_scale,
+            )?;
+            loss_sum += l;
+            correct += c;
+        }
+        let n = self.test.n as f64;
+        Ok((loss_sum / n, correct / n))
+    }
+
+    /// Execute one communication round; returns the mean client train
+    /// loss/acc for the round.
+    pub fn round(&mut self) -> Result<(f64, f64)> {
+        self.ledger.begin_round();
+        let segments = &self.session.spec.trainable_segments;
+
+        // (1) server encodes the global vector once; each sampled client
+        //     downloads (and decodes) it.
+        let down_msg = self.codec.encode(&self.global, segments)?;
+        let client_ids = self.sampler.sample(self.cfg.clients_per_round);
+        let mut agg = FedAvg::new(self.global.len());
+        let mut loss_sum = 0.0;
+        let mut acc_sum = 0.0;
+
+        // Per-round learning rate under the multiplicative schedule.
+        let lr = self.cfg.lr
+            * self.cfg.lr_decay.powi(self.rounds_done as i32);
+        let trainer = LocalTrainer {
+            local_epochs: self.cfg.local_epochs,
+            lr,
+            lora_scale: self.lora_scale,
+        };
+
+        let mut survivors = 0usize;
+        for &cid in &client_ids {
+            self.ledger.record(Direction::Down, down_msg.size_bytes());
+            let start = self.codec.decode(&down_msg, segments)?;
+
+            // Failure injection: the client downloaded the model but
+            // fails before uploading (crash/network loss). FedAvg
+            // proceeds with the survivors — the aggregation-agnostic
+            // loop needs no special casing.
+            if self.cfg.dropout > 0.0 && self.rng.f64() < self.cfg.dropout {
+                self.dropped_clients += 1;
+                continue;
+            }
+            survivors += 1;
+
+            // (2) local training on the client's shard.
+            let mut crng = self.rng.fork(cid as u64);
+            let outcome = trainer.run(
+                &self.session,
+                &self.federation.clients[cid],
+                &self.frozen,
+                start,
+                &mut crng,
+            )?;
+            loss_sum += outcome.mean_loss;
+            acc_sum += outcome.mean_acc;
+
+            // (3) upload: encode → count bytes → server decodes.
+            let up_msg = self.codec.encode(&outcome.params, segments)?;
+            self.ledger.record(Direction::Up, up_msg.size_bytes());
+            let received = self.codec.decode(&up_msg, segments)?;
+
+            // (4) FedAvg weighted accumulation (weight n_k).
+            agg.add(&received, outcome.samples as f64)?;
+        }
+
+        self.rounds_done += 1;
+        if survivors == 0 {
+            // Every sampled client failed: the round is lost but the
+            // federation survives — global state is unchanged.
+            return Ok((f64::NAN, f64::NAN));
+        }
+        self.global = agg.finish()?;
+        let k = survivors as f64;
+        Ok((loss_sum / k, acc_sum / k))
+    }
+
+    /// Run the full schedule, recording evaluated rounds.
+    pub fn run(&mut self, recorder: &mut Recorder) -> Result<RunSummary> {
+        let t0 = Instant::now();
+        let mut last_train_loss = f64::NAN;
+        for r in 0..self.cfg.rounds {
+            let (train_loss, _train_acc) = self.round()?;
+            last_train_loss = train_loss;
+            let is_last = r + 1 == self.cfg.rounds;
+            if (r + 1) % self.cfg.eval_every == 0 || is_last {
+                let (test_loss, test_acc) = self.evaluate()?;
+                recorder.push(RoundRecord {
+                    round: r + 1,
+                    test_acc,
+                    test_loss,
+                    train_loss,
+                    cum_bytes: self.ledger.total_bytes(),
+                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+        }
+        let _ = last_train_loss;
+        Ok(RunSummary {
+            final_acc: recorder.final_acc(),
+            tail_acc: recorder.tail_acc(3),
+            total_bytes: self.ledger.total_bytes(),
+            mean_up_msg_bytes: self.ledger.mean_up_msg(),
+            per_client_tcc_bytes: self.ledger.per_client_tcc(self.cfg.rounds),
+            rounds: self.cfg.rounds,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

@@ -1,0 +1,87 @@
+//! Local client training: the paper's step (2) — `E` local epochs of
+//! SGD-with-momentum over the client's shard, driving the AOT-compiled
+//! PJRT train step.
+//!
+//! The optimizer state (momentum) is *local and ephemeral*: it is
+//! reinitialized at the start of every round (standard FedAvg client
+//! behaviour — only parameters travel).
+
+use crate::data::batcher::Tail;
+use crate::data::{BatchIter, ClientData};
+use crate::error::Result;
+use crate::runtime::ModelSession;
+use crate::util::rng::Rng;
+
+/// Outcome of one client round.
+#[derive(Debug, Clone)]
+pub struct LocalOutcome {
+    pub params: Vec<f32>,
+    /// Mean train loss over all steps this round.
+    pub mean_loss: f64,
+    /// Mean train accuracy over all steps this round.
+    pub mean_acc: f64,
+    pub steps: usize,
+    pub samples: usize,
+}
+
+/// Runs local epochs for sampled clients.
+pub struct LocalTrainer {
+    pub local_epochs: usize,
+    pub lr: f32,
+    pub lora_scale: f32,
+}
+
+impl LocalTrainer {
+    /// Train `start_params` on `data`, returning the updated vector.
+    pub fn run(
+        &self,
+        session: &ModelSession,
+        data: &ClientData,
+        frozen: &[f32],
+        start_params: Vec<f32>,
+        rng: &mut Rng,
+    ) -> Result<LocalOutcome> {
+        let mut params = start_params;
+        let mut momentum = vec![0.0f32; params.len()];
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut steps = 0usize;
+        for _epoch in 0..self.local_epochs {
+            let batches = BatchIter::new(
+                &data.images,
+                &data.labels,
+                session.spec.image_size,
+                session.spec.batch_size,
+                Some(rng),
+                // Shards >= one batch drop the ragged tail (the train
+                // artifact has no mask input); smaller shards wrap-pad
+                // so every client still produces at least one step.
+                if data.n < session.spec.batch_size {
+                    Tail::PadWrap
+                } else {
+                    Tail::Drop
+                },
+            );
+            for batch in batches {
+                let stats = session.train_step(
+                    &mut params,
+                    &mut momentum,
+                    frozen,
+                    &batch,
+                    self.lr,
+                    self.lora_scale,
+                )?;
+                loss_sum += stats.loss as f64;
+                acc_sum += stats.acc as f64;
+                steps += 1;
+            }
+        }
+        Ok(LocalOutcome {
+            params,
+            mean_loss: if steps > 0 { loss_sum / steps as f64 } else { 0.0 },
+            mean_acc: if steps > 0 { acc_sum / steps as f64 } else { 0.0 },
+            steps,
+            samples: data.n,
+        })
+    }
+}

@@ -1,0 +1,170 @@
+//! Minibatch iteration over a local dataset: per-epoch Fisher-Yates
+//! shuffle, fixed batch size (artifacts are lowered for a static batch),
+//! and three tail policies for the ragged final batch:
+//!
+//! * [`Tail::Drop`]    — training default: partial batches are skipped.
+//! * [`Tail::PadWrap`] — training on shards smaller than one batch: pad
+//!   by wrapping around the shard (the train artifact has no mask input,
+//!   so zero-padding would bias gradients toward class 0 / black images).
+//! * [`Tail::PadZero`] — eval: zero-pad + mask, exact counts.
+
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+/// Ragged-final-batch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tail {
+    Drop,
+    PadZero,
+    PadWrap,
+}
+
+/// Iterator producing fixed-size [`Batch`]es over (images, labels).
+pub struct BatchIter<'a> {
+    images: &'a [f32],
+    labels: &'a [i32],
+    px: usize,
+    batch_size: usize,
+    order: Vec<usize>,
+    pos: usize,
+    tail: Tail,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(
+        images: &'a [f32],
+        labels: &'a [i32],
+        image_size: usize,
+        batch_size: usize,
+        shuffle_rng: Option<&mut Rng>,
+        tail: Tail,
+    ) -> Self {
+        let px = image_size * image_size * 3;
+        assert_eq!(images.len(), labels.len() * px, "image/label mismatch");
+        assert!(!labels.is_empty(), "empty dataset");
+        let mut order: Vec<usize> = (0..labels.len()).collect();
+        if let Some(rng) = shuffle_rng {
+            rng.shuffle(&mut order);
+        }
+        BatchIter { images, labels, px, batch_size, order, pos: 0, tail }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        match self.tail {
+            Tail::Drop => self.order.len() / self.batch_size,
+            _ => self.order.len().div_ceil(self.batch_size),
+        }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        let remaining = self.order.len() - self.pos;
+        if remaining == 0 {
+            return None;
+        }
+        if remaining < self.batch_size && self.tail == Tail::Drop {
+            return None;
+        }
+        let n = remaining.min(self.batch_size);
+        let mut x = vec![0.0f32; self.batch_size * self.px];
+        let mut y = vec![0i32; self.batch_size];
+        let mut mask = vec![0.0f32; self.batch_size];
+        for j in 0..self.batch_size {
+            let idx = match (j < n, self.tail) {
+                (true, _) => self.order[self.pos + j],
+                (false, Tail::PadWrap) => self.order[(self.pos + j) % self.order.len()],
+                (false, _) => {
+                    continue; // PadZero: leave zeros, mask stays 0
+                }
+            };
+            x[j * self.px..(j + 1) * self.px]
+                .copy_from_slice(&self.images[idx * self.px..(idx + 1) * self.px]);
+            y[j] = self.labels[idx];
+            mask[j] = 1.0;
+        }
+        self.pos += n;
+        Some(Batch { x, y, mask, n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_data(n: usize, size: usize) -> (Vec<f32>, Vec<i32>) {
+        let px = size * size * 3;
+        let images: Vec<f32> = (0..n * px).map(|i| i as f32).collect();
+        let labels: Vec<i32> = (0..n as i32).collect();
+        (images, labels)
+    }
+
+    #[test]
+    fn covers_everything_once_with_pad_zero() {
+        let (im, lb) = mk_data(10, 2);
+        let it = BatchIter::new(&im, &lb, 2, 4, None, Tail::PadZero);
+        assert_eq!(it.num_batches(), 3);
+        let mut seen = Vec::new();
+        for b in it {
+            for j in 0..4 {
+                if b.mask[j] > 0.0 {
+                    seen.push(b.y[j]);
+                }
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_skips_ragged() {
+        let (im, lb) = mk_data(10, 2);
+        let it = BatchIter::new(&im, &lb, 2, 4, None, Tail::Drop);
+        assert_eq!(it.num_batches(), 2);
+        assert_eq!(it.count(), 2);
+    }
+
+    #[test]
+    fn pad_zero_masks_and_zeroes() {
+        let (im, lb) = mk_data(5, 2);
+        let batches: Vec<Batch> =
+            BatchIter::new(&im, &lb, 2, 4, None, Tail::PadZero).collect();
+        assert_eq!(batches.len(), 2);
+        let last = &batches[1];
+        assert_eq!(last.n, 1);
+        assert_eq!(last.mask, vec![1.0, 0.0, 0.0, 0.0]);
+        assert!(last.x[12..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pad_wrap_reuses_real_samples() {
+        let (im, lb) = mk_data(3, 2);
+        let batches: Vec<Batch> =
+            BatchIter::new(&im, &lb, 2, 8, None, Tail::PadWrap).collect();
+        assert_eq!(batches.len(), 1);
+        let b = &batches[0];
+        assert_eq!(b.n, 3);
+        // All 8 slots hold real examples (wrapped), all marked valid.
+        assert_eq!(b.y, vec![0, 1, 2, 0, 1, 2, 0, 1]);
+        assert!(b.mask.iter().all(|&m| m == 1.0));
+        // Slot 3 is a copy of sample 0.
+        assert_eq!(&b.x[3 * 12..4 * 12], &b.x[0..12]);
+    }
+
+    #[test]
+    fn shuffle_changes_order_but_not_pairing() {
+        let (im, lb) = mk_data(8, 2);
+        let mut rng = Rng::new(3);
+        let batches: Vec<Batch> =
+            BatchIter::new(&im, &lb, 2, 8, Some(&mut rng), Tail::PadZero)
+                .collect();
+        let b = &batches[0];
+        let px = 12;
+        for j in 0..8 {
+            assert_eq!(b.x[j * px], (b.y[j] as usize * px) as f32);
+        }
+        assert_ne!(b.y, (0..8).collect::<Vec<_>>());
+    }
+}

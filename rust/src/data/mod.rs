@@ -1,0 +1,18 @@
+//! Data substrate: the CIFAR-S synthetic dataset, the LDA (Dirichlet)
+//! non-IID partitioner, and the minibatch loader.
+//!
+//! **Substitution note (DESIGN.md §2).** The paper trains on CIFAR-10,
+//! which cannot be downloaded in this offline environment. CIFAR-S is a
+//! deterministic, class-conditional 3-channel image distribution with
+//! the properties the experiments actually exercise: (a) learnable by
+//! small CNNs but not linearly trivial, (b) controllable intra-class
+//! variance, (c) label-driven so LDA partitioning produces the same
+//! client-skew structure as Hsu et al. [20].
+
+pub mod batcher;
+pub mod cifar_s;
+pub mod partition;
+
+pub use batcher::BatchIter;
+pub use cifar_s::{gen_image, TestSet};
+pub use partition::{lda_partition, ClientData, Federation};

@@ -1,0 +1,60 @@
+//! Unified error type for the crate.
+//!
+//! The `xla` crate surfaces its own error enum; everything else in this
+//! crate is IO, parsing or invariant violations. A single lightweight
+//! enum keeps signatures readable without pulling in error-derive
+//! machinery (the offline vendor set has no `thiserror` feature parity
+//! we need).
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA failures (compile, execute, literal conversion).
+    Xla(xla::Error),
+    /// Filesystem problems (artifacts, configs, exports).
+    Io(std::io::Error),
+    /// JSON / TOML / CLI parse errors with human context.
+    Parse(String),
+    /// Violated invariants (shape mismatches, bad configs, ...).
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Shorthand constructors used throughout the crate.
+impl Error {
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+}

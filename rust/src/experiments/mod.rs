@@ -1,0 +1,10 @@
+//! Experiment reproduction: one module per paper table/figure.
+//!
+//! * [`paper`]  — the published numbers, encoded once.
+//! * [`tables`] — analytic regenerators (exact at paper scale) for every
+//!   size/TCC column, plus the scaled-accuracy run matrices.
+//! * [`runners`] — multi-seed scaled runs on the live stack.
+
+pub mod paper;
+pub mod runners;
+pub mod tables;

@@ -1,0 +1,62 @@
+//! Multi-seed scaled experiment runners: the accuracy columns of every
+//! table/figure, executed on the live three-layer stack at the scaled
+//! profiles (DESIGN.md §2 explains the substitution; the benches print
+//! paper-vs-ours with both clearly labelled).
+
+use crate::config::FlConfig;
+use crate::coordinator::Simulation;
+use crate::error::Result;
+use crate::metrics::{mean_std, Recorder};
+use crate::runtime::Engine;
+
+/// Summary over seeds.
+#[derive(Debug, Clone)]
+pub struct SeedSweep {
+    pub label: String,
+    pub accs: Vec<f64>,
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub mean_up_msg_bytes: f64,
+    pub total_bytes: u64,
+    pub recorders: Vec<Recorder>,
+}
+
+/// Run `cfg` once per seed; returns accuracy stats (tail-averaged, the
+/// paper reports end-of-training accuracy over 3 seeds).
+pub fn run_seeds(
+    engine: &Engine,
+    base: &FlConfig,
+    label: &str,
+    seeds: &[u64],
+) -> Result<SeedSweep> {
+    let mut accs = Vec::new();
+    let mut recorders = Vec::new();
+    let mut mean_up = 0.0;
+    let mut total_bytes = 0u64;
+    for &seed in seeds {
+        let mut cfg = base.clone();
+        cfg.seed = seed;
+        let mut sim = Simulation::new(engine, cfg)?;
+        let mut rec = Recorder::new(format!("{label}/seed{seed}"));
+        let summary = sim.run(&mut rec)?;
+        accs.push(summary.tail_acc * 100.0);
+        mean_up = summary.mean_up_msg_bytes;
+        total_bytes = summary.total_bytes;
+        recorders.push(rec);
+    }
+    let (acc_mean, acc_std) = mean_std(&accs);
+    Ok(SeedSweep {
+        label: label.to_string(),
+        accs,
+        acc_mean,
+        acc_std,
+        mean_up_msg_bytes: mean_up,
+        total_bytes,
+        recorders,
+    })
+}
+
+/// Format a sweep like the paper's `mean ± std` cells.
+pub fn cell(s: &SeedSweep) -> String {
+    format!("{:.2} ± {:.2}", s.acc_mean, s.acc_std)
+}

@@ -1,0 +1,300 @@
+//! Analytic table regenerators — exact reproductions of every *size*
+//! column in the paper, computed from the same `ParamSpec` arithmetic
+//! the artifacts are built from (no training required).
+
+use crate::compression::affine::segment_encoded_size;
+use crate::compression::{TopKCodec, ZeroFlCodec};
+use crate::model::{build_spec, ModelCfg, ParamSpec, Variant};
+use crate::transport::tcc_equation2;
+
+/// A printable table: header + rows of cells.
+#[derive(Debug, Clone)]
+pub struct TableOut {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableOut {
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn resnet8(variant: Variant, rank: usize) -> ParamSpec {
+    build_spec(ModelCfg::by_name("resnet8").unwrap(), variant, rank)
+}
+
+fn resnet18(variant: Variant, rank: usize) -> ParamSpec {
+    build_spec(ModelCfg::by_name("resnet18").unwrap(), variant, rank)
+}
+
+/// Exact affine-quantized message bytes for a spec's trainable vector
+/// (codes + fp scale/zero-point overhead + fp norm layers — the same
+/// accounting the paper applies in Table III).
+pub fn quantized_message_bytes(spec: &ParamSpec, bits: u32) -> usize {
+    spec.trainable
+        .iter()
+        .map(|s| segment_encoded_size(s, bits))
+        .sum()
+}
+
+/// Table I — parameter counts for the ResNet-8 rank ladder.
+pub fn table1() -> TableOut {
+    let mut rows = Vec::new();
+    let full = resnet8(Variant::Full, 0);
+    let base = full.num_trainable() as f64;
+    rows.push(vec![
+        "FedAvg".to_string(),
+        format!("{:.2}M", base / 1e6),
+        format!("{:.2}M", base / 1e6),
+        "100.00".to_string(),
+        "1.23M / 1.23M".to_string(),
+    ]);
+    for &(rank, total_p, trained_p) in &crate::experiments::paper::TABLE1[1..] {
+        let spec = resnet8(Variant::LoraFc, rank);
+        let total = spec.num_total() as f64;
+        let trained = spec.num_trainable() as f64;
+        rows.push(vec![
+            format!("FLoCoRA (r={rank})"),
+            format!("{:.2}M", total / 1e6),
+            if trained >= 1e6 {
+                format!("{:.2}M", trained / 1e6)
+            } else {
+                format!("{:.2}K", trained / 1e3)
+            },
+            format!("{:.2}", 100.0 * trained / total),
+            format!("{:.2}M / {:.2}K", total_p / 1e6, trained_p / 1e3),
+        ]);
+    }
+    TableOut {
+        title: "Table I — ResNet-8 parameters (ours vs paper)".into(),
+        header: vec!["Method".into(), "Total".into(), "Trained".into(),
+                     "% Trained".into(), "Paper (total/trained)".into()],
+        rows,
+    }
+}
+
+/// Table III — TCC over 100 rounds, ResNet-8 r=32 (exact analytic).
+/// Returns the table plus `(label, ours_mb)` pairs for tests.
+pub fn table3() -> (TableOut, Vec<(String, f64)>) {
+    let rounds = 100;
+    let full = resnet8(Variant::Full, 0);
+    let lora = resnet8(Variant::LoraFc, 32);
+    let mut pairs = Vec::new();
+    let mut rows = Vec::new();
+
+    let fedavg_mb = tcc_equation2(rounds, 32, full.num_trainable()) / 1e6;
+    let flocora_fp_mb = tcc_equation2(rounds, 32, lora.num_trainable()) / 1e6;
+    let paper = crate::experiments::paper::TABLE3;
+    let mut push = |label: &str, ours_mb: f64, paper_mb: f64| {
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2} MB", ours_mb),
+            format!("÷{:.1}", fedavg_mb / ours_mb),
+            format!("{:.2} MB (÷{:.1})", paper_mb, fedavg_mb / paper_mb),
+        ]);
+        pairs.push((label.to_string(), ours_mb));
+    };
+
+    push("FedAvg FP", fedavg_mb, paper[0].1);
+    push("FLoCoRA FP", flocora_fp_mb, paper[1].1);
+    for (i, bits) in [(2usize, 8u32), (3, 4), (4, 2)] {
+        let msg = quantized_message_bytes(&lora, bits) as f64;
+        let mb = 2.0 * rounds as f64 * msg / 1e6;
+        push(&format!("FLoCoRA int{bits}"), mb, paper[i].1);
+    }
+
+    (
+        TableOut {
+            title: "Table III — TCC, 100 rounds, ResNet-8 r=32 (ours vs paper)"
+                .into(),
+            header: vec!["Method".into(), "TCC (ours)".into(),
+                         "Ratio (ours)".into(), "Paper".into()],
+            rows,
+        },
+        pairs,
+    )
+}
+
+/// Table IV — message sizes and TCC for ResNet-18 at 700 rounds
+/// (exact analytic sizes; accuracies come from the scaled runners).
+pub fn table4_sizes() -> (TableOut, Vec<(String, f64)>) {
+    let rounds = 700;
+    let full = resnet18(Variant::Full, 0);
+    let full_mb = full.num_trainable() as f64 * 4.0 / 1e6;
+    let mut pairs = Vec::new();
+    let mut rows = Vec::new();
+    let paper = crate::experiments::paper::TABLE4;
+
+    let mut push = |label: &str, msg_mb: f64, paper_msg: f64| {
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2} MB", msg_mb),
+            format!("÷{:.1}", full_mb / msg_mb),
+            format!("{:.1} GB", 2.0 * rounds as f64 * msg_mb / 1e3),
+            format!("{paper_msg} MB"),
+        ]);
+        pairs.push((label.to_string(), msg_mb));
+    };
+
+    push("FedAvg Full Model", full_mb, paper[0].1);
+
+    // ZeroFL: (index, value) pairs over the full model.
+    for (row, sp, mr) in [(1usize, 0.9f32, 0.2f32), (2, 0.9, 0.0)] {
+        let c = ZeroFlCodec::new(sp, mr);
+        let bytes = 8.0 + c.kept_count(full.num_trainable()) as f64 * 8.0;
+        push(&format!("ZeroFL {:.0}%SP+{:.1}MR", sp * 100.0, mr),
+             bytes / 1e6, paper[row].1);
+    }
+
+    // Magnitude pruning: bitmap + survivors.
+    for (row, prune) in [(3usize, 0.4f32), (4, 0.8)] {
+        let keep = 1.0 - prune;
+        let c = TopKCodec::new(keep);
+        let n = full.num_trainable();
+        let bytes = 8.0 + n.div_ceil(8) as f64 + c.kept_count(n) as f64 * 4.0;
+        push(&format!("MagPrune {:.0}%", prune * 100.0), bytes / 1e6,
+             paper[row].1);
+    }
+
+    // FLoCoRA rank ladder, FP and Q8.
+    for (row, rank) in [(5usize, 64usize), (6, 32), (7, 16)] {
+        let spec = resnet18(Variant::LoraFc, rank);
+        push(&format!("FLoCoRA r={rank}"),
+             spec.num_trainable() as f64 * 4.0 / 1e6, paper[row].1);
+    }
+    for (row, rank) in [(8usize, 64usize), (9, 32), (10, 16)] {
+        let spec = resnet18(Variant::LoraFc, rank);
+        push(&format!("FLoCoRA r={rank} Q8"),
+             quantized_message_bytes(&spec, 8) as f64 / 1e6, paper[row].1);
+    }
+
+    (
+        TableOut {
+            title: "Table IV — ResNet-18 message sizes (ours vs paper)".into(),
+            header: vec!["Method".into(), "Msg (ours)".into(), "Ratio".into(),
+                         "TCC@700r".into(), "Paper msg".into()],
+            rows,
+        },
+        pairs,
+    )
+}
+
+/// Fig. 2 x-axis: trained parameters per rank (exact).
+pub fn fig2_param_axis() -> Vec<(usize, usize)> {
+    [8usize, 16, 32, 64, 128]
+        .iter()
+        .map(|&r| (r, resnet8(Variant::LoraFc, r).num_trainable()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_match_paper_within_2pct() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 6);
+        // Spot-check r=32: ours 1.48M / 258.0K vs paper 1.48M / 256.84K.
+        let spec = resnet8(Variant::LoraFc, 32);
+        assert!((spec.num_total() as f64 - 1.48e6).abs() / 1.48e6 < 0.02);
+        assert!(
+            (spec.num_trainable() as f64 - 256.84e3).abs() / 256.84e3 < 0.02
+        );
+    }
+
+    #[test]
+    fn table3_ratios_match_paper_shape() {
+        let (_t, pairs) = table3();
+        let fedavg = pairs[0].1;
+        let expect = [
+            ("FLoCoRA FP", 4.8),
+            ("FLoCoRA int8", 17.7),
+            ("FLoCoRA int4", 32.6),
+            ("FLoCoRA int2", 56.3),
+        ];
+        for (label, paper_ratio) in expect {
+            let ours = pairs.iter().find(|(l, _)| l == label).unwrap().1;
+            let ratio = fedavg / ours;
+            // Within 6% of the paper's printed ratio — the residual is
+            // the (paper-unspecified) exact ResNet-8 layout.
+            assert!(
+                (ratio - paper_ratio).abs() / paper_ratio < 0.06,
+                "{label}: ours ÷{ratio:.2} vs paper ÷{paper_ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn table4_messages_match_paper_shape() {
+        let (_t, pairs) = table4_sizes();
+        let get = |l: &str| pairs.iter().find(|(p, _)| p == l).unwrap().1;
+        // Full model exact.
+        assert!((get("FedAvg Full Model") - 44.7).abs() < 0.5);
+        // FLoCoRA FP ladder within 6%.
+        for (label, paper_mb) in
+            [("FLoCoRA r=64", 9.2), ("FLoCoRA r=32", 4.6), ("FLoCoRA r=16", 2.4)]
+        {
+            let ours = get(label);
+            assert!((ours - paper_mb).abs() / paper_mb < 0.06,
+                    "{label}: {ours} vs {paper_mb}");
+        }
+        // Q8 ladder within 10% (scale/zp overhead model).
+        for (label, paper_mb) in [("FLoCoRA r=64 Q8", 2.4),
+                                  ("FLoCoRA r=32 Q8", 1.2),
+                                  ("FLoCoRA r=16 Q8", 0.7)] {
+            let ours = get(label);
+            assert!((ours - paper_mb).abs() / paper_mb < 0.10,
+                    "{label}: {ours} vs {paper_mb}");
+        }
+        // Sparse baselines within 15% (paper does not itemize overheads).
+        for (label, paper_mb) in [("ZeroFL 90%SP+0.2MR", 27.3),
+                                  ("ZeroFL 90%SP+0.0MR", 10.1),
+                                  ("MagPrune 40%", 27.1),
+                                  ("MagPrune 80%", 9.8)] {
+            let ours = get(label);
+            assert!((ours - paper_mb).abs() / paper_mb < 0.15,
+                    "{label}: {ours} vs {paper_mb}");
+        }
+    }
+
+    #[test]
+    fn fig2_axis_monotone() {
+        let axis = fig2_param_axis();
+        assert!(axis.windows(2).all(|w| w[0].1 < w[1].1));
+    }
+
+    #[test]
+    fn render_is_aligned() {
+        let t = table1();
+        let s = t.render();
+        assert!(s.contains("Table I"));
+        assert!(s.lines().count() >= 8);
+    }
+}

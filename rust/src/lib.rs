@@ -1,0 +1,40 @@
+//! # FLoCoRA — Federated Learning Compression with Low-Rank Adaptation
+//!
+//! Production-style reproduction of *"FLoCoRA: Federated learning
+//! compression with low-rank adaptation"* (Grativol et al., EUSIPCO
+//! 2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the federated-learning coordinator:
+//!   round scheduling, client sampling, FedAvg aggregation over flat
+//!   parameter vectors, wire codecs (fp32 / affine-quantized 8-4-2 bit /
+//!   magnitude-pruning sparse / ZeroFL sparse), total-communication-cost
+//!   accounting, LDA data partitioning, the synthetic CIFAR-S dataset,
+//!   metrics, config and CLI.
+//! * **Layer 2 (python, build time)** — JAX ResNet-8/18 forward/backward
+//!   with LoRA adapters, lowered once to HLO text (`make artifacts`).
+//! * **Layer 1 (python, build time)** — Pallas kernels for the fused
+//!   low-rank matmul and affine quantization, verified against pure-jnp
+//!   oracles and lowered into the same HLO.
+//!
+//! At runtime the rust binary loads `artifacts/*.hlo.txt` through the
+//! PJRT C API (`xla` crate) and drives everything itself — python never
+//! appears on the request path.
+//!
+//! Entry points: [`coordinator::Simulation`] for programmatic use (see
+//! `examples/quickstart.rs`), the `flocora` binary for the CLI.
+
+pub mod cli;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod transport;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,230 @@
+//! `flocora` — launcher for the FLoCoRA reproduction.
+//!
+//! Subcommands:
+//! * `train`        — run one federated simulation (config file and/or
+//!   `--key value` overrides), optional CSV convergence export.
+//! * `tables`       — print the analytic reproductions of Table I/III/IV
+//!   side by side with the paper's numbers.
+//! * `inspect`      — list the artifact manifest (specs, sizes, files).
+//! * `quant-parity` — verify the rust affine codec against the lowered
+//!   pallas quant kernel (HLO oracle), all bit widths.
+//! * `bench-step`   — time the PJRT train step for a spec.
+
+use flocora::cli::Args;
+use flocora::compression::Codec;
+use flocora::config::{loader, FlConfig};
+use flocora::coordinator::Simulation;
+use flocora::error::{Error, Result};
+use flocora::experiments::tables;
+use flocora::metrics::Recorder;
+use flocora::model::ParamKind;
+use flocora::runtime::{Batch, Engine};
+use flocora::tensor;
+use flocora::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args, &artifacts),
+        Some("tables") => cmd_tables(&args),
+        Some("inspect") => cmd_inspect(&args, &artifacts),
+        Some("quant-parity") => cmd_quant_parity(&args, &artifacts),
+        Some("bench-step") => cmd_bench_step(&args, &artifacts),
+        Some(other) => Err(Error::invalid(format!("unknown subcommand `{other}`"))),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "flocora — FLoCoRA (EUSIPCO 2024) reproduction\n\n\
+         USAGE: flocora <subcommand> [--artifacts DIR] [options]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 train         run a federated simulation\n\
+         \x20               [--config FILE] [--csv OUT] [--tag T] [--rounds N]\n\
+         \x20               [--codec fp32|q8|q4|q2|topk:K|zerofl:SP:MR] ...\n\
+         \x20 tables        print analytic Table I/III/IV vs the paper\n\
+         \x20 inspect       list artifact manifest\n\
+         \x20 quant-parity  rust codec vs pallas HLO oracle\n\
+         \x20 bench-step    time the PJRT train step [--tag T] [--steps N]"
+    );
+}
+
+fn strict(args: &Args) -> Result<()> {
+    let unused = args.unused();
+    if unused.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::parse(format!("unknown options: {unused:?}")))
+    }
+}
+
+fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => loader::load(path)?,
+        None => FlConfig::default(),
+    };
+    let csv = args.opt_str("csv");
+    // Any remaining --key value pairs are config overrides.
+    for (k, v) in args.options().clone() {
+        if k == "config" || k == "csv" || k == "artifacts" {
+            continue;
+        }
+        cfg.set(&k, &v)?;
+    }
+    cfg.validate()?;
+
+    let engine = Engine::new(artifacts)?;
+    println!(
+        "run: tag={} codec={} clients={} ({}/round) rounds={} epochs={} \
+         lr={} alpha={} lda={} seed={}",
+        cfg.tag, cfg.codec.label(), cfg.num_clients, cfg.clients_per_round,
+        cfg.rounds, cfg.local_epochs, cfg.lr, cfg.lora_alpha, cfg.lda_alpha,
+        cfg.seed
+    );
+    let mut sim = Simulation::new(&engine, cfg)?;
+    let mut rec = Recorder::new("train");
+    let summary = sim.run(&mut rec)?;
+    for r in &rec.rounds {
+        println!(
+            "round {:>4}  acc {:.4}  test_loss {:.4}  train_loss {:.4}  \
+             comm {:.2} MB",
+            r.round, r.test_acc, r.test_loss, r.train_loss,
+            r.cum_bytes as f64 / 1e6
+        );
+    }
+    println!(
+        "final acc {:.4} (tail {:.4})  msg {:.1} kB  per-client TCC {:.2} MB  \
+         wall {:.1}s",
+        summary.final_acc, summary.tail_acc,
+        summary.mean_up_msg_bytes / 1e3,
+        summary.per_client_tcc_bytes / 1e6, summary.wall_s
+    );
+    if let Some(path) = csv {
+        rec.write_csv(&path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let which = args.str_or("table", "all");
+    strict(args)?;
+    if which == "all" || which == "1" {
+        print!("{}", tables::table1().render());
+        println!();
+    }
+    if which == "all" || which == "3" {
+        print!("{}", tables::table3().0.render());
+        println!();
+    }
+    if which == "all" || which == "4" {
+        print!("{}", tables::table4_sizes().0.render());
+        println!();
+    }
+    if which == "all" || which == "2" {
+        println!(
+            "Table II / Fig. 2 / Fig. 3 accuracy columns require training:\n\
+             see `cargo bench --bench table2|fig2|fig3` (scaled runs) and\n\
+             EXPERIMENTS.md for recorded results."
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args, artifacts: &str) -> Result<()> {
+    strict(args)?;
+    let engine = Engine::new(artifacts)?;
+    println!("platform: {}", engine.platform());
+    println!("{:<24} {:>10} {:>10}  files", "tag", "trainable", "frozen");
+    for (tag, spec) in &engine.manifest().specs {
+        println!(
+            "{:<24} {:>10} {:>10}  {}",
+            tag, spec.num_trainable, spec.num_frozen, spec.files.train
+        );
+    }
+    for (bits, q) in &engine.manifest().quant_oracles {
+        println!("quant oracle {bits}-bit: {} ({}x{})", q.file, q.rows, q.cols);
+    }
+    Ok(())
+}
+
+fn cmd_quant_parity(args: &Args, artifacts: &str) -> Result<()> {
+    strict(args)?;
+    let engine = Engine::new(artifacts)?;
+    let mut rng = Rng::new(20240710);
+    for (&bits, oracle) in &engine.manifest().quant_oracles {
+        let n = oracle.rows * oracle.cols;
+        let w: Vec<f32> = (0..n).map(|_| 3.0 * rng.normal() as f32).collect();
+        let (deq_hlo, _s, _z) = engine.quant_oracle(bits, &w)?;
+        // The rust wire codec on an equivalent single-segment layout.
+        let seg = flocora::model::Segment {
+            name: "oracle".into(),
+            shape: vec![oracle.rows, oracle.cols],
+            numel: n,
+            kind: ParamKind::Conv,
+            offset: 0,
+            quant_rows: Some(oracle.rows),
+        };
+        let codec = flocora::compression::AffineCodec::new(bits);
+        let msg = codec.encode(&w, std::slice::from_ref(&seg))?;
+        let deq_rust = codec.decode(&msg, std::slice::from_ref(&seg))?;
+        let diff = tensor::max_abs_diff(&deq_hlo, &deq_rust);
+        println!(
+            "bits={bits}: max |rust - hlo| = {diff:.3e} over {n} elements \
+             ({} B payload)",
+            msg.size_bytes()
+        );
+        if diff > 1e-5 {
+            return Err(Error::invalid(format!(
+                "quant parity failed at {bits} bits: {diff}"
+            )));
+        }
+    }
+    println!("quant parity OK");
+    Ok(())
+}
+
+fn cmd_bench_step(args: &Args, artifacts: &str) -> Result<()> {
+    let tag = args.str_or("tag", "micro8_lora_fc_r4");
+    let steps = args.usize_or("steps", 20)?;
+    strict(args)?;
+    let engine = Engine::new(artifacts)?;
+    let session = engine.session(&tag)?;
+    let spec = session.spec.clone();
+    let (mut params, frozen) = session.init(1)?;
+    let mut momentum = vec![0.0f32; params.len()];
+    let px = spec.image_size * spec.image_size * 3;
+    let mut rng = Rng::new(2);
+    let batch = Batch {
+        x: (0..spec.batch_size * px).map(|_| rng.f32()).collect(),
+        y: (0..spec.batch_size).map(|_| rng.below(10) as i32).collect(),
+        mask: vec![1.0; spec.batch_size],
+        n: spec.batch_size,
+    };
+    // Warmup (includes XLA compile).
+    session.train_step(&mut params, &mut momentum, &frozen, &batch, 0.01, 16.0)?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        session.train_step(&mut params, &mut momentum, &frozen, &batch,
+                           0.01, 16.0)?;
+    }
+    let dt = t0.elapsed().as_secs_f64() / steps as f64;
+    println!(
+        "{tag}: {:.2} ms/step (P={} F={} batch={})",
+        dt * 1e3, spec.num_trainable, spec.num_frozen, spec.batch_size
+    );
+    Ok(())
+}

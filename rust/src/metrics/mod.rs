@@ -1,0 +1,173 @@
+//! Metrics: per-round records, summary statistics and CSV/JSON export
+//! (the data behind Fig. 3's convergence curves and EXPERIMENTS.md).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One evaluated round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub test_acc: f64,
+    pub test_loss: f64,
+    pub train_loss: f64,
+    /// Cumulative bytes moved (all clients, both directions).
+    pub cum_bytes: u64,
+    pub wall_ms: f64,
+}
+
+/// Recorder for a single run.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    pub name: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl Recorder {
+    pub fn new(name: impl Into<String>) -> Recorder {
+        Recorder { name: name.into(), rounds: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn final_acc(&self) -> f64 {
+        self.rounds.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.rounds.iter().map(|r| r.test_acc).fold(0.0, f64::max)
+    }
+
+    /// Mean accuracy over the last `k` evaluated rounds (stabler than
+    /// the final point; used for the paper-table comparisons).
+    pub fn tail_acc(&self, k: usize) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        let start = self.rounds.len().saturating_sub(k);
+        let tail = &self.rounds[start..];
+        tail.iter().map(|r| r.test_acc).sum::<f64>() / tail.len() as f64
+    }
+
+    /// First round at which accuracy reached `target` (convergence-time
+    /// comparisons, Fig. 3).
+    pub fn rounds_to_acc(&self, target: f64) -> Option<usize> {
+        self.rounds.iter().find(|r| r.test_acc >= target).map(|r| r.round)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("round,test_acc,test_loss,train_loss,cum_bytes,wall_ms\n");
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{:.4},{:.4},{:.4},{},{:.1}\n",
+                r.round, r.test_acc, r.test_loss, r.train_loss, r.cum_bytes,
+                r.wall_ms
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(self.name.clone())),
+            (
+                "rounds",
+                arr(self
+                    .rounds
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("round", num(r.round as f64)),
+                            ("test_acc", num(r.test_acc)),
+                            ("test_loss", num(r.test_loss)),
+                            ("train_loss", num(r.train_loss)),
+                            ("cum_bytes", num(r.cum_bytes as f64)),
+                            ("wall_ms", num(r.wall_ms)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Mean ± sample standard deviation over seeds (the paper reports
+/// `mean ± std` over 3 seeds everywhere).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / (xs.len() - 1) as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> Recorder {
+        let mut r = Recorder::new("t");
+        for i in 0..5 {
+            r.push(RoundRecord {
+                round: i,
+                test_acc: 0.1 * i as f64,
+                test_loss: 2.0 - 0.1 * i as f64,
+                train_loss: 2.0,
+                cum_bytes: (i * 100) as u64,
+                wall_ms: 1.0,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn summaries() {
+        let r = rec();
+        assert_eq!(r.final_acc(), 0.4);
+        assert_eq!(r.best_acc(), 0.4);
+        assert!((r.tail_acc(2) - 0.35).abs() < 1e-12);
+        assert_eq!(r.rounds_to_acc(0.25), Some(3));
+        assert_eq!(r.rounds_to_acc(0.9), None);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = rec().to_csv();
+        assert_eq!(csv.lines().count(), 6);
+        assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let j = rec().to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.at(&["name"]).unwrap().as_str().unwrap(), "t");
+        assert_eq!(parsed.at(&["rounds"]).unwrap().as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, sd) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((sd - 1.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Model-architecture arithmetic: an exact rust mirror of
+//! `python/compile/configs.py`.
+//!
+//! The paper's size/communication numbers (Table I, the TCC column of
+//! Table III, the message sizes of Table IV) are deterministic functions
+//! of the architecture. This module computes them *at paper scale*
+//! without needing artifacts, and the python tests + the manifest
+//! cross-check that both sides agree segment-by-segment.
+
+pub mod spec;
+
+pub use spec::{
+    build_spec, conv_enumeration, ModelCfg, ParamKind, ParamSpec, Segment,
+    Variant, MODELS,
+};

@@ -1,0 +1,340 @@
+//! Parameter-layout construction (rust mirror of `configs.build_spec`).
+//!
+//! Everything the coordinator knows about a model comes from here or the
+//! manifest: flat-vector offsets, per-tensor quantization grouping,
+//! trainable/frozen split per variant, and the paper-scale parameter
+//! counts behind Tables I, III and IV.
+
+use std::fmt;
+
+/// Static architecture description (matches `configs.ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    pub widths: &'static [usize],
+    pub blocks_per_stage: usize,
+    pub image_size: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+}
+
+/// The four models of the reproduction (DESIGN.md §2).
+pub const MODELS: &[ModelCfg] = &[
+    ModelCfg { name: "micro8", widths: &[4, 8, 16], blocks_per_stage: 1,
+               image_size: 16, num_classes: 10, batch_size: 8 },
+    ModelCfg { name: "tiny8", widths: &[8, 16, 32], blocks_per_stage: 1,
+               image_size: 32, num_classes: 10, batch_size: 32 },
+    ModelCfg { name: "resnet8", widths: &[64, 128, 256], blocks_per_stage: 1,
+               image_size: 32, num_classes: 10, batch_size: 32 },
+    ModelCfg { name: "resnet18", widths: &[64, 128, 256, 512],
+               blocks_per_stage: 2, image_size: 32, num_classes: 10,
+               batch_size: 32 },
+];
+
+impl ModelCfg {
+    pub fn by_name(name: &str) -> Option<&'static ModelCfg> {
+        MODELS.iter().find(|m| m.name == name)
+    }
+}
+
+/// Training variant — the Table II ablation axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// FedAvg: everything trainable.
+    Full,
+    /// "FLoCoRA Vanilla": adapters everywhere incl. FC; norm/FC frozen.
+    LoraAll,
+    /// + norm layers trained.
+    LoraNorm,
+    /// + final FC trained directly (the paper's standard FLoCoRA).
+    LoraFc,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        Some(match s {
+            "full" => Variant::Full,
+            "lora_all" => Variant::LoraAll,
+            "lora_norm" => Variant::LoraNorm,
+            "lora_fc" => Variant::LoraFc,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Full => "full",
+            Variant::LoraAll => "lora_all",
+            Variant::LoraNorm => "lora_norm",
+            Variant::LoraFc => "lora_fc",
+        }
+    }
+
+    pub fn is_lora(&self) -> bool {
+        !matches!(self, Variant::Full)
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Parameter-tensor kind (drives trainability + quant grouping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    Conv,
+    LoraB,
+    LoraA,
+    NormW,
+    NormB,
+    FcW,
+    FcB,
+    FcLoraB,
+    FcLoraA,
+}
+
+impl ParamKind {
+    pub fn parse(s: &str) -> Option<ParamKind> {
+        Some(match s {
+            "conv" => ParamKind::Conv,
+            "lora_b" => ParamKind::LoraB,
+            "lora_a" => ParamKind::LoraA,
+            "norm_w" => ParamKind::NormW,
+            "norm_b" => ParamKind::NormB,
+            "fc_w" => ParamKind::FcW,
+            "fc_b" => ParamKind::FcB,
+            "fc_lora_b" => ParamKind::FcLoraB,
+            "fc_lora_a" => ParamKind::FcLoraA,
+            _ => return None,
+        })
+    }
+}
+
+/// One tensor segment inside a flat vector.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    pub kind: ParamKind,
+    pub offset: usize,
+    /// Leading-dim row count for per-channel/per-column quantization;
+    /// `None` => never quantized (norm layers, paper §IV).
+    pub quant_rows: Option<usize>,
+}
+
+/// Fully resolved layout for (model, variant, rank).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub cfg: ModelCfg,
+    pub variant: Variant,
+    pub rank: usize,
+    pub trainable: Vec<Segment>,
+    pub frozen: Vec<Segment>,
+}
+
+impl ParamSpec {
+    pub fn num_trainable(&self) -> usize {
+        self.trainable.iter().map(|s| s.numel).sum()
+    }
+
+    pub fn num_frozen(&self) -> usize {
+        self.frozen.iter().map(|s| s.numel).sum()
+    }
+
+    pub fn num_total(&self) -> usize {
+        self.num_trainable() + self.num_frozen()
+    }
+
+    /// Artifact tag, e.g. `resnet8_lora_fc_r32`.
+    pub fn tag(&self) -> String {
+        if self.variant == Variant::Full {
+            format!("{}_full", self.cfg.name)
+        } else {
+            format!("{}_{}_r{}", self.cfg.name, self.variant, self.rank)
+        }
+    }
+}
+
+/// Conv enumeration: (name, out_ch, in_ch, kernel, stride), identical
+/// order to `configs.iter_convs` — downsample convs included.
+pub fn conv_enumeration(
+    cfg: &ModelCfg,
+) -> Vec<(String, usize, usize, usize, usize)> {
+    let mut out = Vec::new();
+    let w0 = cfg.widths[0];
+    out.push(("conv1".to_string(), w0, 3, 3, 1));
+    let mut in_ch = w0;
+    for (s, &width) in cfg.widths.iter().enumerate() {
+        let stride = if s == 0 { 1 } else { 2 };
+        for b in 0..cfg.blocks_per_stage {
+            let bs = if b == 0 { stride } else { 1 };
+            let pre = format!("s{s}.b{b}");
+            out.push((format!("{pre}.conv1"), width, in_ch, 3, bs));
+            out.push((format!("{pre}.conv2"), width, width, 3, 1));
+            if bs != 1 || in_ch != width {
+                out.push((format!("{pre}.down"), width, in_ch, 1, bs));
+            }
+            in_ch = width;
+        }
+    }
+    out
+}
+
+/// Build the deterministic layout (rust mirror of `configs.build_spec`).
+pub fn build_spec(cfg: &ModelCfg, variant: Variant, rank: usize) -> ParamSpec {
+    let mut spec = ParamSpec {
+        cfg: cfg.clone(),
+        variant,
+        rank,
+        trainable: Vec::new(),
+        frozen: Vec::new(),
+    };
+
+    let lora = variant.is_lora();
+    let train_norm = matches!(variant,
+                              Variant::Full | Variant::LoraNorm | Variant::LoraFc);
+    let train_fc = matches!(variant, Variant::Full | Variant::LoraFc);
+
+    fn add(spec: &mut ParamSpec, trainable: bool, name: String,
+           shape: Vec<usize>, kind: ParamKind, quant_rows: Option<usize>) {
+        let numel = shape.iter().product();
+        let side = if trainable { &mut spec.trainable } else { &mut spec.frozen };
+        let offset = side.iter().map(|s| s.numel).sum();
+        side.push(Segment { name, shape, numel, kind, offset, quant_rows });
+    }
+
+    for (name, o, i, k, _stride) in conv_enumeration(cfg) {
+        add(&mut spec, !lora, name.clone(), vec![o, i, k, k],
+            ParamKind::Conv, Some(o));
+        if lora {
+            add(&mut spec, true, format!("{name}.lora_b"),
+                vec![rank, i, k, k], ParamKind::LoraB, Some(rank));
+            add(&mut spec, true, format!("{name}.lora_a"),
+                vec![o, rank, 1, 1], ParamKind::LoraA, Some(o));
+        }
+        add(&mut spec, train_norm, format!("{name}.gn.w"), vec![o],
+            ParamKind::NormW, None);
+        add(&mut spec, train_norm, format!("{name}.gn.b"), vec![o],
+            ParamKind::NormB, None);
+    }
+
+    let d = *cfg.widths.last().unwrap();
+    let c = cfg.num_classes;
+    add(&mut spec, train_fc, "fc.w".into(), vec![d, c], ParamKind::FcW,
+        Some(c));
+    add(&mut spec, train_fc, "fc.b".into(), vec![c], ParamKind::FcB,
+        Some(c));
+    if variant == Variant::LoraAll {
+        add(&mut spec, true, "fc.lora_b".into(), vec![d, rank],
+            ParamKind::FcLoraB, Some(rank));
+        add(&mut spec, true, "fc.lora_a".into(), vec![rank, c],
+            ParamKind::FcLoraA, Some(c));
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(name: &str) -> &'static ModelCfg {
+        ModelCfg::by_name(name).unwrap()
+    }
+
+    #[test]
+    fn resnet8_matches_paper_table1_base() {
+        // Paper Table I: FedAvg row = 1.23 M params.
+        let spec = build_spec(cfg("resnet8"), Variant::Full, 0);
+        assert_eq!(spec.num_frozen(), 0);
+        let p = spec.num_trainable() as f64;
+        assert!((p - 1.23e6).abs() / 1.23e6 < 0.005, "{p}");
+    }
+
+    #[test]
+    fn resnet8_lora_counts_near_paper_table1() {
+        // (rank, total, trained) from Table I.
+        for &(r, total, trained) in &[
+            (8usize, 1.30e6, 69.45e3),
+            (16, 1.36e6, 131.92e3),
+            (32, 1.48e6, 256.84e3),
+            (64, 1.73e6, 506.70e3),
+            (128, 2.23e6, 1.00e6),
+        ] {
+            let spec = build_spec(cfg("resnet8"), Variant::LoraFc, r);
+            let tot = spec.num_total() as f64;
+            let tr = spec.num_trainable() as f64;
+            assert!((tot - total).abs() / total < 0.02, "r={r} total {tot}");
+            assert!((tr - trained).abs() / trained < 0.02, "r={r} trained {tr}");
+        }
+    }
+
+    #[test]
+    fn resnet18_is_44_7_mb() {
+        // Table IV: the full ResNet-18 message is 44.7 MB in fp32.
+        let spec = build_spec(cfg("resnet18"), Variant::Full, 0);
+        let mb = spec.num_trainable() as f64 * 4.0 / 1e6;
+        assert!((mb - 44.7).abs() / 44.7 < 0.01, "{mb}");
+    }
+
+    #[test]
+    fn offsets_contiguous_all_models_variants() {
+        for m in MODELS {
+            for v in [Variant::Full, Variant::LoraAll, Variant::LoraNorm,
+                      Variant::LoraFc] {
+                let spec = build_spec(m, v, 4);
+                for side in [&spec.trainable, &spec.frozen] {
+                    let mut off = 0;
+                    for seg in side.iter() {
+                        assert_eq!(seg.offset, off, "{} {:?} {}", m.name, v,
+                                   seg.name);
+                        off += seg.numel;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn variant_semantics() {
+        let full = build_spec(cfg("micro8"), Variant::Full, 0);
+        assert!(full.frozen.is_empty());
+
+        let vanilla = build_spec(cfg("micro8"), Variant::LoraAll, 4);
+        assert!(vanilla.trainable.iter().all(|s| matches!(
+            s.kind,
+            ParamKind::LoraB | ParamKind::LoraA | ParamKind::FcLoraB
+                | ParamKind::FcLoraA
+        )));
+        assert!(vanilla.frozen.iter().any(|s| s.kind == ParamKind::NormW));
+
+        let fc = build_spec(cfg("micro8"), Variant::LoraFc, 4);
+        assert!(fc.trainable.iter().any(|s| s.kind == ParamKind::FcW));
+        assert!(fc.trainable.iter().any(|s| s.kind == ParamKind::NormW));
+        assert!(!fc.trainable.iter().any(|s| s.kind == ParamKind::FcLoraB));
+    }
+
+    #[test]
+    fn conv_count_resnet8_and_18() {
+        assert_eq!(conv_enumeration(cfg("resnet8")).len(), 9);
+        assert_eq!(conv_enumeration(cfg("resnet18")).len(), 20);
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(build_spec(cfg("resnet8"), Variant::Full, 0).tag(),
+                   "resnet8_full");
+        assert_eq!(build_spec(cfg("tiny8"), Variant::LoraFc, 8).tag(),
+                   "tiny8_lora_fc_r8");
+    }
+
+    #[test]
+    fn rank_above_channels_allowed() {
+        // Paper Fig. 2 uses r=128 on 64-channel convs; counts must still
+        // be well-defined (adapter may exceed the base conv's size).
+        let spec = build_spec(cfg("resnet8"), Variant::LoraFc, 128);
+        assert!(spec.num_trainable() > 0);
+    }
+}

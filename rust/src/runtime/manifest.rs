@@ -1,0 +1,182 @@
+//! `artifacts/manifest.json` model — the contract between `aot.py` and
+//! the coordinator.  Parsing is strict: a manifest that disagrees with
+//! the in-repo [`crate::model::build_spec`] arithmetic is rejected at
+//! load time rather than corrupting state mid-run.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::model::{build_spec, ModelCfg, ParamKind, Segment, Variant};
+use crate::util::json::{self, Json};
+
+/// Files for one lowered spec.
+#[derive(Debug, Clone)]
+pub struct SpecFiles {
+    pub train: String,
+    pub eval: String,
+    pub init: String,
+}
+
+/// One (model, variant, rank) entry.
+#[derive(Debug, Clone)]
+pub struct SpecEntry {
+    pub tag: String,
+    pub model: String,
+    pub variant: Variant,
+    pub rank: usize,
+    pub image_size: usize,
+    pub batch_size: usize,
+    pub num_classes: usize,
+    pub num_trainable: usize,
+    pub num_frozen: usize,
+    pub files: SpecFiles,
+    pub trainable_segments: Vec<Segment>,
+    pub frozen_segments: Vec<Segment>,
+}
+
+/// Quant-oracle artifact (rust-codec parity tests).
+#[derive(Debug, Clone)]
+pub struct QuantOracle {
+    pub file: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub specs: BTreeMap<String, SpecEntry>,
+    pub quant_oracles: BTreeMap<u32, QuantOracle>,
+}
+
+fn parse_segments(arr: &Json) -> Result<Vec<Segment>> {
+    let mut out = Vec::new();
+    for seg in arr.as_arr()? {
+        let kind_str = seg.at(&["kind"])?.as_str()?;
+        let kind = ParamKind::parse(kind_str)
+            .ok_or_else(|| Error::parse(format!("unknown kind {kind_str}")))?;
+        let quant_rows = match seg.at(&["quant_rows"])? {
+            Json::Null => None,
+            v => Some(v.as_usize()?),
+        };
+        out.push(Segment {
+            name: seg.at(&["name"])?.as_str()?.to_string(),
+            shape: seg
+                .at(&["shape"])?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            numel: seg.at(&["numel"])?.as_usize()?,
+            kind,
+            offset: seg.at(&["offset"])?.as_usize()?,
+            quant_rows,
+        });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::invalid(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let root = json::parse(&text)?;
+        let mut specs = BTreeMap::new();
+        for (tag, spec) in root.at(&["specs"])?.as_obj()? {
+            let variant_str = spec.at(&["variant"])?.as_str()?;
+            let variant = Variant::parse(variant_str).ok_or_else(|| {
+                Error::parse(format!("unknown variant {variant_str}"))
+            })?;
+            let files = spec.at(&["files"])?;
+            let entry = SpecEntry {
+                tag: tag.clone(),
+                model: spec.at(&["model"])?.as_str()?.to_string(),
+                variant,
+                rank: spec.at(&["rank"])?.as_usize()?,
+                image_size: spec.at(&["image_size"])?.as_usize()?,
+                batch_size: spec.at(&["batch_size"])?.as_usize()?,
+                num_classes: spec.at(&["num_classes"])?.as_usize()?,
+                num_trainable: spec.at(&["num_trainable"])?.as_usize()?,
+                num_frozen: spec.at(&["num_frozen"])?.as_usize()?,
+                files: SpecFiles {
+                    train: files.at(&["train"])?.as_str()?.to_string(),
+                    eval: files.at(&["eval"])?.as_str()?.to_string(),
+                    init: files.at(&["init"])?.as_str()?.to_string(),
+                },
+                trainable_segments: parse_segments(
+                    spec.at(&["trainable_segments"])?,
+                )?,
+                frozen_segments: parse_segments(
+                    spec.at(&["frozen_segments"])?,
+                )?,
+            };
+            entry.validate()?;
+            specs.insert(tag.clone(), entry);
+        }
+
+        let mut quant_oracles = BTreeMap::new();
+        for (bits, meta) in root.at(&["quant_oracles"])?.as_obj()? {
+            let bits: u32 = bits
+                .parse()
+                .map_err(|_| Error::parse("bad quant oracle bits key"))?;
+            quant_oracles.insert(
+                bits,
+                QuantOracle {
+                    file: meta.at(&["file"])?.as_str()?.to_string(),
+                    rows: meta.at(&["rows"])?.as_usize()?,
+                    cols: meta.at(&["cols"])?.as_usize()?,
+                },
+            );
+        }
+        Ok(Manifest { specs, quant_oracles })
+    }
+
+    pub fn spec(&self, tag: &str) -> Result<&SpecEntry> {
+        self.specs.get(tag).ok_or_else(|| {
+            Error::invalid(format!(
+                "spec `{tag}` not in manifest (available: {:?})",
+                self.specs.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+}
+
+impl SpecEntry {
+    /// Cross-check the manifest against the in-repo spec arithmetic:
+    /// byte-level wire formats depend on both sides agreeing exactly.
+    pub fn validate(&self) -> Result<()> {
+        let cfg = ModelCfg::by_name(&self.model).ok_or_else(|| {
+            Error::invalid(format!("unknown model `{}`", self.model))
+        })?;
+        let local = build_spec(cfg, self.variant, self.rank);
+        if local.num_trainable() != self.num_trainable
+            || local.num_frozen() != self.num_frozen
+        {
+            return Err(Error::invalid(format!(
+                "manifest/spec mismatch for {}: trainable {} vs {}, frozen \
+                 {} vs {} — artifacts are stale, re-run `make artifacts`",
+                self.tag,
+                self.num_trainable,
+                local.num_trainable(),
+                self.num_frozen,
+                local.num_frozen(),
+            )));
+        }
+        for (a, b) in local.trainable.iter().zip(&self.trainable_segments) {
+            if a.name != b.name || a.offset != b.offset || a.numel != b.numel {
+                return Err(Error::invalid(format!(
+                    "segment mismatch in {}: {} vs {}",
+                    self.tag, a.name, b.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}

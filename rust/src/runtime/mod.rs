@@ -1,0 +1,255 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects).
+//!
+//! [`Engine`] owns the client and an executable cache (compile once per
+//! artifact per process); [`ModelSession`] bundles the train/eval/init
+//! executables of one spec behind a typed, flat-`Vec<f32>` API.
+//!
+//! PJRT handles are not `Send` in this crate's wrapper, so all execution
+//! happens on the thread that created the [`Engine`] — the coordinator
+//! is built around that (DESIGN.md §7: L3 parallelism lives in codecs
+//! and data handling, not in PJRT dispatch).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+pub use manifest::{Manifest, QuantOracle, SpecEntry};
+
+/// PJRT client + compiled-executable cache over an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Open `dir` (usually `artifacts/`), parse + validate the manifest,
+    /// and stand up the CPU PJRT client.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) one HLO-text artifact.
+    pub fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Open a [`ModelSession`] for a manifest tag
+    /// (e.g. `"tiny8_lora_fc_r8"`).
+    pub fn session(&self, tag: &str) -> Result<ModelSession> {
+        let spec = self.manifest.spec(tag)?.clone();
+        Ok(ModelSession {
+            train: self.load(&spec.files.train)?,
+            eval: self.load(&spec.files.eval)?,
+            init: self.load(&spec.files.init)?,
+            spec,
+        })
+    }
+
+    /// Execute a quant-oracle artifact: `w (rows, cols)` →
+    /// `(dequantized, scale, zero_point)` — the HLO ground truth the
+    /// rust affine codec is parity-tested against.
+    pub fn quant_oracle(
+        &self,
+        bits: u32,
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let oracle = self
+            .manifest
+            .quant_oracles
+            .get(&bits)
+            .ok_or_else(|| {
+                Error::invalid(format!("no quant oracle for {bits} bits"))
+            })?;
+        if w.len() != oracle.rows * oracle.cols {
+            return Err(Error::invalid(format!(
+                "quant oracle expects {}x{} input, got {} elements",
+                oracle.rows,
+                oracle.cols,
+                w.len()
+            )));
+        }
+        let exe = self.load(&oracle.file)?;
+        let lit = xla::Literal::vec1(w)
+            .reshape(&[oracle.rows as i64, oracle.cols as i64])?;
+        let mut outs = execute_tuple(&exe, &[lit])?;
+        if outs.len() != 3 {
+            return Err(Error::invalid(format!(
+                "quant oracle returned {} outputs",
+                outs.len()
+            )));
+        }
+        let zp = outs.pop().unwrap().to_vec::<f32>()?;
+        let scale = outs.pop().unwrap().to_vec::<f32>()?;
+        let deq = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok((deq, scale, zp))
+    }
+}
+
+/// Run an executable whose root is a tuple (aot.py lowers with
+/// `return_tuple=True`) and decompose the result.
+fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args)?;
+    let lit = result[0][0].to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+/// One minibatch, already flattened to NHWC f32 and i32 labels.
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    /// Valid-example mask (eval pads the ragged final batch).
+    pub mask: Vec<f32>,
+    /// Number of real (unpadded) examples.
+    pub n: usize,
+}
+
+/// Result of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// The train/eval/init executables of one lowered spec.
+pub struct ModelSession {
+    pub spec: SpecEntry,
+    train: Rc<xla::PjRtLoadedExecutable>,
+    eval: Rc<xla::PjRtLoadedExecutable>,
+    init: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl ModelSession {
+    fn batch_literals(
+        &self,
+        batch: &Batch,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let s = self.spec.image_size as i64;
+        let b = self.spec.batch_size;
+        if batch.x.len() != b * (s * s * 3) as usize || batch.y.len() != b {
+            return Err(Error::invalid(format!(
+                "batch shape mismatch: x={} y={} expected b={b} s={s}",
+                batch.x.len(),
+                batch.y.len()
+            )));
+        }
+        let x = xla::Literal::vec1(&batch.x).reshape(&[b as i64, s, s, 3])?;
+        let y = xla::Literal::vec1(&batch.y);
+        Ok((x, y))
+    }
+
+    /// Run the init artifact: seeded He init → `(trainable, frozen)`.
+    pub fn init(&self, seed: u64) -> Result<(Vec<f32>, Vec<f32>)> {
+        let key = xla::Literal::vec1(&[(seed >> 32) as u32, seed as u32]);
+        let mut outs = execute_tuple(&self.init, &[key])?;
+        if outs.len() != 2 {
+            return Err(Error::invalid("init must return (trainable, frozen)"));
+        }
+        let frozen = outs.pop().unwrap().to_vec::<f32>()?;
+        let trainable = outs.pop().unwrap().to_vec::<f32>()?;
+        if trainable.len() != self.spec.num_trainable
+            || frozen.len() != self.spec.num_frozen
+        {
+            return Err(Error::invalid(format!(
+                "init returned {}/{} params, manifest says {}/{}",
+                trainable.len(),
+                frozen.len(),
+                self.spec.num_trainable,
+                self.spec.num_frozen
+            )));
+        }
+        Ok((trainable, frozen))
+    }
+
+    /// One SGD-with-momentum minibatch step. `params` and `momentum` are
+    /// updated in place (reusing their allocations).
+    pub fn train_step(
+        &self,
+        params: &mut [f32],
+        momentum: &mut [f32],
+        frozen: &[f32],
+        batch: &Batch,
+        lr: f32,
+        lora_scale: f32,
+    ) -> Result<StepStats> {
+        let (x, y) = self.batch_literals(batch)?;
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(momentum),
+            xla::Literal::vec1(frozen),
+            x,
+            y,
+            xla::Literal::scalar(lr),
+            xla::Literal::scalar(lora_scale),
+        ];
+        let mut outs = execute_tuple(&self.train, &args)?;
+        if outs.len() != 4 {
+            return Err(Error::invalid("train must return 4 outputs"));
+        }
+        let acc = outs.pop().unwrap().get_first_element::<f32>()?;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()?;
+        let new_m = outs.pop().unwrap();
+        let new_p = outs.pop().unwrap();
+        new_p.copy_raw_to(params)?;
+        new_m.copy_raw_to(momentum)?;
+        Ok(StepStats { loss, acc })
+    }
+
+    /// Masked eval on one batch → `(loss_sum, correct_count)`.
+    pub fn eval_step(
+        &self,
+        params: &[f32],
+        frozen: &[f32],
+        batch: &Batch,
+        lora_scale: f32,
+    ) -> Result<(f64, f64)> {
+        let (x, y) = self.batch_literals(batch)?;
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(frozen),
+            x,
+            y,
+            xla::Literal::vec1(&batch.mask),
+            xla::Literal::scalar(lora_scale),
+        ];
+        let mut outs = execute_tuple(&self.eval, &args)?;
+        if outs.len() != 2 {
+            return Err(Error::invalid("eval must return 2 outputs"));
+        }
+        let correct = outs.pop().unwrap().get_first_element::<f32>()? as f64;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()? as f64;
+        Ok((loss, correct))
+    }
+}

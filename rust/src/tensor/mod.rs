@@ -1,0 +1,95 @@
+//! Flat `f32` vector math — the coordinator's entire numerical surface.
+//!
+//! Model state crosses the PJRT boundary as flat vectors (DESIGN.md §4),
+//! so aggregation, quantization, pruning and accounting are all O(P)
+//! loops over `&[f32]`. The hot ones (`axpy_weighted`, used once per
+//! client per round) are written to autovectorize.
+
+/// Weighted accumulation `acc += w * x` (FedAvg's inner loop).
+pub fn axpy_weighted(acc: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+    for (a, &b) in acc.iter_mut().zip(x.iter()) {
+        *a += w * b;
+    }
+}
+
+/// Elementwise scale in place.
+pub fn scale(v: &mut [f32], s: f32) {
+    for x in v.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// L2 norm.
+pub fn l2(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Max absolute difference (parity tests, convergence checks).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Mean of a slice (metrics).
+pub fn mean(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+}
+
+/// `out = a - b` (update deltas for the sparse baselines).
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x - y).collect()
+}
+
+/// `out = a + b` in place on `a`.
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b.iter()) {
+        *x += y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut acc = vec![1.0, 2.0];
+        axpy_weighted(&mut acc, &[10.0, 20.0], 0.5);
+        assert_eq!(acc, vec![6.0, 12.0]);
+        scale(&mut acc, 2.0);
+        assert_eq!(acc, vec![12.0, 24.0]);
+    }
+
+    #[test]
+    fn norms_and_diffs() {
+        assert_eq!(l2(&[3.0, 4.0]), 5.0);
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 5.0]), 0.5);
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn sub_add_round_trip() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![0.5, 1.0, 1.5];
+        let d = sub(&a, &b);
+        let mut c = b.clone();
+        add_assign(&mut c, &d);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn axpy_rejects_mismatch() {
+        axpy_weighted(&mut [0.0], &[1.0, 2.0], 1.0);
+    }
+}

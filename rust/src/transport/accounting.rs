@@ -1,0 +1,132 @@
+//! Communication-cost accounting.
+//!
+//! The paper's Equation 2 gives the total communication cost *per
+//! client* over `R` rounds: `TCC(R) = 2 R Q_p |w|` (bits; download +
+//! upload each round). [`tcc_equation2`] reproduces it analytically —
+//! this is the formula behind Table III's 982.07 MB FedAvg row — while
+//! [`CommLedger`] measures the real encoded bytes the simulation moved,
+//! so quantization overhead (scales/zero-points) is counted exactly as
+//! the paper says it includes.
+
+/// Message direction, server perspective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Server → client (model download).
+    Down,
+    /// Client → server (update upload).
+    Up,
+}
+
+/// Eq. 2: bytes for one client over `rounds` rounds with `bits`-wide
+/// elements and `num_params` parameters per message.
+pub fn tcc_equation2(rounds: usize, bits: u32, num_params: usize) -> f64 {
+    2.0 * rounds as f64 * (bits as f64 / 8.0) * num_params as f64
+}
+
+/// Measured byte ledger.
+#[derive(Debug, Default, Clone)]
+pub struct CommLedger {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    pub up_msgs: u64,
+    pub down_msgs: u64,
+    /// Per-round totals (up + down), for convergence-vs-cost plots.
+    pub per_round: Vec<u64>,
+}
+
+impl CommLedger {
+    pub fn new() -> CommLedger {
+        CommLedger::default()
+    }
+
+    pub fn record(&mut self, dir: Direction, bytes: usize) {
+        match dir {
+            Direction::Up => {
+                self.up_bytes += bytes as u64;
+                self.up_msgs += 1;
+            }
+            Direction::Down => {
+                self.down_bytes += bytes as u64;
+                self.down_msgs += 1;
+            }
+        }
+        if let Some(last) = self.per_round.last_mut() {
+            *last += bytes as u64;
+        }
+    }
+
+    /// Open a new per-round bucket.
+    pub fn begin_round(&mut self) {
+        self.per_round.push(0);
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+
+    /// Paper-style per-client TCC: average message size × 2 × rounds.
+    /// With symmetric codecs this equals Eq. 2 with measured bytes.
+    pub fn per_client_tcc(&self, rounds: usize) -> f64 {
+        let msgs = self.up_msgs + self.down_msgs;
+        if msgs == 0 {
+            return 0.0;
+        }
+        let avg = self.total_bytes() as f64 / msgs as f64;
+        2.0 * rounds as f64 * avg
+    }
+
+    /// Mean upload message bytes (the "Message Size" column of Table IV).
+    pub fn mean_up_msg(&self) -> f64 {
+        if self.up_msgs == 0 {
+            0.0
+        } else {
+            self.up_bytes as f64 / self.up_msgs as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equation2_matches_paper_table3_fedavg_row() {
+        // ResNet-8: 1.2276 M params, fp32, 100 rounds => 982.07 MB.
+        let bytes = tcc_equation2(100, 32, 1_227_594);
+        assert!((bytes / 1e6 - 982.07).abs() < 1.0, "{}", bytes / 1e6);
+    }
+
+    #[test]
+    fn equation2_matches_paper_table3_flocora_row() {
+        // FLoCoRA r=32: 258.0 K trained params => ~205.47 MB / 100 rounds.
+        let bytes = tcc_equation2(100, 32, 258_026);
+        assert!((bytes / 1e6 - 205.47).abs() < 1.5, "{}", bytes / 1e6);
+    }
+
+    #[test]
+    fn ledger_accumulates_and_buckets() {
+        let mut l = CommLedger::new();
+        l.begin_round();
+        l.record(Direction::Down, 100);
+        l.record(Direction::Up, 50);
+        l.begin_round();
+        l.record(Direction::Down, 10);
+        assert_eq!(l.total_bytes(), 160);
+        assert_eq!(l.per_round, vec![150, 10]);
+        assert_eq!(l.up_msgs, 1);
+        assert_eq!(l.down_msgs, 2);
+        assert_eq!(l.mean_up_msg(), 50.0);
+    }
+
+    #[test]
+    fn per_client_tcc_symmetric_case() {
+        let mut l = CommLedger::new();
+        l.begin_round();
+        for _ in 0..10 {
+            l.record(Direction::Down, 1000);
+            l.record(Direction::Up, 1000);
+        }
+        // Every message 1000 B, 5 rounds => per-client 2*5*1000 = 10 kB.
+        assert_eq!(l.per_client_tcc(5), 10_000.0);
+    }
+}

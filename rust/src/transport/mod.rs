@@ -1,0 +1,9 @@
+//! Transport substrate: message framing, communication-cost accounting
+//! (the paper's Eq. 2, generalised to measured bytes), and a simple
+//! bandwidth/latency network model for wall-clock estimates.
+
+pub mod accounting;
+pub mod network;
+
+pub use accounting::{tcc_equation2, CommLedger, Direction};
+pub use network::NetworkModel;

@@ -1,0 +1,67 @@
+//! A simple bandwidth/latency network model.
+//!
+//! The paper reports communication *cost* (bytes), not wall-clock, but a
+//! deployment-oriented framework should translate message sizes into
+//! time-on-wire for capacity planning. This model is used by the
+//! `examples/` drivers to report estimated round times on edge-like
+//! links (e.g. LTE: 10 Mbit/s up, 30 Mbit/s down, 40 ms RTT).
+
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// Uplink bits/second.
+    pub up_bps: f64,
+    /// Downlink bits/second.
+    pub down_bps: f64,
+    /// One-way latency, seconds.
+    pub latency_s: f64,
+}
+
+impl NetworkModel {
+    /// LTE-ish edge uplink profile.
+    pub fn edge_lte() -> NetworkModel {
+        NetworkModel { up_bps: 10e6, down_bps: 30e6, latency_s: 0.02 }
+    }
+
+    /// Campus WiFi profile.
+    pub fn wifi() -> NetworkModel {
+        NetworkModel { up_bps: 80e6, down_bps: 150e6, latency_s: 0.005 }
+    }
+
+    pub fn upload_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 * 8.0 / self.up_bps
+    }
+
+    pub fn download_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 * 8.0 / self.down_bps
+    }
+
+    /// Time for a full round trip of one client (download then upload;
+    /// compute time is accounted separately by the caller).
+    pub fn round_trip(&self, down_bytes: usize, up_bytes: usize) -> f64 {
+        self.download_time(down_bytes) + self.upload_time(up_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_scale_with_bytes() {
+        let net = NetworkModel::edge_lte();
+        let t1 = net.upload_time(1_000_000);
+        let t2 = net.upload_time(2_000_000);
+        assert!(t2 > t1);
+        // 1 MB at 10 Mbit/s = 0.8 s + latency.
+        assert!((t1 - (0.02 + 0.8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_messages_help_asymmetric_links() {
+        let net = NetworkModel::edge_lte();
+        // FLoCoRA r=16 q8 message (0.7 MB) vs full ResNet-18 (44.7 MB).
+        let flocora = net.round_trip(700_000, 700_000);
+        let fedavg = net.round_trip(44_700_000, 44_700_000);
+        assert!(fedavg / flocora > 30.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal benchmarking harness (the offline vendor set has no
+//! `criterion`): warmup + timed iterations with mean / std / min / p50,
+//! plus a tabular reporter shared by the `cargo bench` targets.
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.min_s),
+        )
+    }
+
+    /// Throughput helper: items per second at the mean time.
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<40} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "min"
+    )
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / iters as f64;
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: sorted[0],
+        p50_s: sorted[iters / 2],
+    }
+}
+
+/// Read an env-var knob with default (bench scaling).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let mut x = 0u64;
+        let st = bench("noop-ish", 2, 50, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert_eq!(st.iters, 50);
+        assert!(st.mean_s >= 0.0 && st.min_s <= st.mean_s);
+        assert!(st.per_sec(1.0) > 0.0);
+    }
+
+    #[test]
+    fn env_knob() {
+        assert_eq!(env_usize("FLOCORA_SURELY_UNSET_XYZ", 7), 7);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-5).contains("µs"));
+        assert!(fmt_time(2e-2).contains("ms"));
+        assert!(fmt_time(2.0).contains(" s"));
+        assert!(header().contains("benchmark"));
+    }
+}

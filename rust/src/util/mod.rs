@@ -1,0 +1,7 @@
+//! Small in-repo substrates that would normally come from crates.io —
+//! the offline vendor set only covers the `xla` closure, so JSON and
+//! random-number generation are implemented here (DESIGN.md §2).
+
+pub mod benchkit;
+pub mod json;
+pub mod rng;

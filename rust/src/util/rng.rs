@@ -1,0 +1,248 @@
+//! Deterministic random numbers: SplitMix64 seeding + Xoshiro256**,
+//! plus the distribution samplers the FL substrate needs (uniform,
+//! normal, gamma, Dirichlet) and Fisher-Yates shuffling.
+//!
+//! Everything is seeded explicitly — every experiment in EXPERIMENTS.md
+//! is reproducible bit-for-bit from its config seed.
+
+/// Xoshiro256** (Blackman & Vigna), seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm),
+                  splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Derive an independent stream (client-/round-scoped RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire-style rejection-free for our (non-crypto) purposes.
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via polar Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang; boosted for shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a).
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) over `k` categories.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = v.iter().sum();
+        if sum <= 0.0 {
+            // Pathologically small alpha: degenerate to a random one-hot.
+            let hot = self.below(k);
+            return (0..k).map(|i| if i == hot { 1.0 } else { 0.0 }).collect();
+        }
+        for x in &mut v {
+            *x /= sum;
+        }
+        v
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (client sampling).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // Partial Fisher-Yates: only the first k swaps matter.
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(3);
+        for &shape in &[0.3, 0.5, 1.0, 2.5, 10.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() / shape < 0.08,
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_concentrates() {
+        let mut r = Rng::new(4);
+        // Large alpha => near-uniform; small alpha => spiky.
+        let flat = r.dirichlet(100.0, 10);
+        assert!((flat.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(flat.iter().all(|&p| (p - 0.1).abs() < 0.05));
+        let mut max_spike = 0.0f64;
+        for _ in 0..20 {
+            let spiky = r.dirichlet(0.05, 10);
+            assert!((spiky.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            max_spike = max_spike.max(spiky.iter().cloned().fold(0.0, f64::max));
+        }
+        assert!(max_spike > 0.8, "alpha=0.05 should concentrate");
+    }
+
+    #[test]
+    fn choose_k_distinct_and_complete() {
+        let mut r = Rng::new(5);
+        let picked = r.choose_k(100, 10);
+        assert_eq!(picked.len(), 10);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+        let all = r.choose_k(5, 5);
+        let mut all_sorted = all;
+        all_sorted.sort_unstable();
+        assert_eq!(all_sorted, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut base = Rng::new(6);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let same = (0..50).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,282 @@
+//! Property-based tests (hand-rolled kit: seeded RNG-driven cases with
+//! shrink-free replay — the offline vendor set has no `proptest`; each
+//! case count is high enough to sweep the interesting structure space
+//! and failures print the case seed for deterministic replay).
+//!
+//! These cover the pure substrates only (no PJRT), so they run fast and
+//! wide: codecs, aggregation, partitioning, packing, JSON, rank
+//! projection.
+
+use flocora::compression::{AffineCodec, Codec, Fp32Codec, TopKCodec,
+                           ZeroFlCodec};
+use flocora::coordinator::aggregator::FedAvg;
+use flocora::coordinator::hetero::project_ranks;
+use flocora::data::lda_partition;
+use flocora::model::{build_spec, ModelCfg, ParamKind, Segment, Variant};
+use flocora::tensor;
+use flocora::util::json;
+use flocora::util::rng::Rng;
+
+const CASES: usize = 60;
+
+/// Random segment layout: mixes quantized and fp segments.
+fn rand_layout(rng: &mut Rng) -> (Vec<Segment>, Vec<f32>) {
+    let nsegs = 1 + rng.below(6);
+    let mut segs = Vec::new();
+    let mut offset = 0;
+    for i in 0..nsegs {
+        let rows = 1 + rng.below(12);
+        let cols = 1 + rng.below(40);
+        let numel = rows * cols;
+        let quant = rng.f64() < 0.7;
+        segs.push(Segment {
+            name: format!("seg{i}"),
+            shape: vec![rows, cols],
+            numel,
+            kind: ParamKind::Conv,
+            offset,
+            quant_rows: if quant { Some(rows) } else { None },
+        });
+        offset += numel;
+    }
+    let scale = (10.0f64).powf(rng.range_f64(-3.0, 2.0)) as f32;
+    let v: Vec<f32> =
+        (0..offset).map(|_| scale * rng.normal() as f32).collect();
+    (segs, v)
+}
+
+#[test]
+fn prop_fp32_codec_is_lossless() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let (segs, v) = rand_layout(&mut rng);
+        let c = Fp32Codec;
+        let out = c.decode(&c.encode(&v, &segs).unwrap(), &segs).unwrap();
+        assert_eq!(out, v, "case {case}");
+    }
+}
+
+#[test]
+fn prop_affine_error_bounded_and_idempotent() {
+    let mut rng = Rng::new(102);
+    for case in 0..CASES {
+        let (segs, v) = rand_layout(&mut rng);
+        for bits in [2u32, 4, 8] {
+            let c = AffineCodec::new(bits);
+            let once = c.decode(&c.encode(&v, &segs).unwrap(), &segs).unwrap();
+            // Idempotence: re-quantizing the dequantized vector is a
+            // fixed point (values already on the grid).
+            let twice =
+                c.decode(&c.encode(&once, &segs).unwrap(), &segs).unwrap();
+            let drift = tensor::max_abs_diff(&once, &twice);
+            let vmax = v.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
+            assert!(drift <= vmax * 2e-3,
+                    "case {case} bits {bits}: drift {drift} vmax {vmax}");
+            // Error bound: |deq - v| <= scale/2 + eps per quantized row
+            // (checked via global bound: scale <= 2*vmax/qmax... loose
+            // but structure-free).
+            let qmax = ((1u32 << bits) - 1) as f32;
+            let bound = 2.0 * vmax / qmax * 0.5 + vmax * 1e-4;
+            for seg in &segs {
+                if seg.quant_rows.is_none() {
+                    continue;
+                }
+                for i in seg.offset..seg.offset + seg.numel {
+                    assert!((once[i] - v[i]).abs() <= bound * 1.001,
+                            "case {case} bits {bits} idx {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_affine_message_smaller_than_fp32_for_large_segments() {
+    let mut rng = Rng::new(103);
+    for _ in 0..CASES {
+        // Force wide segments so scale/zp overhead can't dominate.
+        let rows = 4 + rng.below(12);
+        let cols = 64 + rng.below(100);
+        let seg = Segment {
+            name: "s".into(),
+            shape: vec![rows, cols],
+            numel: rows * cols,
+            kind: ParamKind::Conv,
+            offset: 0,
+            quant_rows: Some(rows),
+        };
+        let v: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let fp = Fp32Codec.encode(&v, std::slice::from_ref(&seg)).unwrap();
+        for bits in [2u32, 4, 8] {
+            let q = AffineCodec::new(bits)
+                .encode(&v, std::slice::from_ref(&seg))
+                .unwrap();
+            assert!(q.size_bytes() < fp.size_bytes(),
+                    "bits {bits}: {} !< {}", q.size_bytes(), fp.size_bytes());
+        }
+    }
+}
+
+#[test]
+fn prop_topk_decode_is_subset_with_exact_values() {
+    let mut rng = Rng::new(104);
+    for case in 0..CASES {
+        let n = 10 + rng.below(2000);
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let keep = (rng.range_f64(0.05, 1.0)) as f32;
+        let c = TopKCodec::new(keep);
+        let out = c.decode(&c.encode(&v, &[]).unwrap(), &[]).unwrap();
+        assert_eq!(out.len(), n);
+        let mut kept = 0;
+        for i in 0..n {
+            if out[i] != 0.0 {
+                assert_eq!(out[i], v[i], "case {case}");
+                kept += 1;
+            }
+        }
+        assert_eq!(kept, c.kept_count(n).min(
+            v.iter().filter(|&&x| x != 0.0).count().max(1)),
+            "case {case}");
+    }
+}
+
+#[test]
+fn prop_zerofl_kept_fraction_monotone_in_mask_ratio() {
+    let mut rng = Rng::new(105);
+    for _ in 0..CASES {
+        let sp = rng.range_f64(0.1, 0.95) as f32;
+        let mr1 = rng.range_f64(0.0, 0.5) as f32;
+        let mr2 = (mr1 + 0.3).min(1.0);
+        let a = ZeroFlCodec::new(sp, mr1);
+        let b = ZeroFlCodec::new(sp, mr2);
+        assert!(a.kept_fraction() <= b.kept_fraction() + 1e-9);
+        let n = 500;
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let ma = a.encode(&v, &[]).unwrap();
+        let mb = b.encode(&v, &[]).unwrap();
+        assert!(ma.size_bytes() <= mb.size_bytes());
+    }
+}
+
+#[test]
+fn prop_fedavg_is_convex_combination() {
+    let mut rng = Rng::new(106);
+    for case in 0..CASES {
+        let dim = 1 + rng.below(300);
+        let k = 1 + rng.below(8);
+        let mut agg = FedAvg::new(dim);
+        let mut lo = vec![f32::INFINITY; dim];
+        let mut hi = vec![f32::NEG_INFINITY; dim];
+        for _ in 0..k {
+            let v: Vec<f32> =
+                (0..dim).map(|_| rng.normal() as f32).collect();
+            for i in 0..dim {
+                lo[i] = lo[i].min(v[i]);
+                hi[i] = hi[i].max(v[i]);
+            }
+            agg.add(&v, rng.range_f64(0.5, 100.0)).unwrap();
+        }
+        let out = agg.finish().unwrap();
+        for i in 0..dim {
+            assert!(out[i] >= lo[i] - 1e-4 && out[i] <= hi[i] + 1e-4,
+                    "case {case} dim {i}: {} not in [{}, {}]",
+                    out[i], lo[i], hi[i]);
+        }
+    }
+}
+
+#[test]
+fn prop_fedavg_weight_scale_invariant() {
+    // Scaling all weights by a constant must not change the mean.
+    let mut rng = Rng::new(107);
+    for _ in 0..CASES {
+        let dim = 1 + rng.below(100);
+        let k = 2 + rng.below(5);
+        let vs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let ws: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 50.0)).collect();
+        let run = |scale: f64| {
+            let mut agg = FedAvg::new(dim);
+            for (v, w) in vs.iter().zip(&ws) {
+                agg.add(v, w * scale).unwrap();
+            }
+            agg.finish().unwrap()
+        };
+        let a = run(1.0);
+        let b = run(7.5);
+        assert!(tensor::max_abs_diff(&a, &b) < 1e-4);
+    }
+}
+
+#[test]
+fn prop_lda_partition_total_and_determinism() {
+    let mut rng = Rng::new(108);
+    for _ in 0..20 {
+        let clients = 1 + rng.below(20);
+        let per = 1 + rng.below(30);
+        let alpha = rng.range_f64(0.05, 10.0);
+        let seed = rng.next_u64();
+        let f1 = lda_partition(clients, per, 10, 8, alpha, seed);
+        let f2 = lda_partition(clients, per, 10, 8, alpha, seed);
+        assert_eq!(f1.total_samples(), clients * per);
+        for (a, b) in f1.clients.iter().zip(&f2.clients) {
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.class_hist.iter().sum::<usize>(), per);
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trip_arbitrary_values() {
+    let mut rng = Rng::new(109);
+    fn gen(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.f64() < 0.5),
+            2 => json::Json::Num((rng.normal() * 1e3).round()),
+            3 => json::Json::Str(format!("s{}-\"quote\"\n{}", rng.below(100),
+                                          "é")),
+            4 => json::arr((0..rng.below(5))
+                .map(|_| gen(rng, depth + 1))
+                .collect()),
+            _ => {
+                let mut pairs = Vec::new();
+                for i in 0..rng.below(5) {
+                    pairs.push((format!("k{i}"), gen(rng, depth + 1)));
+                }
+                json::Json::Obj(pairs.into_iter().collect())
+            }
+        }
+    }
+    for case in 0..CASES {
+        let v = gen(&mut rng, 0);
+        let text = v.to_string();
+        let re = json::parse(&text).unwrap();
+        assert_eq!(v, re, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_rank_projection_function_preserving_composition() {
+    // Projecting r -> r' -> r (r' >= r) is the identity; the padded
+    // slots stay zero through a round trip from any starting rank.
+    let ranks = [2usize, 4, 8, 16];
+    let mut rng = Rng::new(110);
+    let cfg = ModelCfg::by_name("micro8").unwrap();
+    for _ in 0..20 {
+        let a = ranks[rng.below(ranks.len())];
+        let b = ranks[rng.below(ranks.len())];
+        if a > b {
+            continue;
+        }
+        let sa = build_spec(cfg, Variant::LoraFc, a).trainable;
+        let sb = build_spec(cfg, Variant::LoraFc, b).trainable;
+        let na: usize = sa.iter().map(|s| s.numel).sum();
+        let v: Vec<f32> = (0..na).map(|_| rng.normal() as f32).collect();
+        let up = project_ranks(&v, &sa, &sb).unwrap();
+        let down = project_ranks(&up, &sb, &sa).unwrap();
+        assert_eq!(down, v, "{a}->{b}->{a}");
+    }
+}
