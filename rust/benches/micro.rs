@@ -5,7 +5,9 @@
 
 use flocora::compression::{AffineCodec, Codec, Fp32Codec, TopKCodec,
                            ZeroFlCodec};
+use flocora::config::FlConfig;
 use flocora::coordinator::aggregator::FedAvg;
+use flocora::coordinator::{ExecutorKind, Simulation};
 use flocora::data::{gen_image, lda_partition};
 use flocora::model::{build_spec, ModelCfg, Variant};
 use flocora::runtime::{Batch, Engine};
@@ -107,6 +109,38 @@ fn main() {
             session.eval_step(&p, &f, &batch, 16.0).unwrap();
         });
         println!("{}", st.row());
+    }
+
+    // ---- round engine: serial vs parallel client execution -------------
+    // Same seed => bit-identical trajectories; only wall-clock differs.
+    // The parallel row should win clearly at 8 clients/round on any
+    // multi-core box (acceptance bar for the executor refactor).
+    let mk = |executor| FlConfig {
+        tag: "micro8_lora_fc_r4".into(),
+        num_clients: 16,
+        clients_per_round: 8,
+        local_epochs: 1,
+        samples_per_client: 32,
+        test_samples: 40,
+        executor,
+        ..FlConfig::default()
+    };
+    let iters = env_usize("FLOCORA_BENCH_ROUND_ITERS", 8);
+    let mut serial_mean = f64::NAN;
+    for kind in [ExecutorKind::Serial, ExecutorKind::Parallel] {
+        let mut sim = Simulation::new(&engine, mk(kind)).expect("sim");
+        let st = bench(&format!("fl round, 8 clients, {}", kind.label()),
+                       1, iters, || { sim.round().unwrap(); });
+        match kind {
+            ExecutorKind::Serial => {
+                serial_mean = st.mean_s;
+                println!("{}", st.row());
+            }
+            ExecutorKind::Parallel => {
+                println!("{}   ({:.2}x vs serial)", st.row(),
+                         serial_mean / st.mean_s);
+            }
+        }
     }
     println!("\nmicro bench OK");
 }

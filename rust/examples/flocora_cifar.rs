@@ -15,10 +15,9 @@ use flocora::metrics::Recorder;
 use flocora::runtime::Engine;
 use flocora::transport::NetworkModel;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1))
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let rounds = args.usize_or("rounds", 60).map_err(|e| anyhow::anyhow!("{e}"))?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let rounds = args.usize_or("rounds", 60)?;
     let model = args.str_or("model", "micro8");
     let engine = Engine::new("artifacts")?;
     let net = NetworkModel::edge_lte();
@@ -27,7 +26,10 @@ fn main() -> anyhow::Result<()> {
         "micro8" => ("micro8_full", "micro8_lora_fc_r4", 4),
         "tiny8" => ("tiny8_full", "tiny8_lora_fc_r8", 8),
         "resnet8" => ("resnet8_full", "resnet8_lora_fc_r32", 32),
-        other => anyhow::bail!("unknown --model {other}"),
+        other => {
+            return Err(flocora::Error::invalid(
+                format!("unknown --model {other}")).into())
+        }
     };
 
     for (name, tag, rank, codec) in [
@@ -39,18 +41,22 @@ fn main() -> anyhow::Result<()> {
         cfg.samples_per_client = 64;
         cfg.eval_every = 4;
         let mut sim = Simulation::new(&engine, cfg)?;
+        // Report simulated wire time on the edge-LTE profile (set
+        // before the first round; it feeds the run's accumulators).
+        sim.set_network(net);
         let mut rec = Recorder::new(name);
         let summary = sim.run(&mut rec)?;
         let csv = format!("target/flocora_cifar_{name}.csv");
         rec.write_csv(&csv)?;
         println!(
             "{name:>8}: final acc {:.3} | msg {:>8.1} kB | total comm \
-             {:>7.2} MB | est. LTE round-trip {:>6.2} s | wall {:.1}s | {csv}",
+             {:>7.2} MB | LTE wire {:>6.1} s concurrent / {:>7.1} s \
+             serial | wall {:.1}s | {csv}",
             summary.final_acc,
             summary.mean_up_msg_bytes / 1e3,
             summary.total_bytes as f64 / 1e6,
-            net.round_trip(summary.mean_up_msg_bytes as usize,
-                           summary.mean_up_msg_bytes as usize),
+            summary.sim_net_parallel_s,
+            summary.sim_net_serial_s,
             summary.wall_s,
         );
     }

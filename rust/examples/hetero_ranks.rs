@@ -21,10 +21,9 @@ use flocora::data::{lda_partition, BatchIter, TestSet};
 use flocora::runtime::Engine;
 use flocora::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1))
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let rounds = args.usize_or("rounds", 40).map_err(|e| anyhow::anyhow!("{e}"))?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let rounds = args.usize_or("rounds", 40)?;
     let engine = Engine::new("artifacts")?;
 
     // Server rank 8; clients alternate between rank tiers (device
@@ -57,8 +56,7 @@ fn main() -> anyhow::Result<()> {
             // Down-project the server state to the client's rank.
             let start = project_ranks(&global,
                                       &server.spec.trainable_segments,
-                                      &sess.spec.trainable_segments)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                                      &sess.spec.trainable_segments)?;
             tier_bytes[tier] += (start.len() * 4) as u64;
             let trainer = LocalTrainer {
                 local_epochs: 2,
@@ -67,18 +65,15 @@ fn main() -> anyhow::Result<()> {
             };
             let mut crng = rng.fork((round * 100 + client) as u64);
             let out = trainer
-                .run(sess, &fed.clients[client], &frozen, start, &mut crng)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                .run(sess, &fed.clients[client], &frozen, start, &mut crng)?;
             tier_bytes[tier] += (out.params.len() * 4) as u64;
             // Up-project back into the server's rank space.
             let up = project_ranks(&out.params,
                                    &sess.spec.trainable_segments,
-                                   &server.spec.trainable_segments)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            agg.add(&up, out.samples as f64)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                                   &server.spec.trainable_segments)?;
+            agg.add(&up, out.samples as f64)?;
         }
-        global = agg.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+        global = agg.finish()?;
 
         if (round + 1) % 8 == 0 || round + 1 == rounds {
             let mut correct = 0.0;
@@ -88,8 +83,7 @@ fn main() -> anyhow::Result<()> {
                                         Tail::PadZero) {
                 let (_, c) = server
                     .eval_step(&global, &frozen, &batch,
-                               alpha / server.spec.rank as f32)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                               alpha / server.spec.rank as f32)?;
                 correct += c;
             }
             println!("round {:>3}: acc {:.3} (server rank 8; clients r2/r4/r8)",

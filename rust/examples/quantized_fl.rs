@@ -13,10 +13,9 @@ use flocora::coordinator::Simulation;
 use flocora::metrics::Recorder;
 use flocora::runtime::Engine;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1))
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let rounds = args.usize_or("rounds", 60).map_err(|e| anyhow::anyhow!("{e}"))?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let rounds = args.usize_or("rounds", 60)?;
     let engine = Engine::new("artifacts")?;
 
     println!("{:<10} {:>10} {:>14} {:>12}", "codec", "final acc",

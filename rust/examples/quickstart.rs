@@ -7,11 +7,11 @@
 
 use flocora::compression::CodecKind;
 use flocora::config::FlConfig;
-use flocora::coordinator::Simulation;
+use flocora::coordinator::{ExecutorKind, Simulation};
 use flocora::runtime::Engine;
 use flocora::transport::tcc_equation2;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Stand up the PJRT runtime over the artifact directory.
     let engine = Engine::new("artifacts")?;
     println!("PJRT platform: {}", engine.platform());
@@ -26,7 +26,9 @@ fn main() -> anyhow::Result<()> {
         local_epochs: 1,
         samples_per_client: 32,
         test_samples: 80,
-        codec: CodecKind::Affine(8), // paper's int8 wire format
+        codec: CodecKind::Affine(8),      // paper's int8 wire format
+        executor: ExecutorKind::Parallel, // fan clients across cores —
+        threads: 0,                       // bit-identical to serial
         ..FlConfig::default()
     };
     let mut sim = Simulation::new(&engine, cfg)?;

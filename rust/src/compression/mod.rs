@@ -39,7 +39,36 @@ impl Message {
 }
 
 /// A parameter-vector codec.
-pub trait Codec {
+///
+/// Implementations must be `Send + Sync`: the parallel round engine
+/// shares one codec instance across all client-executor threads (every
+/// implementation in this crate is stateless, so encode/decode are
+/// naturally reentrant).
+///
+/// ```
+/// use flocora::compression::{Codec, CodecKind};
+/// use flocora::model::{ParamKind, Segment};
+///
+/// // Parse a wire format the same way the CLI does, then round-trip a
+/// // vector through it. `segments` must describe `v`'s layout (their
+/// // `numel`s sum to `v.len()`); real layouts come from the manifest
+/// // or `model::build_spec`. Codecs are lossy-transparent: decode
+/// // always returns a dense vector of the layout's total length.
+/// let seg = Segment {
+///     name: "fc_w".into(),
+///     shape: vec![2, 2],
+///     numel: 4,
+///     kind: ParamKind::FcW,
+///     offset: 0,
+///     quant_rows: None,
+/// };
+/// let codec = CodecKind::parse("fp32").unwrap().build();
+/// let v = vec![1.0f32, -2.5, 0.25, 3.0];
+/// let msg = codec.encode(&v, std::slice::from_ref(&seg)).unwrap();
+/// assert_eq!(msg.size_bytes(), v.len() * 4);
+/// assert_eq!(codec.decode(&msg, std::slice::from_ref(&seg)).unwrap(), v);
+/// ```
+pub trait Codec: Send + Sync {
     fn name(&self) -> String;
 
     /// Encode `v` (layout described by `segments`, whose `numel`s must

@@ -7,6 +7,7 @@ pub mod loader;
 pub mod presets;
 
 use crate::compression::CodecKind;
+use crate::coordinator::executor::ExecutorKind;
 use crate::error::{Error, Result};
 
 /// Full description of one FL run.
@@ -39,6 +40,13 @@ pub struct FlConfig {
     /// Multiplicative per-round learning-rate decay (1.0 = constant;
     /// e.g. 0.99 halves the lr every ~69 rounds).
     pub lr_decay: f32,
+    /// How a round's sampled clients execute: the serial reference or
+    /// the thread-pool engine. Bit-identical results either way (the
+    /// per-client RNG depends only on `(seed, round, cid)`).
+    pub executor: ExecutorKind,
+    /// Worker threads for the parallel executor (0 = one per available
+    /// core). Ignored by the serial executor.
+    pub threads: usize,
 }
 
 impl Default for FlConfig {
@@ -59,6 +67,8 @@ impl Default for FlConfig {
             eval_every: 2,
             dropout: 0.0,
             lr_decay: 1.0,
+            executor: ExecutorKind::Serial,
+            threads: 0,
         }
     }
 }
@@ -123,6 +133,14 @@ impl FlConfig {
             "eval_every" => self.eval_every = p(key, value)?,
             "dropout" => self.dropout = p(key, value)?,
             "lr_decay" => self.lr_decay = p(key, value)?,
+            "threads" => self.threads = p(key, value)?,
+            "executor" => {
+                self.executor = ExecutorKind::parse(value).ok_or_else(|| {
+                    Error::parse(format!(
+                        "unknown executor `{value}` (serial|parallel)"
+                    ))
+                })?
+            }
             "codec" => {
                 self.codec = CodecKind::parse(value).ok_or_else(|| {
                     Error::parse(format!("unknown codec `{value}`"))
@@ -155,6 +173,20 @@ mod tests {
         assert!(c.set("nope", "1").is_err());
         c.set("clients_per_round", "100").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn executor_knobs_parse_and_default_serial() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.executor, ExecutorKind::Serial);
+        assert_eq!(c.threads, 0);
+        c.set("executor", "parallel").unwrap();
+        c.set("threads", "8").unwrap();
+        assert_eq!(c.executor, ExecutorKind::Parallel);
+        assert_eq!(c.threads, 8);
+        c.validate().unwrap();
+        assert!(c.set("executor", "turbo").is_err());
+        assert!(c.set("threads", "-1").is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::compression::CodecKind;
 use crate::config::FlConfig;
+use crate::coordinator::executor::ExecutorKind;
 
 /// Paper §IV main setup: ResNet-8, CIFAR-10-scale, LDA 0.5, 100 rounds.
 pub fn paper_resnet8(rank: usize, codec: CodecKind) -> FlConfig {
@@ -32,6 +33,10 @@ pub fn paper_resnet8(rank: usize, codec: CodecKind) -> FlConfig {
         eval_every: 5,
         dropout: 0.0,
         lr_decay: 1.0,
+        // 10 clients/round is exactly the fan-out regime the parallel
+        // engine exists for; results are bit-identical to serial.
+        executor: ExecutorKind::Parallel,
+        threads: 0,
     }
 }
 
@@ -69,6 +74,10 @@ pub fn scaled_micro(variant_tag: &str, rank: usize, codec: CodecKind) -> FlConfi
         eval_every: 2,
         dropout: 0.0,
         lr_decay: 1.0,
+        // Scaled profiles keep the serial reference: rounds are seconds
+        // long and the benches that use them time the executor itself.
+        executor: ExecutorKind::Serial,
+        threads: 0,
     }
 }
 
@@ -104,6 +113,7 @@ mod tests {
         assert_eq!(t4.rounds, 700);
         assert_eq!(t4.local_epochs, 1);
         assert_eq!(t4.lda_alpha, 1.0);
+        assert_eq!(t4.executor, ExecutorKind::Parallel);
         t4.validate().unwrap();
     }
 

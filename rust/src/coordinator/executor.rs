@@ -1,0 +1,301 @@
+//! Pluggable per-round client execution — the parallel round engine.
+//!
+//! The FLoCoRA protocol is embarrassingly parallel within a round: each
+//! sampled client decodes the (shared) download message, trains on its
+//! own shard, and encodes its upload; clients only meet again at FedAvg
+//! aggregation. [`ClientExecutor`] captures exactly that per-client unit
+//! of work, with two implementations:
+//!
+//! * [`SerialExecutor`] — clients run one after another on the calling
+//!   thread. The reference implementation.
+//! * [`ParallelExecutor`] — clients fan out across a pool of scoped OS
+//!   threads pulling from a shared work queue.
+//!
+//! **Determinism contract.** Both executors return one [`ClientResult`]
+//! per sampled client *in sampling order*, and every source of
+//! randomness a client touches (dropout draw, batch shuffling) comes
+//! from [`Rng::for_client`], which depends only on `(seed, round, cid)`
+//! — never on execution order or thread count. The server merges results
+//! in that stable order, so a run's output is bit-identical under either
+//! executor (asserted by `tests/executor.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::compression::{Codec, Message};
+use crate::config::FlConfig;
+use crate::coordinator::trainer::LocalTrainer;
+use crate::data::Federation;
+use crate::error::Result;
+use crate::runtime::ModelSession;
+use crate::util::rng::Rng;
+
+/// Executor selection, parseable from CLI/config strings (mirrors
+/// [`crate::compression::CodecKind`] for codecs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Clients run sequentially on the coordinator thread.
+    Serial,
+    /// Clients fan out across a thread pool (bit-identical results).
+    Parallel,
+}
+
+impl ExecutorKind {
+    /// Parse `serial | parallel`.
+    pub fn parse(s: &str) -> Option<ExecutorKind> {
+        match s {
+            "serial" => Some(ExecutorKind::Serial),
+            "parallel" => Some(ExecutorKind::Parallel),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecutorKind::Serial => "serial",
+            ExecutorKind::Parallel => "parallel",
+        }
+    }
+
+    /// Instantiate the executor. `threads` only affects
+    /// [`ExecutorKind::Parallel`]; 0 means one worker per available
+    /// core.
+    pub fn build(&self, threads: usize) -> Box<dyn ClientExecutor> {
+        match self {
+            ExecutorKind::Serial => Box::new(SerialExecutor),
+            ExecutorKind::Parallel => Box::new(ParallelExecutor::new(threads)),
+        }
+    }
+}
+
+/// Everything one round of client work reads. All fields are shared
+/// immutably across executor threads ([`ModelSession`] and `dyn Codec`
+/// are `Sync` by construction).
+pub struct RoundContext<'a> {
+    pub session: &'a ModelSession,
+    pub codec: &'a dyn Codec,
+    pub federation: &'a Federation,
+    /// Frozen `W_initial` (never moves, never re-encoded).
+    pub frozen: &'a [f32],
+    /// The server's encoded global vector — one message, downloaded by
+    /// every sampled client.
+    pub down_msg: &'a Message,
+    pub trainer: LocalTrainer,
+    pub cfg: &'a FlConfig,
+    /// Round index, part of the per-client RNG coordinates.
+    pub round: usize,
+}
+
+/// What one sampled client hands back to the server.
+#[derive(Debug, Clone)]
+pub struct ClientResult {
+    pub cid: usize,
+    /// Bytes this client pulled (the shared download message).
+    pub down_bytes: usize,
+    /// `None` if the client failed before uploading (dropout injection).
+    pub update: Option<ClientUpdate>,
+}
+
+/// A surviving client's contribution.
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    /// The update as the *server* sees it — after the uplink codec
+    /// round trip, ready for FedAvg.
+    pub params: Vec<f32>,
+    /// FedAvg weight `n_k` (local sample count).
+    pub weight: f64,
+    pub up_bytes: usize,
+    pub mean_loss: f64,
+    pub mean_acc: f64,
+}
+
+/// The complete per-client unit of work: download-decode → (maybe drop)
+/// → local train → encode-upload → server-side decode. Shared verbatim
+/// by both executors so they cannot diverge behaviorally.
+fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
+    let segments = &ctx.session.spec.trainable_segments;
+    let down_bytes = ctx.down_msg.size_bytes();
+    let start = ctx.codec.decode(ctx.down_msg, segments)?;
+
+    // All client randomness flows from (seed, round, cid) — stable under
+    // any execution order (see module docs).
+    let mut crng =
+        Rng::for_client(ctx.cfg.seed, ctx.round as u64, cid as u64);
+
+    // Failure injection: the client downloaded the model but fails
+    // before uploading (crash/network loss). FedAvg proceeds with the
+    // survivors — the aggregation-agnostic loop needs no special casing.
+    if ctx.cfg.dropout > 0.0 && crng.f64() < ctx.cfg.dropout {
+        return Ok(ClientResult { cid, down_bytes, update: None });
+    }
+
+    let outcome = ctx.trainer.run(
+        ctx.session,
+        &ctx.federation.clients[cid],
+        ctx.frozen,
+        start,
+        &mut crng,
+    )?;
+
+    // Upload: encode → count bytes → decode as the server would.
+    let up_msg = ctx.codec.encode(&outcome.params, segments)?;
+    let up_bytes = up_msg.size_bytes();
+    let received = ctx.codec.decode(&up_msg, segments)?;
+
+    Ok(ClientResult {
+        cid,
+        down_bytes,
+        update: Some(ClientUpdate {
+            params: received,
+            weight: outcome.samples as f64,
+            up_bytes,
+            mean_loss: outcome.mean_loss,
+            mean_acc: outcome.mean_acc,
+        }),
+    })
+}
+
+/// Strategy for executing a round's sampled clients.
+///
+/// Contract: `execute` returns exactly one result per entry of
+/// `clients`, in the same order, and is deterministic in `(ctx,
+/// clients)` — implementations may reorder *work* but never *results*.
+///
+/// Memory note: the collected `Vec` holds every surviving client's
+/// decoded update simultaneously, so a round peaks at
+/// O(`clients_per_round` × params) — inherent for in-flight parallel
+/// work, and the cost of keeping one merge path for all executors.
+/// Negligible for FLoCoRA adapters (tens of kB each); for full-model
+/// baselines at large fan-out, budget accordingly (a streaming
+/// in-order merge is a ROADMAP follow-on).
+pub trait ClientExecutor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn execute(
+        &self,
+        ctx: &RoundContext<'_>,
+        clients: &[usize],
+    ) -> Result<Vec<ClientResult>>;
+}
+
+/// Clients run strictly one after another — the reference executor.
+pub struct SerialExecutor;
+
+impl ClientExecutor for SerialExecutor {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn execute(
+        &self,
+        ctx: &RoundContext<'_>,
+        clients: &[usize],
+    ) -> Result<Vec<ClientResult>> {
+        clients.iter().map(|&cid| run_client(ctx, cid)).collect()
+    }
+}
+
+/// Clients fan out across scoped worker threads pulling indices from a
+/// shared atomic queue; results land in per-index slots so the returned
+/// order is the sampling order regardless of which worker finished when.
+pub struct ParallelExecutor {
+    threads: usize,
+}
+
+impl ParallelExecutor {
+    /// `threads == 0` sizes the pool to the available cores.
+    pub fn new(threads: usize) -> ParallelExecutor {
+        ParallelExecutor { threads }
+    }
+
+    fn pool_size(&self, work: usize) -> usize {
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        // `auto` is always >= 1, so the pool never collapses to zero
+        // workers; it also never exceeds the work items available.
+        let requested = if self.threads == 0 { auto } else { self.threads };
+        requested.min(work.max(1))
+    }
+}
+
+impl ClientExecutor for ParallelExecutor {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn execute(
+        &self,
+        ctx: &RoundContext<'_>,
+        clients: &[usize],
+    ) -> Result<Vec<ClientResult>> {
+        let n = clients.len();
+        let workers = self.pool_size(n);
+        if workers <= 1 {
+            // One lane: skip thread setup, identical results by the
+            // determinism contract.
+            return SerialExecutor.execute(ctx, clients);
+        }
+
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<Result<ClientResult>>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let res = run_client(ctx, clients[i]);
+                    slots.lock().unwrap()[i] = Some(res);
+                });
+            }
+        });
+
+        // Worker panics propagate: `thread::scope` re-raises them at
+        // the join above, so reaching this point means every index was
+        // claimed and its slot written — `None` is impossible.
+        let slots = slots.into_inner().unwrap();
+        let mut out = Vec::with_capacity(n);
+        for slot in slots {
+            match slot {
+                Some(Ok(r)) => out.push(r),
+                Some(Err(e)) => return Err(e),
+                None => unreachable!(
+                    "scope joined all workers; every slot is filled"
+                ),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_labels() {
+        assert_eq!(ExecutorKind::parse("serial"), Some(ExecutorKind::Serial));
+        assert_eq!(
+            ExecutorKind::parse("parallel"),
+            Some(ExecutorKind::Parallel)
+        );
+        assert_eq!(ExecutorKind::parse("threads:4"), None);
+        assert_eq!(ExecutorKind::Serial.label(), "serial");
+        assert_eq!(ExecutorKind::Parallel.label(), "parallel");
+        assert_eq!(ExecutorKind::Serial.build(0).name(), "serial");
+        assert_eq!(ExecutorKind::Parallel.build(3).name(), "parallel");
+    }
+
+    #[test]
+    fn pool_size_clamps_to_work_and_floor() {
+        let auto = ParallelExecutor::new(0);
+        assert!(auto.pool_size(8) >= 1);
+        assert!(auto.pool_size(8) <= 8);
+        assert_eq!(ParallelExecutor::new(16).pool_size(4), 4);
+        assert_eq!(ParallelExecutor::new(2).pool_size(100), 2);
+        assert_eq!(ParallelExecutor::new(5).pool_size(0), 1);
+    }
+}

@@ -18,13 +18,21 @@
 //! method" claim, here enforced by the type system: [`server::Server`]
 //! only sees `&[f32]` + a [`crate::compression::Codec`].
 
+//! Within a round the protocol is embarrassingly parallel — clients
+//! only meet at step 4 — so per-client execution is pluggable
+//! ([`executor::ClientExecutor`]): the serial reference and the
+//! thread-pool executor produce bit-identical runs by construction.
+
 pub mod aggregator;
+pub mod executor;
 pub mod hetero;
 pub mod sampler;
 pub mod server;
 pub mod trainer;
 
 pub use aggregator::FedAvg;
+pub use executor::{ClientExecutor, ExecutorKind, ParallelExecutor,
+                   SerialExecutor};
 pub use sampler::UniformSampler;
 pub use server::{RunSummary, Simulation};
 pub use trainer::LocalTrainer;

@@ -15,7 +15,10 @@ impl UniformSampler {
     }
 
     /// Sample `k` distinct client ids for one round (sorted for
-    /// deterministic iteration order downstream).
+    /// deterministic iteration order downstream). Sampling runs on the
+    /// coordinator thread *before* the executor fans work out, so the
+    /// sampler's mutable stream never races — and the sorted order is
+    /// exactly the order the round engine merges results in.
     pub fn sample(&mut self, k: usize) -> Vec<usize> {
         let mut ids = self.rng.choose_k(self.num_clients, k);
         ids.sort_unstable();

@@ -7,12 +7,18 @@
 //! recorded in the [`CommLedger`]; the frozen base `W_initial` is
 //! distributed once at round 0 and never re-sent — exactly the FLoCoRA
 //! protocol (and, with a `full` variant + fp32 codec, exactly FedAvg).
+//!
+//! Per-client work is delegated to the configured
+//! [`ClientExecutor`](crate::coordinator::executor::ClientExecutor)
+//! (serial reference or thread-pool parallel); the server merges the
+//! results in sampling order, so the two executors are bit-identical.
 
 use std::time::Instant;
 
 use crate::compression::Codec;
 use crate::config::FlConfig;
 use crate::coordinator::aggregator::FedAvg;
+use crate::coordinator::executor::{ClientExecutor, RoundContext};
 use crate::coordinator::sampler::UniformSampler;
 use crate::coordinator::trainer::LocalTrainer;
 use crate::data::batcher::Tail;
@@ -20,30 +26,68 @@ use crate::data::{lda_partition, BatchIter, Federation, TestSet};
 use crate::error::Result;
 use crate::metrics::{Recorder, RoundRecord};
 use crate::runtime::{Engine, ModelSession};
-use crate::transport::{CommLedger, Direction};
-use crate::util::rng::Rng;
+use crate::transport::{CommLedger, Direction, NetworkModel};
 
 /// Aggregate results of one run.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
     pub final_acc: f64,
     pub tail_acc: f64,
+    /// Mean client train loss of the last round (NaN if every sampled
+    /// client dropped in that round).
+    pub final_train_loss: f64,
     pub total_bytes: u64,
     pub mean_up_msg_bytes: f64,
     pub per_client_tcc_bytes: f64,
     pub rounds: usize,
     pub wall_s: f64,
+    /// Simulated time-on-wire for the whole run if every round's
+    /// clients used the link one after another (sum of round trips).
+    pub sim_net_serial_s: f64,
+    /// Simulated time-on-wire with each round's clients in flight
+    /// concurrently — the server waits for the slowest straggler per
+    /// round (max, not sum).
+    pub sim_net_parallel_s: f64,
 }
 
 /// One federated-learning simulation.
+///
+/// ```no_run
+/// use flocora::config::FlConfig;
+/// use flocora::coordinator::Simulation;
+/// use flocora::coordinator::executor::ExecutorKind;
+/// use flocora::metrics::Recorder;
+/// use flocora::runtime::Engine;
+///
+/// # fn main() -> flocora::Result<()> {
+/// let engine = Engine::new("artifacts")?; // run `make artifacts` first
+/// let cfg = FlConfig {
+///     executor: ExecutorKind::Parallel, // bit-identical to Serial
+///     threads: 0,                       // 0 = one worker per core
+///     ..FlConfig::default()
+/// };
+/// let mut sim = Simulation::new(&engine, cfg)?;
+/// let mut rec = Recorder::new("quickstart");
+/// let summary = sim.run(&mut rec)?;
+/// println!(
+///     "acc {:.3} after {} rounds, {} bytes moved, wire time {:.1}s \
+///      (parallel clients) vs {:.1}s (serial clients)",
+///     summary.final_acc, summary.rounds, summary.total_bytes,
+///     summary.sim_net_parallel_s, summary.sim_net_serial_s,
+/// );
+/// # Ok(())
+/// # }
+/// ```
 pub struct Simulation {
     cfg: FlConfig,
     session: ModelSession,
     federation: Federation,
     test: TestSet,
     codec: Box<dyn Codec>,
+    executor: Box<dyn ClientExecutor>,
     sampler: UniformSampler,
-    rng: Rng,
+    /// Link profile behind the simulated round-time report.
+    net: NetworkModel,
     /// Global trainable vector (`Δ̄_t L` for LoRA variants; the whole
     /// model for `full`).
     pub global: Vec<f32>,
@@ -52,6 +96,9 @@ pub struct Simulation {
     pub ledger: CommLedger,
     lora_scale: f32,
     rounds_done: usize,
+    last_train_loss: f64,
+    sim_net_serial_s: f64,
+    sim_net_parallel_s: f64,
     /// Clients that failed mid-round (failure injection diagnostics).
     pub dropped_clients: u64,
 }
@@ -82,8 +129,9 @@ impl Simulation {
         let lora_scale = cfg.lora_scale(spec.rank);
         Ok(Simulation {
             sampler: UniformSampler::new(cfg.num_clients, cfg.seed),
-            rng: Rng::new(cfg.seed ^ 0xF1F1),
             codec: cfg.codec.build(),
+            executor: cfg.executor.build(cfg.threads),
+            net: NetworkModel::edge_lte(),
             cfg,
             session,
             federation,
@@ -93,6 +141,9 @@ impl Simulation {
             ledger: CommLedger::new(),
             lora_scale,
             rounds_done: 0,
+            last_train_loss: f64::NAN,
+            sim_net_serial_s: 0.0,
+            sim_net_parallel_s: 0.0,
             dropped_clients: 0,
         })
     }
@@ -103,6 +154,14 @@ impl Simulation {
 
     pub fn spec_rank(&self) -> usize {
         self.session.spec.rank
+    }
+
+    /// Swap the link profile used for the simulated round-time report
+    /// (default: [`NetworkModel::edge_lte`]). Call before the first
+    /// [`Simulation::round`]: the per-run accumulators don't segment by
+    /// profile, so switching mid-run mixes times from different links.
+    pub fn set_network(&mut self, net: NetworkModel) {
+        self.net = net;
     }
 
     /// Evaluate the current global model on the held-out test set.
@@ -132,7 +191,9 @@ impl Simulation {
     }
 
     /// Execute one communication round; returns the mean client train
-    /// loss/acc for the round.
+    /// loss/acc for the round (NaN/NaN if every sampled client failed —
+    /// the round is lost but the federation survives with its global
+    /// state unchanged).
     pub fn round(&mut self) -> Result<(f64, f64)> {
         self.ledger.begin_round();
         let segments = &self.session.spec.trainable_segments;
@@ -141,54 +202,67 @@ impl Simulation {
         //     downloads (and decodes) it.
         let down_msg = self.codec.encode(&self.global, segments)?;
         let client_ids = self.sampler.sample(self.cfg.clients_per_round);
-        let mut agg = FedAvg::new(self.global.len());
-        let mut loss_sum = 0.0;
-        let mut acc_sum = 0.0;
 
         // Per-round learning rate under the multiplicative schedule.
         let lr = self.cfg.lr
             * self.cfg.lr_decay.powi(self.rounds_done as i32);
-        let trainer = LocalTrainer {
-            local_epochs: self.cfg.local_epochs,
-            lr,
-            lora_scale: self.lora_scale,
+
+        // (2)+(3) per-client work — download-decode, local train,
+        // encode-upload — runs under the configured executor.
+        let results = {
+            let ctx = RoundContext {
+                session: &self.session,
+                codec: self.codec.as_ref(),
+                federation: &self.federation,
+                frozen: &self.frozen,
+                down_msg: &down_msg,
+                trainer: LocalTrainer {
+                    local_epochs: self.cfg.local_epochs,
+                    lr,
+                    lora_scale: self.lora_scale,
+                },
+                cfg: &self.cfg,
+                round: self.rounds_done,
+            };
+            self.executor.execute(&ctx, &client_ids)?
         };
 
+        // (4) deterministic merge in sampling (client-id) order: ledger
+        // entries, FedAvg contributions and dropout counts are byte-for-
+        // byte the same whichever executor produced the results.
+        let mut agg = FedAvg::new(self.global.len());
+        let mut loss_sum = 0.0;
+        let mut acc_sum = 0.0;
         let mut survivors = 0usize;
-        for &cid in &client_ids {
-            self.ledger.record(Direction::Down, down_msg.size_bytes());
-            let start = self.codec.decode(&down_msg, segments)?;
-
-            // Failure injection: the client downloaded the model but
-            // fails before uploading (crash/network loss). FedAvg
-            // proceeds with the survivors — the aggregation-agnostic
-            // loop needs no special casing.
-            if self.cfg.dropout > 0.0 && self.rng.f64() < self.cfg.dropout {
-                self.dropped_clients += 1;
-                continue;
+        let mut loads = Vec::with_capacity(client_ids.len());
+        // Consuming iteration: each client's decoded update buffer is
+        // freed as soon as it is folded into the accumulator rather
+        // than living until the whole merge ends.
+        for (i, res) in results.into_iter().enumerate() {
+            // The merge relies on positional order == sampling order;
+            // an executor violating the contract must fail loud — in
+            // release builds too — not silently mis-attribute FedAvg
+            // weights. One integer compare per client per round.
+            assert_eq!(res.cid, client_ids[i],
+                       "executor broke the result-order contract");
+            self.ledger.record(Direction::Down, res.down_bytes);
+            match res.update {
+                None => {
+                    self.dropped_clients += 1;
+                    loads.push((res.down_bytes, 0));
+                }
+                Some(up) => {
+                    survivors += 1;
+                    self.ledger.record(Direction::Up, up.up_bytes);
+                    loss_sum += up.mean_loss;
+                    acc_sum += up.mean_acc;
+                    agg.add(&up.params, up.weight)?;
+                    loads.push((res.down_bytes, up.up_bytes));
+                }
             }
-            survivors += 1;
-
-            // (2) local training on the client's shard.
-            let mut crng = self.rng.fork(cid as u64);
-            let outcome = trainer.run(
-                &self.session,
-                &self.federation.clients[cid],
-                &self.frozen,
-                start,
-                &mut crng,
-            )?;
-            loss_sum += outcome.mean_loss;
-            acc_sum += outcome.mean_acc;
-
-            // (3) upload: encode → count bytes → server decodes.
-            let up_msg = self.codec.encode(&outcome.params, segments)?;
-            self.ledger.record(Direction::Up, up_msg.size_bytes());
-            let received = self.codec.decode(&up_msg, segments)?;
-
-            // (4) FedAvg weighted accumulation (weight n_k).
-            agg.add(&received, outcome.samples as f64)?;
         }
+        self.sim_net_serial_s += self.net.round_time_serial(&loads);
+        self.sim_net_parallel_s += self.net.round_time_parallel(&loads);
 
         self.rounds_done += 1;
         if survivors == 0 {
@@ -204,10 +278,9 @@ impl Simulation {
     /// Run the full schedule, recording evaluated rounds.
     pub fn run(&mut self, recorder: &mut Recorder) -> Result<RunSummary> {
         let t0 = Instant::now();
-        let mut last_train_loss = f64::NAN;
         for r in 0..self.cfg.rounds {
             let (train_loss, _train_acc) = self.round()?;
-            last_train_loss = train_loss;
+            self.last_train_loss = train_loss;
             let is_last = r + 1 == self.cfg.rounds;
             if (r + 1) % self.cfg.eval_every == 0 || is_last {
                 let (test_loss, test_acc) = self.evaluate()?;
@@ -221,15 +294,17 @@ impl Simulation {
                 });
             }
         }
-        let _ = last_train_loss;
         Ok(RunSummary {
             final_acc: recorder.final_acc(),
             tail_acc: recorder.tail_acc(3),
+            final_train_loss: self.last_train_loss,
             total_bytes: self.ledger.total_bytes(),
             mean_up_msg_bytes: self.ledger.mean_up_msg(),
             per_client_tcc_bytes: self.ledger.per_client_tcc(self.cfg.rounds),
             rounds: self.cfg.rounds,
             wall_s: t0.elapsed().as_secs_f64(),
+            sim_net_serial_s: self.sim_net_serial_s,
+            sim_net_parallel_s: self.sim_net_parallel_s,
         })
     }
 }

@@ -25,6 +25,11 @@ pub struct LocalOutcome {
 }
 
 /// Runs local epochs for sampled clients.
+///
+/// Plain-data and `Copy`: one instance is built per round (it carries
+/// the round's decayed learning rate) and shared read-only by every
+/// client-executor thread via `executor::RoundContext`.
+#[derive(Debug, Clone, Copy)]
 pub struct LocalTrainer {
     pub local_epochs: usize,
     pub lr: f32,

@@ -5,11 +5,13 @@
 //! 2024) as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the federated-learning coordinator:
-//!   round scheduling, client sampling, FedAvg aggregation over flat
-//!   parameter vectors, wire codecs (fp32 / affine-quantized 8-4-2 bit /
-//!   magnitude-pruning sparse / ZeroFL sparse), total-communication-cost
-//!   accounting, LDA data partitioning, the synthetic CIFAR-S dataset,
-//!   metrics, config and CLI.
+//!   round scheduling with pluggable client executors (serial reference
+//!   or bit-identical thread-pool fan-out, [`coordinator::executor`]),
+//!   client sampling, FedAvg aggregation over flat parameter vectors,
+//!   wire codecs (fp32 / affine-quantized 8-4-2 bit / magnitude-pruning
+//!   sparse / ZeroFL sparse), total-communication-cost accounting, LDA
+//!   data partitioning, the synthetic CIFAR-S dataset, metrics, config
+//!   and CLI.
 //! * **Layer 2 (python, build time)** — JAX ResNet-8/18 forward/backward
 //!   with LoRA adapters, lowered once to HLO text (`make artifacts`).
 //! * **Layer 1 (python, build time)** — Pallas kernels for the fused
@@ -21,7 +23,9 @@
 //! appears on the request path.
 //!
 //! Entry points: [`coordinator::Simulation`] for programmatic use (see
-//! `examples/quickstart.rs`), the `flocora` binary for the CLI.
+//! `examples/quickstart.rs`), the `flocora` binary for the CLI. Crate
+//! how-to lives in `rust/README.md`; the system map in
+//! `ARCHITECTURE.md` at the repo root.
 
 pub mod cli;
 pub mod compression;

@@ -54,7 +54,8 @@ fn print_usage() {
          SUBCOMMANDS:\n\
          \x20 train         run a federated simulation\n\
          \x20               [--config FILE] [--csv OUT] [--tag T] [--rounds N]\n\
-         \x20               [--codec fp32|q8|q4|q2|topk:K|zerofl:SP:MR] ...\n\
+         \x20               [--codec fp32|q8|q4|q2|topk:K|zerofl:SP:MR]\n\
+         \x20               [--executor serial|parallel] [--threads N] ...\n\
          \x20 tables        print analytic Table I/III/IV vs the paper\n\
          \x20 inspect       list artifact manifest\n\
          \x20 quant-parity  rust codec vs pallas HLO oracle\n\
@@ -89,10 +90,12 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     let engine = Engine::new(artifacts)?;
     println!(
         "run: tag={} codec={} clients={} ({}/round) rounds={} epochs={} \
-         lr={} alpha={} lda={} seed={}",
+         lr={} alpha={} lda={} seed={} executor={} threads={}",
         cfg.tag, cfg.codec.label(), cfg.num_clients, cfg.clients_per_round,
         cfg.rounds, cfg.local_epochs, cfg.lr, cfg.lora_alpha, cfg.lda_alpha,
-        cfg.seed
+        cfg.seed, cfg.executor.label(),
+        if cfg.threads == 0 { "auto".to_string() }
+        else { cfg.threads.to_string() }
     );
     let mut sim = Simulation::new(&engine, cfg)?;
     let mut rec = Recorder::new("train");
@@ -111,6 +114,11 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         summary.final_acc, summary.tail_acc,
         summary.mean_up_msg_bytes / 1e3,
         summary.per_client_tcc_bytes / 1e6, summary.wall_s
+    );
+    println!(
+        "simulated wire time (edge LTE): {:.1}s with concurrent clients \
+         (slowest straggler/round) vs {:.1}s serial",
+        summary.sim_net_parallel_s, summary.sim_net_serial_s
     );
     if let Some(path) = csv {
         rec.write_csv(&path)?;

@@ -9,27 +9,49 @@
 //! artifact per process); [`ModelSession`] bundles the train/eval/init
 //! executables of one spec behind a typed, flat-`Vec<f32>` API.
 //!
-//! PJRT handles are not `Send` in this crate's wrapper, so all execution
-//! happens on the thread that created the [`Engine`] — the coordinator
-//! is built around that (DESIGN.md §7: L3 parallelism lives in codecs
-//! and data handling, not in PJRT dispatch).
+//! Both [`Engine`] and [`ModelSession`] are `Send + Sync`: the parallel
+//! round engine (`coordinator::executor`) fans client work out across a
+//! thread pool, and every worker drives the *same* compiled executables
+//! concurrently. Thread-safety is **structural, not asserted**: there
+//! is deliberately no `unsafe impl` here — these types are `Send +
+//! Sync` exactly when the linked `xla` crate's handles are (true for
+//! the vendored stub's plain-data types). Swapping in a wrapper whose
+//! PJRT handles are not thread-safe (e.g. one with internal `Rc`
+//! refcounts) makes the parallel executor **fail to compile** instead
+//! of racing — write an audited, internally-locked wrapper in that
+//! case (see the note in `rust/Cargo.toml`). The only shared mutable
+//! state on our side is the compile cache, which sits behind a
+//! `Mutex`.
 
 pub mod manifest;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 pub use manifest::{Manifest, QuantOracle, SpecEntry};
+
+/// A compiled PJRT executable handle, shareable across executor
+/// threads. `Send + Sync` follows automatically from the inner type —
+/// see the module docs for why that is a deliberate compile-time gate.
+#[derive(Clone)]
+pub struct Executable(Arc<xla::PjRtLoadedExecutable>);
+
+impl std::ops::Deref for Executable {
+    type Target = xla::PjRtLoadedExecutable;
+
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
 
 /// PJRT client + compiled-executable cache over an artifact directory.
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Executable>>,
 }
 
 impl Engine {
@@ -39,7 +61,7 @@ impl Engine {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Engine { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -51,16 +73,18 @@ impl Engine {
     }
 
     /// Compile (or fetch from cache) one HLO-text artifact.
-    pub fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(file) {
+    pub fn load(&self, file: &str) -> Result<Executable> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
             return Ok(exe.clone());
         }
+        // Compile outside the lock: XLA compilation is slow and two
+        // threads racing on the same artifact just deduplicate below.
         let path = self.dir.join(file);
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
-        Ok(exe)
+        let exe = Executable(Arc::new(self.client.compile(&comp)?));
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(file.to_string()).or_insert(exe).clone())
     }
 
     /// Open a [`ModelSession`] for a manifest tag
@@ -144,11 +168,14 @@ pub struct StepStats {
 }
 
 /// The train/eval/init executables of one lowered spec.
+///
+/// `Send + Sync` (via [`Executable`]): the parallel round engine shares
+/// one session across all client-executor threads.
 pub struct ModelSession {
     pub spec: SpecEntry,
-    train: Rc<xla::PjRtLoadedExecutable>,
-    eval: Rc<xla::PjRtLoadedExecutable>,
-    init: Rc<xla::PjRtLoadedExecutable>,
+    train: Executable,
+    eval: Executable,
+    init: Executable,
 }
 
 impl ModelSession {

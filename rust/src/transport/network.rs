@@ -4,8 +4,23 @@
 //! deployment-oriented framework should translate message sizes into
 //! time-on-wire for capacity planning. This model is used by the
 //! `examples/` drivers to report estimated round times on edge-like
-//! links (e.g. LTE: 10 Mbit/s up, 30 Mbit/s down, 40 ms RTT).
+//! links (e.g. LTE: 10 Mbit/s up, 30 Mbit/s down, 40 ms RTT), and by
+//! [`crate::coordinator::Simulation`] to report a round's simulated
+//! duration under serial vs concurrent clients.
 
+/// Bandwidth/latency profile of one (symmetric across clients) link.
+///
+/// ```
+/// use flocora::transport::NetworkModel;
+///
+/// let net = NetworkModel::edge_lte();
+/// // Three clients, each pulling 1 MB down and pushing 1 MB up.
+/// let loads = [(1_000_000, 1_000_000); 3];
+/// let serial = net.round_time_serial(&loads);     // sum of round trips
+/// let parallel = net.round_time_parallel(&loads); // slowest straggler
+/// assert!((serial - 3.0 * parallel).abs() < 1e-9); // identical clients
+/// assert!(parallel < serial);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct NetworkModel {
     /// Uplink bits/second.
@@ -40,6 +55,37 @@ impl NetworkModel {
     pub fn round_trip(&self, down_bytes: usize, up_bytes: usize) -> f64 {
         self.download_time(down_bytes) + self.upload_time(up_bytes)
     }
+
+    /// One client's time on the wire. `up_bytes == 0` means the client
+    /// never uploaded (it dropped mid-round), so no uplink latency is
+    /// charged.
+    fn client_time(&self, down_bytes: usize, up_bytes: usize) -> f64 {
+        let down = self.download_time(down_bytes);
+        if up_bytes > 0 {
+            down + self.upload_time(up_bytes)
+        } else {
+            down
+        }
+    }
+
+    /// Simulated duration of one round if clients use the link strictly
+    /// one after another: the sum of per-client round trips. `loads` is
+    /// one `(down_bytes, up_bytes)` pair per sampled client (`up_bytes
+    /// == 0` for clients that dropped before uploading).
+    pub fn round_time_serial(&self, loads: &[(usize, usize)]) -> f64 {
+        loads.iter().map(|&(d, u)| self.client_time(d, u)).sum()
+    }
+
+    /// Simulated duration of one round with every client in flight
+    /// concurrently: the server waits for the slowest straggler, so the
+    /// round costs the *max* per-client time, not the sum. This is the
+    /// regime the parallel client executor models.
+    pub fn round_time_parallel(&self, loads: &[(usize, usize)]) -> f64 {
+        loads
+            .iter()
+            .map(|&(d, u)| self.client_time(d, u))
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -54,6 +100,30 @@ mod tests {
         assert!(t2 > t1);
         // 1 MB at 10 Mbit/s = 0.8 s + latency.
         assert!((t1 - (0.02 + 0.8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_round_is_max_and_serial_is_sum() {
+        let net = NetworkModel::wifi();
+        // Two stragglers of different sizes + one dropped client
+        // (download only, no uplink latency charged).
+        let loads = [(1_000_000, 2_000_000), (1_000_000, 500_000),
+                     (1_000_000, 0)];
+        let serial = net.round_time_serial(&loads);
+        let parallel = net.round_time_parallel(&loads);
+        let slowest = net.round_trip(1_000_000, 2_000_000);
+        assert!((parallel - slowest).abs() < 1e-12, "{parallel} vs {slowest}");
+        assert!(serial > parallel);
+        let dropped = net.download_time(1_000_000);
+        let survivor = net.round_trip(1_000_000, 500_000);
+        assert!((serial - (slowest + survivor + dropped)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_round_costs_nothing() {
+        let net = NetworkModel::edge_lte();
+        assert_eq!(net.round_time_serial(&[]), 0.0);
+        assert_eq!(net.round_time_parallel(&[]), 0.0);
     }
 
     #[test]

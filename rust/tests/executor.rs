@@ -1,0 +1,151 @@
+//! Executor-parity tests: the serial and parallel round engines must be
+//! observationally identical — bit-for-bit — for any fixed seed. This is
+//! the determinism contract of `coordinator::executor` (per-client RNG
+//! from `(seed, round, cid)`, results merged in sampling order).
+//!
+//! Requires `make artifacts`, like tests/integration.rs.
+
+use flocora::config::FlConfig;
+use flocora::coordinator::{ExecutorKind, Simulation};
+use flocora::metrics::Recorder;
+use flocora::runtime::Engine;
+
+fn engine() -> std::rc::Rc<Engine> {
+    thread_local! {
+        static ENGINE: std::rc::Rc<Engine> = std::rc::Rc::new(
+            Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+                .expect("run `make artifacts` first"));
+    }
+    ENGINE.with(|e| e.clone())
+}
+
+fn base_cfg() -> FlConfig {
+    FlConfig {
+        tag: "micro8_lora_fc_r4".into(),
+        num_clients: 8,
+        clients_per_round: 4,
+        rounds: 3,
+        local_epochs: 1,
+        samples_per_client: 16,
+        test_samples: 40,
+        seed: 21,
+        ..FlConfig::default()
+    }
+}
+
+/// Full observable state of one finished run.
+struct Observed {
+    global: Vec<f32>,
+    final_acc: f64,
+    final_train_loss: f64,
+    total_bytes: u64,
+    up_bytes: u64,
+    down_bytes: u64,
+    per_round: Vec<u64>,
+    dropped: u64,
+    sim_net_parallel_s: f64,
+}
+
+fn run(cfg: FlConfig) -> Observed {
+    let e = engine();
+    let mut sim = Simulation::new(&e, cfg).unwrap();
+    let mut rec = Recorder::new("exec");
+    let summary = sim.run(&mut rec).unwrap();
+    Observed {
+        global: sim.global.clone(),
+        final_acc: summary.final_acc,
+        final_train_loss: summary.final_train_loss,
+        total_bytes: summary.total_bytes,
+        up_bytes: sim.ledger.up_bytes,
+        down_bytes: sim.ledger.down_bytes,
+        per_round: sim.ledger.per_round.clone(),
+        dropped: sim.dropped_clients,
+        sim_net_parallel_s: summary.sim_net_parallel_s,
+    }
+}
+
+fn with_executor(mut cfg: FlConfig, kind: ExecutorKind, threads: usize)
+                 -> FlConfig {
+    cfg.executor = kind;
+    cfg.threads = threads;
+    cfg
+}
+
+fn assert_identical(a: &Observed, b: &Observed, what: &str) {
+    // Bit-identity everywhere: f32 params compared exactly, f64 metrics
+    // compared exactly. Any executor-order dependence shows up here.
+    assert_eq!(a.global, b.global, "{what}: global vector diverged");
+    assert_eq!(a.final_acc, b.final_acc, "{what}: final_acc");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: total_bytes");
+    assert_eq!(a.up_bytes, b.up_bytes, "{what}: up_bytes");
+    assert_eq!(a.down_bytes, b.down_bytes, "{what}: down_bytes");
+    assert_eq!(a.per_round, b.per_round, "{what}: per-round ledger");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropout count");
+    assert_eq!(a.sim_net_parallel_s, b.sim_net_parallel_s,
+               "{what}: simulated net time");
+    // NaN-tolerant equality for the train loss (a fully-dropped final
+    // round reports NaN under both executors).
+    assert!(
+        a.final_train_loss == b.final_train_loss
+            || (a.final_train_loss.is_nan() && b.final_train_loss.is_nan()),
+        "{what}: final_train_loss {} vs {}",
+        a.final_train_loss,
+        b.final_train_loss
+    );
+}
+
+#[test]
+fn parallel_is_bit_identical_to_serial() {
+    let serial = run(with_executor(base_cfg(), ExecutorKind::Serial, 0));
+    let parallel = run(with_executor(base_cfg(), ExecutorKind::Parallel, 0));
+    assert_identical(&serial, &parallel, "clean run");
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let one = run(with_executor(base_cfg(), ExecutorKind::Parallel, 1));
+    let two = run(with_executor(base_cfg(), ExecutorKind::Parallel, 2));
+    let many = run(with_executor(base_cfg(), ExecutorKind::Parallel, 7));
+    assert_identical(&one, &two, "1 vs 2 threads");
+    assert_identical(&one, &many, "1 vs 7 threads");
+}
+
+#[test]
+fn dropout_counting_matches_across_executors() {
+    let mut cfg = base_cfg();
+    cfg.dropout = 0.5;
+    cfg.rounds = 5;
+    let serial = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
+    let parallel = run(with_executor(cfg, ExecutorKind::Parallel, 0));
+    assert!(serial.dropped > 0, "injection never fired at dropout=0.5");
+    assert_identical(&serial, &parallel, "dropout run");
+}
+
+#[test]
+fn zero_survivor_rounds_behave_identically() {
+    // Dropout so high that whole rounds are lost with near-certainty:
+    // 20 Bernoulli(0.97) survival failures per run. Both executors must
+    // count the same drops, move the same bytes (downloads still
+    // happen), and leave the global vector identical.
+    let mut cfg = base_cfg();
+    cfg.dropout = 0.97;
+    cfg.rounds = 5;
+    let serial = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
+    let parallel = run(with_executor(cfg, ExecutorKind::Parallel, 0));
+    assert_identical(&serial, &parallel, "zero-survivor run");
+    // With these odds at least one round lost every client; the run
+    // still finishes and the ledger still has one bucket per round.
+    assert_eq!(serial.per_round.len(), 5);
+    assert!(serial.dropped >= 15, "only {} drops at 0.97", serial.dropped);
+}
+
+#[test]
+fn executors_identical_under_quantized_codec() {
+    // The codec round trip happens inside the per-client work; make
+    // sure a lossy wire format stays order-independent too.
+    let mut cfg = base_cfg();
+    cfg.codec = flocora::compression::CodecKind::Affine(8);
+    let serial = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
+    let parallel = run(with_executor(cfg, ExecutorKind::Parallel, 3));
+    assert_identical(&serial, &parallel, "q8 run");
+}

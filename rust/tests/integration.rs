@@ -13,8 +13,9 @@ use flocora::util::rng::Rng;
 
 fn engine() -> std::rc::Rc<Engine> {
     // One Engine per test thread: executables compile once per artifact
-    // per thread instead of once per test (Engine is not Sync — PJRT
-    // handles + RefCell cache — so a process-global is not an option).
+    // per thread instead of once per test. Engine is Sync these days (a
+    // process-global would work), but a per-thread instance keeps the
+    // tests free of cross-thread contention on the compile-cache lock.
     thread_local! {
         static ENGINE: std::rc::Rc<Engine> = std::rc::Rc::new(
             Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
