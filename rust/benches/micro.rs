@@ -142,5 +142,14 @@ fn main() {
             }
         }
     }
+    // The streaming merge at a tight out-of-order window: same bits,
+    // bounded buffering — the row shows what the memory cap costs.
+    let mut sim = Simulation::new(
+        &engine,
+        FlConfig { window: 2, ..mk(ExecutorKind::Parallel) },
+    ).expect("sim");
+    let st = bench("fl round, 8 clients, window=2", 1, iters,
+                   || { sim.round().unwrap(); });
+    println!("{}   ({:.2}x vs serial)", st.row(), serial_mean / st.mean_s);
     println!("\nmicro bench OK");
 }

@@ -8,92 +8,52 @@
 //! Weak clients also *upload less*: the r=2 message is ~4x smaller than
 //! the r=8 one, so heterogeneity is itself a communication knob.
 //!
+//! Since the round engine grew a [`ClientPlan`] hook, this whole
+//! scenario is a preset (`hetero_micro`) driven by the standard
+//! `Simulation::run` loop — per-client tiers, per-tier codecs, dropout,
+//! executors and the streaming merge all compose with it. (It used to
+//! be a hand-rolled 70-line round loop; `tests/executor.rs` pins the
+//! engine path against that reference semantics.)
+//!
 //! ```bash
 //! cargo run --release --example hetero_ranks [-- --rounds 40]
 //! ```
 
 use flocora::cli::Args;
-use flocora::coordinator::aggregator::FedAvg;
-use flocora::coordinator::hetero::project_ranks;
-use flocora::coordinator::LocalTrainer;
-use flocora::data::batcher::Tail;
-use flocora::data::{lda_partition, BatchIter, TestSet};
+use flocora::config::presets;
+use flocora::coordinator::Simulation;
+use flocora::metrics::Recorder;
 use flocora::runtime::Engine;
-use flocora::util::rng::Rng;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::parse(std::env::args().skip(1))?;
-    let rounds = args.usize_or("rounds", 40)?;
     let engine = Engine::new("artifacts")?;
 
-    // Server rank 8; clients alternate between rank tiers (device
-    // classes). All sessions share the same frozen base seed.
-    let tiers = ["micro8_lora_fc_r2", "micro8_lora_fc_r4",
-                 "micro8_lora_fc_r8"];
-    let sessions: Vec<_> = tiers
-        .iter()
-        .map(|t| engine.session(t))
-        .collect::<Result<_, _>>()?;
-    let server = engine.session("micro8_lora_fc_r8")?;
-    let seed = 42u64;
-    let (mut global, frozen) = server.init(seed)?;
+    // Server rank 8; clients round-robin across r2/r4/r8 device
+    // classes. All tiers share the same frozen base.
+    let mut cfg = presets::hetero_micro();
+    cfg.rounds = args.usize_or("rounds", 40)?;
 
-    let num_clients = 12;
-    let fed = lda_partition(num_clients, 64, 10, server.spec.image_size,
-                            0.5, seed);
-    let test = TestSet::generate(240, server.spec.image_size, 10,
-                                 seed.wrapping_add(0x7E57));
-    let mut rng = Rng::new(seed ^ 0xF1F1);
-    let alpha = 64.0f32; // fixed alpha; scale = alpha / r_client per tier
+    let mut sim = Simulation::new(&engine, cfg)?;
+    let mut rec = Recorder::new("hetero_ranks");
+    let summary = sim.run(&mut rec)?;
 
-    let mut tier_bytes = vec![0u64; tiers.len()];
-    for round in 0..rounds {
-        let mut agg = FedAvg::new(global.len());
-        for cid in 0..4usize {
-            let client = (round * 4 + cid) % num_clients;
-            let tier = client % tiers.len();
-            let sess = &sessions[tier];
-            // Down-project the server state to the client's rank.
-            let start = project_ranks(&global,
-                                      &server.spec.trainable_segments,
-                                      &sess.spec.trainable_segments)?;
-            tier_bytes[tier] += (start.len() * 4) as u64;
-            let trainer = LocalTrainer {
-                local_epochs: 2,
-                lr: 0.02,
-                lora_scale: alpha / sess.spec.rank as f32,
-            };
-            let mut crng = rng.fork((round * 100 + client) as u64);
-            let out = trainer
-                .run(sess, &fed.clients[client], &frozen, start, &mut crng)?;
-            tier_bytes[tier] += (out.params.len() * 4) as u64;
-            // Up-project back into the server's rank space.
-            let up = project_ranks(&out.params,
-                                   &sess.spec.trainable_segments,
-                                   &server.spec.trainable_segments)?;
-            agg.add(&up, out.samples as f64)?;
-        }
-        global = agg.finish()?;
-
-        if (round + 1) % 8 == 0 || round + 1 == rounds {
-            let mut correct = 0.0;
-            for batch in BatchIter::new(&test.images, &test.labels,
-                                        server.spec.image_size,
-                                        server.spec.batch_size, None,
-                                        Tail::PadZero) {
-                let (_, c) = server
-                    .eval_step(&global, &frozen, &batch,
-                               alpha / server.spec.rank as f32)?;
-                correct += c;
-            }
-            println!("round {:>3}: acc {:.3} (server rank 8; clients r2/r4/r8)",
-                     round + 1, correct / test.n as f64);
-        }
+    for r in &rec.rounds {
+        println!(
+            "round {:>3}: acc {:.3} (server rank 8; clients r2/r4/r8)",
+            r.round, r.test_acc
+        );
     }
-    for (tier, tag) in tiers.iter().enumerate() {
-        println!("{tag}: {:.1} kB total traffic",
-                 tier_bytes[tier] as f64 / 1e3);
+    let plan = sim.plan().expect("hetero preset builds a plan");
+    for (tier, bytes) in plan.tiers().iter().zip(sim.tier_bytes()) {
+        println!("tier r{}: {:.1} kB total traffic", tier.rank,
+                 *bytes as f64 / 1e3);
     }
+    println!(
+        "final acc {:.3} after {} rounds, {:.1} kB moved in total",
+        summary.final_acc, summary.rounds,
+        summary.total_bytes as f64 / 1e3
+    );
     println!("heterogeneous ranks converge in one federation — the \
               projection keeps every tier's update exact on shared slots.");
     Ok(())

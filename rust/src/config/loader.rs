@@ -30,11 +30,17 @@ pub fn apply_str(cfg: &mut FlConfig, text: &str) -> Result<()> {
     Ok(())
 }
 
+/// Apply a config file on top of an existing config (preset or
+/// defaults); the caller validates once every override is in.
+pub fn apply_file(cfg: &mut FlConfig, path: impl AsRef<Path>) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    apply_str(cfg, &text)
+}
+
 /// Load a config file on top of defaults.
 pub fn load(path: impl AsRef<Path>) -> Result<FlConfig> {
-    let text = std::fs::read_to_string(path)?;
     let mut cfg = FlConfig::default();
-    apply_str(&mut cfg, &text)?;
+    apply_file(&mut cfg, path)?;
     cfg.validate()?;
     Ok(cfg)
 }

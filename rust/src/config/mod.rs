@@ -9,6 +9,7 @@ pub mod presets;
 use crate::compression::CodecKind;
 use crate::coordinator::executor::ExecutorKind;
 use crate::error::{Error, Result};
+use crate::transport::{NetworkKind, Sharing};
 
 /// Full description of one FL run.
 #[derive(Debug, Clone)]
@@ -47,6 +48,26 @@ pub struct FlConfig {
     /// Worker threads for the parallel executor (0 = one per available
     /// core). Ignored by the serial executor.
     pub threads: usize,
+    /// Out-of-order result window of the streaming round merge (0 =
+    /// twice the worker count). Bounds how many decoded client updates
+    /// can be buffered at once; any value is bit-identical. Ignored by
+    /// the serial executor.
+    pub window: usize,
+    /// Link profile behind the simulated time-on-wire report
+    /// (`edge_lte | wifi`).
+    pub network: NetworkKind,
+    /// Link-sharing regime for the concurrent-clients wire time
+    /// (`dedicated | shared`).
+    pub net_sharing: Sharing,
+    /// Rank tiers for a heterogeneous federation, e.g. `[2, 4, 8]`
+    /// (clients are assigned round-robin by id). Empty = homogeneous.
+    /// The server tag must be a LoRA variant; each tier needs the
+    /// matching `_r{rank}` artifact and `rank <= server rank` (the
+    /// up-projection pads exactly; the reverse would truncate).
+    pub hetero_ranks: Vec<usize>,
+    /// Per-tier wire codecs, parallel to `hetero_ranks`. Empty = every
+    /// tier uses `codec`.
+    pub hetero_codecs: Vec<CodecKind>,
 }
 
 impl Default for FlConfig {
@@ -69,8 +90,34 @@ impl Default for FlConfig {
             lr_decay: 1.0,
             executor: ExecutorKind::Serial,
             threads: 0,
+            window: 0,
+            network: NetworkKind::EdgeLte,
+            net_sharing: Sharing::Dedicated,
+            hetero_ranks: Vec::new(),
+            hetero_codecs: Vec::new(),
         }
     }
+}
+
+/// Parse a comma-separated list (`"2,4,8"`); empty or `none` clears.
+fn parse_list<T>(
+    key: &str,
+    value: &str,
+    parse_one: impl Fn(&str) -> Option<T>,
+) -> Result<Vec<T>> {
+    let value = value.trim();
+    if value.is_empty() || value == "none" {
+        return Ok(Vec::new());
+    }
+    value
+        .split(',')
+        .map(|part| {
+            let part = part.trim();
+            parse_one(part).ok_or_else(|| {
+                Error::parse(format!("bad entry `{part}` in `{key}`"))
+            })
+        })
+        .collect()
 }
 
 impl FlConfig {
@@ -108,6 +155,18 @@ impl FlConfig {
         if !(self.lr_decay > 0.0 && self.lr_decay <= 1.0) {
             return Err(Error::invalid("lr_decay must be in (0, 1]"));
         }
+        if self.hetero_ranks.iter().any(|&r| r == 0) {
+            return Err(Error::invalid("hetero_ranks entries must be > 0"));
+        }
+        if !self.hetero_codecs.is_empty()
+            && self.hetero_codecs.len() != self.hetero_ranks.len()
+        {
+            return Err(Error::invalid(format!(
+                "hetero_codecs has {} entries for {} rank tiers",
+                self.hetero_codecs.len(),
+                self.hetero_ranks.len()
+            )));
+        }
         Ok(())
     }
 
@@ -134,6 +193,30 @@ impl FlConfig {
             "dropout" => self.dropout = p(key, value)?,
             "lr_decay" => self.lr_decay = p(key, value)?,
             "threads" => self.threads = p(key, value)?,
+            "window" => self.window = p(key, value)?,
+            "network" => {
+                self.network = NetworkKind::parse(value).ok_or_else(|| {
+                    Error::parse(format!(
+                        "unknown network `{value}` (edge_lte|wifi)"
+                    ))
+                })?
+            }
+            "net_sharing" => {
+                self.net_sharing = Sharing::parse(value).ok_or_else(|| {
+                    Error::parse(format!(
+                        "unknown net_sharing `{value}` (dedicated|shared)"
+                    ))
+                })?
+            }
+            "hetero_ranks" => {
+                self.hetero_ranks = parse_list(key, value, |v| {
+                    v.parse::<usize>().ok()
+                })?
+            }
+            "hetero_codecs" => {
+                self.hetero_codecs =
+                    parse_list(key, value, CodecKind::parse)?
+            }
             "executor" => {
                 self.executor = ExecutorKind::parse(value).ok_or_else(|| {
                     Error::parse(format!(
@@ -187,6 +270,50 @@ mod tests {
         c.validate().unwrap();
         assert!(c.set("executor", "turbo").is_err());
         assert!(c.set("threads", "-1").is_err());
+    }
+
+    #[test]
+    fn network_and_window_knobs_parse() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.network, NetworkKind::EdgeLte);
+        assert_eq!(c.net_sharing, Sharing::Dedicated);
+        assert_eq!(c.window, 0);
+        c.set("network", "wifi").unwrap();
+        c.set("net_sharing", "shared").unwrap();
+        c.set("window", "3").unwrap();
+        assert_eq!(c.network, NetworkKind::Wifi);
+        assert_eq!(c.net_sharing, Sharing::Shared);
+        assert_eq!(c.window, 3);
+        c.validate().unwrap();
+        assert!(c.set("network", "5g").is_err());
+        assert!(c.set("net_sharing", "split").is_err());
+    }
+
+    #[test]
+    fn hetero_knobs_parse_and_validate() {
+        let mut c = FlConfig::default();
+        assert!(c.hetero_ranks.is_empty());
+        c.set("hetero_ranks", "2, 4,8").unwrap();
+        assert_eq!(c.hetero_ranks, vec![2, 4, 8]);
+        c.validate().unwrap();
+        c.set("hetero_codecs", "q4,q8,fp32").unwrap();
+        assert_eq!(
+            c.hetero_codecs,
+            vec![CodecKind::Affine(4), CodecKind::Affine(8), CodecKind::Fp32]
+        );
+        c.validate().unwrap();
+        // Tier/codec arity mismatch is a config error.
+        c.set("hetero_ranks", "2,4").unwrap();
+        assert!(c.validate().is_err());
+        // `none` clears.
+        c.set("hetero_codecs", "none").unwrap();
+        c.validate().unwrap();
+        c.set("hetero_ranks", "none").unwrap();
+        assert!(c.hetero_ranks.is_empty());
+        assert!(c.set("hetero_ranks", "2,x").is_err());
+        // A zero rank survives parsing but fails validation.
+        c.set("hetero_ranks", "0,4").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub fn paper_resnet8(rank: usize, codec: CodecKind) -> FlConfig {
         // engine exists for; results are bit-identical to serial.
         executor: ExecutorKind::Parallel,
         threads: 0,
+        ..FlConfig::default()
     }
 }
 
@@ -78,6 +79,7 @@ pub fn scaled_micro(variant_tag: &str, rank: usize, codec: CodecKind) -> FlConfi
         // long and the benches that use them time the executor itself.
         executor: ExecutorKind::Serial,
         threads: 0,
+        ..FlConfig::default()
     }
 }
 
@@ -91,6 +93,45 @@ pub fn scaled_tiny(variant_tag: &str, rank: usize, codec: CodecKind) -> FlConfig
     cfg.samples_per_client = 64;
     cfg.test_samples = 200;
     cfg
+}
+
+/// Heterogeneous-rank federation on micro8: the server holds r=8
+/// adapters while clients split round-robin across r2/r4/r8 device
+/// classes — the regime of the paper's §V future-work sketch (and of
+/// the heterogeneous-client federated-LoRA line in PAPERS.md). The
+/// r=2 tier's messages are ~4x smaller than the r=8 tier's, so
+/// heterogeneity doubles as a communication knob.
+pub fn hetero_micro() -> FlConfig {
+    FlConfig {
+        tag: "micro8_lora_fc_r8".into(),
+        num_clients: 12,
+        clients_per_round: 4,
+        rounds: 40,
+        local_epochs: 2,
+        lr: 0.02,
+        lora_alpha: 64.0, // fixed alpha; per-tier scale = alpha / r_tier
+        samples_per_client: 64,
+        test_samples: 240,
+        eval_every: 8,
+        hetero_ranks: vec![2, 4, 8],
+        ..FlConfig::default()
+    }
+}
+
+/// Look a preset up by CLI name (`flocora train --preset NAME`).
+pub fn by_name(name: &str) -> Option<FlConfig> {
+    match name {
+        "paper_resnet8" => Some(paper_resnet8(32, CodecKind::Affine(8))),
+        "paper_resnet18" => Some(paper_resnet18(16, CodecKind::Affine(8))),
+        "scaled_micro" => {
+            Some(scaled_micro("micro8_lora_fc_r4", 4, CodecKind::Fp32))
+        }
+        "scaled_tiny" => {
+            Some(scaled_tiny("tiny8_lora_fc_r8", 8, CodecKind::Fp32))
+        }
+        "hetero_micro" => Some(hetero_micro()),
+        _ => None,
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +166,27 @@ mod tests {
         scaled_tiny("tiny8_lora_fc_r8", 8, CodecKind::Affine(4))
             .validate()
             .unwrap();
+    }
+
+    #[test]
+    fn hetero_preset_valid_and_tiered() {
+        let cfg = hetero_micro();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.hetero_ranks, vec![2, 4, 8]);
+        assert_eq!(cfg.tag, "micro8_lora_fc_r8");
+        // 12 clients round-robin over 3 tiers => 4 per device class.
+        assert_eq!(cfg.num_clients % cfg.hetero_ranks.len(), 0);
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in ["paper_resnet8", "paper_resnet18", "scaled_micro",
+                     "scaled_tiny", "hetero_micro"] {
+            let cfg = by_name(name).unwrap_or_else(|| {
+                panic!("preset {name} missing")
+            });
+            cfg.validate().unwrap();
+        }
+        assert!(by_name("nope").is_none());
     }
 }

@@ -1,32 +1,51 @@
-//! Pluggable per-round client execution — the parallel round engine.
+//! Pluggable per-round client execution — the streaming round engine.
 //!
 //! The FLoCoRA protocol is embarrassingly parallel within a round: each
-//! sampled client decodes the (shared) download message, trains on its
-//! own shard, and encodes its upload; clients only meet again at FedAvg
-//! aggregation. [`ClientExecutor`] captures exactly that per-client unit
-//! of work, with two implementations:
+//! sampled client decodes its download message, trains on its own
+//! shard, and encodes its upload; clients only meet again at FedAvg
+//! aggregation. [`ClientExecutor`] captures exactly that per-client
+//! unit of work, with two implementations:
 //!
 //! * [`SerialExecutor`] — clients run one after another on the calling
-//!   thread. The reference implementation.
+//!   thread, each result pushed into the sink immediately. The
+//!   reference implementation.
 //! * [`ParallelExecutor`] — clients fan out across a pool of scoped OS
-//!   threads pulling from a shared work queue.
+//!   threads that fill a **bounded out-of-order window** of result
+//!   slots, while the calling thread drains the window in sampling
+//!   order (Condvar-gated). Peak simultaneously-buffered results never
+//!   exceed the window, so a round's memory is O(params + window)
+//!   rather than O(clients_per_round × params).
 //!
-//! **Determinism contract.** Both executors return one [`ClientResult`]
+//! Results flow into a [`RoundSink`](super::sink::RoundSink) instead of
+//! a returned `Vec` — see `coordinator::sink` for the ordering and
+//! threading contract.
+//!
+//! **Determinism contract.** Both executors push one [`ClientResult`]
 //! per sampled client *in sampling order*, and every source of
 //! randomness a client touches (dropout draw, batch shuffling) comes
 //! from [`Rng::for_client`], which depends only on `(seed, round, cid)`
-//! — never on execution order or thread count. The server merges results
-//! in that stable order, so a run's output is bit-identical under either
-//! executor (asserted by `tests/executor.rs`).
+//! — never on execution order, thread count, or window size. The server
+//! merges in that stable order, so a run's output is bit-identical
+//! under either executor at any window (asserted by
+//! `tests/executor.rs`).
+//!
+//! **Heterogeneous ranks.** A [`RoundContext`] may carry a
+//! [`ClientPlan`](crate::coordinator::hetero::ClientPlan): each client
+//! then trains at its own rank tier with its tier's codec, and
+//! `run_client` projects the upload back into the server's rank space
+//! before it reaches the sink — the merge never sees anything but
+//! server-shaped vectors.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use crate::compression::{Codec, Message};
 use crate::config::FlConfig;
+use crate::coordinator::hetero::{project_ranks, ClientPlan};
+use crate::coordinator::sink::RoundSink;
 use crate::coordinator::trainer::LocalTrainer;
 use crate::data::Federation;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::ModelSession;
 use crate::util::rng::Rng;
 
@@ -36,7 +55,8 @@ use crate::util::rng::Rng;
 pub enum ExecutorKind {
     /// Clients run sequentially on the coordinator thread.
     Serial,
-    /// Clients fan out across a thread pool (bit-identical results).
+    /// Clients fan out across a thread pool feeding a bounded
+    /// out-of-order merge window (bit-identical results).
     Parallel,
 }
 
@@ -57,40 +77,58 @@ impl ExecutorKind {
         }
     }
 
-    /// Instantiate the executor. `threads` only affects
+    /// Instantiate the executor. `threads` and `window` only affect
     /// [`ExecutorKind::Parallel`]; 0 means one worker per available
-    /// core.
-    pub fn build(&self, threads: usize) -> Box<dyn ClientExecutor> {
+    /// core / a window of twice the worker count respectively.
+    pub fn build(&self, threads: usize, window: usize)
+                 -> Box<dyn ClientExecutor> {
         match self {
             ExecutorKind::Serial => Box::new(SerialExecutor),
-            ExecutorKind::Parallel => Box::new(ParallelExecutor::new(threads)),
+            ExecutorKind::Parallel => {
+                Box::new(ParallelExecutor::new(threads).with_window(window))
+            }
         }
     }
 }
 
+/// What every sampled client downloads this round.
+pub enum Downloads<'a> {
+    /// One shared message, pulled by every client (homogeneous round).
+    Homogeneous(&'a Message),
+    /// One message per rank tier, indexed by
+    /// [`ClientPlan::tier_of`](crate::coordinator::hetero::ClientPlan::tier_of).
+    Tiered(&'a [Message]),
+}
+
 /// Everything one round of client work reads. All fields are shared
-/// immutably across executor threads ([`ModelSession`] and `dyn Codec`
-/// are `Sync` by construction).
+/// immutably across executor threads ([`ModelSession`], `dyn Codec`
+/// and [`ClientPlan`] are `Sync` by construction).
 pub struct RoundContext<'a> {
+    /// The server-tier session; in a tiered round it also names the
+    /// rank space every upload is projected back into.
     pub session: &'a ModelSession,
+    /// The server-tier wire codec (tiers may override per client).
     pub codec: &'a dyn Codec,
     pub federation: &'a Federation,
-    /// Frozen `W_initial` (never moves, never re-encoded).
+    /// Frozen `W_initial` (never moves, never re-encoded, shared by
+    /// every tier).
     pub frozen: &'a [f32],
-    /// The server's encoded global vector — one message, downloaded by
-    /// every sampled client.
-    pub down_msg: &'a Message,
+    /// The encoded global vector(s) clients pull this round.
+    pub downloads: Downloads<'a>,
     pub trainer: LocalTrainer,
     pub cfg: &'a FlConfig,
     /// Round index, part of the per-client RNG coordinates.
     pub round: usize,
+    /// Per-client rank-tier plan; `None` = homogeneous round. Must be
+    /// `Some` exactly when `downloads` is [`Downloads::Tiered`].
+    pub plan: Option<&'a ClientPlan>,
 }
 
-/// What one sampled client hands back to the server.
+/// What one sampled client hands to the round sink.
 #[derive(Debug, Clone)]
 pub struct ClientResult {
     pub cid: usize,
-    /// Bytes this client pulled (the shared download message).
+    /// Bytes this client pulled (its tier's download message).
     pub down_bytes: usize,
     /// `None` if the client failed before uploading (dropout injection).
     pub update: Option<ClientUpdate>,
@@ -100,7 +138,8 @@ pub struct ClientResult {
 #[derive(Debug, Clone)]
 pub struct ClientUpdate {
     /// The update as the *server* sees it — after the uplink codec
-    /// round trip, ready for FedAvg.
+    /// round trip and (for tiered clients) the projection back into
+    /// the server's rank space, ready for FedAvg.
     pub params: Vec<f32>,
     /// FedAvg weight `n_k` (local sample count).
     pub weight: f64,
@@ -110,12 +149,31 @@ pub struct ClientUpdate {
 }
 
 /// The complete per-client unit of work: download-decode → (maybe drop)
-/// → local train → encode-upload → server-side decode. Shared verbatim
-/// by both executors so they cannot diverge behaviorally.
+/// → local train → encode-upload → server-side decode (→ rank
+/// projection for tiered clients). Shared verbatim by both executors so
+/// they cannot diverge behaviorally.
 fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
-    let segments = &ctx.session.spec.trainable_segments;
-    let down_bytes = ctx.down_msg.size_bytes();
-    let start = ctx.codec.decode(ctx.down_msg, segments)?;
+    // Resolve the client's gear: the server tier, or its plan tier.
+    let (session, codec, down_msg, lora_scale) =
+        match (ctx.plan, &ctx.downloads) {
+            (None, Downloads::Homogeneous(msg)) => {
+                (ctx.session, ctx.codec, *msg, ctx.trainer.lora_scale)
+            }
+            (Some(plan), Downloads::Tiered(msgs)) => {
+                let t = plan.tier_of(cid);
+                let tier = &plan.tiers()[t];
+                (&tier.session, tier.codec.as_ref(), &msgs[t],
+                 tier.lora_scale)
+            }
+            _ => {
+                return Err(Error::invalid(
+                    "round context: plan and downloads disagree",
+                ))
+            }
+        };
+    let segments = &session.spec.trainable_segments;
+    let down_bytes = down_msg.size_bytes();
+    let start = codec.decode(down_msg, segments)?;
 
     // All client randomness flows from (seed, round, cid) — stable under
     // any execution order (see module docs).
@@ -129,8 +187,9 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
         return Ok(ClientResult { cid, down_bytes, update: None });
     }
 
-    let outcome = ctx.trainer.run(
-        ctx.session,
+    let trainer = LocalTrainer { lora_scale, ..ctx.trainer };
+    let outcome = trainer.run(
+        session,
         &ctx.federation.clients[cid],
         ctx.frozen,
         start,
@@ -138,15 +197,27 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
     )?;
 
     // Upload: encode → count bytes → decode as the server would.
-    let up_msg = ctx.codec.encode(&outcome.params, segments)?;
+    let up_msg = codec.encode(&outcome.params, segments)?;
     let up_bytes = up_msg.size_bytes();
-    let received = ctx.codec.decode(&up_msg, segments)?;
+    let received = codec.decode(&up_msg, segments)?;
+
+    // Tiered clients hand back a vector in their own rank space; embed
+    // it into the server's before the sink ever sees it (zero-padding
+    // is exact on the B·A product — see `coordinator::hetero`).
+    let params = match ctx.plan {
+        None => received,
+        Some(_) => project_ranks(
+            &received,
+            segments,
+            &ctx.session.spec.trainable_segments,
+        )?,
+    };
 
     Ok(ClientResult {
         cid,
         down_bytes,
         update: Some(ClientUpdate {
-            params: received,
+            params,
             weight: outcome.samples as f64,
             up_bytes,
             mean_loss: outcome.mean_loss,
@@ -157,17 +228,15 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
 
 /// Strategy for executing a round's sampled clients.
 ///
-/// Contract: `execute` returns exactly one result per entry of
-/// `clients`, in the same order, and is deterministic in `(ctx,
-/// clients)` — implementations may reorder *work* but never *results*.
+/// Contract: `execute` pushes exactly one result per entry of
+/// `clients` into `sink`, at indices 0..n in order, on the calling
+/// thread, and is deterministic in `(ctx, clients)` — implementations
+/// may reorder *work* but never *results* (see `coordinator::sink`).
 ///
-/// Memory note: the collected `Vec` holds every surviving client's
-/// decoded update simultaneously, so a round peaks at
-/// O(`clients_per_round` × params) — inherent for in-flight parallel
-/// work, and the cost of keeping one merge path for all executors.
-/// Negligible for FLoCoRA adapters (tens of kB each); for full-model
-/// baselines at large fan-out, budget accordingly (a streaming
-/// in-order merge is a ROADMAP follow-on).
+/// Memory note: at most `window` results (parallel) or one result
+/// (serial) are buffered between production and the sink — a round
+/// peaks at O(params + window), not O(clients_per_round × params), so
+/// full-model baselines at large fan-out stay flat.
 pub trait ClientExecutor: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -175,10 +244,13 @@ pub trait ClientExecutor: Send + Sync {
         &self,
         ctx: &RoundContext<'_>,
         clients: &[usize],
-    ) -> Result<Vec<ClientResult>>;
+        sink: &mut dyn RoundSink,
+    ) -> Result<()>;
 }
 
 /// Clients run strictly one after another — the reference executor.
+/// Each result is pushed before the next client starts, so nothing is
+/// ever buffered.
 pub struct SerialExecutor;
 
 impl ClientExecutor for SerialExecutor {
@@ -190,22 +262,66 @@ impl ClientExecutor for SerialExecutor {
         &self,
         ctx: &RoundContext<'_>,
         clients: &[usize],
-    ) -> Result<Vec<ClientResult>> {
-        clients.iter().map(|&cid| run_client(ctx, cid)).collect()
+        sink: &mut dyn RoundSink,
+    ) -> Result<()> {
+        for (i, &cid) in clients.iter().enumerate() {
+            sink.push(i, run_client(ctx, cid)?)?;
+        }
+        Ok(())
     }
 }
 
-/// Clients fan out across scoped worker threads pulling indices from a
-/// shared atomic queue; results land in per-index slots so the returned
-/// order is the sampling order regardless of which worker finished when.
+/// Shared state of one parallel round: a ring of `window` result slots
+/// plus the claim/drain cursors, all behind one mutex.
+struct WindowState {
+    /// Ring buffer; index `i`'s slot is `i % window`. `Some` = produced
+    /// but not yet drained.
+    slots: Vec<Option<Result<ClientResult>>>,
+    /// Next client index a worker may claim.
+    next: usize,
+    /// Results handed to the sink so far (== next index to drain).
+    drained: usize,
+    /// Set on sink/client error: workers wind down without claiming.
+    abort: bool,
+}
+
+/// Clients fan out across scoped worker threads; workers may run ahead
+/// of the in-order merge only as far as the out-of-order window, then
+/// block on a Condvar until the coordinator thread drains the oldest
+/// slot into the sink.
 pub struct ParallelExecutor {
     threads: usize,
+    window: usize,
+    /// High-water mark of simultaneously buffered results in the last
+    /// `execute` (diagnostics; the streaming-memory test pins it to
+    /// the window). Meaningless while an `execute` is in flight.
+    peak_buffered: AtomicUsize,
+    buffered: AtomicUsize,
 }
 
 impl ParallelExecutor {
     /// `threads == 0` sizes the pool to the available cores.
     pub fn new(threads: usize) -> ParallelExecutor {
-        ParallelExecutor { threads }
+        ParallelExecutor {
+            threads,
+            window: 0,
+            peak_buffered: AtomicUsize::new(0),
+            buffered: AtomicUsize::new(0),
+        }
+    }
+
+    /// Cap the out-of-order result window (`0` = twice the worker
+    /// count). Smaller windows bound memory tighter; `1` forces fully
+    /// in-order production (workers serialize at the merge).
+    pub fn with_window(mut self, window: usize) -> ParallelExecutor {
+        self.window = window;
+        self
+    }
+
+    /// High-water mark of simultaneously buffered (produced, undrained)
+    /// results during the most recent `execute`.
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered.load(Ordering::Relaxed)
     }
 
     fn pool_size(&self, work: usize) -> usize {
@@ -216,6 +332,14 @@ impl ParallelExecutor {
         // workers; it also never exceeds the work items available.
         let requested = if self.threads == 0 { auto } else { self.threads };
         requested.min(work.max(1))
+    }
+
+    fn effective_window(&self, workers: usize) -> usize {
+        if self.window == 0 {
+            (2 * workers).max(1)
+        } else {
+            self.window
+        }
     }
 }
 
@@ -228,46 +352,143 @@ impl ClientExecutor for ParallelExecutor {
         &self,
         ctx: &RoundContext<'_>,
         clients: &[usize],
-    ) -> Result<Vec<ClientResult>> {
+        sink: &mut dyn RoundSink,
+    ) -> Result<()> {
         let n = clients.len();
         let workers = self.pool_size(n);
+        self.buffered.store(0, Ordering::Relaxed);
+        self.peak_buffered.store(0, Ordering::Relaxed);
         if workers <= 1 {
             // One lane: skip thread setup, identical results by the
-            // determinism contract.
-            return SerialExecutor.execute(ctx, clients);
+            // determinism contract (and nothing ever buffers).
+            return SerialExecutor.execute(ctx, clients, sink);
+        }
+        // A window beyond the round size buys nothing (claims are
+        // bounded by `n` anyway) but would allocate that many slots —
+        // clamp so an absurd configured window can't blow the ring
+        // allocation.
+        let window = self.effective_window(workers).min(n);
+
+        let state = Mutex::new(WindowState {
+            slots: (0..window).map(|_| None).collect(),
+            next: 0,
+            drained: 0,
+            abort: false,
+        });
+        // Workers wait here when the window is full (or all work is
+        // claimed); the drainer notifies after freeing a slot.
+        let may_claim = Condvar::new();
+        // The drainer waits here for the oldest slot to fill; workers
+        // notify after storing a result.
+        let may_drain = Condvar::new();
+
+        // If a worker unwinds inside `run_client` (a bug — client work
+        // returns `Result`), its slot would never fill and the drainer
+        // would wait forever. The sentry flags the round as aborted on
+        // the way out so both the drainer and sibling workers wind
+        // down; `thread::scope` then re-raises the panic at the join.
+        struct PanicSentry<'s> {
+            state: &'s Mutex<WindowState>,
+            may_claim: &'s Condvar,
+            may_drain: &'s Condvar,
+        }
+        impl Drop for PanicSentry<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    if let Ok(mut st) = self.state.lock() {
+                        st.abort = true;
+                    }
+                    self.may_claim.notify_all();
+                    self.may_drain.notify_all();
+                }
+            }
         }
 
-        let next = AtomicUsize::new(0);
-        let slots: Mutex<Vec<Option<Result<ClientResult>>>> =
-            Mutex::new((0..n).map(|_| None).collect());
         std::thread::scope(|scope| {
             for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+                scope.spawn(|| {
+                    let _sentry = PanicSentry {
+                        state: &state,
+                        may_claim: &may_claim,
+                        may_drain: &may_drain,
+                    };
+                    loop {
+                        // Claim the next index, but never run further
+                        // ahead of the merge than the window allows —
+                        // that bound is what keeps the round's memory
+                        // O(window).
+                        let i = {
+                            let mut st = state.lock().unwrap();
+                            loop {
+                                if st.abort || st.next >= n {
+                                    return;
+                                }
+                                if st.next < st.drained + window {
+                                    st.next += 1;
+                                    break st.next - 1;
+                                }
+                                st = may_claim.wait(st).unwrap();
+                            }
+                        };
+                        let res = run_client(ctx, clients[i]);
+                        let mut st = state.lock().unwrap();
+                        if st.abort {
+                            return;
+                        }
+                        debug_assert!(st.slots[i % window].is_none());
+                        st.slots[i % window] = Some(res);
+                        let b =
+                            self.buffered.fetch_add(1, Ordering::Relaxed) + 1;
+                        self.peak_buffered.fetch_max(b, Ordering::Relaxed);
+                        may_drain.notify_one();
                     }
-                    let res = run_client(ctx, clients[i]);
-                    slots.lock().unwrap()[i] = Some(res);
                 });
             }
-        });
 
-        // Worker panics propagate: `thread::scope` re-raises them at
-        // the join above, so reaching this point means every index was
-        // claimed and its slot written — `None` is impossible.
-        let slots = slots.into_inner().unwrap();
-        let mut out = Vec::with_capacity(n);
-        for slot in slots {
-            match slot {
-                Some(Ok(r)) => out.push(r),
-                Some(Err(e)) => return Err(e),
-                None => unreachable!(
-                    "scope joined all workers; every slot is filled"
-                ),
+            // The drain side gets the same guard: a sink that panics
+            // (rather than returning `Err`) would otherwise leave
+            // workers parked on `may_claim` forever and the scope join
+            // would deadlock instead of propagating the panic.
+            let _sentry = PanicSentry {
+                state: &state,
+                may_claim: &may_claim,
+                may_drain: &may_drain,
+            };
+
+            // In-order drain on the coordinator thread: the sink sees
+            // sampling order regardless of which worker finished when.
+            let mut out = Ok(());
+            for i in 0..n {
+                let res = {
+                    let mut st = state.lock().unwrap();
+                    loop {
+                        if let Some(r) = st.slots[i % window].take() {
+                            st.drained += 1;
+                            self.buffered.fetch_sub(1, Ordering::Relaxed);
+                            break r;
+                        }
+                        if st.abort {
+                            // A worker died without delivering; stop
+                            // draining so the scope join can re-raise
+                            // its panic.
+                            break Err(Error::invalid(
+                                "round aborted: a worker failed",
+                            ));
+                        }
+                        st = may_drain.wait(st).unwrap();
+                    }
+                };
+                // A slot may just have freed: more indices claimable.
+                may_claim.notify_all();
+                if let Err(e) = res.and_then(|r| sink.push(i, r)) {
+                    state.lock().unwrap().abort = true;
+                    may_claim.notify_all();
+                    out = Err(e);
+                    break;
+                }
             }
-        }
-        Ok(out)
+            out
+        })
     }
 }
 
@@ -285,8 +506,8 @@ mod tests {
         assert_eq!(ExecutorKind::parse("threads:4"), None);
         assert_eq!(ExecutorKind::Serial.label(), "serial");
         assert_eq!(ExecutorKind::Parallel.label(), "parallel");
-        assert_eq!(ExecutorKind::Serial.build(0).name(), "serial");
-        assert_eq!(ExecutorKind::Parallel.build(3).name(), "parallel");
+        assert_eq!(ExecutorKind::Serial.build(0, 0).name(), "serial");
+        assert_eq!(ExecutorKind::Parallel.build(3, 2).name(), "parallel");
     }
 
     #[test]
@@ -297,5 +518,15 @@ mod tests {
         assert_eq!(ParallelExecutor::new(16).pool_size(4), 4);
         assert_eq!(ParallelExecutor::new(2).pool_size(100), 2);
         assert_eq!(ParallelExecutor::new(5).pool_size(0), 1);
+    }
+
+    #[test]
+    fn window_defaults_and_pins() {
+        let auto = ParallelExecutor::new(4);
+        assert_eq!(auto.effective_window(4), 8);
+        let pinned = ParallelExecutor::new(4).with_window(3);
+        assert_eq!(pinned.effective_window(4), 3);
+        let one = ParallelExecutor::new(4).with_window(1);
+        assert_eq!(one.effective_window(4), 1);
     }
 }

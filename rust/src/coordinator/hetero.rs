@@ -17,9 +17,17 @@
 //! Zero-padding is exact for the B·A product: extra rank slots
 //! contribute `0 · x = 0`, so an `r`-rank adapter embedded in an
 //! `r' > r` space computes the identical function.
+//!
+//! [`ClientPlan`] turns the projection into an engine feature: it maps
+//! every client id to a rank *tier* (a compiled session + wire codec +
+//! LoRA scale), and the round engine consults it per client — weak
+//! devices train and transmit small adapters inside the one standard
+//! `Simulation` loop (`hetero_ranks = "2,4,8"` in the config).
 
+use crate::compression::{Codec, Message};
 use crate::error::{Error, Result};
 use crate::model::{ParamKind, Segment};
+use crate::runtime::ModelSession;
 
 fn rank_geometry(seg: &Segment) -> Option<(usize, usize, bool)> {
     // Returns (rank, inner_block, rank_is_leading):
@@ -113,6 +121,62 @@ pub fn project_ranks(
         }
     }
     Ok(out)
+}
+
+/// One rank tier (device class) of a heterogeneous federation: the
+/// compiled session at that rank, the tier's wire codec, and the
+/// effective `alpha / r_tier` LoRA scale.
+pub struct PlanTier {
+    pub rank: usize,
+    pub session: ModelSession,
+    pub codec: Box<dyn Codec>,
+    pub lora_scale: f32,
+}
+
+/// Per-client rank-tier assignment for one federation.
+///
+/// The assignment is static round-robin by client id (`cid %
+/// num_tiers`) — device classes don't change between rounds — so the
+/// plan is immutable, `Sync`, and shareable across executor threads.
+pub struct ClientPlan {
+    tiers: Vec<PlanTier>,
+}
+
+impl ClientPlan {
+    /// Panics if `tiers` is empty (a plan with no tiers is a config
+    /// bug, caught by `FlConfig::validate` long before this).
+    pub fn new(tiers: Vec<PlanTier>) -> ClientPlan {
+        assert!(!tiers.is_empty(), "a client plan needs at least one tier");
+        ClientPlan { tiers }
+    }
+
+    /// Which tier client `cid` belongs to.
+    pub fn tier_of(&self, cid: usize) -> usize {
+        cid % self.tiers.len()
+    }
+
+    pub fn tiers(&self) -> &[PlanTier] {
+        &self.tiers
+    }
+
+    /// Build one round's tier downloads: project the server-space
+    /// global vector down into each tier's rank space and encode it
+    /// with that tier's codec. Indexed like [`ClientPlan::tier_of`].
+    pub fn encode_downloads(
+        &self,
+        global: &[f32],
+        server_segments: &[Segment],
+    ) -> Result<Vec<Message>> {
+        self.tiers
+            .iter()
+            .map(|tier| {
+                let segs = &tier.session.spec.trainable_segments;
+                let projected =
+                    project_ranks(global, server_segments, segs)?;
+                tier.codec.encode(&projected, segs)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]

@@ -21,18 +21,25 @@
 //! Within a round the protocol is embarrassingly parallel — clients
 //! only meet at step 4 — so per-client execution is pluggable
 //! ([`executor::ClientExecutor`]): the serial reference and the
-//! thread-pool executor produce bit-identical runs by construction.
+//! windowed thread-pool executor produce bit-identical runs by
+//! construction, streaming each result into the server's in-place
+//! merge ([`sink::RoundSink`]) in sampling order. A
+//! [`hetero::ClientPlan`] extends the same loop to rank-heterogeneous
+//! federations (per-client rank tiers and codecs).
 
 pub mod aggregator;
 pub mod executor;
 pub mod hetero;
 pub mod sampler;
 pub mod server;
+pub mod sink;
 pub mod trainer;
 
 pub use aggregator::FedAvg;
 pub use executor::{ClientExecutor, ExecutorKind, ParallelExecutor,
                    SerialExecutor};
+pub use hetero::{ClientPlan, PlanTier};
 pub use sampler::UniformSampler;
 pub use server::{RunSummary, Simulation};
+pub use sink::{collect_round, RoundSink, VecSink};
 pub use trainer::LocalTrainer;

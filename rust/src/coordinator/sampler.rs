@@ -18,7 +18,9 @@ impl UniformSampler {
     /// deterministic iteration order downstream). Sampling runs on the
     /// coordinator thread *before* the executor fans work out, so the
     /// sampler's mutable stream never races — and the sorted order is
-    /// exactly the order the round engine merges results in.
+    /// exactly the order the round sink drains results in (the
+    /// streaming merge's `push(index, ..)` contract is defined against
+    /// this slice, see `coordinator::sink`).
     pub fn sample(&mut self, k: usize) -> Vec<usize> {
         let mut ids = self.rng.choose_k(self.num_clients, k);
         ids.sort_unstable();

@@ -10,23 +10,35 @@
 //!
 //! Per-client work is delegated to the configured
 //! [`ClientExecutor`](crate::coordinator::executor::ClientExecutor)
-//! (serial reference or thread-pool parallel); the server merges the
-//! results in sampling order, so the two executors are bit-identical.
+//! (serial reference or windowed thread-pool), which **streams** each
+//! result into the server's in-place merge
+//! ([`RoundSink`](crate::coordinator::sink::RoundSink)) in sampling
+//! order: ledger entries, FedAvg adds, dropout counts and network
+//! loads fold in as each client's slot drains, so a round's peak
+//! memory is O(params + window) and the executors stay bit-identical.
+//!
+//! With `hetero_ranks` configured, the round runs a
+//! [`ClientPlan`](crate::coordinator::hetero::ClientPlan): each client
+//! trains at its own rank tier with its tier's codec, and uploads are
+//! projected back into the server's rank space before aggregation.
 
 use std::time::Instant;
 
-use crate::compression::Codec;
+use crate::compression::{Codec, Message};
 use crate::config::FlConfig;
 use crate::coordinator::aggregator::FedAvg;
-use crate::coordinator::executor::{ClientExecutor, RoundContext};
+use crate::coordinator::executor::{ClientExecutor, ClientResult,
+                                   Downloads, RoundContext};
+use crate::coordinator::hetero::{ClientPlan, PlanTier};
 use crate::coordinator::sampler::UniformSampler;
+use crate::coordinator::sink::RoundSink;
 use crate::coordinator::trainer::LocalTrainer;
 use crate::data::batcher::Tail;
 use crate::data::{lda_partition, BatchIter, Federation, TestSet};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::{Recorder, RoundRecord};
 use crate::runtime::{Engine, ModelSession};
-use crate::transport::{CommLedger, Direction, NetworkModel};
+use crate::transport::{CommLedger, Direction, NetworkModel, RoundLoad};
 
 /// Aggregate results of one run.
 #[derive(Debug, Clone)]
@@ -45,8 +57,9 @@ pub struct RunSummary {
     /// clients used the link one after another (sum of round trips).
     pub sim_net_serial_s: f64,
     /// Simulated time-on-wire with each round's clients in flight
-    /// concurrently — the server waits for the slowest straggler per
-    /// round (max, not sum).
+    /// concurrently — slowest straggler per round on dedicated links,
+    /// total-bits-over-capacity on a shared pipe (see
+    /// [`crate::transport::Sharing`]).
     pub sim_net_parallel_s: f64,
 }
 
@@ -64,6 +77,8 @@ pub struct RunSummary {
 /// let cfg = FlConfig {
 ///     executor: ExecutorKind::Parallel, // bit-identical to Serial
 ///     threads: 0,                       // 0 = one worker per core
+///     window: 0,                        // 0 = 2x workers; any value
+///                                       //     is bit-identical too
 ///     ..FlConfig::default()
 /// };
 /// let mut sim = Simulation::new(&engine, cfg)?;
@@ -88,6 +103,11 @@ pub struct Simulation {
     sampler: UniformSampler,
     /// Link profile behind the simulated round-time report.
     net: NetworkModel,
+    /// Rank-tier plan (`hetero_ranks`); `None` = homogeneous.
+    plan: Option<ClientPlan>,
+    /// Bytes moved per tier (down + up), indexed like the plan's
+    /// tiers. Empty for homogeneous runs.
+    tier_bytes: Vec<u64>,
     /// Global trainable vector (`Δ̄_t L` for LoRA variants; the whole
     /// model for `full`).
     pub global: Vec<f32>,
@@ -97,6 +117,7 @@ pub struct Simulation {
     lora_scale: f32,
     rounds_done: usize,
     last_train_loss: f64,
+    last_round_dropped: u64,
     sim_net_serial_s: f64,
     sim_net_parallel_s: f64,
     /// Clients that failed mid-round (failure injection diagnostics).
@@ -127,11 +148,52 @@ impl Simulation {
         // base, like the paper's single initial broadcast.
         let (global, frozen) = session.init(cfg.seed)?;
         let lora_scale = cfg.lora_scale(spec.rank);
+        // Rank-tier plan: one compiled session + codec per tier, tags
+        // derived from the server tag's (model, variant) coordinates.
+        let plan = if cfg.hetero_ranks.is_empty() {
+            None
+        } else {
+            if !spec.variant.is_lora() {
+                return Err(Error::invalid(
+                    "hetero_ranks needs a LoRA server tag (full models \
+                     have no rank dimension)",
+                ));
+            }
+            let mut tiers = Vec::with_capacity(cfg.hetero_ranks.len());
+            for (i, &rank) in cfg.hetero_ranks.iter().enumerate() {
+                if rank > spec.rank {
+                    // Up-projection pads exactly; the reverse would
+                    // silently truncate rank slots r_server..r_tier of
+                    // every update the client trains. Refuse instead.
+                    return Err(Error::invalid(format!(
+                        "hetero tier r{rank} exceeds the server rank \
+                         r{} — its updates would be truncated every \
+                         round",
+                        spec.rank
+                    )));
+                }
+                let tag =
+                    format!("{}_{}_r{}", spec.model, spec.variant, rank);
+                let kind = cfg.hetero_codecs.get(i).copied()
+                    .unwrap_or(cfg.codec);
+                tiers.push(PlanTier {
+                    rank,
+                    session: engine.session(&tag)?,
+                    codec: kind.build(),
+                    lora_scale: cfg.lora_scale(rank),
+                });
+            }
+            Some(ClientPlan::new(tiers))
+        };
+        let tier_bytes = vec![0u64; plan.as_ref()
+            .map_or(0, |p| p.tiers().len())];
         Ok(Simulation {
             sampler: UniformSampler::new(cfg.num_clients, cfg.seed),
             codec: cfg.codec.build(),
-            executor: cfg.executor.build(cfg.threads),
-            net: NetworkModel::edge_lte(),
+            executor: cfg.executor.build(cfg.threads, cfg.window),
+            net: cfg.network.build().with_sharing(cfg.net_sharing),
+            plan,
+            tier_bytes,
             cfg,
             session,
             federation,
@@ -142,6 +204,7 @@ impl Simulation {
             lora_scale,
             rounds_done: 0,
             last_train_loss: f64::NAN,
+            last_round_dropped: 0,
             sim_net_serial_s: 0.0,
             sim_net_parallel_s: 0.0,
             dropped_clients: 0,
@@ -156,10 +219,27 @@ impl Simulation {
         self.session.spec.rank
     }
 
+    /// The rank-tier plan, if this is a heterogeneous run.
+    pub fn plan(&self) -> Option<&ClientPlan> {
+        self.plan.as_ref()
+    }
+
+    /// Bytes moved per rank tier (down + up), indexed like
+    /// [`ClientPlan::tiers`]. Empty for homogeneous runs.
+    pub fn tier_bytes(&self) -> &[u64] {
+        &self.tier_bytes
+    }
+
+    /// Clients dropped in the most recent round.
+    pub fn last_round_dropped(&self) -> u64 {
+        self.last_round_dropped
+    }
+
     /// Swap the link profile used for the simulated round-time report
-    /// (default: [`NetworkModel::edge_lte`]). Call before the first
-    /// [`Simulation::round`]: the per-run accumulators don't segment by
-    /// profile, so switching mid-run mixes times from different links.
+    /// (default: from `FlConfig::network` / `net_sharing`). Call before
+    /// the first [`Simulation::round`]: the per-run accumulators don't
+    /// segment by profile, so switching mid-run mixes times from
+    /// different links.
     pub fn set_network(&mut self, net: NetworkModel) {
         self.net = net;
     }
@@ -198,71 +278,70 @@ impl Simulation {
         self.ledger.begin_round();
         let segments = &self.session.spec.trainable_segments;
 
-        // (1) server encodes the global vector once; each sampled client
-        //     downloads (and decodes) it.
-        let down_msg = self.codec.encode(&self.global, segments)?;
+        // (1) the server encodes this round's download(s): one shared
+        //     message, or one per rank tier (projected, tier-encoded).
+        let (shared_msg, tier_msgs): (Option<Message>, Vec<Message>) =
+            match &self.plan {
+                None => (
+                    Some(self.codec.encode(&self.global, segments)?),
+                    Vec::new(),
+                ),
+                Some(plan) => {
+                    (None, plan.encode_downloads(&self.global, segments)?)
+                }
+            };
+        let downloads = match &shared_msg {
+            Some(msg) => Downloads::Homogeneous(msg),
+            None => Downloads::Tiered(&tier_msgs),
+        };
         let client_ids = self.sampler.sample(self.cfg.clients_per_round);
 
         // Per-round learning rate under the multiplicative schedule.
         let lr = self.cfg.lr
             * self.cfg.lr_decay.powi(self.rounds_done as i32);
 
-        // (2)+(3) per-client work — download-decode, local train,
-        // encode-upload — runs under the configured executor.
-        let results = {
-            let ctx = RoundContext {
-                session: &self.session,
-                codec: self.codec.as_ref(),
-                federation: &self.federation,
-                frozen: &self.frozen,
-                down_msg: &down_msg,
-                trainer: LocalTrainer {
-                    local_epochs: self.cfg.local_epochs,
-                    lr,
-                    lora_scale: self.lora_scale,
-                },
-                cfg: &self.cfg,
-                round: self.rounds_done,
-            };
-            self.executor.execute(&ctx, &client_ids)?
+        // (2)+(3)+(4) per-client work streams into the in-place merge:
+        // ledger entries, FedAvg adds, dropout counts and network loads
+        // fold in as each client's slot drains, in sampling order —
+        // byte-for-byte the same whichever executor (or window)
+        // produced the results, and never a buffered Vec of updates.
+        let mut merge = RoundMerge {
+            expected: &client_ids,
+            plan: self.plan.as_ref(),
+            ledger: &mut self.ledger,
+            tier_bytes: &mut self.tier_bytes,
+            net: &self.net,
+            agg: FedAvg::new(self.global.len()),
+            load: RoundLoad::new(),
+            loss_sum: 0.0,
+            acc_sum: 0.0,
+            survivors: 0,
+            dropped: 0,
         };
+        let ctx = RoundContext {
+            session: &self.session,
+            codec: self.codec.as_ref(),
+            federation: &self.federation,
+            frozen: &self.frozen,
+            downloads,
+            trainer: LocalTrainer {
+                local_epochs: self.cfg.local_epochs,
+                lr,
+                lora_scale: self.lora_scale,
+            },
+            cfg: &self.cfg,
+            round: self.rounds_done,
+            plan: self.plan.as_ref(),
+        };
+        self.executor.execute(&ctx, &client_ids, &mut merge)?;
 
-        // (4) deterministic merge in sampling (client-id) order: ledger
-        // entries, FedAvg contributions and dropout counts are byte-for-
-        // byte the same whichever executor produced the results.
-        let mut agg = FedAvg::new(self.global.len());
-        let mut loss_sum = 0.0;
-        let mut acc_sum = 0.0;
-        let mut survivors = 0usize;
-        let mut loads = Vec::with_capacity(client_ids.len());
-        // Consuming iteration: each client's decoded update buffer is
-        // freed as soon as it is folded into the accumulator rather
-        // than living until the whole merge ends.
-        for (i, res) in results.into_iter().enumerate() {
-            // The merge relies on positional order == sampling order;
-            // an executor violating the contract must fail loud — in
-            // release builds too — not silently mis-attribute FedAvg
-            // weights. One integer compare per client per round.
-            assert_eq!(res.cid, client_ids[i],
-                       "executor broke the result-order contract");
-            self.ledger.record(Direction::Down, res.down_bytes);
-            match res.update {
-                None => {
-                    self.dropped_clients += 1;
-                    loads.push((res.down_bytes, 0));
-                }
-                Some(up) => {
-                    survivors += 1;
-                    self.ledger.record(Direction::Up, up.up_bytes);
-                    loss_sum += up.mean_loss;
-                    acc_sum += up.mean_acc;
-                    agg.add(&up.params, up.weight)?;
-                    loads.push((res.down_bytes, up.up_bytes));
-                }
-            }
-        }
-        self.sim_net_serial_s += self.net.round_time_serial(&loads);
-        self.sim_net_parallel_s += self.net.round_time_parallel(&loads);
+        let RoundMerge {
+            agg, load, loss_sum, acc_sum, survivors, dropped, ..
+        } = merge;
+        self.sim_net_serial_s += load.serial_s();
+        self.sim_net_parallel_s += load.parallel_s(&self.net);
+        self.dropped_clients += dropped;
+        self.last_round_dropped = dropped;
 
         self.rounds_done += 1;
         if survivors == 0 {
@@ -278,9 +357,14 @@ impl Simulation {
     /// Run the full schedule, recording evaluated rounds.
     pub fn run(&mut self, recorder: &mut Recorder) -> Result<RunSummary> {
         let t0 = Instant::now();
+        // Drops are tallied *between* records so the exported column
+        // covers every round (and sums to `dropped_clients`) even when
+        // `eval_every > 1` skips rounds.
+        let mut drops_since_record = 0u64;
         for r in 0..self.cfg.rounds {
             let (train_loss, _train_acc) = self.round()?;
             self.last_train_loss = train_loss;
+            drops_since_record += self.last_round_dropped;
             let is_last = r + 1 == self.cfg.rounds;
             if (r + 1) % self.cfg.eval_every == 0 || is_last {
                 let (test_loss, test_acc) = self.evaluate()?;
@@ -290,8 +374,10 @@ impl Simulation {
                     test_loss,
                     train_loss,
                     cum_bytes: self.ledger.total_bytes(),
+                    dropped: drops_since_record,
                     wall_ms: t0.elapsed().as_secs_f64() * 1e3,
                 });
+                drops_since_record = 0;
             }
         }
         Ok(RunSummary {
@@ -306,5 +392,62 @@ impl Simulation {
             sim_net_serial_s: self.sim_net_serial_s,
             sim_net_parallel_s: self.sim_net_parallel_s,
         })
+    }
+}
+
+/// The server's in-place round merge: one [`RoundSink`] holding the
+/// round's accumulators. Every push folds one client straight into the
+/// ledger, the FedAvg accumulator and the network-load tally — the
+/// decoded update is freed as soon as its `agg.add` returns.
+struct RoundMerge<'a> {
+    expected: &'a [usize],
+    plan: Option<&'a ClientPlan>,
+    ledger: &'a mut CommLedger,
+    tier_bytes: &'a mut [u64],
+    net: &'a NetworkModel,
+    agg: FedAvg,
+    load: RoundLoad,
+    loss_sum: f64,
+    acc_sum: f64,
+    survivors: usize,
+    dropped: u64,
+}
+
+impl RoundSink for RoundMerge<'_> {
+    fn push(&mut self, index: usize, res: ClientResult) -> Result<()> {
+        // The merge relies on positional order == sampling order; an
+        // executor violating the contract must fail loud — in release
+        // builds too — not silently mis-attribute FedAvg weights. One
+        // integer compare per client per round.
+        if self.expected.get(index) != Some(&res.cid) {
+            return Err(Error::invalid(format!(
+                "executor broke the result-order contract: slot {index} \
+                 got client {}, expected {:?}",
+                res.cid,
+                self.expected.get(index),
+            )));
+        }
+        self.ledger.record(Direction::Down, res.down_bytes);
+        let up_bytes = match res.update {
+            None => {
+                self.dropped += 1;
+                self.load.add(self.net, res.down_bytes, 0);
+                0
+            }
+            Some(up) => {
+                self.survivors += 1;
+                self.ledger.record(Direction::Up, up.up_bytes);
+                self.loss_sum += up.mean_loss;
+                self.acc_sum += up.mean_acc;
+                self.agg.add(&up.params, up.weight)?;
+                self.load.add(self.net, res.down_bytes, up.up_bytes);
+                up.up_bytes
+            }
+        };
+        if let Some(plan) = self.plan {
+            self.tier_bytes[plan.tier_of(res.cid)] +=
+                (res.down_bytes + up_bytes) as u64;
+        }
+        Ok(())
     }
 }

@@ -1,0 +1,94 @@
+//! The streaming half of the round engine: where client results *go*.
+//!
+//! [`super::executor::ClientExecutor::execute`] does not return a
+//! `Vec` of results — it pushes each [`ClientResult`] into a
+//! [`RoundSink`] as soon as that client's slot comes up in sampling
+//! order. The server's merge (ledger entries, FedAvg adds, dropout
+//! counts, network-load accounting) therefore runs *incrementally*,
+//! and a round's peak memory is O(params + out-of-order window)
+//! instead of O(clients_per_round × params).
+//!
+//! **Sink contract.** For a round over `clients` (the sampling-order
+//! id slice):
+//!
+//! 1. `push(index, result)` is called exactly once per index, with
+//!    `index` strictly increasing from 0 to `clients.len() - 1`;
+//! 2. `result.cid == clients[index]` — results arrive in sampling
+//!    order no matter how the executor scheduled the work;
+//! 3. every call happens on the thread that called `execute` (the
+//!    coordinator thread), so a sink needs no synchronization;
+//! 4. an `Err` from `push` aborts the round: the executor stops
+//!    draining, winds down its workers, and propagates the error.
+//!
+//! Implementations: the server's in-place merge
+//! (`coordinator::server`), [`VecSink`] for tests and callers that
+//! genuinely want the batch-collect behaviour back.
+
+use crate::coordinator::executor::{ClientExecutor, ClientResult,
+                                   RoundContext};
+use crate::error::Result;
+
+/// Receives one round's client results, in sampling order.
+pub trait RoundSink {
+    /// Accept the result for `clients[index]`. See the module docs for
+    /// the exact ordering/threading contract.
+    fn push(&mut self, index: usize, result: ClientResult) -> Result<()>;
+}
+
+/// The batch-collect behaviour as a sink: buffers every result.
+///
+/// This is what the pre-streaming engine did implicitly; keep it for
+/// tests and tools that want the whole round in hand. Production
+/// merges should stream instead.
+#[derive(Debug, Default)]
+pub struct VecSink {
+    pub results: Vec<ClientResult>,
+}
+
+impl VecSink {
+    pub fn new() -> VecSink {
+        VecSink::default()
+    }
+}
+
+impl RoundSink for VecSink {
+    fn push(&mut self, index: usize, result: ClientResult) -> Result<()> {
+        debug_assert_eq!(index, self.results.len(),
+                         "sink contract: indices arrive in order");
+        self.results.push(result);
+        Ok(())
+    }
+}
+
+/// Run a round and collect every result into a `Vec` — the old
+/// batch-collect `execute` signature as a helper.
+pub fn collect_round(
+    executor: &dyn ClientExecutor,
+    ctx: &RoundContext<'_>,
+    clients: &[usize],
+) -> Result<Vec<ClientResult>> {
+    let mut sink = VecSink::new();
+    executor.execute(ctx, clients, &mut sink)?;
+    Ok(sink.results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_sink_buffers_in_order() {
+        let mut sink = VecSink::new();
+        for i in 0..3 {
+            sink.push(i, ClientResult {
+                cid: 10 + i,
+                down_bytes: 4,
+                update: None,
+            })
+            .unwrap();
+        }
+        assert_eq!(sink.results.len(), 3);
+        assert!(sink.results.iter().enumerate()
+                    .all(|(i, r)| r.cid == 10 + i));
+    }
+}

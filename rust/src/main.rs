@@ -12,7 +12,7 @@
 
 use flocora::cli::Args;
 use flocora::compression::Codec;
-use flocora::config::{loader, FlConfig};
+use flocora::config::{loader, presets, FlConfig};
 use flocora::coordinator::Simulation;
 use flocora::error::{Error, Result};
 use flocora::experiments::tables;
@@ -53,9 +53,13 @@ fn print_usage() {
          USAGE: flocora <subcommand> [--artifacts DIR] [options]\n\n\
          SUBCOMMANDS:\n\
          \x20 train         run a federated simulation\n\
-         \x20               [--config FILE] [--csv OUT] [--tag T] [--rounds N]\n\
+         \x20               [--config FILE] [--preset NAME] [--csv OUT]\n\
+         \x20               [--tag T] [--rounds N]\n\
          \x20               [--codec fp32|q8|q4|q2|topk:K|zerofl:SP:MR]\n\
-         \x20               [--executor serial|parallel] [--threads N] ...\n\
+         \x20               [--executor serial|parallel] [--threads N]\n\
+         \x20               [--window N] [--network edge_lte|wifi]\n\
+         \x20               [--net_sharing dedicated|shared]\n\
+         \x20               [--hetero_ranks 2,4,8] [--hetero_codecs ...] ...\n\
          \x20 tables        print analytic Table I/III/IV vs the paper\n\
          \x20 inspect       list artifact manifest\n\
          \x20 quant-parity  rust codec vs pallas HLO oracle\n\
@@ -73,14 +77,24 @@ fn strict(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
-    let mut cfg = match args.opt_str("config") {
-        Some(path) => loader::load(path)?,
+    // Base config: named preset, config file (on top of the preset, if
+    // both are given), then --key value overrides.
+    let mut cfg = match args.opt_str("preset") {
+        Some(name) => presets::by_name(&name).ok_or_else(|| {
+            Error::invalid(format!(
+                "unknown preset `{name}` (paper_resnet8|paper_resnet18|\
+                 scaled_micro|scaled_tiny|hetero_micro)"
+            ))
+        })?,
         None => FlConfig::default(),
     };
+    if let Some(path) = args.opt_str("config") {
+        loader::apply_file(&mut cfg, path)?;
+    }
     let csv = args.opt_str("csv");
     // Any remaining --key value pairs are config overrides.
     for (k, v) in args.options().clone() {
-        if k == "config" || k == "csv" || k == "artifacts" {
+        if k == "config" || k == "csv" || k == "artifacts" || k == "preset" {
             continue;
         }
         cfg.set(&k, &v)?;
@@ -88,14 +102,30 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.validate()?;
 
     let engine = Engine::new(artifacts)?;
+    let hetero = if cfg.hetero_ranks.is_empty() {
+        String::new()
+    } else {
+        format!(
+            " tiers={}",
+            cfg.hetero_ranks
+                .iter()
+                .map(|r| format!("r{r}"))
+                .collect::<Vec<_>>()
+                .join("/")
+        )
+    };
     println!(
         "run: tag={} codec={} clients={} ({}/round) rounds={} epochs={} \
-         lr={} alpha={} lda={} seed={} executor={} threads={}",
+         lr={} alpha={} lda={} seed={} executor={} threads={} window={} \
+         network={}:{}{}",
         cfg.tag, cfg.codec.label(), cfg.num_clients, cfg.clients_per_round,
         cfg.rounds, cfg.local_epochs, cfg.lr, cfg.lora_alpha, cfg.lda_alpha,
         cfg.seed, cfg.executor.label(),
         if cfg.threads == 0 { "auto".to_string() }
-        else { cfg.threads.to_string() }
+        else { cfg.threads.to_string() },
+        if cfg.window == 0 { "auto".to_string() }
+        else { cfg.window.to_string() },
+        cfg.network.label(), cfg.net_sharing.label(), hetero
     );
     let mut sim = Simulation::new(&engine, cfg)?;
     let mut rec = Recorder::new("train");
@@ -116,10 +146,22 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         summary.per_client_tcc_bytes / 1e6, summary.wall_s
     );
     println!(
-        "simulated wire time (edge LTE): {:.1}s with concurrent clients \
-         (slowest straggler/round) vs {:.1}s serial",
+        "simulated wire time ({} links, {}): {:.1}s with concurrent \
+         clients vs {:.1}s serial",
+        sim.config().network.label(), sim.config().net_sharing.label(),
         summary.sim_net_parallel_s, summary.sim_net_serial_s
     );
+    if !sim.tier_bytes().is_empty() {
+        let plan = sim.plan().expect("tier bytes imply a plan");
+        for (tier, bytes) in plan.tiers().iter().zip(sim.tier_bytes()) {
+            println!(
+                "tier r{}: {:.1} kB total traffic ({})",
+                tier.rank,
+                *bytes as f64 / 1e3,
+                tier.codec.name()
+            );
+        }
+    }
     if let Some(path) = csv {
         rec.write_csv(&path)?;
         println!("wrote {path}");

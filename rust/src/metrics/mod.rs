@@ -16,6 +16,11 @@ pub struct RoundRecord {
     pub train_loss: f64,
     /// Cumulative bytes moved (all clients, both directions).
     pub cum_bytes: u64,
+    /// Sampled clients that failed before uploading in the rounds this
+    /// record covers (everything since the previous record, so the
+    /// column sums to the run-level `Simulation::dropped_clients` even
+    /// when `eval_every` skips rounds).
+    pub dropped: u64,
     pub wall_ms: f64,
 }
 
@@ -61,13 +66,14 @@ impl Recorder {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out =
-            String::from("round,test_acc,test_loss,train_loss,cum_bytes,wall_ms\n");
+        let mut out = String::from(
+            "round,test_acc,test_loss,train_loss,cum_bytes,dropped,wall_ms\n",
+        );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{:.4},{:.4},{:.4},{},{:.1}\n",
+                "{},{:.4},{:.4},{:.4},{},{},{:.1}\n",
                 r.round, r.test_acc, r.test_loss, r.train_loss, r.cum_bytes,
-                r.wall_ms
+                r.dropped, r.wall_ms
             ));
         }
         out
@@ -88,6 +94,7 @@ impl Recorder {
                             ("test_loss", num(r.test_loss)),
                             ("train_loss", num(r.train_loss)),
                             ("cum_bytes", num(r.cum_bytes as f64)),
+                            ("dropped", num(r.dropped as f64)),
                             ("wall_ms", num(r.wall_ms)),
                         ])
                     })
@@ -131,6 +138,7 @@ mod tests {
                 test_loss: 2.0 - 0.1 * i as f64,
                 train_loss: 2.0,
                 cum_bytes: (i * 100) as u64,
+                dropped: i as u64 % 2,
                 wall_ms: 1.0,
             });
         }
@@ -159,7 +167,22 @@ mod tests {
         let j = rec().to_json();
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.at(&["name"]).unwrap().as_str().unwrap(), "t");
-        assert_eq!(parsed.at(&["rounds"]).unwrap().as_arr().unwrap().len(), 5);
+        let rounds = parsed.at(&["rounds"]).unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 5);
+        assert_eq!(
+            rounds[1].at(&["dropped"]).unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn csv_carries_dropped_column() {
+        let csv = rec().to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.split(',').any(|c| c == "dropped"), "{header}");
+        // Row for round 1 (dropped = 1): ...,cum_bytes,dropped,wall_ms
+        let row: Vec<&str> = csv.lines().nth(2).unwrap().split(',').collect();
+        assert_eq!(row[5], "1");
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod accounting;
 pub mod network;
 
 pub use accounting::{tcc_equation2, CommLedger, Direction};
-pub use network::NetworkModel;
+pub use network::{NetworkKind, NetworkModel, RoundLoad, Sharing};

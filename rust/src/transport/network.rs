@@ -7,6 +7,81 @@
 //! links (e.g. LTE: 10 Mbit/s up, 30 Mbit/s down, 40 ms RTT), and by
 //! [`crate::coordinator::Simulation`] to report a round's simulated
 //! duration under serial vs concurrent clients.
+//!
+//! Two link-sharing regimes ([`Sharing`]):
+//!
+//! * [`Sharing::Dedicated`] — every client owns an independent link at
+//!   the full profile rate; a concurrent round costs the slowest
+//!   straggler (max of per-client round trips).
+//! * [`Sharing::Shared`] — a round's in-flight clients contend for one
+//!   uplink and one downlink pipe (the cell-tower / campus-AP regime):
+//!   a concurrent round costs total-bits-over-capacity per direction,
+//!   so adding clients stops being free.
+//!
+//! The per-round accumulation is streaming ([`RoundLoad`]): the merge
+//! sink feeds each client's `(down, up)` bytes as it drains, nothing
+//! is buffered per client.
+
+/// How a round's concurrent clients share the physical link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Sharing {
+    /// Independent per-client links at the full profile rate.
+    #[default]
+    Dedicated,
+    /// One shared pipe per direction, split across in-flight clients.
+    Shared,
+}
+
+impl Sharing {
+    /// Parse `dedicated | shared`.
+    pub fn parse(s: &str) -> Option<Sharing> {
+        match s {
+            "dedicated" => Some(Sharing::Dedicated),
+            "shared" => Some(Sharing::Shared),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Sharing::Dedicated => "dedicated",
+            Sharing::Shared => "shared",
+        }
+    }
+}
+
+/// Link-profile selection, parseable from CLI/config strings (the
+/// `network = edge_lte | wifi` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetworkKind {
+    EdgeLte,
+    Wifi,
+}
+
+impl NetworkKind {
+    /// Parse `edge_lte | wifi`.
+    pub fn parse(s: &str) -> Option<NetworkKind> {
+        match s {
+            "edge_lte" | "lte" => Some(NetworkKind::EdgeLte),
+            "wifi" => Some(NetworkKind::Wifi),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetworkKind::EdgeLte => "edge_lte",
+            NetworkKind::Wifi => "wifi",
+        }
+    }
+
+    pub fn build(&self) -> NetworkModel {
+        match self {
+            NetworkKind::EdgeLte => NetworkModel::edge_lte(),
+            NetworkKind::Wifi => NetworkModel::wifi(),
+        }
+    }
+}
 
 /// Bandwidth/latency profile of one (symmetric across clients) link.
 ///
@@ -20,6 +95,10 @@
 /// let parallel = net.round_time_parallel(&loads); // slowest straggler
 /// assert!((serial - 3.0 * parallel).abs() < 1e-9); // identical clients
 /// assert!(parallel < serial);
+///
+/// // Under shared bandwidth, concurrent clients contend for the pipe.
+/// let shared = net.with_sharing(flocora::transport::Sharing::Shared);
+/// assert!(shared.round_time_parallel(&loads) > parallel);
 /// ```
 #[derive(Debug, Clone, Copy)]
 pub struct NetworkModel {
@@ -29,17 +108,35 @@ pub struct NetworkModel {
     pub down_bps: f64,
     /// One-way latency, seconds.
     pub latency_s: f64,
+    /// How concurrent clients share the link (default: dedicated).
+    pub sharing: Sharing,
 }
 
 impl NetworkModel {
     /// LTE-ish edge uplink profile.
     pub fn edge_lte() -> NetworkModel {
-        NetworkModel { up_bps: 10e6, down_bps: 30e6, latency_s: 0.02 }
+        NetworkModel {
+            up_bps: 10e6,
+            down_bps: 30e6,
+            latency_s: 0.02,
+            sharing: Sharing::Dedicated,
+        }
     }
 
     /// Campus WiFi profile.
     pub fn wifi() -> NetworkModel {
-        NetworkModel { up_bps: 80e6, down_bps: 150e6, latency_s: 0.005 }
+        NetworkModel {
+            up_bps: 80e6,
+            down_bps: 150e6,
+            latency_s: 0.005,
+            sharing: Sharing::Dedicated,
+        }
+    }
+
+    /// Same profile under a different link-sharing regime.
+    pub fn with_sharing(mut self, sharing: Sharing) -> NetworkModel {
+        self.sharing = sharing;
+        self
     }
 
     pub fn upload_time(&self, bytes: usize) -> f64 {
@@ -73,18 +170,88 @@ impl NetworkModel {
     /// one `(down_bytes, up_bytes)` pair per sampled client (`up_bytes
     /// == 0` for clients that dropped before uploading).
     pub fn round_time_serial(&self, loads: &[(usize, usize)]) -> f64 {
-        loads.iter().map(|&(d, u)| self.client_time(d, u)).sum()
+        self.accumulate(loads).serial_s()
     }
 
     /// Simulated duration of one round with every client in flight
-    /// concurrently: the server waits for the slowest straggler, so the
-    /// round costs the *max* per-client time, not the sum. This is the
-    /// regime the parallel client executor models.
+    /// concurrently. Under [`Sharing::Dedicated`] the server waits for
+    /// the slowest straggler (max, not sum) — the regime the parallel
+    /// client executor models. Under [`Sharing::Shared`] the round
+    /// costs total bits over pipe capacity per direction instead.
     pub fn round_time_parallel(&self, loads: &[(usize, usize)]) -> f64 {
-        loads
-            .iter()
-            .map(|&(d, u)| self.client_time(d, u))
-            .fold(0.0, f64::max)
+        self.accumulate(loads).parallel_s(self)
+    }
+
+    fn accumulate(&self, loads: &[(usize, usize)]) -> RoundLoad {
+        let mut acc = RoundLoad::new();
+        for &(down, up) in loads {
+            acc.add(self, down, up);
+        }
+        acc
+    }
+}
+
+/// Streaming accumulator for one round's network loads.
+///
+/// The round merge feeds each client's byte counts as its result
+/// drains through the sink; nothing per-client is retained, matching
+/// the engine's O(params + window) memory contract.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RoundLoad {
+    serial_s: f64,
+    slowest_s: f64,
+    down_bytes: u64,
+    up_bytes: u64,
+    uploads: usize,
+    clients: usize,
+}
+
+impl RoundLoad {
+    pub fn new() -> RoundLoad {
+        RoundLoad::default()
+    }
+
+    /// Fold in one client's `(down, up)` bytes (`up == 0` for a client
+    /// that dropped before uploading).
+    pub fn add(&mut self, net: &NetworkModel, down_bytes: usize,
+               up_bytes: usize) {
+        let t = net.client_time(down_bytes, up_bytes);
+        self.serial_s += t;
+        self.slowest_s = self.slowest_s.max(t);
+        self.down_bytes += down_bytes as u64;
+        self.up_bytes += up_bytes as u64;
+        if up_bytes > 0 {
+            self.uploads += 1;
+        }
+        self.clients += 1;
+    }
+
+    /// Clients one after another: sum of round trips (sharing-agnostic
+    /// — a lone client always owns the pipe).
+    pub fn serial_s(&self) -> f64 {
+        self.serial_s
+    }
+
+    /// All clients in flight concurrently, under `net`'s sharing
+    /// regime: slowest straggler (dedicated) or total-bits-over-
+    /// capacity per direction (shared).
+    pub fn parallel_s(&self, net: &NetworkModel) -> f64 {
+        match net.sharing {
+            Sharing::Dedicated => self.slowest_s,
+            Sharing::Shared => {
+                if self.clients == 0 {
+                    return 0.0;
+                }
+                let down = net.latency_s
+                    + self.down_bytes as f64 * 8.0 / net.down_bps;
+                let up = if self.uploads > 0 {
+                    net.latency_s + self.up_bytes as f64 * 8.0 / net.up_bps
+                } else {
+                    0.0
+                };
+                down + up
+            }
+        }
     }
 }
 
@@ -124,6 +291,8 @@ mod tests {
         let net = NetworkModel::edge_lte();
         assert_eq!(net.round_time_serial(&[]), 0.0);
         assert_eq!(net.round_time_parallel(&[]), 0.0);
+        let shared = net.with_sharing(Sharing::Shared);
+        assert_eq!(shared.round_time_parallel(&[]), 0.0);
     }
 
     #[test]
@@ -133,5 +302,48 @@ mod tests {
         let flocora = net.round_trip(700_000, 700_000);
         let fedavg = net.round_trip(44_700_000, 44_700_000);
         assert!(fedavg / flocora > 30.0);
+    }
+
+    #[test]
+    fn streaming_roundload_matches_batch_helpers() {
+        let net = NetworkModel::edge_lte();
+        let loads = [(5_000, 9_000), (5_000, 0), (5_000, 123_456)];
+        let mut acc = RoundLoad::new();
+        for &(d, u) in &loads {
+            acc.add(&net, d, u);
+        }
+        assert_eq!(acc.serial_s(), net.round_time_serial(&loads));
+        assert_eq!(acc.parallel_s(&net), net.round_time_parallel(&loads));
+    }
+
+    #[test]
+    fn shared_pipe_charges_total_bits_per_direction() {
+        let net = NetworkModel::edge_lte().with_sharing(Sharing::Shared);
+        let loads = [(1_000_000, 1_000_000); 4];
+        let t = net.round_time_parallel(&loads);
+        // 4 MB down at 30 Mbit/s + 4 MB up at 10 Mbit/s + 2 latencies.
+        let expect = (0.02 + 4_000_000.0 * 8.0 / 30e6)
+            + (0.02 + 4_000_000.0 * 8.0 / 10e6);
+        assert!((t - expect).abs() < 1e-9, "{t} vs {expect}");
+        // Contention: strictly worse than the dedicated-link max, but
+        // never worse than fully serial links (latency is pooled).
+        let dedicated = NetworkModel::edge_lte().round_time_parallel(&loads);
+        let serial = net.round_time_serial(&loads);
+        assert!(t > dedicated);
+        assert!(t < serial);
+    }
+
+    #[test]
+    fn kind_and_sharing_parse() {
+        assert_eq!(NetworkKind::parse("edge_lte"), Some(NetworkKind::EdgeLte));
+        assert_eq!(NetworkKind::parse("lte"), Some(NetworkKind::EdgeLte));
+        assert_eq!(NetworkKind::parse("wifi"), Some(NetworkKind::Wifi));
+        assert_eq!(NetworkKind::parse("5g"), None);
+        assert_eq!(NetworkKind::EdgeLte.label(), "edge_lte");
+        assert!(NetworkKind::Wifi.build().up_bps > 10e6);
+        assert_eq!(Sharing::parse("dedicated"), Some(Sharing::Dedicated));
+        assert_eq!(Sharing::parse("shared"), Some(Sharing::Shared));
+        assert_eq!(Sharing::parse("split"), None);
+        assert_eq!(Sharing::default(), Sharing::Dedicated);
     }
 }

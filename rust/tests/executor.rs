@@ -1,14 +1,26 @@
-//! Executor-parity tests: the serial and parallel round engines must be
-//! observationally identical — bit-for-bit — for any fixed seed. This is
-//! the determinism contract of `coordinator::executor` (per-client RNG
-//! from `(seed, round, cid)`, results merged in sampling order).
+//! Round-engine parity tests: the serial and windowed-parallel engines
+//! must be observationally identical — bit-for-bit — for any fixed seed
+//! and any out-of-order window. This is the determinism contract of
+//! `coordinator::executor` (per-client RNG from `(seed, round, cid)`,
+//! results streamed into the sink in sampling order), plus the
+//! streaming-memory contract (peak buffered results ≤ window) and the
+//! hetero-rank plan's parity against the reference round loop that
+//! `examples/hetero_ranks.rs` used to hand-roll.
 //!
 //! Requires `make artifacts`, like tests/integration.rs.
 
+use flocora::compression::{Codec, Fp32Codec};
 use flocora::config::FlConfig;
-use flocora::coordinator::{ExecutorKind, Simulation};
+use flocora::coordinator::executor::{ClientResult, Downloads,
+                                     ParallelExecutor, RoundContext};
+use flocora::coordinator::hetero::project_ranks;
+use flocora::coordinator::sink::RoundSink;
+use flocora::coordinator::{ClientExecutor, ExecutorKind, FedAvg,
+                           LocalTrainer, Simulation, UniformSampler};
+use flocora::data::lda_partition;
 use flocora::metrics::Recorder;
 use flocora::runtime::Engine;
+use flocora::util::rng::Rng;
 
 fn engine() -> std::rc::Rc<Engine> {
     thread_local! {
@@ -33,6 +45,22 @@ fn base_cfg() -> FlConfig {
     }
 }
 
+fn hetero_cfg() -> FlConfig {
+    FlConfig {
+        tag: "micro8_lora_fc_r8".into(),
+        num_clients: 12,
+        clients_per_round: 4,
+        rounds: 3,
+        local_epochs: 1,
+        lora_alpha: 64.0,
+        samples_per_client: 16,
+        test_samples: 40,
+        seed: 33,
+        hetero_ranks: vec![2, 4, 8],
+        ..FlConfig::default()
+    }
+}
+
 /// Full observable state of one finished run.
 struct Observed {
     global: Vec<f32>,
@@ -43,6 +71,7 @@ struct Observed {
     down_bytes: u64,
     per_round: Vec<u64>,
     dropped: u64,
+    tier_bytes: Vec<u64>,
     sim_net_parallel_s: f64,
 }
 
@@ -60,6 +89,7 @@ fn run(cfg: FlConfig) -> Observed {
         down_bytes: sim.ledger.down_bytes,
         per_round: sim.ledger.per_round.clone(),
         dropped: sim.dropped_clients,
+        tier_bytes: sim.tier_bytes().to_vec(),
         sim_net_parallel_s: summary.sim_net_parallel_s,
     }
 }
@@ -68,6 +98,12 @@ fn with_executor(mut cfg: FlConfig, kind: ExecutorKind, threads: usize)
                  -> FlConfig {
     cfg.executor = kind;
     cfg.threads = threads;
+    cfg
+}
+
+fn with_window(mut cfg: FlConfig, window: usize) -> FlConfig {
+    cfg.executor = ExecutorKind::Parallel;
+    cfg.window = window;
     cfg
 }
 
@@ -81,6 +117,7 @@ fn assert_identical(a: &Observed, b: &Observed, what: &str) {
     assert_eq!(a.down_bytes, b.down_bytes, "{what}: down_bytes");
     assert_eq!(a.per_round, b.per_round, "{what}: per-round ledger");
     assert_eq!(a.dropped, b.dropped, "{what}: dropout count");
+    assert_eq!(a.tier_bytes, b.tier_bytes, "{what}: per-tier bytes");
     assert_eq!(a.sim_net_parallel_s, b.sim_net_parallel_s,
                "{what}: simulated net time");
     // NaN-tolerant equality for the train loss (a fully-dropped final
@@ -108,6 +145,35 @@ fn thread_count_does_not_change_results() {
     let many = run(with_executor(base_cfg(), ExecutorKind::Parallel, 7));
     assert_identical(&one, &two, "1 vs 2 threads");
     assert_identical(&one, &many, "1 vs 7 threads");
+}
+
+#[test]
+fn window_size_does_not_change_results() {
+    // The streaming merge is bit-identical to the serial reference at
+    // any out-of-order window — window 1 (fully in-order production),
+    // a tight window, and one wider than the round.
+    let serial = run(with_executor(base_cfg(), ExecutorKind::Serial, 0));
+    let w1 = run(with_window(with_executor(base_cfg(),
+                                           ExecutorKind::Parallel, 4), 1));
+    let w2 = run(with_window(with_executor(base_cfg(),
+                                           ExecutorKind::Parallel, 4), 2));
+    let wide = run(with_window(with_executor(base_cfg(),
+                                             ExecutorKind::Parallel, 4), 64));
+    assert_identical(&serial, &w1, "serial vs window=1");
+    assert_identical(&serial, &w2, "serial vs window=2");
+    assert_identical(&serial, &wide, "serial vs window=64");
+}
+
+#[test]
+fn window_size_identical_under_dropout() {
+    let mut cfg = base_cfg();
+    cfg.dropout = 0.4;
+    cfg.rounds = 4;
+    let serial = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
+    let w1 = run(with_window(cfg.clone(), 1));
+    let w3 = run(with_window(cfg, 3));
+    assert_identical(&serial, &w1, "dropout, window=1");
+    assert_identical(&serial, &w3, "dropout, window=3");
 }
 
 #[test]
@@ -148,4 +214,166 @@ fn executors_identical_under_quantized_codec() {
     let serial = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
     let parallel = run(with_executor(cfg, ExecutorKind::Parallel, 3));
     assert_identical(&serial, &parallel, "q8 run");
+}
+
+/// In-order assertion sink that dawdles on every push, giving the
+/// workers every opportunity to run ahead of the merge — without the
+/// window gate they would buffer nearly the whole round here.
+struct SlowCountingSink {
+    next: usize,
+    clients: Vec<usize>,
+}
+
+impl RoundSink for SlowCountingSink {
+    fn push(&mut self, index: usize, result: ClientResult)
+            -> flocora::Result<()> {
+        assert_eq!(index, self.next, "sink saw an out-of-order push");
+        assert_eq!(result.cid, self.clients[index],
+                   "slot {index} carries the wrong client");
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        self.next += 1;
+        Ok(())
+    }
+}
+
+#[test]
+fn peak_buffered_results_never_exceed_window() {
+    let e = engine();
+    let cfg = base_cfg();
+    let session = e.session(&cfg.tag).unwrap();
+    let spec = session.spec.clone();
+    let federation = lda_partition(
+        cfg.num_clients,
+        cfg.samples_per_client,
+        spec.num_classes,
+        spec.image_size,
+        cfg.lda_alpha,
+        cfg.seed,
+    );
+    let (global, frozen) = session.init(cfg.seed).unwrap();
+    let codec = Fp32Codec;
+    let down_msg = codec.encode(&global, &spec.trainable_segments).unwrap();
+    let ctx = RoundContext {
+        session: &session,
+        codec: &codec,
+        federation: &federation,
+        frozen: &frozen,
+        downloads: Downloads::Homogeneous(&down_msg),
+        trainer: LocalTrainer {
+            local_epochs: 1,
+            lr: cfg.lr,
+            lora_scale: cfg.lora_scale(spec.rank),
+        },
+        cfg: &cfg,
+        round: 0,
+        plan: None,
+    };
+    let clients: Vec<usize> = (0..cfg.num_clients).collect();
+
+    for window in [1usize, 2, 3] {
+        let exec = ParallelExecutor::new(4).with_window(window);
+        let mut sink =
+            SlowCountingSink { next: 0, clients: clients.clone() };
+        exec.execute(&ctx, &clients, &mut sink).unwrap();
+        assert_eq!(sink.next, clients.len(), "sink missed pushes");
+        let peak = exec.peak_buffered();
+        assert!(peak >= 1, "window {window}: nothing ever buffered?");
+        assert!(
+            peak <= window,
+            "window {window}: {peak} results buffered simultaneously"
+        );
+    }
+}
+
+#[test]
+fn hetero_plan_is_bit_identical_across_executors() {
+    let serial = run(with_executor(hetero_cfg(), ExecutorKind::Serial, 0));
+    let parallel =
+        run(with_executor(hetero_cfg(), ExecutorKind::Parallel, 3));
+    let windowed = run(with_window(hetero_cfg(), 2));
+    assert_identical(&serial, &parallel, "hetero serial vs parallel");
+    assert_identical(&serial, &windowed, "hetero serial vs window=2");
+    // Tier accounting: three tiers, traffic everywhere, and the r=2
+    // tier's messages are strictly smaller than the r=8 tier's — so
+    // equal sampling would give it fewer bytes; just pin shape + sum.
+    assert_eq!(serial.tier_bytes.len(), 3);
+    assert_eq!(
+        serial.tier_bytes.iter().sum::<u64>(),
+        serial.total_bytes,
+        "tier bytes must partition total traffic"
+    );
+}
+
+#[test]
+fn hetero_engine_matches_reference_loop() {
+    // The semantics `examples/hetero_ranks.rs` used to hand-roll, under
+    // the engine's sampling/RNG contract: per-tier down-projection +
+    // codec round trip, tier-local training at alpha/r_tier, codec'd
+    // upload, up-projection, FedAvg in sampling order. The engine's
+    // hetero plan must reproduce it bit-for-bit.
+    let e = engine();
+    let cfg = hetero_cfg();
+
+    let mut sim = Simulation::new(&e, cfg.clone()).unwrap();
+    for _ in 0..cfg.rounds {
+        sim.round().unwrap();
+    }
+
+    let server = e.session(&cfg.tag).unwrap();
+    let tiers = [
+        e.session("micro8_lora_fc_r2").unwrap(),
+        e.session("micro8_lora_fc_r4").unwrap(),
+        e.session("micro8_lora_fc_r8").unwrap(),
+    ];
+    let server_segs = &server.spec.trainable_segments;
+    let federation = lda_partition(
+        cfg.num_clients,
+        cfg.samples_per_client,
+        server.spec.num_classes,
+        server.spec.image_size,
+        cfg.lda_alpha,
+        cfg.seed,
+    );
+    let (mut global, frozen) = server.init(cfg.seed).unwrap();
+    let mut sampler = UniformSampler::new(cfg.num_clients, cfg.seed);
+    let codec = Fp32Codec;
+
+    for round in 0..cfg.rounds {
+        let downs: Vec<Vec<f32>> = tiers
+            .iter()
+            .map(|sess| {
+                let segs = &sess.spec.trainable_segments;
+                let proj = project_ranks(&global, server_segs, segs).unwrap();
+                let msg = codec.encode(&proj, segs).unwrap();
+                codec.decode(&msg, segs).unwrap()
+            })
+            .collect();
+        let ids = sampler.sample(cfg.clients_per_round);
+        let lr = cfg.lr * cfg.lr_decay.powi(round as i32);
+        let mut agg = FedAvg::new(global.len());
+        for &cid in &ids {
+            let t = cid % tiers.len();
+            let sess = &tiers[t];
+            let segs = &sess.spec.trainable_segments;
+            let trainer = LocalTrainer {
+                local_epochs: cfg.local_epochs,
+                lr,
+                lora_scale: cfg.lora_alpha / sess.spec.rank as f32,
+            };
+            let mut crng =
+                Rng::for_client(cfg.seed, round as u64, cid as u64);
+            let out = trainer
+                .run(sess, &federation.clients[cid], &frozen,
+                     downs[t].clone(), &mut crng)
+                .unwrap();
+            let msg = codec.encode(&out.params, segs).unwrap();
+            let up = codec.decode(&msg, segs).unwrap();
+            let proj = project_ranks(&up, segs, server_segs).unwrap();
+            agg.add(&proj, out.samples as f64).unwrap();
+        }
+        global = agg.finish().unwrap();
+    }
+
+    assert_eq!(sim.global, global,
+               "hetero engine diverged from the reference loop");
 }
