@@ -151,5 +151,20 @@ fn main() {
     let st = bench("fl round, 8 clients, window=2", 1, iters,
                    || { sim.round().unwrap(); });
     println!("{}   ({:.2}x vs serial)", st.row(), serial_mean / st.mean_s);
+
+    // Straggler regime: tiered link/compute profiles + oversampled
+    // sampling (K·(1+β) drawn, late clients cancelled before they
+    // train). Cancellation skips real training work, so the row also
+    // wins wall-clock, not just simulated wire time.
+    let mut cfg = flocora::config::presets::by_name("straggler_micro")
+        .expect("preset");
+    cfg.local_epochs = 1;
+    cfg.samples_per_client = 32;
+    cfg.test_samples = 40;
+    let mut sim = Simulation::new(&engine, cfg).expect("sim");
+    let st = bench("fl round, straggler preset (oversample)", 1, iters,
+                   || { sim.round().unwrap(); });
+    println!("{}   ({} cancelled so far)", st.row(),
+             sim.cancelled_clients);
     println!("\nmicro bench OK");
 }

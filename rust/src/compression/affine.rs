@@ -73,6 +73,23 @@ pub fn segment_encoded_size(seg: &Segment, bits: u32) -> usize {
     }
 }
 
+/// Validate a quantized segment's row layout before using it to slice
+/// the payload: `quant_rows == Some(0)` would divide by zero, and a
+/// row count that does not divide `numel` would silently mis-shape
+/// every row after the first (a `debug_assert` before this fix — i.e.
+/// unchecked in release builds). Malformed layouts come from corrupt
+/// manifests, so they are an [`Error::invalid`], not a panic.
+fn check_quant_rows(seg: &Segment, rows: usize, dir: &str) -> Result<()> {
+    if rows == 0 || seg.numel % rows != 0 {
+        return Err(Error::invalid(format!(
+            "affine {dir}: segment {} has a malformed quant layout: \
+             {} elements in {rows} rows",
+            seg.name, seg.numel
+        )));
+    }
+    Ok(())
+}
+
 impl Codec for AffineCodec {
     fn name(&self) -> String {
         format!("q{}", self.bits)
@@ -97,7 +114,7 @@ impl Codec for AffineCodec {
                     }
                 }
                 Some(rows) => {
-                    debug_assert_eq!(seg.numel % rows, 0, "{}", seg.name);
+                    check_quant_rows(seg, rows, "encode")?;
                     let cols = seg.numel / rows;
                     let mut scales = Vec::with_capacity(rows);
                     let mut zps = Vec::with_capacity(rows);
@@ -144,6 +161,7 @@ impl Codec for AffineCodec {
                     }
                 }
                 Some(rows) => {
+                    check_quant_rows(seg, rows, "decode")?;
                     let cols = seg.numel / rows;
                     let mut scales = Vec::with_capacity(rows);
                     let mut zps = Vec::with_capacity(rows);
@@ -264,6 +282,32 @@ mod tests {
             .collect::<Vec<_>>();
         let out = c.decode(&c.encode(&v, &segs).unwrap(), &segs).unwrap();
         assert_eq!(out, v);
+    }
+
+    #[test]
+    fn malformed_quant_rows_rejected_not_panicking() {
+        let c = AffineCodec::new(8);
+        let v = randv(64, 7);
+        // rows = 0 used to divide by zero in encode and decode.
+        let zero_rows = vec![seg("z", 64, 0, Some(0))];
+        assert!(c.encode(&v, &zero_rows).is_err());
+        // numel % rows != 0 used to be a debug_assert (unchecked in
+        // release): 64 elements in 7 rows mis-shapes every row.
+        let ragged = vec![seg("r", 64, 0, Some(7))];
+        assert!(c.encode(&v, &ragged).is_err());
+        // Decode must reject the same layouts — a valid message
+        // decoded against a corrupt manifest, not just a bad encode.
+        let good = vec![seg("g", 64, 0, Some(8))];
+        let msg = c.encode(&v, &good).unwrap();
+        assert!(c.decode(&msg, &zero_rows).is_err());
+        assert!(c.decode(&msg, &ragged).is_err());
+        // The error is typed, not a bare panic/parse failure.
+        match c.encode(&v, &zero_rows) {
+            Err(crate::error::Error::Invalid(m)) => {
+                assert!(m.contains("quant layout"), "{m}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
     }
 
     #[test]

@@ -7,14 +7,27 @@ use std::path::Path;
 use crate::config::FlConfig;
 use crate::error::{Error, Result};
 
+/// Strip a trailing `# comment`, honouring double quotes: a `#`
+/// inside a quoted value (`tag = "run#3"`) is data, not a comment.
+/// (The pre-fix loader cut at the first `#` anywhere, truncating the
+/// value to `"run`.) An unterminated quote swallows the rest of the
+/// line as value text — `cfg.set` rejects it downstream if malformed.
+fn strip_comment(raw: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in raw.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &raw[..i],
+            _ => {}
+        }
+    }
+    raw
+}
+
 /// Parse `key = value` lines into an existing config.
 pub fn apply_str(cfg: &mut FlConfig, text: &str) -> Result<()> {
     for (lineno, raw) in text.lines().enumerate() {
-        let line = match raw.find('#') {
-            Some(i) => &raw[..i],
-            None => raw,
-        }
-        .trim();
+        let line = strip_comment(raw).trim();
         if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
             continue;
         }
@@ -69,6 +82,25 @@ mod tests {
         assert_eq!(cfg.rounds, 30);
         assert_eq!(cfg.codec, CodecKind::Affine(8));
         assert_eq!(cfg.lora_alpha, 128.0);
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_data_not_comment() {
+        let mut cfg = FlConfig::default();
+        apply_str(
+            &mut cfg,
+            "tag = \"run#3\"          # trailing comment still stripped\n\
+             rounds = 9 # plain comments too\n\
+             # and full-line comments\n",
+        )
+        .unwrap();
+        // Pre-fix, the `#` cut first and the tag truncated to `run`.
+        assert_eq!(cfg.tag, "run#3");
+        assert_eq!(cfg.rounds, 9);
+        // Round trip: a written value with `#` survives re-parsing.
+        let mut again = FlConfig::default();
+        apply_str(&mut again, &format!("tag = \"{}\"", cfg.tag)).unwrap();
+        assert_eq!(again.tag, cfg.tag);
     }
 
     #[test]

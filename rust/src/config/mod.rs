@@ -8,8 +8,9 @@ pub mod presets;
 
 use crate::compression::CodecKind;
 use crate::coordinator::executor::ExecutorKind;
+use crate::coordinator::sampler::SamplerKind;
 use crate::error::{Error, Result};
-use crate::transport::{NetworkKind, Sharing};
+use crate::transport::{NetworkKind, ProfileKind, Sharing};
 
 /// Full description of one FL run.
 #[derive(Debug, Clone)]
@@ -59,6 +60,20 @@ pub struct FlConfig {
     /// Link-sharing regime for the concurrent-clients wire time
     /// (`dedicated | shared`).
     pub net_sharing: Sharing,
+    /// Per-round client selection strategy
+    /// (`uniform | latency_biased | oversample_k`). `uniform` is
+    /// bit-identical to the pre-strategy sampler.
+    pub sampler: SamplerKind,
+    /// Oversampling fraction for `sampler = oversample_k`: each round
+    /// draws `ceil(K·(1+β))` clients, accepts the first K expected
+    /// uploads and cancels the stragglers. `0.0` reproduces `uniform`
+    /// bit-for-bit. Ignored by the other strategies.
+    pub oversample_beta: f64,
+    /// Per-client link/compute profile table (`uniform | tiered`).
+    /// `uniform` keeps every client on the base `network` link
+    /// (pre-profile behaviour); `tiered` splits clients round-robin
+    /// over fast/mid/slow device classes with seeded jitter.
+    pub client_profiles: ProfileKind,
     /// Rank tiers for a heterogeneous federation, e.g. `[2, 4, 8]`
     /// (clients are assigned round-robin by id). Empty = homogeneous.
     /// The server tag must be a LoRA variant; each tier needs the
@@ -93,6 +108,9 @@ impl Default for FlConfig {
             window: 0,
             network: NetworkKind::EdgeLte,
             net_sharing: Sharing::Dedicated,
+            sampler: SamplerKind::Uniform,
+            oversample_beta: 0.0,
+            client_profiles: ProfileKind::Uniform,
             hetero_ranks: Vec::new(),
             hetero_codecs: Vec::new(),
         }
@@ -155,6 +173,10 @@ impl FlConfig {
         if !(self.lr_decay > 0.0 && self.lr_decay <= 1.0) {
             return Err(Error::invalid("lr_decay must be in (0, 1]"));
         }
+        if !(self.oversample_beta >= 0.0 && self.oversample_beta.is_finite())
+        {
+            return Err(Error::invalid("oversample_beta must be >= 0"));
+        }
         if self.hetero_ranks.iter().any(|&r| r == 0) {
             return Err(Error::invalid("hetero_ranks entries must be > 0"));
         }
@@ -207,6 +229,24 @@ impl FlConfig {
                         "unknown net_sharing `{value}` (dedicated|shared)"
                     ))
                 })?
+            }
+            "sampler" => {
+                self.sampler = SamplerKind::parse(value).ok_or_else(|| {
+                    Error::parse(format!(
+                        "unknown sampler `{value}` \
+                         (uniform|latency_biased|oversample_k)"
+                    ))
+                })?
+            }
+            "oversample_beta" => self.oversample_beta = p(key, value)?,
+            "client_profiles" => {
+                self.client_profiles =
+                    ProfileKind::parse(value).ok_or_else(|| {
+                        Error::parse(format!(
+                            "unknown client_profiles `{value}` \
+                             (uniform|tiered)"
+                        ))
+                    })?
             }
             "hetero_ranks" => {
                 self.hetero_ranks = parse_list(key, value, |v| {
@@ -287,6 +327,29 @@ mod tests {
         c.validate().unwrap();
         assert!(c.set("network", "5g").is_err());
         assert!(c.set("net_sharing", "split").is_err());
+    }
+
+    #[test]
+    fn sampler_and_profile_knobs_parse_and_validate() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.sampler, SamplerKind::Uniform);
+        assert_eq!(c.oversample_beta, 0.0);
+        assert_eq!(c.client_profiles, ProfileKind::Uniform);
+        c.set("sampler", "oversample_k").unwrap();
+        c.set("oversample_beta", "0.5").unwrap();
+        c.set("client_profiles", "tiered").unwrap();
+        assert_eq!(c.sampler, SamplerKind::OversampleK);
+        assert_eq!(c.oversample_beta, 0.5);
+        assert_eq!(c.client_profiles, ProfileKind::Tiered);
+        c.validate().unwrap();
+        c.set("sampler", "latency_biased").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("sampler", "fastest").is_err());
+        assert!(c.set("client_profiles", "chaos").is_err());
+        assert!(c.set("oversample_beta", "x").is_err());
+        // Negative beta survives parsing but fails validation.
+        c.set("oversample_beta", "-0.1").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

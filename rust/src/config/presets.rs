@@ -10,6 +10,8 @@
 use crate::compression::CodecKind;
 use crate::config::FlConfig;
 use crate::coordinator::executor::ExecutorKind;
+use crate::coordinator::sampler::SamplerKind;
+use crate::transport::ProfileKind;
 
 /// Paper §IV main setup: ResNet-8, CIFAR-10-scale, LDA 0.5, 100 rounds.
 pub fn paper_resnet8(rank: usize, codec: CodecKind) -> FlConfig {
@@ -118,6 +120,35 @@ pub fn hetero_micro() -> FlConfig {
     }
 }
 
+/// Straggler regime on micro8: tiered link/compute profiles (5 of 16
+/// clients are ~8× slow) with oversampled participation — each round
+/// draws `K·(1+β)` clients and the server cancels the expected
+/// stragglers once K uploads are in. The preset is the measurable
+/// form of the ROADMAP's "straggler-aware sampling" item:
+/// `sim_net_parallel_s` under `oversample_k` must beat `uniform` on
+/// the same seed (pinned in `tests/executor.rs`).
+pub fn straggler_micro() -> FlConfig {
+    FlConfig {
+        tag: "micro8_lora_fc_r4".into(),
+        num_clients: 16,
+        clients_per_round: 4,
+        rounds: 24,
+        local_epochs: 2,
+        lr: 0.02,
+        lora_alpha: 64.0,
+        samples_per_client: 48,
+        test_samples: 240,
+        eval_every: 4,
+        sampler: SamplerKind::OversampleK,
+        oversample_beta: 0.5,
+        client_profiles: ProfileKind::Tiered,
+        // Straggler cost is a fan-out phenomenon; keep the engine that
+        // models it (results stay bit-identical to serial).
+        executor: ExecutorKind::Parallel,
+        ..FlConfig::default()
+    }
+}
+
 /// Look a preset up by CLI name (`flocora train --preset NAME`).
 pub fn by_name(name: &str) -> Option<FlConfig> {
     match name {
@@ -130,6 +161,7 @@ pub fn by_name(name: &str) -> Option<FlConfig> {
             Some(scaled_tiny("tiny8_lora_fc_r8", 8, CodecKind::Fp32))
         }
         "hetero_micro" => Some(hetero_micro()),
+        "straggler_micro" => Some(straggler_micro()),
         _ => None,
     }
 }
@@ -179,9 +211,23 @@ mod tests {
     }
 
     #[test]
+    fn straggler_preset_oversamples_tiered_clients() {
+        let cfg = straggler_micro();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.sampler, SamplerKind::OversampleK);
+        assert_eq!(cfg.client_profiles, ProfileKind::Tiered);
+        assert!(cfg.oversample_beta > 0.0);
+        // K·(1+β) must fit in the pool with room to cancel.
+        let draw = (cfg.clients_per_round as f64
+            * (1.0 + cfg.oversample_beta)).ceil() as usize;
+        assert!(draw > cfg.clients_per_round);
+        assert!(draw <= cfg.num_clients);
+    }
+
+    #[test]
     fn presets_resolve_by_name() {
         for name in ["paper_resnet8", "paper_resnet18", "scaled_micro",
-                     "scaled_tiny", "hetero_micro"] {
+                     "scaled_tiny", "hetero_micro", "straggler_micro"] {
             let cfg = by_name(name).unwrap_or_else(|| {
                 panic!("preset {name} missing")
             });

@@ -122,6 +122,11 @@ pub struct RoundContext<'a> {
     /// Per-client rank-tier plan; `None` = homogeneous round. Must be
     /// `Some` exactly when `downloads` is [`Downloads::Tiered`].
     pub plan: Option<&'a ClientPlan>,
+    /// Sorted client ids the server already decided to cancel this
+    /// round (oversampled rounds end at the K-th accepted upload; the
+    /// cut is planned on the coordinator from expected round trips, so
+    /// it is deterministic under any executor). Empty = nobody.
+    pub cancelled: &'a [usize],
 }
 
 /// What one sampled client hands to the round sink.
@@ -130,8 +135,13 @@ pub struct ClientResult {
     pub cid: usize,
     /// Bytes this client pulled (its tier's download message).
     pub down_bytes: usize,
-    /// `None` if the client failed before uploading (dropout injection).
+    /// `None` if the client failed before uploading (dropout
+    /// injection), or if the server cancelled it (`cancelled`).
     pub update: Option<ClientUpdate>,
+    /// The server cut this client mid-round (oversampled round already
+    /// had its K uploads). Distinct from a dropout: the client was
+    /// healthy, the round just ended without it.
+    pub cancelled: bool,
 }
 
 /// A surviving client's contribution.
@@ -173,6 +183,18 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
         };
     let segments = &session.spec.trainable_segments;
     let down_bytes = down_msg.size_bytes();
+
+    // Cancelled by the server before training: the download happened
+    // (the round was in flight), but no compute or upload is spent —
+    // cancellation is a real wall-clock win, not just bookkeeping.
+    if ctx.cancelled.binary_search(&cid).is_ok() {
+        return Ok(ClientResult {
+            cid,
+            down_bytes,
+            update: None,
+            cancelled: true,
+        });
+    }
     let start = codec.decode(down_msg, segments)?;
 
     // All client randomness flows from (seed, round, cid) — stable under
@@ -184,7 +206,12 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
     // before uploading (crash/network loss). FedAvg proceeds with the
     // survivors — the aggregation-agnostic loop needs no special casing.
     if ctx.cfg.dropout > 0.0 && crng.f64() < ctx.cfg.dropout {
-        return Ok(ClientResult { cid, down_bytes, update: None });
+        return Ok(ClientResult {
+            cid,
+            down_bytes,
+            update: None,
+            cancelled: false,
+        });
     }
 
     let trainer = LocalTrainer { lora_scale, ..ctx.trainer };
@@ -223,6 +250,7 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
             mean_loss: outcome.mean_loss,
             mean_acc: outcome.mean_acc,
         }),
+        cancelled: false,
     })
 }
 

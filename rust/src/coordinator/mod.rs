@@ -39,7 +39,8 @@ pub use aggregator::FedAvg;
 pub use executor::{ClientExecutor, ExecutorKind, ParallelExecutor,
                    SerialExecutor};
 pub use hetero::{ClientPlan, PlanTier};
-pub use sampler::UniformSampler;
+pub use sampler::{LatencyBiasedSampler, OversampleSampler, Sampler,
+                  SamplerKind, UniformSampler};
 pub use server::{RunSummary, Simulation};
 pub use sink::{collect_round, RoundSink, VecSink};
 pub use trainer::LocalTrainer;

@@ -1,7 +1,79 @@
-//! Client sampling: uniform without replacement (FedAvg's subset `K`
-//! of the client pool `C`, paper §II-A).
+//! Client sampling strategies.
+//!
+//! FedAvg samples a subset `K` of the client pool `C` each round
+//! (paper §II-A). With per-client link/compute profiles
+//! ([`crate::transport::ClientProfiles`]) the *strategy* becomes a
+//! lever against stragglers, so sampling is a trait ([`Sampler`]) with
+//! three implementations (the `sampler` config knob):
+//!
+//! * [`UniformSampler`] — uniform without replacement; the reference,
+//!   bit-identical to the pre-trait behaviour.
+//! * [`LatencyBiasedSampler`] — weight ∝ inverse expected round trip,
+//!   so slow clients are sampled less often but never starved (every
+//!   weight stays positive).
+//! * [`OversampleSampler`] — draws `K · (1 + β)` clients uniformly;
+//!   the server accepts the first `K` expected uploads and cancels the
+//!   stragglers (see `coordinator::server`). Shares the uniform
+//!   sampler's RNG stream, so `β = 0` is bit-identical to
+//!   [`UniformSampler`].
+//!
+//! Sampling runs on the coordinator thread *before* the executor fans
+//! work out, so a sampler's mutable stream never races — and the
+//! sorted order it returns is exactly the order the round sink drains
+//! results in (the streaming merge's `push(index, ..)` contract is
+//! defined against this slice, see `coordinator::sink`).
 
 use crate::util::rng::Rng;
+
+/// Stream-salt shared by [`UniformSampler`] and [`OversampleSampler`]
+/// so the latter at `β = 0` replays the former's draws exactly.
+const UNIFORM_SALT: u64 = 0x5A4D_7E3A;
+
+/// Per-round client selection strategy.
+///
+/// Contract: `sample(k)` returns distinct in-range client ids, sorted
+/// ascending, at least `k` of them when the pool allows (oversampling
+/// strategies may return more — the server then accepts the first `k`
+/// uploads and cancels the rest). Implementations own their RNG
+/// stream, so a run's sampling sequence depends only on the seed.
+pub trait Sampler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Sample one round's client ids (sorted, distinct).
+    fn sample(&mut self, k: usize) -> Vec<usize>;
+}
+
+/// Sampler selection, parseable from CLI/config strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplerKind {
+    /// Uniform without replacement (the reference).
+    #[default]
+    Uniform,
+    /// Weight ∝ inverse expected round trip on the client's profile.
+    LatencyBiased,
+    /// Uniformly oversample `K·(1+β)`; late clients are cancelled.
+    OversampleK,
+}
+
+impl SamplerKind {
+    /// Parse `uniform | latency_biased | oversample_k`.
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s {
+            "uniform" => Some(SamplerKind::Uniform),
+            "latency_biased" => Some(SamplerKind::LatencyBiased),
+            "oversample_k" => Some(SamplerKind::OversampleK),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SamplerKind::Uniform => "uniform",
+            SamplerKind::LatencyBiased => "latency_biased",
+            SamplerKind::OversampleK => "oversample_k",
+        }
+    }
+}
 
 /// Uniform-without-replacement sampler with its own RNG stream.
 pub struct UniformSampler {
@@ -11,18 +83,127 @@ pub struct UniformSampler {
 
 impl UniformSampler {
     pub fn new(num_clients: usize, seed: u64) -> UniformSampler {
-        UniformSampler { rng: Rng::new(seed ^ 0x5A4D_7E3A), num_clients }
+        UniformSampler { rng: Rng::new(seed ^ UNIFORM_SALT), num_clients }
     }
 
     /// Sample `k` distinct client ids for one round (sorted for
-    /// deterministic iteration order downstream). Sampling runs on the
-    /// coordinator thread *before* the executor fans work out, so the
-    /// sampler's mutable stream never races — and the sorted order is
-    /// exactly the order the round sink drains results in (the
-    /// streaming merge's `push(index, ..)` contract is defined against
-    /// this slice, see `coordinator::sink`).
+    /// deterministic iteration order downstream).
     pub fn sample(&mut self, k: usize) -> Vec<usize> {
         let mut ids = self.rng.choose_k(self.num_clients, k);
+        ids.sort_unstable();
+        ids
+    }
+}
+
+impl Sampler for UniformSampler {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn sample(&mut self, k: usize) -> Vec<usize> {
+        UniformSampler::sample(self, k)
+    }
+}
+
+/// Weighted sampler: per-client weight ∝ inverse expected round trip,
+/// drawn without replacement.
+///
+/// Slow clients keep a positive weight, so over enough rounds every
+/// client still participates (no starvation — asserted by the property
+/// tests); they just stop dominating the straggler max every round.
+pub struct LatencyBiasedSampler {
+    rng: Rng,
+    weights: Vec<f64>,
+}
+
+impl LatencyBiasedSampler {
+    /// `weights[cid]` is client `cid`'s sampling weight (the server
+    /// passes inverse expected round trips). Panics if any weight is
+    /// not finite and positive — a zero weight would silently starve a
+    /// client, which is a construction bug, not a runtime condition.
+    pub fn new(weights: Vec<f64>, seed: u64) -> LatencyBiasedSampler {
+        assert!(
+            !weights.is_empty()
+                && weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "latency-biased sampling needs finite positive weights"
+        );
+        LatencyBiasedSampler { rng: Rng::new(seed ^ 0x17B9_C3D5), weights }
+    }
+}
+
+impl Sampler for LatencyBiasedSampler {
+    fn name(&self) -> &'static str {
+        "latency_biased"
+    }
+
+    fn sample(&mut self, k: usize) -> Vec<usize> {
+        let n = self.weights.len();
+        assert!(k <= n, "cannot sample {k} of {n} clients");
+        // K passes of roulette selection over a scratch copy, zeroing
+        // picked entries: O(n·k) with both small (n = pool size).
+        let mut w = self.weights.clone();
+        let mut ids = Vec::with_capacity(k);
+        for _ in 0..k {
+            let total: f64 = w.iter().sum();
+            let mut x = self.rng.f64() * total;
+            let mut pick = None;
+            for (i, &wi) in w.iter().enumerate() {
+                if wi <= 0.0 {
+                    continue;
+                }
+                pick = Some(i);
+                if x < wi {
+                    break;
+                }
+                x -= wi;
+            }
+            // The loop always sees >= n - k + 1 > 0 positive entries;
+            // a floating-point tail lands on the last one.
+            let pick = pick.expect("no positive weight left");
+            ids.push(pick);
+            w[pick] = 0.0;
+        }
+        ids.sort_unstable();
+        ids
+    }
+}
+
+/// Uniformly oversamples `ceil(K·(1+β))` clients (capped at the pool
+/// size); the server completes the round at the K-th accepted upload
+/// and cancels the rest.
+pub struct OversampleSampler {
+    rng: Rng,
+    num_clients: usize,
+    beta: f64,
+}
+
+impl OversampleSampler {
+    /// `beta >= 0` is the oversampling fraction (`0` reproduces
+    /// [`UniformSampler`] bit-for-bit: same stream salt, same draws).
+    pub fn new(num_clients: usize, seed: u64, beta: f64)
+               -> OversampleSampler {
+        assert!(beta >= 0.0 && beta.is_finite(), "beta must be >= 0");
+        OversampleSampler {
+            rng: Rng::new(seed ^ UNIFORM_SALT),
+            num_clients,
+            beta,
+        }
+    }
+
+    /// How many ids one round draws for a target of `k` uploads.
+    pub fn draw_count(&self, k: usize) -> usize {
+        let extra = (k as f64 * self.beta).ceil() as usize;
+        (k + extra).min(self.num_clients)
+    }
+}
+
+impl Sampler for OversampleSampler {
+    fn name(&self) -> &'static str {
+        "oversample_k"
+    }
+
+    fn sample(&mut self, k: usize) -> Vec<usize> {
+        let mut ids = self.rng.choose_k(self.num_clients, self.draw_count(k));
         ids.sort_unstable();
         ids
     }
@@ -31,6 +212,24 @@ impl UniformSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kind_parses_and_labels() {
+        assert_eq!(SamplerKind::parse("uniform"), Some(SamplerKind::Uniform));
+        assert_eq!(
+            SamplerKind::parse("latency_biased"),
+            Some(SamplerKind::LatencyBiased)
+        );
+        assert_eq!(
+            SamplerKind::parse("oversample_k"),
+            Some(SamplerKind::OversampleK)
+        );
+        assert_eq!(SamplerKind::parse("fastest"), None);
+        assert_eq!(SamplerKind::Uniform.label(), "uniform");
+        assert_eq!(SamplerKind::LatencyBiased.label(), "latency_biased");
+        assert_eq!(SamplerKind::OversampleK.label(), "oversample_k");
+        assert_eq!(SamplerKind::default(), SamplerKind::Uniform);
+    }
 
     #[test]
     fn distinct_sorted_in_range() {
@@ -69,5 +268,77 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&b| b), "sampler starved some client");
+    }
+
+    #[test]
+    fn oversample_beta_zero_replays_uniform_exactly() {
+        let mut uni = UniformSampler::new(40, 11);
+        let mut over = OversampleSampler::new(40, 11, 0.0);
+        for round in 0..50 {
+            assert_eq!(
+                UniformSampler::sample(&mut uni, 6),
+                Sampler::sample(&mut over, 6),
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversample_draw_counts() {
+        let s = OversampleSampler::new(16, 1, 0.5);
+        assert_eq!(s.draw_count(4), 6);
+        assert_eq!(s.draw_count(3), 5); // ceil(1.5) extra
+        assert_eq!(s.draw_count(16), 16); // capped at the pool
+        let s0 = OversampleSampler::new(16, 1, 0.0);
+        assert_eq!(s0.draw_count(4), 4);
+    }
+
+    #[test]
+    fn oversample_ids_distinct_sorted_in_range() {
+        let mut s = OversampleSampler::new(30, 5, 0.4);
+        for _ in 0..40 {
+            let ids = Sampler::sample(&mut s, 5);
+            assert_eq!(ids.len(), 7);
+            assert!(ids.windows(2).all(|w| w[0] < w[1]));
+            assert!(ids.iter().all(|&i| i < 30));
+        }
+    }
+
+    #[test]
+    fn latency_biased_prefers_fast_but_never_starves() {
+        // Client 0 is 10x faster (weight 10); clients 1..9 equal.
+        let mut weights = vec![1.0; 10];
+        weights[0] = 10.0;
+        let mut s = LatencyBiasedSampler::new(weights, 9);
+        let mut counts = vec![0usize; 10];
+        for _ in 0..400 {
+            for id in Sampler::sample(&mut s, 3) {
+                counts[id] += 1;
+            }
+        }
+        // The fast client appears far more often than any slow one...
+        let max_slow = counts[1..].iter().copied().max().unwrap();
+        assert!(counts[0] > 2 * max_slow, "{counts:?}");
+        // ...but every slow client still participates.
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn latency_biased_sorted_distinct_and_deterministic() {
+        let w = vec![3.0, 1.0, 1.0, 0.5, 2.0, 1.0];
+        let mut a = LatencyBiasedSampler::new(w.clone(), 4);
+        let mut b = LatencyBiasedSampler::new(w, 4);
+        for _ in 0..30 {
+            let ids = Sampler::sample(&mut a, 3);
+            assert_eq!(ids, Sampler::sample(&mut b, 3));
+            assert_eq!(ids.len(), 3);
+            assert!(ids.windows(2).all(|p| p[0] < p[1]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive weights")]
+    fn latency_biased_rejects_zero_weights() {
+        LatencyBiasedSampler::new(vec![1.0, 0.0], 1);
     }
 }

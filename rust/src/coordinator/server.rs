@@ -30,15 +30,18 @@ use crate::coordinator::aggregator::FedAvg;
 use crate::coordinator::executor::{ClientExecutor, ClientResult,
                                    Downloads, RoundContext};
 use crate::coordinator::hetero::{ClientPlan, PlanTier};
-use crate::coordinator::sampler::UniformSampler;
+use crate::coordinator::sampler::{LatencyBiasedSampler, OversampleSampler,
+                                  Sampler, SamplerKind, UniformSampler};
 use crate::coordinator::sink::RoundSink;
 use crate::coordinator::trainer::LocalTrainer;
 use crate::data::batcher::Tail;
 use crate::data::{lda_partition, BatchIter, Federation, TestSet};
 use crate::error::{Error, Result};
-use crate::metrics::{Recorder, RoundRecord};
+use crate::metrics::{p50, Recorder, RoundRecord};
 use crate::runtime::{Engine, ModelSession};
-use crate::transport::{CommLedger, Direction, NetworkModel, RoundLoad};
+use crate::transport::{ClientProfiles, CommLedger, Direction, NetworkModel,
+                       RoundLoad};
+use crate::util::rng::Rng;
 
 /// Aggregate results of one run.
 #[derive(Debug, Clone)]
@@ -61,6 +64,15 @@ pub struct RunSummary {
     /// total-bits-over-capacity on a shared pipe (see
     /// [`crate::transport::Sharing`]).
     pub sim_net_parallel_s: f64,
+    /// Sampled clients the server cancelled across the run
+    /// (`sampler = oversample_k` ends each round at the K-th accepted
+    /// upload; 0 for the other strategies).
+    pub cancelled_clients: u64,
+    /// Median simulated client round-trip (profiled wire + compute)
+    /// over every client the server waited on, whole run.
+    pub sim_client_p50_s: f64,
+    /// Slowest simulated client round-trip seen in the run.
+    pub sim_client_max_s: f64,
 }
 
 /// One federated-learning simulation.
@@ -100,9 +112,11 @@ pub struct Simulation {
     test: TestSet,
     codec: Box<dyn Codec>,
     executor: Box<dyn ClientExecutor>,
-    sampler: UniformSampler,
-    /// Link profile behind the simulated round-time report.
+    sampler: Box<dyn Sampler>,
+    /// Base link profile behind the simulated round-time report.
     net: NetworkModel,
+    /// Per-client link/compute deviations from the base link.
+    profiles: ClientProfiles,
     /// Rank-tier plan (`hetero_ranks`); `None` = homogeneous.
     plan: Option<ClientPlan>,
     /// Bytes moved per tier (down + up), indexed like the plan's
@@ -118,10 +132,17 @@ pub struct Simulation {
     rounds_done: usize,
     last_train_loss: f64,
     last_round_dropped: u64,
+    last_round_cancelled: u64,
+    /// Simulated round-trip of every client the server waited on in
+    /// the most recent round (bounded by clients-per-round).
+    last_round_times: Vec<f64>,
     sim_net_serial_s: f64,
     sim_net_parallel_s: f64,
     /// Clients that failed mid-round (failure injection diagnostics).
     pub dropped_clients: u64,
+    /// Clients the server cancelled after their round already had K
+    /// uploads (`sampler = oversample_k` only).
+    pub cancelled_clients: u64,
 }
 
 impl Simulation {
@@ -187,11 +208,37 @@ impl Simulation {
         };
         let tier_bytes = vec![0u64; plan.as_ref()
             .map_or(0, |p| p.tiers().len())];
+        let net = cfg.network.build().with_sharing(cfg.net_sharing);
+        let profiles = cfg.client_profiles.build(cfg.num_clients, cfg.seed);
+        let sampler: Box<dyn Sampler> = match cfg.sampler {
+            SamplerKind::Uniform => {
+                Box::new(UniformSampler::new(cfg.num_clients, cfg.seed))
+            }
+            SamplerKind::LatencyBiased => {
+                // Weight ∝ inverse expected round trip on a nominal
+                // 1 MB message each way — the bias only needs relative
+                // speeds, not the exact payload.
+                const NOMINAL: usize = 1_000_000;
+                let weights = (0..cfg.num_clients)
+                    .map(|cid| {
+                        1.0 / profiles.client_time(&net, cid, NOMINAL,
+                                                   NOMINAL)
+                    })
+                    .collect();
+                Box::new(LatencyBiasedSampler::new(weights, cfg.seed))
+            }
+            SamplerKind::OversampleK => Box::new(OversampleSampler::new(
+                cfg.num_clients,
+                cfg.seed,
+                cfg.oversample_beta,
+            )),
+        };
         Ok(Simulation {
-            sampler: UniformSampler::new(cfg.num_clients, cfg.seed),
+            sampler,
             codec: cfg.codec.build(),
             executor: cfg.executor.build(cfg.threads, cfg.window),
-            net: cfg.network.build().with_sharing(cfg.net_sharing),
+            net,
+            profiles,
             plan,
             tier_bytes,
             cfg,
@@ -205,9 +252,12 @@ impl Simulation {
             rounds_done: 0,
             last_train_loss: f64::NAN,
             last_round_dropped: 0,
+            last_round_cancelled: 0,
+            last_round_times: Vec::new(),
             sim_net_serial_s: 0.0,
             sim_net_parallel_s: 0.0,
             dropped_clients: 0,
+            cancelled_clients: 0,
         })
     }
 
@@ -233,6 +283,16 @@ impl Simulation {
     /// Clients dropped in the most recent round.
     pub fn last_round_dropped(&self) -> u64 {
         self.last_round_dropped
+    }
+
+    /// Clients the server cancelled in the most recent round.
+    pub fn last_round_cancelled(&self) -> u64 {
+        self.last_round_cancelled
+    }
+
+    /// The per-client profile table of this federation.
+    pub fn profiles(&self) -> &ClientProfiles {
+        &self.profiles
     }
 
     /// Swap the link profile used for the simulated round-time report
@@ -295,6 +355,17 @@ impl Simulation {
             None => Downloads::Tiered(&tier_msgs),
         };
         let client_ids = self.sampler.sample(self.cfg.clients_per_round);
+        // Oversampling strategies return more ids than the round
+        // needs; plan which stragglers to cancel *now*, from expected
+        // round trips — deterministic under any executor.
+        let cancelled_ids = if client_ids.len()
+            > self.cfg.clients_per_round
+        {
+            self.plan_cancellations(&client_ids, shared_msg.as_ref(),
+                                    &tier_msgs)
+        } else {
+            Vec::new()
+        };
 
         // Per-round learning rate under the multiplicative schedule.
         let lr = self.cfg.lr
@@ -311,12 +382,15 @@ impl Simulation {
             ledger: &mut self.ledger,
             tier_bytes: &mut self.tier_bytes,
             net: &self.net,
+            profiles: &self.profiles,
             agg: FedAvg::new(self.global.len()),
             load: RoundLoad::new(),
+            times: Vec::with_capacity(client_ids.len()),
             loss_sum: 0.0,
             acc_sum: 0.0,
             survivors: 0,
             dropped: 0,
+            cancelled: 0,
         };
         let ctx = RoundContext {
             session: &self.session,
@@ -332,16 +406,21 @@ impl Simulation {
             cfg: &self.cfg,
             round: self.rounds_done,
             plan: self.plan.as_ref(),
+            cancelled: &cancelled_ids,
         };
         self.executor.execute(&ctx, &client_ids, &mut merge)?;
 
         let RoundMerge {
-            agg, load, loss_sum, acc_sum, survivors, dropped, ..
+            agg, load, times, loss_sum, acc_sum, survivors, dropped,
+            cancelled, ..
         } = merge;
         self.sim_net_serial_s += load.serial_s();
         self.sim_net_parallel_s += load.parallel_s(&self.net);
         self.dropped_clients += dropped;
         self.last_round_dropped = dropped;
+        self.cancelled_clients += cancelled;
+        self.last_round_cancelled = cancelled;
+        self.last_round_times = times;
 
         self.rounds_done += 1;
         if survivors == 0 {
@@ -354,17 +433,81 @@ impl Simulation {
         Ok((loss_sum / k, acc_sum / k))
     }
 
+    /// Decide which of an oversampled round's clients to cancel: rank
+    /// the round's *expected* survivors by expected simulated round
+    /// trip (profiled wire + compute, with the upload estimated at the
+    /// download size — exact for the layout-determined fp32/affine
+    /// codecs, an approximation for the sparse ones) and cut everyone
+    /// after the first `clients_per_round` expected uploads. Ties
+    /// break on sampling index, and the dropout check replays the same
+    /// per-client coin `run_client` draws — so the plan is a pure
+    /// function of the round coordinates and the executors stay
+    /// bit-identical.
+    fn plan_cancellations(
+        &self,
+        sampled: &[usize],
+        shared_msg: Option<&Message>,
+        tier_msgs: &[Message],
+    ) -> Vec<usize> {
+        let k = self.cfg.clients_per_round;
+        let mut expected: Vec<(f64, usize)> = Vec::new();
+        for (i, &cid) in sampled.iter().enumerate() {
+            if self.cfg.dropout > 0.0 {
+                let coin = Rng::for_client(
+                    self.cfg.seed,
+                    self.rounds_done as u64,
+                    cid as u64,
+                )
+                .f64();
+                if coin < self.cfg.dropout {
+                    // Will drop before uploading: never a candidate
+                    // for one of the K accepted uploads.
+                    continue;
+                }
+            }
+            let down = match (&self.plan, shared_msg) {
+                (Some(plan), _) => {
+                    tier_msgs[plan.tier_of(cid)].size_bytes()
+                }
+                (None, Some(msg)) => msg.size_bytes(),
+                (None, None) => 0,
+            };
+            let t = self.profiles.client_time(&self.net, cid, down,
+                                              down.max(1));
+            expected.push((t, i));
+        }
+        if expected.len() <= k {
+            // Dropouts already thinned the round below K uploads:
+            // every expected survivor is accepted.
+            return Vec::new();
+        }
+        expected.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut cancelled: Vec<usize> =
+            expected[k..].iter().map(|&(_, i)| sampled[i]).collect();
+        cancelled.sort_unstable();
+        cancelled
+    }
+
     /// Run the full schedule, recording evaluated rounds.
     pub fn run(&mut self, recorder: &mut Recorder) -> Result<RunSummary> {
         let t0 = Instant::now();
-        // Drops are tallied *between* records so the exported column
-        // covers every round (and sums to `dropped_clients`) even when
-        // `eval_every > 1` skips rounds.
+        // Drops/cancellations and client times are tallied *between*
+        // records so the exported columns cover every round (and the
+        // counts sum to `dropped_clients`/`cancelled_clients`) even
+        // when `eval_every > 1` skips rounds.
         let mut drops_since_record = 0u64;
+        let mut cancelled_since_record = 0u64;
+        let mut window_times: Vec<f64> = Vec::new();
+        // Whole-run client times for the summary percentiles; bounded
+        // by rounds × clients_per_round f64s.
+        let mut all_times: Vec<f64> = Vec::new();
         for r in 0..self.cfg.rounds {
             let (train_loss, _train_acc) = self.round()?;
             self.last_train_loss = train_loss;
             drops_since_record += self.last_round_dropped;
+            cancelled_since_record += self.last_round_cancelled;
+            window_times.extend_from_slice(&self.last_round_times);
+            all_times.extend_from_slice(&self.last_round_times);
             let is_last = r + 1 == self.cfg.rounds;
             if (r + 1) % self.cfg.eval_every == 0 || is_last {
                 let (test_loss, test_acc) = self.evaluate()?;
@@ -375,9 +518,15 @@ impl Simulation {
                     train_loss,
                     cum_bytes: self.ledger.total_bytes(),
                     dropped: drops_since_record,
+                    cancelled: cancelled_since_record,
+                    client_p50_s: p50(&window_times),
+                    client_max_s: window_times.iter().copied()
+                        .fold(0.0, f64::max),
                     wall_ms: t0.elapsed().as_secs_f64() * 1e3,
                 });
                 drops_since_record = 0;
+                cancelled_since_record = 0;
+                window_times.clear();
             }
         }
         Ok(RunSummary {
@@ -391,6 +540,9 @@ impl Simulation {
             wall_s: t0.elapsed().as_secs_f64(),
             sim_net_serial_s: self.sim_net_serial_s,
             sim_net_parallel_s: self.sim_net_parallel_s,
+            cancelled_clients: self.cancelled_clients,
+            sim_client_p50_s: p50(&all_times),
+            sim_client_max_s: all_times.iter().copied().fold(0.0, f64::max),
         })
     }
 }
@@ -405,12 +557,18 @@ struct RoundMerge<'a> {
     ledger: &'a mut CommLedger,
     tier_bytes: &'a mut [u64],
     net: &'a NetworkModel,
+    profiles: &'a ClientProfiles,
     agg: FedAvg,
     load: RoundLoad,
+    /// Simulated round-trip of each client the server waited on
+    /// (survivors and dropouts; cancelled clients excluded — the round
+    /// ended without them). Feeds the p50/max straggler stats.
+    times: Vec<f64>,
     loss_sum: f64,
     acc_sum: f64,
     survivors: usize,
     dropped: u64,
+    cancelled: u64,
 }
 
 impl RoundSink for RoundMerge<'_> {
@@ -428,20 +586,37 @@ impl RoundSink for RoundMerge<'_> {
             )));
         }
         self.ledger.record(Direction::Down, res.down_bytes);
-        let up_bytes = match res.update {
-            None => {
-                self.dropped += 1;
-                self.load.add(self.net, res.down_bytes, 0);
-                0
-            }
-            Some(up) => {
-                self.survivors += 1;
-                self.ledger.record(Direction::Up, up.up_bytes);
-                self.loss_sum += up.mean_loss;
-                self.acc_sum += up.mean_acc;
-                self.agg.add(&up.params, up.weight)?;
-                self.load.add(self.net, res.down_bytes, up.up_bytes);
-                up.up_bytes
+        let up_bytes = if res.cancelled {
+            // The server cut this client after the round had its K
+            // uploads: the download still moved (bytes + serial time),
+            // but the concurrent round never waited for it.
+            self.cancelled += 1;
+            let t_down = self.profiles.get(res.cid)
+                .download_time(self.net, res.down_bytes);
+            self.load.add_cancelled(t_down, res.down_bytes);
+            0
+        } else {
+            match res.update {
+                None => {
+                    self.dropped += 1;
+                    let t = self.profiles.client_time(
+                        self.net, res.cid, res.down_bytes, 0);
+                    self.load.add_timed(t, res.down_bytes, 0);
+                    self.times.push(t);
+                    0
+                }
+                Some(up) => {
+                    self.survivors += 1;
+                    self.ledger.record(Direction::Up, up.up_bytes);
+                    self.loss_sum += up.mean_loss;
+                    self.acc_sum += up.mean_acc;
+                    self.agg.add(&up.params, up.weight)?;
+                    let t = self.profiles.client_time(
+                        self.net, res.cid, res.down_bytes, up.up_bytes);
+                    self.load.add_timed(t, res.down_bytes, up.up_bytes);
+                    self.times.push(t);
+                    up.up_bytes
+                }
             }
         };
         if let Some(plan) = self.plan {

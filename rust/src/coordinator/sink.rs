@@ -84,6 +84,7 @@ mod tests {
                 cid: 10 + i,
                 down_bytes: 4,
                 update: None,
+                cancelled: false,
             })
             .unwrap();
         }

@@ -59,6 +59,9 @@ fn print_usage() {
          \x20               [--executor serial|parallel] [--threads N]\n\
          \x20               [--window N] [--network edge_lte|wifi]\n\
          \x20               [--net_sharing dedicated|shared]\n\
+         \x20               [--sampler uniform|latency_biased|oversample_k]\n\
+         \x20               [--oversample_beta B]\n\
+         \x20               [--client_profiles uniform|tiered]\n\
          \x20               [--hetero_ranks 2,4,8] [--hetero_codecs ...] ...\n\
          \x20 tables        print analytic Table I/III/IV vs the paper\n\
          \x20 inspect       list artifact manifest\n\
@@ -83,7 +86,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         Some(name) => presets::by_name(&name).ok_or_else(|| {
             Error::invalid(format!(
                 "unknown preset `{name}` (paper_resnet8|paper_resnet18|\
-                 scaled_micro|scaled_tiny|hetero_micro)"
+                 scaled_micro|scaled_tiny|hetero_micro|straggler_micro)"
             ))
         })?,
         None => FlConfig::default(),
@@ -117,7 +120,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     println!(
         "run: tag={} codec={} clients={} ({}/round) rounds={} epochs={} \
          lr={} alpha={} lda={} seed={} executor={} threads={} window={} \
-         network={}:{}{}",
+         network={}:{} sampler={} profiles={}{}",
         cfg.tag, cfg.codec.label(), cfg.num_clients, cfg.clients_per_round,
         cfg.rounds, cfg.local_epochs, cfg.lr, cfg.lora_alpha, cfg.lda_alpha,
         cfg.seed, cfg.executor.label(),
@@ -125,7 +128,8 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         else { cfg.threads.to_string() },
         if cfg.window == 0 { "auto".to_string() }
         else { cfg.window.to_string() },
-        cfg.network.label(), cfg.net_sharing.label(), hetero
+        cfg.network.label(), cfg.net_sharing.label(),
+        cfg.sampler.label(), cfg.client_profiles.label(), hetero
     );
     let mut sim = Simulation::new(&engine, cfg)?;
     let mut rec = Recorder::new("train");
@@ -150,6 +154,12 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
          clients vs {:.1}s serial",
         sim.config().network.label(), sim.config().net_sharing.label(),
         summary.sim_net_parallel_s, summary.sim_net_serial_s
+    );
+    println!(
+        "stragglers: {} cancelled, {} dropped, client time p50 {:.3}s \
+         max {:.3}s",
+        summary.cancelled_clients, sim.dropped_clients,
+        summary.sim_client_p50_s, summary.sim_client_max_s
     );
     if !sim.tier_bytes().is_empty() {
         let plan = sim.plan().expect("tier bytes imply a plan");

@@ -21,6 +21,16 @@ pub struct RoundRecord {
     /// column sums to the run-level `Simulation::dropped_clients` even
     /// when `eval_every` skips rounds).
     pub dropped: u64,
+    /// Sampled clients the server cancelled (oversampled rounds end at
+    /// the K-th accepted upload) in the rounds this record covers;
+    /// sums to the run-level `Simulation::cancelled_clients`.
+    pub cancelled: u64,
+    /// Median simulated client round-trip (profiled wire + compute)
+    /// over the clients the server waited on in the covered rounds.
+    pub client_p50_s: f64,
+    /// Slowest simulated client round-trip in the covered rounds — the
+    /// straggler the dedicated-link round time is made of.
+    pub client_max_s: f64,
     pub wall_ms: f64,
 }
 
@@ -67,13 +77,15 @@ impl Recorder {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,test_acc,test_loss,train_loss,cum_bytes,dropped,wall_ms\n",
+            "round,test_acc,test_loss,train_loss,cum_bytes,dropped,\
+             cancelled,client_p50_s,client_max_s,wall_ms\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{:.4},{:.4},{:.4},{},{},{:.1}\n",
+                "{},{:.4},{:.4},{:.4},{},{},{},{:.4},{:.4},{:.1}\n",
                 r.round, r.test_acc, r.test_loss, r.train_loss, r.cum_bytes,
-                r.dropped, r.wall_ms
+                r.dropped, r.cancelled, r.client_p50_s, r.client_max_s,
+                r.wall_ms
             ));
         }
         out
@@ -95,6 +107,9 @@ impl Recorder {
                             ("train_loss", num(r.train_loss)),
                             ("cum_bytes", num(r.cum_bytes as f64)),
                             ("dropped", num(r.dropped as f64)),
+                            ("cancelled", num(r.cancelled as f64)),
+                            ("client_p50_s", num(r.client_p50_s)),
+                            ("client_max_s", num(r.client_max_s)),
                             ("wall_ms", num(r.wall_ms)),
                         ])
                     })
@@ -107,6 +122,22 @@ impl Recorder {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_csv().as_bytes())?;
         Ok(())
+    }
+}
+
+/// Median (p50) of a sample; 0.0 for an empty slice. Used for the
+/// per-round straggler stats (median simulated client time).
+pub fn p50(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mid = sorted.len() / 2;
+    if sorted.len() % 2 == 1 {
+        sorted[mid]
+    } else {
+        0.5 * (sorted[mid - 1] + sorted[mid])
     }
 }
 
@@ -139,6 +170,9 @@ mod tests {
                 train_loss: 2.0,
                 cum_bytes: (i * 100) as u64,
                 dropped: i as u64 % 2,
+                cancelled: i as u64 % 3,
+                client_p50_s: 0.5,
+                client_max_s: 1.5,
                 wall_ms: 1.0,
             });
         }
@@ -180,9 +214,38 @@ mod tests {
         let csv = rec().to_csv();
         let header = csv.lines().next().unwrap();
         assert!(header.split(',').any(|c| c == "dropped"), "{header}");
-        // Row for round 1 (dropped = 1): ...,cum_bytes,dropped,wall_ms
+        // Row for round 1 (dropped = 1): ...,cum_bytes,dropped,...
         let row: Vec<&str> = csv.lines().nth(2).unwrap().split(',').collect();
         assert_eq!(row[5], "1");
+    }
+
+    #[test]
+    fn csv_and_json_carry_straggler_columns() {
+        let csv = rec().to_csv();
+        let header: Vec<&str> = csv.lines().next().unwrap().split(',')
+            .collect();
+        for col in ["cancelled", "client_p50_s", "client_max_s"] {
+            assert!(header.contains(&col), "{header:?} missing {col}");
+        }
+        // Row for round 2 (cancelled = 2), right after `dropped`.
+        let row: Vec<&str> = csv.lines().nth(3).unwrap().split(',').collect();
+        assert_eq!(row[6], "2");
+        let j = rec().to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let rounds = parsed.at(&["rounds"]).unwrap().as_arr().unwrap();
+        assert_eq!(
+            rounds[2].at(&["cancelled"]).unwrap().as_usize().unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn p50_is_the_median() {
+        assert_eq!(p50(&[]), 0.0);
+        assert_eq!(p50(&[3.0]), 3.0);
+        assert_eq!(p50(&[1.0, 9.0]), 5.0);
+        assert_eq!(p50(&[9.0, 1.0, 5.0]), 5.0);
+        assert_eq!(p50(&[4.0, 1.0, 2.0, 100.0]), 3.0);
     }
 
     #[test]

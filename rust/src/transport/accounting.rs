@@ -50,8 +50,13 @@ impl CommLedger {
                 self.down_msgs += 1;
             }
         }
-        if let Some(last) = self.per_round.last_mut() {
-            *last += bytes as u64;
+        // A record before the first `begin_round` opens the bucket
+        // instead of silently leaking the bytes out of `per_round`
+        // (callers driving the ledger by hand don't all announce
+        // round boundaries first).
+        match self.per_round.last_mut() {
+            Some(last) => *last += bytes as u64,
+            None => self.per_round.push(bytes as u64),
         }
     }
 
@@ -64,15 +69,26 @@ impl CommLedger {
         self.up_bytes + self.down_bytes
     }
 
-    /// Paper-style per-client TCC: average message size × 2 × rounds.
-    /// With symmetric codecs this equals Eq. 2 with measured bytes.
+    /// Paper-style per-client TCC over `rounds` rounds, from measured
+    /// bytes: `rounds × (mean_down + mean_up)` with per-direction
+    /// means. Pooling both directions into one mean (the pre-fix
+    /// formula) mis-weights the estimate whenever the two directions
+    /// carry different message counts (dropouts upload nothing) or
+    /// different codecs (hetero tiers with asymmetric wire formats).
+    /// With symmetric traffic this still equals Eq. 2 on measured
+    /// bytes.
     pub fn per_client_tcc(&self, rounds: usize) -> f64 {
-        let msgs = self.up_msgs + self.down_msgs;
-        if msgs == 0 {
-            return 0.0;
-        }
-        let avg = self.total_bytes() as f64 / msgs as f64;
-        2.0 * rounds as f64 * avg
+        let mean_down = if self.down_msgs == 0 {
+            0.0
+        } else {
+            self.down_bytes as f64 / self.down_msgs as f64
+        };
+        let mean_up = if self.up_msgs == 0 {
+            0.0
+        } else {
+            self.up_bytes as f64 / self.up_msgs as f64
+        };
+        rounds as f64 * (mean_down + mean_up)
     }
 
     /// Mean upload message bytes (the "Message Size" column of Table IV).
@@ -128,5 +144,41 @@ mod tests {
         }
         // Every message 1000 B, 5 rounds => per-client 2*5*1000 = 10 kB.
         assert_eq!(l.per_client_tcc(5), 10_000.0);
+    }
+
+    #[test]
+    fn per_client_tcc_weighs_directions_separately() {
+        // Asymmetric regime: every client pulls 3000 B, but only half
+        // upload (dropouts) at 1000 B. The paper-style per-client cost
+        // is rounds × (mean_down + mean_up) = 5 × 4000 = 20 kB; the
+        // old pooled mean smeared the missing uploads across both
+        // directions (35 kB total / 15 msgs × 2 × 5 ≈ 23.3 kB).
+        let mut l = CommLedger::new();
+        l.begin_round();
+        for i in 0..10 {
+            l.record(Direction::Down, 3000);
+            if i % 2 == 0 {
+                l.record(Direction::Up, 1000);
+            }
+        }
+        assert_eq!(l.per_client_tcc(5), 20_000.0);
+        // Down-only traffic (e.g. a fully dropped run) still counts
+        // the downloads instead of dividing by a zero message count.
+        let mut d = CommLedger::new();
+        d.record(Direction::Down, 100);
+        assert_eq!(d.per_client_tcc(2), 200.0);
+        assert_eq!(CommLedger::new().per_client_tcc(3), 0.0);
+    }
+
+    #[test]
+    fn record_before_begin_round_opens_a_bucket() {
+        let mut l = CommLedger::new();
+        l.record(Direction::Down, 40);
+        l.record(Direction::Up, 2);
+        assert_eq!(l.per_round, vec![42]);
+        l.begin_round();
+        l.record(Direction::Down, 7);
+        assert_eq!(l.per_round, vec![42, 7]);
+        assert_eq!(l.total_bytes(), 49);
     }
 }

@@ -4,6 +4,8 @@
 
 pub mod accounting;
 pub mod network;
+pub mod profile;
 
 pub use accounting::{tcc_equation2, CommLedger, Direction};
 pub use network::{NetworkKind, NetworkModel, RoundLoad, Sharing};
+pub use profile::{ClientProfile, ClientProfiles, ProfileKind};

@@ -83,7 +83,10 @@ impl NetworkKind {
     }
 }
 
-/// Bandwidth/latency profile of one (symmetric across clients) link.
+/// Bandwidth/latency profile of one *base* link. Per-client deviations
+/// (slow devices, congested uplinks) are layered on top by
+/// [`crate::transport::ClientProfiles`], which scales these times per
+/// client; a bare `NetworkModel` is the symmetric special case.
 ///
 /// ```
 /// use flocora::transport::NetworkModel;
@@ -212,10 +215,20 @@ impl RoundLoad {
     }
 
     /// Fold in one client's `(down, up)` bytes (`up == 0` for a client
-    /// that dropped before uploading).
+    /// that dropped before uploading) at the base link rate.
     pub fn add(&mut self, net: &NetworkModel, down_bytes: usize,
                up_bytes: usize) {
         let t = net.client_time(down_bytes, up_bytes);
+        self.add_timed(t, down_bytes, up_bytes);
+    }
+
+    /// Fold in one client whose simulated time `t` the caller already
+    /// computed (e.g. through a per-client
+    /// [`ClientProfiles`](crate::transport::ClientProfiles) table,
+    /// which may fold compute and per-client link multipliers into
+    /// `t`). `up_bytes == 0` still means "dropped before uploading".
+    pub fn add_timed(&mut self, t: f64, down_bytes: usize,
+                     up_bytes: usize) {
         self.serial_s += t;
         self.slowest_s = self.slowest_s.max(t);
         self.down_bytes += down_bytes as u64;
@@ -223,6 +236,17 @@ impl RoundLoad {
         if up_bytes > 0 {
             self.uploads += 1;
         }
+        self.clients += 1;
+    }
+
+    /// Fold in a client the server *cancelled* mid-round (oversampled
+    /// rounds end at the K-th accepted upload). Its download happened
+    /// — the bytes and the serial-regime time `t_down` are charged —
+    /// but the concurrent round never waits for it, so it is excluded
+    /// from the straggler max.
+    pub fn add_cancelled(&mut self, t_down: f64, down_bytes: usize) {
+        self.serial_s += t_down;
+        self.down_bytes += down_bytes as u64;
         self.clients += 1;
     }
 
@@ -234,7 +258,13 @@ impl RoundLoad {
 
     /// All clients in flight concurrently, under `net`'s sharing
     /// regime: slowest straggler (dedicated) or total-bits-over-
-    /// capacity per direction (shared).
+    /// capacity per direction (shared). Under a shared pipe the round
+    /// still cannot finish before its slowest *profiled* client: a
+    /// client behind a personal 10× slowdown is rate-limited by its
+    /// own link even when the shared pipe is idle, so the shared time
+    /// is the max of pipe time and straggler time. (With uniform
+    /// profiles the straggler never exceeds the pipe, so this is
+    /// bit-identical to the pure pipe model.)
     pub fn parallel_s(&self, net: &NetworkModel) -> f64 {
         match net.sharing {
             Sharing::Dedicated => self.slowest_s,
@@ -249,7 +279,7 @@ impl RoundLoad {
                 } else {
                     0.0
                 };
-                down + up
+                (down + up).max(self.slowest_s)
             }
         }
     }
@@ -331,6 +361,34 @@ mod tests {
         let serial = net.round_time_serial(&loads);
         assert!(t > dedicated);
         assert!(t < serial);
+    }
+
+    #[test]
+    fn shared_pipe_never_beats_a_profiled_straggler() {
+        let net = NetworkModel::edge_lte().with_sharing(Sharing::Shared);
+        let mut acc = RoundLoad::new();
+        acc.add(&net, 1_000_000, 1_000_000);
+        // A client behind a personal 20x slowdown: its own link, not
+        // the shared pipe, bounds the round.
+        let t_slow = 20.0 * net.round_trip(1_000_000, 1_000_000);
+        acc.add_timed(t_slow, 1_000_000, 1_000_000);
+        assert_eq!(acc.parallel_s(&net), t_slow);
+    }
+
+    #[test]
+    fn cancelled_clients_never_stretch_the_straggler_max() {
+        let net = NetworkModel::edge_lte();
+        let mut acc = RoundLoad::new();
+        acc.add(&net, 1_000, 2_000);
+        let base = acc.parallel_s(&net);
+        // A cancelled straggler charges serial time and bytes but not
+        // the concurrent max — the round ended without it.
+        acc.add_cancelled(99.0, 50_000_000);
+        assert_eq!(acc.parallel_s(&net), base);
+        assert!(acc.serial_s() > 99.0);
+        let shared = net.with_sharing(Sharing::Shared);
+        // Its bytes still contend for a shared pipe, though.
+        assert!(acc.parallel_s(&shared) > base);
     }
 
     #[test]

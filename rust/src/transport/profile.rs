@@ -1,0 +1,270 @@
+//! Per-client link and compute profiles — the heterogeneity axis the
+//! symmetric [`NetworkModel`](crate::transport::NetworkModel) cannot
+//! express.
+//!
+//! The base [`NetworkModel`] describes *one* link (LTE, WiFi); real
+//! edge federations put every client behind its own multiple of that
+//! link — the regime where straggler-aware sampling pays off. A
+//! [`ClientProfile`] scales the base link's per-direction wire times
+//! and the client's simulated compute; a [`ClientProfiles`] table maps
+//! every client id to its profile, deterministically from the run seed
+//! (so profiles are stable across rounds, executors and threads).
+//!
+//! Two table shapes ([`ProfileKind`], the `client_profiles` knob):
+//!
+//! * [`ProfileKind::Uniform`] — every client at exactly 1.0× with zero
+//!   simulated compute: bit-identical to the pre-profile symmetric
+//!   model (multiplying a time by `1.0` and adding `0.0` are exact in
+//!   f64).
+//! * [`ProfileKind::Tiered`] — clients split round-robin over
+//!   fast/mid/slow device classes (the same `cid % 3` assignment the
+//!   hetero-rank plan uses), each with a seeded ±10% per-client jitter
+//!   so no two clients are perfectly identical.
+
+use crate::transport::NetworkModel;
+use crate::util::rng::Rng;
+
+/// One client's deviation from the base link profile.
+///
+/// Multipliers scale *time*, so `2.0` means "half the rate / twice as
+/// slow". `compute_mult` scales the table's per-round compute baseline
+/// ([`ClientProfiles::compute_s`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientProfile {
+    /// Uplink time multiplier (≥ 0; 1.0 = the base link).
+    pub up_mult: f64,
+    /// Downlink time multiplier.
+    pub down_mult: f64,
+    /// Simulated local-compute multiplier.
+    pub compute_mult: f64,
+}
+
+impl ClientProfile {
+    /// The neutral profile: the base link, no simulated compute skew.
+    pub const UNIT: ClientProfile =
+        ClientProfile { up_mult: 1.0, down_mult: 1.0, compute_mult: 1.0 };
+
+    /// This client's time to pull `bytes` (base link scaled).
+    pub fn download_time(&self, net: &NetworkModel, bytes: usize) -> f64 {
+        net.download_time(bytes) * self.down_mult
+    }
+
+    /// This client's time to push `bytes` (base link scaled).
+    pub fn upload_time(&self, net: &NetworkModel, bytes: usize) -> f64 {
+        net.upload_time(bytes) * self.up_mult
+    }
+}
+
+/// Profile-table selection, parseable from CLI/config strings (the
+/// `client_profiles = uniform | tiered` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProfileKind {
+    /// Every client owns an identical base-rate link (pre-profile
+    /// behaviour, bit-identical).
+    #[default]
+    Uniform,
+    /// Fast/mid/slow device classes, round-robin by client id, with
+    /// seeded per-client jitter.
+    Tiered,
+}
+
+impl ProfileKind {
+    /// Parse `uniform | tiered`.
+    pub fn parse(s: &str) -> Option<ProfileKind> {
+        match s {
+            "uniform" => Some(ProfileKind::Uniform),
+            "tiered" => Some(ProfileKind::Tiered),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProfileKind::Uniform => "uniform",
+            ProfileKind::Tiered => "tiered",
+        }
+    }
+
+    /// Build the per-client table for a federation of `num_clients`,
+    /// deterministically from `seed`.
+    pub fn build(&self, num_clients: usize, seed: u64) -> ClientProfiles {
+        match self {
+            ProfileKind::Uniform => ClientProfiles::uniform(num_clients),
+            ProfileKind::Tiered => ClientProfiles::tiered(num_clients, seed),
+        }
+    }
+}
+
+/// The device classes of [`ClientProfiles::tiered`]:
+/// `(up_mult, down_mult, compute_mult)` before jitter.
+const TIERS: [(f64, f64, f64); 3] = [
+    (0.8, 0.8, 0.6),  // fast: fiber-backed, recent silicon
+    (1.0, 1.0, 1.0),  // mid: the base link
+    (8.0, 8.0, 6.0),  // slow: congested uplink, old device
+];
+
+/// Seconds of simulated client compute per round at `compute_mult`
+/// 1.0 in a tiered table (uniform tables use 0.0 so legacy arithmetic
+/// is untouched).
+const TIERED_COMPUTE_BASE_S: f64 = 0.25;
+
+/// Immutable per-client profile table for one federation.
+///
+/// Built once at `Simulation::new` and shared by the sampler (expected
+/// round trips → sampling weights) and the round merge (per-client
+/// simulated times). Assignment depends only on `(seed, cid)`, never
+/// on execution order.
+#[derive(Debug, Clone)]
+pub struct ClientProfiles {
+    profiles: Vec<ClientProfile>,
+    /// Simulated compute seconds per round at multiplier 1.0.
+    compute_base_s: f64,
+}
+
+impl ClientProfiles {
+    /// Every client at [`ClientProfile::UNIT`], zero simulated compute
+    /// — arithmetically identical to the pre-profile network model.
+    pub fn uniform(num_clients: usize) -> ClientProfiles {
+        ClientProfiles {
+            profiles: vec![ClientProfile::UNIT; num_clients],
+            compute_base_s: 0.0,
+        }
+    }
+
+    /// Fast/mid/slow tiers round-robin by client id, each multiplier
+    /// jittered ±10% by a stream derived purely from `(seed, cid)`.
+    pub fn tiered(num_clients: usize, seed: u64) -> ClientProfiles {
+        let profiles = (0..num_clients)
+            .map(|cid| {
+                let (up, down, compute) = TIERS[cid % TIERS.len()];
+                let mut rng =
+                    Rng::derive(seed ^ 0x70F1_1E5A, &[cid as u64]);
+                let mut jitter =
+                    |base: f64| base * rng.range_f64(0.9, 1.1);
+                ClientProfile {
+                    up_mult: jitter(up),
+                    down_mult: jitter(down),
+                    compute_mult: jitter(compute),
+                }
+            })
+            .collect();
+        ClientProfiles { profiles, compute_base_s: TIERED_COMPUTE_BASE_S }
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// Client `cid`'s profile (panics on an out-of-range id, which
+    /// would mean the sampler and the table disagree on the federation
+    /// size — a construction bug, not a runtime condition).
+    pub fn get(&self, cid: usize) -> &ClientProfile {
+        &self.profiles[cid]
+    }
+
+    /// Client `cid`'s simulated compute seconds for one round.
+    pub fn compute_s(&self, cid: usize) -> f64 {
+        self.compute_base_s * self.profiles[cid].compute_mult
+    }
+
+    /// Client `cid`'s simulated time for one full round trip: profiled
+    /// download, plus (when the client uploads, `up_bytes > 0`) its
+    /// compute and profiled upload. Dropped clients (`up_bytes == 0`)
+    /// are charged the download only, matching the pre-profile model.
+    pub fn client_time(
+        &self,
+        net: &NetworkModel,
+        cid: usize,
+        down_bytes: usize,
+        up_bytes: usize,
+    ) -> f64 {
+        let p = self.get(cid);
+        let mut t = p.download_time(net, down_bytes);
+        if up_bytes > 0 {
+            t += self.compute_s(cid) + p.upload_time(net, up_bytes);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_labels() {
+        assert_eq!(ProfileKind::parse("uniform"), Some(ProfileKind::Uniform));
+        assert_eq!(ProfileKind::parse("tiered"), Some(ProfileKind::Tiered));
+        assert_eq!(ProfileKind::parse("fast"), None);
+        assert_eq!(ProfileKind::Uniform.label(), "uniform");
+        assert_eq!(ProfileKind::Tiered.label(), "tiered");
+        assert_eq!(ProfileKind::default(), ProfileKind::Uniform);
+    }
+
+    #[test]
+    fn uniform_table_matches_bare_network_model() {
+        let net = NetworkModel::edge_lte();
+        let table = ClientProfiles::uniform(8);
+        for cid in 0..8 {
+            // Bit-identical, not approximately equal: ×1.0 and +0.0
+            // are exact, which is what keeps pre-profile runs stable.
+            assert_eq!(
+                table.client_time(&net, cid, 1_000_000, 500_000),
+                net.round_trip(1_000_000, 500_000)
+            );
+            assert_eq!(
+                table.client_time(&net, cid, 1_000_000, 0),
+                net.download_time(1_000_000)
+            );
+            assert_eq!(table.compute_s(cid), 0.0);
+        }
+    }
+
+    #[test]
+    fn tiered_table_is_deterministic_in_seed_and_cid() {
+        let a = ClientProfiles::tiered(12, 9);
+        let b = ClientProfiles::tiered(12, 9);
+        let c = ClientProfiles::tiered(12, 10);
+        for cid in 0..12 {
+            assert_eq!(a.get(cid), b.get(cid), "cid {cid}");
+        }
+        assert!((0..12).any(|cid| a.get(cid) != c.get(cid)),
+                "different seeds never diverged");
+        // Table size is independent of construction order: a prefix of
+        // a larger federation matches exactly.
+        let big = ClientProfiles::tiered(24, 9);
+        for cid in 0..12 {
+            assert_eq!(a.get(cid), big.get(cid), "cid {cid}");
+        }
+    }
+
+    #[test]
+    fn tiered_slow_class_is_slower_than_fast_class() {
+        let net = NetworkModel::edge_lte();
+        let table = ClientProfiles::tiered(12, 3);
+        // cid % 3: 0 = fast, 1 = mid, 2 = slow; jitter is ±10%, far
+        // smaller than the 10x class separation.
+        let fast = table.client_time(&net, 0, 1_000_000, 1_000_000);
+        let mid = table.client_time(&net, 1, 1_000_000, 1_000_000);
+        let slow = table.client_time(&net, 2, 1_000_000, 1_000_000);
+        assert!(fast < mid, "{fast} vs {mid}");
+        assert!(mid < slow, "{mid} vs {slow}");
+        assert!(slow > 3.0 * mid, "slow tier not separated: {slow} vs {mid}");
+        assert!(table.compute_s(2) > table.compute_s(0));
+    }
+
+    #[test]
+    fn dropped_clients_pay_download_only() {
+        let net = NetworkModel::wifi();
+        let table = ClientProfiles::tiered(6, 1);
+        let full = table.client_time(&net, 2, 10_000, 10_000);
+        let dropped = table.client_time(&net, 2, 10_000, 0);
+        assert!(dropped < full);
+        let expect = net.download_time(10_000) * table.get(2).down_mult;
+        assert!((dropped - expect).abs() < 1e-12);
+    }
+}

@@ -10,13 +10,14 @@
 //! Requires `make artifacts`, like tests/integration.rs.
 
 use flocora::compression::{Codec, Fp32Codec};
-use flocora::config::FlConfig;
+use flocora::config::{presets, FlConfig};
 use flocora::coordinator::executor::{ClientResult, Downloads,
                                      ParallelExecutor, RoundContext};
 use flocora::coordinator::hetero::project_ranks;
 use flocora::coordinator::sink::RoundSink;
 use flocora::coordinator::{ClientExecutor, ExecutorKind, FedAvg,
-                           LocalTrainer, Simulation, UniformSampler};
+                           LocalTrainer, SamplerKind, Simulation,
+                           UniformSampler};
 use flocora::data::lda_partition;
 use flocora::metrics::Recorder;
 use flocora::runtime::Engine;
@@ -71,8 +72,11 @@ struct Observed {
     down_bytes: u64,
     per_round: Vec<u64>,
     dropped: u64,
+    cancelled: u64,
     tier_bytes: Vec<u64>,
     sim_net_parallel_s: f64,
+    sim_client_p50_s: f64,
+    sim_client_max_s: f64,
 }
 
 fn run(cfg: FlConfig) -> Observed {
@@ -89,8 +93,11 @@ fn run(cfg: FlConfig) -> Observed {
         down_bytes: sim.ledger.down_bytes,
         per_round: sim.ledger.per_round.clone(),
         dropped: sim.dropped_clients,
+        cancelled: sim.cancelled_clients,
         tier_bytes: sim.tier_bytes().to_vec(),
         sim_net_parallel_s: summary.sim_net_parallel_s,
+        sim_client_p50_s: summary.sim_client_p50_s,
+        sim_client_max_s: summary.sim_client_max_s,
     }
 }
 
@@ -117,9 +124,14 @@ fn assert_identical(a: &Observed, b: &Observed, what: &str) {
     assert_eq!(a.down_bytes, b.down_bytes, "{what}: down_bytes");
     assert_eq!(a.per_round, b.per_round, "{what}: per-round ledger");
     assert_eq!(a.dropped, b.dropped, "{what}: dropout count");
+    assert_eq!(a.cancelled, b.cancelled, "{what}: cancelled count");
     assert_eq!(a.tier_bytes, b.tier_bytes, "{what}: per-tier bytes");
     assert_eq!(a.sim_net_parallel_s, b.sim_net_parallel_s,
                "{what}: simulated net time");
+    assert_eq!(a.sim_client_p50_s, b.sim_client_p50_s,
+               "{what}: client p50 time");
+    assert_eq!(a.sim_client_max_s, b.sim_client_max_s,
+               "{what}: client max time");
     // NaN-tolerant equality for the train loss (a fully-dropped final
     // round reports NaN under both executors).
     assert!(
@@ -267,6 +279,7 @@ fn peak_buffered_results_never_exceed_window() {
         cfg: &cfg,
         round: 0,
         plan: None,
+        cancelled: &[],
     };
     let clients: Vec<usize> = (0..cfg.num_clients).collect();
 
@@ -376,4 +389,96 @@ fn hetero_engine_matches_reference_loop() {
 
     assert_eq!(sim.global, global,
                "hetero engine diverged from the reference loop");
+}
+
+/// The straggler regime at test size: tiered profiles, oversampled
+/// sampling, short schedule.
+fn straggler_cfg() -> FlConfig {
+    let mut cfg = presets::by_name("straggler_micro").unwrap();
+    cfg.rounds = 8;
+    cfg.local_epochs = 1;
+    cfg.samples_per_client = 16;
+    cfg.test_samples = 40;
+    cfg.seed = 21;
+    cfg
+}
+
+#[test]
+fn latency_biased_is_bit_identical_across_executors() {
+    let mut cfg = straggler_cfg();
+    cfg.sampler = SamplerKind::LatencyBiased;
+    let serial = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
+    let parallel = run(with_executor(cfg.clone(), ExecutorKind::Parallel, 3));
+    let windowed = run(with_window(cfg, 2));
+    assert_identical(&serial, &parallel, "latency_biased serial vs parallel");
+    assert_identical(&serial, &windowed, "latency_biased serial vs window=2");
+    assert_eq!(serial.cancelled, 0, "latency_biased never cancels");
+}
+
+#[test]
+fn oversample_is_bit_identical_across_executors() {
+    // Cancellation is planned on the coordinator from expected round
+    // trips, so the cut — and everything downstream of it — must be
+    // the same whichever executor ran the round.
+    let cfg = straggler_cfg();
+    let serial = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
+    let parallel = run(with_executor(cfg.clone(), ExecutorKind::Parallel, 3));
+    let windowed = run(with_window(cfg.clone(), 2));
+    assert_identical(&serial, &parallel, "oversample serial vs parallel");
+    assert_identical(&serial, &windowed, "oversample serial vs window=2");
+    // 6 drawn, 4 accepted, no dropout: 2 cancelled every round.
+    assert_eq!(serial.cancelled, 2 * cfg.rounds as u64);
+
+    // With dropout the cancellation plan must keep replaying the same
+    // per-client coin the executors draw.
+    let mut drop_cfg = straggler_cfg();
+    drop_cfg.dropout = 0.3;
+    let s = run(with_executor(drop_cfg.clone(), ExecutorKind::Serial, 0));
+    let p = run(with_executor(drop_cfg, ExecutorKind::Parallel, 0));
+    assert!(s.dropped > 0, "injection never fired at dropout=0.3");
+    assert_identical(&s, &p, "oversample+dropout serial vs parallel");
+}
+
+#[test]
+fn oversample_beta_zero_is_bit_identical_to_uniform() {
+    // β = 0 shares the uniform sampler's RNG stream and never
+    // over-draws, so the whole run — sampling, merge order, ledger,
+    // global vector — replays `sampler = uniform` exactly.
+    let mut uni = straggler_cfg();
+    uni.sampler = SamplerKind::Uniform;
+    uni.oversample_beta = 0.0;
+    let mut over = straggler_cfg();
+    over.oversample_beta = 0.0;
+    let a = run(uni);
+    let b = run(over);
+    assert_identical(&a, &b, "uniform vs oversample β=0");
+    assert_eq!(b.cancelled, 0);
+}
+
+#[test]
+fn oversample_strictly_reduces_straggler_time() {
+    // The acceptance bar for the straggler work: on the tiered-profile
+    // preset, cancelling expected stragglers (β > 0) must strictly
+    // beat uniform sampling on simulated concurrent wire time, while
+    // moving *more* download bytes (the oversampled pulls are the
+    // price) — and the accuracy pipeline still runs to completion.
+    let mut uni = straggler_cfg();
+    uni.sampler = SamplerKind::Uniform;
+    let over = straggler_cfg();
+    let u = run(uni);
+    let o = run(over);
+    assert!(o.cancelled > 0, "oversampling never cancelled anyone");
+    assert!(
+        o.sim_net_parallel_s < u.sim_net_parallel_s,
+        "oversample_k {:.3}s did not beat uniform {:.3}s",
+        o.sim_net_parallel_s,
+        u.sim_net_parallel_s
+    );
+    assert!(o.down_bytes > u.down_bytes,
+            "oversampled rounds must pull more downloads");
+    // The straggler stats see the same picture: the slowest client the
+    // server actually waited on shrank too (cancelled stragglers are
+    // excluded from the max by construction).
+    assert!(o.sim_client_max_s <= u.sim_client_max_s,
+            "cancellation cannot worsen the waited-on straggler");
 }

@@ -280,3 +280,54 @@ fn prop_rank_projection_function_preserving_composition() {
         assert_eq!(down, v, "{a}->{b}->{a}");
     }
 }
+
+#[test]
+fn prop_latency_biased_covers_all_clients_over_time() {
+    // Sampling bias must never become starvation: whatever the tiered
+    // profile table looks like, every client is eventually sampled.
+    use flocora::coordinator::{LatencyBiasedSampler, Sampler};
+    use flocora::transport::{ClientProfiles, NetworkModel};
+    let net = NetworkModel::edge_lte();
+    let mut rng = Rng::new(111);
+    for case in 0..CASES {
+        let n = 6 + rng.below(20);
+        let k = 1 + rng.below(n.min(6));
+        let table = ClientProfiles::tiered(n, rng.below(1 << 20) as u64);
+        let weights: Vec<f64> = (0..n)
+            .map(|cid| 1.0 / table.client_time(&net, cid, 500_000, 500_000))
+            .collect();
+        let mut s = LatencyBiasedSampler::new(weights, case as u64);
+        let mut seen = vec![false; n];
+        for _ in 0..400 {
+            for id in s.sample(k) {
+                seen[id] = true;
+            }
+        }
+        assert!(
+            seen.iter().all(|&b| b),
+            "case {case}: starved a client (n={n}, k={k})"
+        );
+    }
+}
+
+#[test]
+fn prop_oversample_beta_zero_is_bit_identical_to_uniform() {
+    // β = 0 must replay the uniform stream exactly — for any pool
+    // size, round budget and seed, not just the defaults.
+    use flocora::coordinator::{OversampleSampler, Sampler, UniformSampler};
+    let mut rng = Rng::new(112);
+    for case in 0..CASES {
+        let n = 2 + rng.below(40);
+        let k = 1 + rng.below(n);
+        let seed = rng.below(1 << 30) as u64;
+        let mut uni = UniformSampler::new(n, seed);
+        let mut over = OversampleSampler::new(n, seed, 0.0);
+        for round in 0..20 {
+            assert_eq!(
+                uni.sample(k),
+                Sampler::sample(&mut over, k),
+                "case {case} round {round} (n={n}, k={k}, seed={seed})"
+            );
+        }
+    }
+}
