@@ -161,10 +161,20 @@ fn main() {
     cfg.local_epochs = 1;
     cfg.samples_per_client = 32;
     cfg.test_samples = 40;
-    let mut sim = Simulation::new(&engine, cfg).expect("sim");
+    let mut sim = Simulation::new(&engine, cfg.clone()).expect("sim");
     let st = bench("fl round, straggler preset (oversample)", 1, iters,
                    || { sim.round().unwrap(); });
     println!("{}   ({} cancelled so far)", st.row(),
              sim.cancelled_clients);
+
+    // Transfer overlap: same preset, codec work moved onto the
+    // transport threads (`overlap = transfer`). Bits are identical to
+    // the row above; the row shows what decoupling encode/decode from
+    // the compute workers buys (or costs) in wall clock at this scale.
+    cfg.overlap = flocora::transport::OverlapKind::Transfer;
+    let mut sim = Simulation::new(&engine, cfg).expect("sim");
+    let st = bench("fl round, straggler preset (overlap=transfer)", 1,
+                   iters, || { sim.round().unwrap(); });
+    println!("{}", st.row());
     println!("\nmicro bench OK");
 }

@@ -10,7 +10,7 @@ use crate::compression::CodecKind;
 use crate::coordinator::executor::ExecutorKind;
 use crate::coordinator::sampler::SamplerKind;
 use crate::error::{Error, Result};
-use crate::transport::{NetworkKind, ProfileKind, Sharing};
+use crate::transport::{NetworkKind, OverlapKind, ProfileKind, Sharing};
 
 /// Full description of one FL run.
 #[derive(Debug, Clone)]
@@ -60,6 +60,13 @@ pub struct FlConfig {
     /// Link-sharing regime for the concurrent-clients wire time
     /// (`dedicated | shared`).
     pub net_sharing: Sharing,
+    /// Transfer/compute overlap (`none | transfer`). `transfer` runs
+    /// the parallel executor's decode/encode stages on dedicated
+    /// transport threads (client A's upload overlaps client B's
+    /// training); results and every simulated estimate stay
+    /// bit-identical to `none` — only wall clock changes. Ignored by
+    /// the serial executor.
+    pub overlap: OverlapKind,
     /// Per-round client selection strategy
     /// (`uniform | latency_biased | oversample_k`). `uniform` is
     /// bit-identical to the pre-strategy sampler.
@@ -108,6 +115,7 @@ impl Default for FlConfig {
             window: 0,
             network: NetworkKind::EdgeLte,
             net_sharing: Sharing::Dedicated,
+            overlap: OverlapKind::None,
             sampler: SamplerKind::Uniform,
             oversample_beta: 0.0,
             client_profiles: ProfileKind::Uniform,
@@ -230,6 +238,13 @@ impl FlConfig {
                     ))
                 })?
             }
+            "overlap" => {
+                self.overlap = OverlapKind::parse(value).ok_or_else(|| {
+                    Error::parse(format!(
+                        "unknown overlap `{value}` (none|transfer)"
+                    ))
+                })?
+            }
             "sampler" => {
                 self.sampler = SamplerKind::parse(value).ok_or_else(|| {
                     Error::parse(format!(
@@ -327,6 +342,18 @@ mod tests {
         c.validate().unwrap();
         assert!(c.set("network", "5g").is_err());
         assert!(c.set("net_sharing", "split").is_err());
+    }
+
+    #[test]
+    fn overlap_knob_parses_and_defaults_to_none() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.overlap, OverlapKind::None);
+        c.set("overlap", "transfer").unwrap();
+        assert_eq!(c.overlap, OverlapKind::Transfer);
+        c.validate().unwrap();
+        c.set("overlap", "none").unwrap();
+        assert_eq!(c.overlap, OverlapKind::None);
+        assert!(c.set("overlap", "both").is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! sampled client decodes its download message, trains on its own
 //! shard, and encodes its upload; clients only meet again at FedAvg
 //! aggregation. [`ClientExecutor`] captures exactly that per-client
-//! unit of work, with two implementations:
+//! unit of work, with three implementations:
 //!
 //! * [`SerialExecutor`] — clients run one after another on the calling
 //!   thread, each result pushed into the sink immediately. The
@@ -15,6 +15,14 @@
 //!   order (Condvar-gated). Peak simultaneously-buffered results never
 //!   exceed the window, so a round's memory is O(params + window)
 //!   rather than O(clients_per_round × params).
+//! * [`PipelinedExecutor`] — the `overlap = transfer` engine: the
+//!   per-client unit of work is split into its three stages
+//!   (download/decode → train → encode/upload) and the *transfer*
+//!   stages run on dedicated transport threads separate from the
+//!   compute workers, so client A's upload is encoded while client B
+//!   still trains. Same window bound, same sink contract, same bits —
+//!   only the wall-clock shape changes (and the simulated
+//!   `sim_net_pipelined_s` column models exactly this regime).
 //!
 //! Results flow into a [`RoundSink`](super::sink::RoundSink) instead of
 //! a returned `Vec` — see `coordinator::sink` for the ordering and
@@ -43,10 +51,11 @@ use crate::compression::{Codec, Message};
 use crate::config::FlConfig;
 use crate::coordinator::hetero::{project_ranks, ClientPlan};
 use crate::coordinator::sink::RoundSink;
-use crate::coordinator::trainer::LocalTrainer;
+use crate::coordinator::trainer::{LocalOutcome, LocalTrainer};
 use crate::data::Federation;
 use crate::error::{Error, Result};
 use crate::runtime::ModelSession;
+use crate::transport::OverlapKind;
 use crate::util::rng::Rng;
 
 /// Executor selection, parseable from CLI/config strings (mirrors
@@ -80,12 +89,18 @@ impl ExecutorKind {
     /// Instantiate the executor. `threads` and `window` only affect
     /// [`ExecutorKind::Parallel`]; 0 means one worker per available
     /// core / a window of twice the worker count respectively.
-    pub fn build(&self, threads: usize, window: usize)
-                 -> Box<dyn ClientExecutor> {
-        match self {
-            ExecutorKind::Serial => Box::new(SerialExecutor),
-            ExecutorKind::Parallel => {
+    /// `overlap = transfer` swaps the parallel engine for the staged
+    /// [`PipelinedExecutor`] (dedicated transport threads); the serial
+    /// reference has a single lane, so the knob is a no-op there.
+    pub fn build(&self, threads: usize, window: usize,
+                 overlap: OverlapKind) -> Box<dyn ClientExecutor> {
+        match (self, overlap) {
+            (ExecutorKind::Serial, _) => Box::new(SerialExecutor),
+            (ExecutorKind::Parallel, OverlapKind::None) => {
                 Box::new(ParallelExecutor::new(threads).with_window(window))
+            }
+            (ExecutorKind::Parallel, OverlapKind::Transfer) => {
+                Box::new(PipelinedExecutor::new(threads).with_window(window))
             }
         }
     }
@@ -158,62 +173,73 @@ pub struct ClientUpdate {
     pub mean_acc: f64,
 }
 
-/// The complete per-client unit of work: download-decode → (maybe drop)
-/// → local train → encode-upload → server-side decode (→ rank
-/// projection for tiered clients). Shared verbatim by both executors so
-/// they cannot diverge behaviorally.
-fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
-    // Resolve the client's gear: the server tier, or its plan tier.
-    let (session, codec, down_msg, lora_scale) =
-        match (ctx.plan, &ctx.downloads) {
-            (None, Downloads::Homogeneous(msg)) => {
-                (ctx.session, ctx.codec, *msg, ctx.trainer.lora_scale)
-            }
-            (Some(plan), Downloads::Tiered(msgs)) => {
-                let t = plan.tier_of(cid);
-                let tier = &plan.tiers()[t];
-                (&tier.session, tier.codec.as_ref(), &msgs[t],
-                 tier.lora_scale)
-            }
-            _ => {
-                return Err(Error::invalid(
-                    "round context: plan and downloads disagree",
-                ))
-            }
-        };
-    let segments = &session.spec.trainable_segments;
-    let down_bytes = down_msg.size_bytes();
-
-    // Cancelled by the server before training: the download happened
-    // (the round was in flight), but no compute or upload is spent —
-    // cancellation is a real wall-clock win, not just bookkeeping.
-    if ctx.cancelled.binary_search(&cid).is_ok() {
-        return Ok(ClientResult {
-            cid,
-            down_bytes,
-            update: None,
-            cancelled: true,
-        });
+/// Resolve one client's gear: the server tier, or its plan tier.
+fn client_gear<'a>(
+    ctx: &RoundContext<'a>,
+    cid: usize,
+) -> Result<(&'a ModelSession, &'a dyn Codec, &'a Message, f32)> {
+    match (ctx.plan, &ctx.downloads) {
+        (None, Downloads::Homogeneous(msg)) => {
+            Ok((ctx.session, ctx.codec, *msg, ctx.trainer.lora_scale))
+        }
+        (Some(plan), Downloads::Tiered(msgs)) => {
+            let t = plan.tier_of(cid);
+            let tier = &plan.tiers()[t];
+            Ok((&tier.session, tier.codec.as_ref(), &msgs[t],
+                tier.lora_scale))
+        }
+        _ => Err(Error::invalid(
+            "round context: plan and downloads disagree",
+        )),
     }
-    let start = codec.decode(down_msg, segments)?;
+}
 
-    // All client randomness flows from (seed, round, cid) — stable under
-    // any execution order (see module docs).
+/// What the download/decode stage hands downstream.
+enum Fetched {
+    /// Cancelled by the server before training: the download happened
+    /// (the round was in flight), but no compute or upload is spent —
+    /// cancellation is a real wall-clock win, not just bookkeeping.
+    Cancelled,
+    /// Decoded start parameters for the train stage.
+    Start(Vec<f32>),
+}
+
+/// Stage 1 — download/decode: pull the client's tier message and
+/// decode it into start parameters (or short-circuit a planned
+/// cancellation). Pure in `(ctx, cid)`; runs on a transport thread
+/// under `overlap = transfer`.
+fn stage_download(ctx: &RoundContext<'_>, cid: usize)
+                  -> Result<(usize, Fetched)> {
+    let (session, codec, down_msg, _) = client_gear(ctx, cid)?;
+    let down_bytes = down_msg.size_bytes();
+    if ctx.cancelled.binary_search(&cid).is_ok() {
+        return Ok((down_bytes, Fetched::Cancelled));
+    }
+    let start = codec.decode(down_msg, &session.spec.trainable_segments)?;
+    Ok((down_bytes, Fetched::Start(start)))
+}
+
+/// What the train stage hands to the upload stage.
+enum Trained {
+    /// Failure injection: the client downloaded the model but fails
+    /// before uploading (crash/network loss). FedAvg proceeds with the
+    /// survivors — the aggregation-agnostic loop needs no special
+    /// casing.
+    Dropped,
+    Outcome(LocalOutcome),
+}
+
+/// Stage 2 — local training: the dropout coin and the local epochs.
+/// All client randomness flows from `(seed, round, cid)` — stable
+/// under any execution order or stage placement (see module docs).
+fn stage_train(ctx: &RoundContext<'_>, cid: usize, start: Vec<f32>)
+               -> Result<Trained> {
+    let (session, _, _, lora_scale) = client_gear(ctx, cid)?;
     let mut crng =
         Rng::for_client(ctx.cfg.seed, ctx.round as u64, cid as u64);
-
-    // Failure injection: the client downloaded the model but fails
-    // before uploading (crash/network loss). FedAvg proceeds with the
-    // survivors — the aggregation-agnostic loop needs no special casing.
     if ctx.cfg.dropout > 0.0 && crng.f64() < ctx.cfg.dropout {
-        return Ok(ClientResult {
-            cid,
-            down_bytes,
-            update: None,
-            cancelled: false,
-        });
+        return Ok(Trained::Dropped);
     }
-
     let trainer = LocalTrainer { lora_scale, ..ctx.trainer };
     let outcome = trainer.run(
         session,
@@ -222,8 +248,16 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
         start,
         &mut crng,
     )?;
+    Ok(Trained::Outcome(outcome))
+}
 
-    // Upload: encode → count bytes → decode as the server would.
+/// Stage 3 — encode/upload: encode → count bytes → decode as the
+/// server would (→ rank projection for tiered clients). Runs on a
+/// transport thread under `overlap = transfer`.
+fn stage_upload(ctx: &RoundContext<'_>, cid: usize, outcome: LocalOutcome)
+                -> Result<ClientUpdate> {
+    let (session, codec, _, _) = client_gear(ctx, cid)?;
+    let segments = &session.spec.trainable_segments;
     let up_msg = codec.encode(&outcome.params, segments)?;
     let up_bytes = up_msg.size_bytes();
     let received = codec.decode(&up_msg, segments)?;
@@ -240,18 +274,47 @@ fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
         )?,
     };
 
-    Ok(ClientResult {
-        cid,
-        down_bytes,
-        update: Some(ClientUpdate {
-            params,
-            weight: outcome.samples as f64,
-            up_bytes,
-            mean_loss: outcome.mean_loss,
-            mean_acc: outcome.mean_acc,
-        }),
-        cancelled: false,
+    Ok(ClientUpdate {
+        params,
+        weight: outcome.samples as f64,
+        up_bytes,
+        mean_loss: outcome.mean_loss,
+        mean_acc: outcome.mean_acc,
     })
+}
+
+/// The complete per-client unit of work — the three stages composed
+/// inline: download-decode → (maybe drop) → local train →
+/// encode-upload. Shared verbatim by the serial and parallel executors
+/// so they cannot diverge behaviorally; the pipelined executor runs
+/// the *same* stage functions, just on different threads.
+fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
+    let (down_bytes, fetched) = stage_download(ctx, cid)?;
+    let start = match fetched {
+        Fetched::Cancelled => {
+            return Ok(ClientResult {
+                cid,
+                down_bytes,
+                update: None,
+                cancelled: true,
+            })
+        }
+        Fetched::Start(start) => start,
+    };
+    match stage_train(ctx, cid, start)? {
+        Trained::Dropped => Ok(ClientResult {
+            cid,
+            down_bytes,
+            update: None,
+            cancelled: false,
+        }),
+        Trained::Outcome(outcome) => Ok(ClientResult {
+            cid,
+            down_bytes,
+            update: Some(stage_upload(ctx, cid, outcome)?),
+            cancelled: false,
+        }),
+    }
 }
 
 /// Strategy for executing a round's sampled clients.
@@ -353,21 +416,32 @@ impl ParallelExecutor {
     }
 
     fn pool_size(&self, work: usize) -> usize {
-        let auto = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        // `auto` is always >= 1, so the pool never collapses to zero
-        // workers; it also never exceeds the work items available.
-        let requested = if self.threads == 0 { auto } else { self.threads };
-        requested.min(work.max(1))
+        pool_size(self.threads, work)
     }
 
     fn effective_window(&self, workers: usize) -> usize {
-        if self.window == 0 {
-            (2 * workers).max(1)
-        } else {
-            self.window
-        }
+        effective_window(self.window, workers)
+    }
+}
+
+/// Worker-pool sizing shared by the fan-out executors: `threads == 0`
+/// means one worker per available core, and the pool never collapses
+/// to zero workers nor exceeds the work items available.
+fn pool_size(threads: usize, work: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let requested = if threads == 0 { auto } else { threads };
+    requested.min(work.max(1))
+}
+
+/// Out-of-order window sizing shared by the fan-out executors
+/// (`0` = twice the worker count).
+fn effective_window(window: usize, workers: usize) -> usize {
+    if window == 0 {
+        (2 * workers).max(1)
+    } else {
+        window
     }
 }
 
@@ -520,6 +594,339 @@ impl ClientExecutor for ParallelExecutor {
     }
 }
 
+/// One ring slot of the staged pipeline: the client's progress through
+/// download → train → upload, ending in the drainable result.
+enum PipeSlot {
+    Empty,
+    /// Decoded download waiting for a compute worker.
+    Fetched { down_bytes: usize, start: Vec<f32> },
+    /// A compute worker owns it.
+    Training,
+    /// Trained update waiting for the transport-out thread.
+    TrainedUp { down_bytes: usize, outcome: LocalOutcome },
+    /// The transport-out thread owns it.
+    Uploading,
+    /// Result ready for the in-order drain.
+    Done(Result<ClientResult>),
+}
+
+/// Shared state of one pipelined round (single mutex + condvar; every
+/// transition broadcasts, every wait re-checks its predicate).
+struct PipeState {
+    slots: Vec<PipeSlot>,
+    /// Next client index the transport-in thread may claim.
+    next: usize,
+    /// Results handed to the sink so far.
+    drained: usize,
+    abort: bool,
+}
+
+/// The `overlap = transfer` engine: three-stage pipeline with the
+/// transfer stages on dedicated transport threads.
+///
+/// * one **transport-in** thread claims client indices (window-gated,
+///   like the parallel executor's workers) and runs
+///   download/decode;
+/// * `threads` **compute workers** pick up decoded clients and run the
+///   dropout coin + local epochs — nothing else, so a worker is never
+///   blocked on codec work;
+/// * one **transport-out** thread encodes/uploads trained outcomes —
+///   client A's upload overlaps client B's training by construction;
+/// * the calling thread drains results in sampling order into the
+///   sink, exactly like the other executors.
+///
+/// Work items live in the same bounded ring the parallel executor
+/// uses, so at most `window` clients are in flight and peak buffered
+/// results never exceed the window. Every stage function is pure in
+/// `(ctx, cid)`, so results are bit-identical to [`SerialExecutor`].
+pub struct PipelinedExecutor {
+    threads: usize,
+    window: usize,
+    /// High-water mark of simultaneously buffered (produced,
+    /// undrained) results in the last `execute` — diagnostics, pinned
+    /// `<= window` by the streaming-memory tests.
+    peak_buffered: AtomicUsize,
+    buffered: AtomicUsize,
+}
+
+impl PipelinedExecutor {
+    /// `threads == 0` sizes the compute pool to the available cores
+    /// (the two transport threads come on top).
+    pub fn new(threads: usize) -> PipelinedExecutor {
+        PipelinedExecutor {
+            threads,
+            window: 0,
+            peak_buffered: AtomicUsize::new(0),
+            buffered: AtomicUsize::new(0),
+        }
+    }
+
+    /// Cap the in-flight window (`0` = twice the compute workers).
+    pub fn with_window(mut self, window: usize) -> PipelinedExecutor {
+        self.window = window;
+        self
+    }
+
+    /// High-water mark of simultaneously buffered results during the
+    /// most recent `execute`.
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered.load(Ordering::Relaxed)
+    }
+
+    fn note_done(&self) {
+        let b = self.buffered.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_buffered.fetch_max(b, Ordering::Relaxed);
+    }
+}
+
+impl ClientExecutor for PipelinedExecutor {
+    fn name(&self) -> &'static str {
+        "pipelined"
+    }
+
+    fn execute(
+        &self,
+        ctx: &RoundContext<'_>,
+        clients: &[usize],
+        sink: &mut dyn RoundSink,
+    ) -> Result<()> {
+        let n = clients.len();
+        let workers = pool_size(self.threads, n);
+        self.buffered.store(0, Ordering::Relaxed);
+        self.peak_buffered.store(0, Ordering::Relaxed);
+        if workers <= 1 && n <= 1 {
+            // Nothing to overlap: skip thread setup, identical results
+            // by the determinism contract.
+            return SerialExecutor.execute(ctx, clients, sink);
+        }
+        let window = effective_window(self.window, workers).min(n);
+
+        let state = Mutex::new(PipeState {
+            slots: (0..window).map(|_| PipeSlot::Empty).collect(),
+            next: 0,
+            drained: 0,
+            abort: false,
+        });
+        // One condvar for every stage boundary: transitions broadcast,
+        // waiters re-check their own predicate. Rounds are small (tens
+        // of clients), so the spurious-wakeup cost is noise next to a
+        // train step.
+        let cv = Condvar::new();
+
+        // Same role as the parallel executor's sentry: a panicking
+        // stage (a bug — stage work returns `Result`) must wind the
+        // whole pipeline down instead of leaving siblings parked.
+        struct PipeSentry<'s> {
+            state: &'s Mutex<PipeState>,
+            cv: &'s Condvar,
+        }
+        impl Drop for PipeSentry<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    if let Ok(mut st) = self.state.lock() {
+                        st.abort = true;
+                    }
+                    self.cv.notify_all();
+                }
+            }
+        }
+
+        std::thread::scope(|scope| {
+            // Transport-in: claim indices in order, decode downloads.
+            scope.spawn(|| {
+                let _sentry = PipeSentry { state: &state, cv: &cv };
+                loop {
+                    let i = {
+                        let mut st = state.lock().unwrap();
+                        loop {
+                            if st.abort || st.next >= n {
+                                return;
+                            }
+                            if st.next < st.drained + window {
+                                st.next += 1;
+                                break st.next - 1;
+                            }
+                            st = cv.wait(st).unwrap();
+                        }
+                    };
+                    let fetched = stage_download(ctx, clients[i]);
+                    let mut st = state.lock().unwrap();
+                    if st.abort {
+                        return;
+                    }
+                    debug_assert!(matches!(st.slots[i % window],
+                                           PipeSlot::Empty));
+                    st.slots[i % window] = match fetched {
+                        Err(e) => {
+                            self.note_done();
+                            PipeSlot::Done(Err(e))
+                        }
+                        Ok((down_bytes, Fetched::Cancelled)) => {
+                            self.note_done();
+                            PipeSlot::Done(Ok(ClientResult {
+                                cid: clients[i],
+                                down_bytes,
+                                update: None,
+                                cancelled: true,
+                            }))
+                        }
+                        Ok((down_bytes, Fetched::Start(start))) => {
+                            PipeSlot::Fetched { down_bytes, start }
+                        }
+                    };
+                    drop(st);
+                    cv.notify_all();
+                }
+            });
+
+            // Compute workers: dropout coin + local epochs only.
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let _sentry = PipeSentry { state: &state, cv: &cv };
+                    loop {
+                        let (i, down_bytes, start) = {
+                            let mut st = state.lock().unwrap();
+                            loop {
+                                if st.abort || st.drained >= n {
+                                    return;
+                                }
+                                let found = (st.drained..st.next).find(|&j| {
+                                    matches!(st.slots[j % window],
+                                             PipeSlot::Fetched { .. })
+                                });
+                                if let Some(j) = found {
+                                    let slot = std::mem::replace(
+                                        &mut st.slots[j % window],
+                                        PipeSlot::Training,
+                                    );
+                                    let PipeSlot::Fetched {
+                                        down_bytes, start,
+                                    } = slot else {
+                                        unreachable!("slot checked above")
+                                    };
+                                    break (j, down_bytes, start);
+                                }
+                                st = cv.wait(st).unwrap();
+                            }
+                        };
+                        let trained = stage_train(ctx, clients[i], start);
+                        let mut st = state.lock().unwrap();
+                        if st.abort {
+                            return;
+                        }
+                        st.slots[i % window] = match trained {
+                            Err(e) => {
+                                self.note_done();
+                                PipeSlot::Done(Err(e))
+                            }
+                            Ok(Trained::Dropped) => {
+                                self.note_done();
+                                PipeSlot::Done(Ok(ClientResult {
+                                    cid: clients[i],
+                                    down_bytes,
+                                    update: None,
+                                    cancelled: false,
+                                }))
+                            }
+                            Ok(Trained::Outcome(outcome)) => {
+                                PipeSlot::TrainedUp { down_bytes, outcome }
+                            }
+                        };
+                        drop(st);
+                        cv.notify_all();
+                    }
+                });
+            }
+
+            // Transport-out: encode/upload trained outcomes.
+            scope.spawn(|| {
+                let _sentry = PipeSentry { state: &state, cv: &cv };
+                loop {
+                    let (i, down_bytes, outcome) = {
+                        let mut st = state.lock().unwrap();
+                        loop {
+                            if st.abort || st.drained >= n {
+                                return;
+                            }
+                            let found = (st.drained..st.next).find(|&j| {
+                                matches!(st.slots[j % window],
+                                         PipeSlot::TrainedUp { .. })
+                            });
+                            if let Some(j) = found {
+                                let slot = std::mem::replace(
+                                    &mut st.slots[j % window],
+                                    PipeSlot::Uploading,
+                                );
+                                let PipeSlot::TrainedUp {
+                                    down_bytes, outcome,
+                                } = slot else {
+                                    unreachable!("slot checked above")
+                                };
+                                break (j, down_bytes, outcome);
+                            }
+                            st = cv.wait(st).unwrap();
+                        }
+                    };
+                    let res = stage_upload(ctx, clients[i], outcome)
+                        .map(|update| ClientResult {
+                            cid: clients[i],
+                            down_bytes,
+                            update: Some(update),
+                            cancelled: false,
+                        });
+                    let mut st = state.lock().unwrap();
+                    if st.abort {
+                        return;
+                    }
+                    self.note_done();
+                    st.slots[i % window] = PipeSlot::Done(res);
+                    drop(st);
+                    cv.notify_all();
+                }
+            });
+
+            // In-order drain on the coordinator thread — the sink sees
+            // sampling order regardless of stage scheduling.
+            let _sentry = PipeSentry { state: &state, cv: &cv };
+            let mut out = Ok(());
+            for i in 0..n {
+                let res = {
+                    let mut st = state.lock().unwrap();
+                    loop {
+                        if matches!(st.slots[i % window], PipeSlot::Done(_)) {
+                            let slot = std::mem::replace(
+                                &mut st.slots[i % window],
+                                PipeSlot::Empty,
+                            );
+                            let PipeSlot::Done(r) = slot else {
+                                unreachable!("slot checked above")
+                            };
+                            st.drained += 1;
+                            self.buffered.fetch_sub(1, Ordering::Relaxed);
+                            break r;
+                        }
+                        if st.abort {
+                            break Err(Error::invalid(
+                                "round aborted: a pipeline stage failed",
+                            ));
+                        }
+                        st = cv.wait(st).unwrap();
+                    }
+                };
+                // A slot just freed (or the round ended): wake claims.
+                cv.notify_all();
+                if let Err(e) = res.and_then(|r| sink.push(i, r)) {
+                    state.lock().unwrap().abort = true;
+                    cv.notify_all();
+                    out = Err(e);
+                    break;
+                }
+            }
+            out
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -534,8 +941,24 @@ mod tests {
         assert_eq!(ExecutorKind::parse("threads:4"), None);
         assert_eq!(ExecutorKind::Serial.label(), "serial");
         assert_eq!(ExecutorKind::Parallel.label(), "parallel");
-        assert_eq!(ExecutorKind::Serial.build(0, 0).name(), "serial");
-        assert_eq!(ExecutorKind::Parallel.build(3, 2).name(), "parallel");
+        assert_eq!(
+            ExecutorKind::Serial.build(0, 0, OverlapKind::None).name(),
+            "serial"
+        );
+        assert_eq!(
+            ExecutorKind::Parallel.build(3, 2, OverlapKind::None).name(),
+            "parallel"
+        );
+        // The overlap knob swaps the parallel engine for the staged
+        // pipeline; the serial reference has nothing to overlap.
+        assert_eq!(
+            ExecutorKind::Parallel.build(3, 2, OverlapKind::Transfer).name(),
+            "pipelined"
+        );
+        assert_eq!(
+            ExecutorKind::Serial.build(0, 0, OverlapKind::Transfer).name(),
+            "serial"
+        );
     }
 
     #[test]

@@ -20,12 +20,15 @@
 
 //! Within a round the protocol is embarrassingly parallel — clients
 //! only meet at step 4 — so per-client execution is pluggable
-//! ([`executor::ClientExecutor`]): the serial reference and the
-//! windowed thread-pool executor produce bit-identical runs by
-//! construction, streaming each result into the server's in-place
-//! merge ([`sink::RoundSink`]) in sampling order. A
-//! [`hetero::ClientPlan`] extends the same loop to rank-heterogeneous
-//! federations (per-client rank tiers and codecs).
+//! ([`executor::ClientExecutor`]): the serial reference, the windowed
+//! thread-pool executor and the staged transfer-overlap pipeline
+//! (`overlap = transfer`, transfer stages on dedicated transport
+//! threads) produce bit-identical runs by construction, streaming each
+//! result into the server's in-place merge ([`sink::RoundSink`]) in
+//! sampling order; the merge narrates each client's round to the
+//! transport stage (`transport::stage`), which owns all wire-time
+//! accounting. A [`hetero::ClientPlan`] extends the same loop to
+//! rank-heterogeneous federations (per-client rank tiers and codecs).
 
 pub mod aggregator;
 pub mod executor;
@@ -37,7 +40,7 @@ pub mod trainer;
 
 pub use aggregator::FedAvg;
 pub use executor::{ClientExecutor, ExecutorKind, ParallelExecutor,
-                   SerialExecutor};
+                   PipelinedExecutor, SerialExecutor};
 pub use hetero::{ClientPlan, PlanTier};
 pub use sampler::{LatencyBiasedSampler, OversampleSampler, Sampler,
                   SamplerKind, UniformSampler};

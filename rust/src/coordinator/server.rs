@@ -40,7 +40,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{p50, Recorder, RoundRecord};
 use crate::runtime::{Engine, ModelSession};
 use crate::transport::{ClientProfiles, CommLedger, Direction, NetworkModel,
-                       RoundLoad};
+                       StageEvent, TransferStage};
 use crate::util::rng::Rng;
 
 /// Aggregate results of one run.
@@ -64,6 +64,16 @@ pub struct RunSummary {
     /// total-bits-over-capacity on a shared pipe (see
     /// [`crate::transport::Sharing`]).
     pub sim_net_parallel_s: f64,
+    /// Simulated time-on-wire under the transport-stage overlap regime
+    /// (`overlap = transfer`): transfer streamed off the client task,
+    /// so each round is bounded by its slowest single stage (and, on a
+    /// shared pipe, the busier direction). Never above
+    /// `sim_net_parallel_s`.
+    pub sim_net_pipelined_s: f64,
+    /// Total simulated transfer wait across the run (downloads +
+    /// uploads, cancelled downloads included) — the wire time the
+    /// pipelined regime hides behind compute.
+    pub transfer_wait_s: f64,
     /// Sampled clients the server cancelled across the run
     /// (`sampler = oversample_k` ends each round at the K-th accepted
     /// upload; 0 for the other strategies).
@@ -138,6 +148,8 @@ pub struct Simulation {
     last_round_times: Vec<f64>,
     sim_net_serial_s: f64,
     sim_net_parallel_s: f64,
+    sim_net_pipelined_s: f64,
+    transfer_wait_s: f64,
     /// Clients that failed mid-round (failure injection diagnostics).
     pub dropped_clients: u64,
     /// Clients the server cancelled after their round already had K
@@ -236,7 +248,8 @@ impl Simulation {
         Ok(Simulation {
             sampler,
             codec: cfg.codec.build(),
-            executor: cfg.executor.build(cfg.threads, cfg.window),
+            executor: cfg.executor.build(cfg.threads, cfg.window,
+                                         cfg.overlap),
             net,
             profiles,
             plan,
@@ -256,6 +269,8 @@ impl Simulation {
             last_round_times: Vec::new(),
             sim_net_serial_s: 0.0,
             sim_net_parallel_s: 0.0,
+            sim_net_pipelined_s: 0.0,
+            transfer_wait_s: 0.0,
             dropped_clients: 0,
             cancelled_clients: 0,
         })
@@ -372,20 +387,19 @@ impl Simulation {
             * self.cfg.lr_decay.powi(self.rounds_done as i32);
 
         // (2)+(3)+(4) per-client work streams into the in-place merge:
-        // ledger entries, FedAvg adds, dropout counts and network loads
+        // ledger entries, FedAvg adds, dropout counts and stage events
         // fold in as each client's slot drains, in sampling order —
         // byte-for-byte the same whichever executor (or window)
         // produced the results, and never a buffered Vec of updates.
+        // Wire time is charged by the transport stage, which owns the
+        // link clock and the round's load accumulator.
         let mut merge = RoundMerge {
             expected: &client_ids,
             plan: self.plan.as_ref(),
             ledger: &mut self.ledger,
             tier_bytes: &mut self.tier_bytes,
-            net: &self.net,
-            profiles: &self.profiles,
+            stage: TransferStage::begin_round(&self.net, &self.profiles),
             agg: FedAvg::new(self.global.len()),
-            load: RoundLoad::new(),
-            times: Vec::with_capacity(client_ids.len()),
             loss_sum: 0.0,
             acc_sum: 0.0,
             survivors: 0,
@@ -411,16 +425,18 @@ impl Simulation {
         self.executor.execute(&ctx, &client_ids, &mut merge)?;
 
         let RoundMerge {
-            agg, load, times, loss_sum, acc_sum, survivors, dropped,
-            cancelled, ..
+            agg, stage, loss_sum, acc_sum, survivors, dropped, cancelled, ..
         } = merge;
-        self.sim_net_serial_s += load.serial_s();
-        self.sim_net_parallel_s += load.parallel_s(&self.net);
+        let transport = stage.finish();
+        self.sim_net_serial_s += transport.serial_s;
+        self.sim_net_parallel_s += transport.parallel_s;
+        self.sim_net_pipelined_s += transport.pipelined_s;
+        self.transfer_wait_s += transport.transfer_wait_s;
         self.dropped_clients += dropped;
         self.last_round_dropped = dropped;
         self.cancelled_clients += cancelled;
         self.last_round_cancelled = cancelled;
-        self.last_round_times = times;
+        self.last_round_times = transport.times;
 
         self.rounds_done += 1;
         if survivors == 0 {
@@ -497,6 +513,8 @@ impl Simulation {
         // when `eval_every > 1` skips rounds.
         let mut drops_since_record = 0u64;
         let mut cancelled_since_record = 0u64;
+        let mut pipelined_at_record = 0.0f64;
+        let mut wait_at_record = 0.0f64;
         let mut window_times: Vec<f64> = Vec::new();
         // Whole-run client times for the summary percentiles; bounded
         // by rounds × clients_per_round f64s.
@@ -522,10 +540,15 @@ impl Simulation {
                     client_p50_s: p50(&window_times),
                     client_max_s: window_times.iter().copied()
                         .fold(0.0, f64::max),
+                    sim_net_pipelined_s: self.sim_net_pipelined_s
+                        - pipelined_at_record,
+                    transfer_wait_s: self.transfer_wait_s - wait_at_record,
                     wall_ms: t0.elapsed().as_secs_f64() * 1e3,
                 });
                 drops_since_record = 0;
                 cancelled_since_record = 0;
+                pipelined_at_record = self.sim_net_pipelined_s;
+                wait_at_record = self.transfer_wait_s;
                 window_times.clear();
             }
         }
@@ -540,6 +563,8 @@ impl Simulation {
             wall_s: t0.elapsed().as_secs_f64(),
             sim_net_serial_s: self.sim_net_serial_s,
             sim_net_parallel_s: self.sim_net_parallel_s,
+            sim_net_pipelined_s: self.sim_net_pipelined_s,
+            transfer_wait_s: self.transfer_wait_s,
             cancelled_clients: self.cancelled_clients,
             sim_client_p50_s: p50(&all_times),
             sim_client_max_s: all_times.iter().copied().fold(0.0, f64::max),
@@ -549,21 +574,19 @@ impl Simulation {
 
 /// The server's in-place round merge: one [`RoundSink`] holding the
 /// round's accumulators. Every push folds one client straight into the
-/// ledger, the FedAvg accumulator and the network-load tally — the
-/// decoded update is freed as soon as its `agg.add` returns.
+/// ledger and the FedAvg accumulator, and narrates the client's round
+/// to the transport stage as [`StageEvent`]s — wire-time charging
+/// lives there now, not in the merge. The decoded update is freed as
+/// soon as its `agg.add` returns.
 struct RoundMerge<'a> {
     expected: &'a [usize],
     plan: Option<&'a ClientPlan>,
     ledger: &'a mut CommLedger,
     tier_bytes: &'a mut [u64],
-    net: &'a NetworkModel,
-    profiles: &'a ClientProfiles,
+    /// The round's transport accountant (owns the link clock and the
+    /// load accumulator; see `transport::stage`).
+    stage: TransferStage<'a>,
     agg: FedAvg,
-    load: RoundLoad,
-    /// Simulated round-trip of each client the server waited on
-    /// (survivors and dropouts; cancelled clients excluded — the round
-    /// ended without them). Feeds the p50/max straggler stats.
-    times: Vec<f64>,
     loss_sum: f64,
     acc_sum: f64,
     survivors: usize,
@@ -586,23 +609,23 @@ impl RoundSink for RoundMerge<'_> {
             )));
         }
         self.ledger.record(Direction::Down, res.down_bytes);
+        self.stage.push(StageEvent::Download {
+            cid: res.cid,
+            bytes: res.down_bytes,
+        });
         let up_bytes = if res.cancelled {
             // The server cut this client after the round had its K
             // uploads: the download still moved (bytes + serial time),
-            // but the concurrent round never waited for it.
+            // but the round never waits for it — under `overlap =
+            // transfer` the cut lands mid-transfer.
             self.cancelled += 1;
-            let t_down = self.profiles.get(res.cid)
-                .download_time(self.net, res.down_bytes);
-            self.load.add_cancelled(t_down, res.down_bytes);
+            self.stage.push(StageEvent::Cancelled { cid: res.cid });
             0
         } else {
             match res.update {
                 None => {
                     self.dropped += 1;
-                    let t = self.profiles.client_time(
-                        self.net, res.cid, res.down_bytes, 0);
-                    self.load.add_timed(t, res.down_bytes, 0);
-                    self.times.push(t);
+                    self.stage.push(StageEvent::Dropped { cid: res.cid });
                     0
                 }
                 Some(up) => {
@@ -611,10 +634,11 @@ impl RoundSink for RoundMerge<'_> {
                     self.loss_sum += up.mean_loss;
                     self.acc_sum += up.mean_acc;
                     self.agg.add(&up.params, up.weight)?;
-                    let t = self.profiles.client_time(
-                        self.net, res.cid, res.down_bytes, up.up_bytes);
-                    self.load.add_timed(t, res.down_bytes, up.up_bytes);
-                    self.times.push(t);
+                    self.stage.push(StageEvent::Train { cid: res.cid });
+                    self.stage.push(StageEvent::Upload {
+                        cid: res.cid,
+                        bytes: up.up_bytes,
+                    });
                     up.up_bytes
                 }
             }

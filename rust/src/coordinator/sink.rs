@@ -23,6 +23,15 @@
 //! Implementations: the server's in-place merge
 //! (`coordinator::server`), [`VecSink`] for tests and callers that
 //! genuinely want the batch-collect behaviour back.
+//!
+//! The server's merge additionally narrates each drained result to the
+//! simulated transport stage as
+//! [`StageEvent`](crate::transport::StageEvent)s (download → train →
+//! upload / dropped / cancelled) — wire-time charging lives in
+//! `transport::stage`, not in sinks. Because pushes are single-threaded
+//! and in sampling order, that event stream is deterministic no matter
+//! which executor (serial, windowed-parallel, or the staged
+//! `overlap = transfer` pipeline) produced the results.
 
 use crate::coordinator::executor::{ClientExecutor, ClientResult,
                                    RoundContext};

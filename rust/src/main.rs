@@ -13,13 +13,14 @@
 use flocora::cli::Args;
 use flocora::compression::Codec;
 use flocora::config::{loader, presets, FlConfig};
-use flocora::coordinator::Simulation;
+use flocora::coordinator::{RunSummary, Simulation};
 use flocora::error::{Error, Result};
 use flocora::experiments::tables;
 use flocora::metrics::Recorder;
 use flocora::model::ParamKind;
 use flocora::runtime::{Batch, Engine};
 use flocora::tensor;
+use flocora::util::json::{arr, num, obj, s, Json};
 use flocora::util::rng::Rng;
 
 fn main() {
@@ -54,15 +55,18 @@ fn print_usage() {
          SUBCOMMANDS:\n\
          \x20 train         run a federated simulation\n\
          \x20               [--config FILE] [--preset NAME] [--csv OUT]\n\
-         \x20               [--tag T] [--rounds N]\n\
+         \x20               [--json OUT] [--tag T] [--rounds N]\n\
          \x20               [--codec fp32|q8|q4|q2|topk:K|zerofl:SP:MR]\n\
          \x20               [--executor serial|parallel] [--threads N]\n\
-         \x20               [--window N] [--network edge_lte|wifi]\n\
+         \x20               [--window N] [--overlap none|transfer]\n\
+         \x20               [--network edge_lte|wifi]\n\
          \x20               [--net_sharing dedicated|shared]\n\
          \x20               [--sampler uniform|latency_biased|oversample_k]\n\
          \x20               [--oversample_beta B]\n\
          \x20               [--client_profiles uniform|tiered]\n\
          \x20               [--hetero_ranks 2,4,8] [--hetero_codecs ...] ...\n\
+         \x20               (--artifacts synthetic runs the PJRT-free\n\
+         \x20               surrogate backend — what CI's sim-smoke uses)\n\
          \x20 tables        print analytic Table I/III/IV vs the paper\n\
          \x20 inspect       list artifact manifest\n\
          \x20 quant-parity  rust codec vs pallas HLO oracle\n\
@@ -95,9 +99,12 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         loader::apply_file(&mut cfg, path)?;
     }
     let csv = args.opt_str("csv");
+    let json = args.opt_str("json");
     // Any remaining --key value pairs are config overrides.
     for (k, v) in args.options().clone() {
-        if k == "config" || k == "csv" || k == "artifacts" || k == "preset" {
+        if k == "config" || k == "csv" || k == "json" || k == "artifacts"
+            || k == "preset"
+        {
             continue;
         }
         cfg.set(&k, &v)?;
@@ -120,7 +127,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     println!(
         "run: tag={} codec={} clients={} ({}/round) rounds={} epochs={} \
          lr={} alpha={} lda={} seed={} executor={} threads={} window={} \
-         network={}:{} sampler={} profiles={}{}",
+         overlap={} network={}:{} sampler={} profiles={}{}{}",
         cfg.tag, cfg.codec.label(), cfg.num_clients, cfg.clients_per_round,
         cfg.rounds, cfg.local_epochs, cfg.lr, cfg.lora_alpha, cfg.lda_alpha,
         cfg.seed, cfg.executor.label(),
@@ -128,8 +135,10 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         else { cfg.threads.to_string() },
         if cfg.window == 0 { "auto".to_string() }
         else { cfg.window.to_string() },
+        cfg.overlap.label(),
         cfg.network.label(), cfg.net_sharing.label(),
-        cfg.sampler.label(), cfg.client_profiles.label(), hetero
+        cfg.sampler.label(), cfg.client_profiles.label(), hetero,
+        if engine.is_synthetic() { " backend=synthetic" } else { "" }
     );
     let mut sim = Simulation::new(&engine, cfg)?;
     let mut rec = Recorder::new("train");
@@ -150,10 +159,12 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         summary.per_client_tcc_bytes / 1e6, summary.wall_s
     );
     println!(
-        "simulated wire time ({} links, {}): {:.1}s with concurrent \
-         clients vs {:.1}s serial",
+        "simulated wire time ({} links, {}): {:.1}s pipelined (overlap) \
+         vs {:.1}s concurrent vs {:.1}s serial ({:.1}s transfer wait \
+         overlapped)",
         sim.config().network.label(), sim.config().net_sharing.label(),
-        summary.sim_net_parallel_s, summary.sim_net_serial_s
+        summary.sim_net_pipelined_s, summary.sim_net_parallel_s,
+        summary.sim_net_serial_s, summary.transfer_wait_s
     );
     println!(
         "stragglers: {} cancelled, {} dropped, client time p50 {:.3}s \
@@ -176,7 +187,52 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         rec.write_csv(&path)?;
         println!("wrote {path}");
     }
+    if let Some(path) = json {
+        let doc = run_json(&rec, &summary, sim.dropped_clients);
+        std::fs::write(&path, doc.to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
+}
+
+/// JSON export of one run: the summary plus the per-round records.
+/// Wall-clock fields (`wall_s`, `wall_ms`) are the only
+/// non-deterministic values; CI's sim-smoke job strips them and diffs
+/// the rest to pin bit-identity across `overlap` modes.
+fn run_json(rec: &Recorder, summary: &RunSummary, dropped: u64) -> Json {
+    // NaN is not valid JSON (a fully-dropped final round reports a NaN
+    // train loss); map non-finite to null.
+    let fnum = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
+    obj(vec![
+        ("name", s(rec.name.clone())),
+        (
+            "summary",
+            obj(vec![
+                ("final_acc", fnum(summary.final_acc)),
+                ("tail_acc", fnum(summary.tail_acc)),
+                ("final_train_loss", fnum(summary.final_train_loss)),
+                ("total_bytes", num(summary.total_bytes as f64)),
+                ("mean_up_msg_bytes", fnum(summary.mean_up_msg_bytes)),
+                ("per_client_tcc_bytes", fnum(summary.per_client_tcc_bytes)),
+                ("rounds", num(summary.rounds as f64)),
+                ("sim_net_serial_s", fnum(summary.sim_net_serial_s)),
+                ("sim_net_parallel_s", fnum(summary.sim_net_parallel_s)),
+                ("sim_net_pipelined_s", fnum(summary.sim_net_pipelined_s)),
+                ("transfer_wait_s", fnum(summary.transfer_wait_s)),
+                ("cancelled_clients", num(summary.cancelled_clients as f64)),
+                ("dropped_clients", num(dropped as f64)),
+                ("sim_client_p50_s", fnum(summary.sim_client_p50_s)),
+                ("sim_client_max_s", fnum(summary.sim_client_max_s)),
+                ("wall_s", fnum(summary.wall_s)),
+            ]),
+        ),
+        ("rounds", {
+            let Json::Obj(m) = rec.to_json() else {
+                unreachable!("Recorder::to_json returns an object")
+            };
+            m.get("rounds").cloned().unwrap_or_else(|| arr(Vec::new()))
+        }),
+    ])
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

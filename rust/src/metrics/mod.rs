@@ -31,6 +31,14 @@ pub struct RoundRecord {
     /// Slowest simulated client round-trip in the covered rounds — the
     /// straggler the dedicated-link round time is made of.
     pub client_max_s: f64,
+    /// Simulated round time under the transport-stage overlap regime
+    /// (`overlap = transfer`), summed over the covered rounds; sums to
+    /// the run-level `RunSummary::sim_net_pipelined_s`.
+    pub sim_net_pipelined_s: f64,
+    /// Simulated wire wait (downloads + uploads) in the covered rounds
+    /// — the time the pipelined regime hides behind compute; sums to
+    /// `RunSummary::transfer_wait_s`.
+    pub transfer_wait_s: f64,
     pub wall_ms: f64,
 }
 
@@ -78,20 +86,26 @@ impl Recorder {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,test_acc,test_loss,train_loss,cum_bytes,dropped,\
-             cancelled,client_p50_s,client_max_s,wall_ms\n",
+             cancelled,client_p50_s,client_max_s,sim_net_pipelined_s,\
+             transfer_wait_s,wall_ms\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{:.4},{:.4},{:.4},{},{},{},{:.4},{:.4},{:.1}\n",
+                "{},{:.4},{:.4},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},\
+                 {:.1}\n",
                 r.round, r.test_acc, r.test_loss, r.train_loss, r.cum_bytes,
                 r.dropped, r.cancelled, r.client_p50_s, r.client_max_s,
-                r.wall_ms
+                r.sim_net_pipelined_s, r.transfer_wait_s, r.wall_ms
             ));
         }
         out
     }
 
     pub fn to_json(&self) -> Json {
+        // A fully-dropped recorded round reports a NaN train loss, and
+        // NaN is not valid JSON — map non-finite floats to null so the
+        // export always parses.
+        let fnum = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
         obj(vec![
             ("name", s(self.name.clone())),
             (
@@ -102,15 +116,18 @@ impl Recorder {
                     .map(|r| {
                         obj(vec![
                             ("round", num(r.round as f64)),
-                            ("test_acc", num(r.test_acc)),
-                            ("test_loss", num(r.test_loss)),
-                            ("train_loss", num(r.train_loss)),
+                            ("test_acc", fnum(r.test_acc)),
+                            ("test_loss", fnum(r.test_loss)),
+                            ("train_loss", fnum(r.train_loss)),
                             ("cum_bytes", num(r.cum_bytes as f64)),
                             ("dropped", num(r.dropped as f64)),
                             ("cancelled", num(r.cancelled as f64)),
-                            ("client_p50_s", num(r.client_p50_s)),
-                            ("client_max_s", num(r.client_max_s)),
-                            ("wall_ms", num(r.wall_ms)),
+                            ("client_p50_s", fnum(r.client_p50_s)),
+                            ("client_max_s", fnum(r.client_max_s)),
+                            ("sim_net_pipelined_s",
+                             fnum(r.sim_net_pipelined_s)),
+                            ("transfer_wait_s", fnum(r.transfer_wait_s)),
+                            ("wall_ms", fnum(r.wall_ms)),
                         ])
                     })
                     .collect()),
@@ -173,6 +190,8 @@ mod tests {
                 cancelled: i as u64 % 3,
                 client_p50_s: 0.5,
                 client_max_s: 1.5,
+                sim_net_pipelined_s: 0.25 * i as f64,
+                transfer_wait_s: 0.75,
                 wall_ms: 1.0,
             });
         }
@@ -224,7 +243,8 @@ mod tests {
         let csv = rec().to_csv();
         let header: Vec<&str> = csv.lines().next().unwrap().split(',')
             .collect();
-        for col in ["cancelled", "client_p50_s", "client_max_s"] {
+        for col in ["cancelled", "client_p50_s", "client_max_s",
+                    "sim_net_pipelined_s", "transfer_wait_s"] {
             assert!(header.contains(&col), "{header:?} missing {col}");
         }
         // Row for round 2 (cancelled = 2), right after `dropped`.
@@ -237,6 +257,31 @@ mod tests {
             rounds[2].at(&["cancelled"]).unwrap().as_usize().unwrap(),
             2
         );
+        assert_eq!(
+            rounds[2].at(&["sim_net_pipelined_s"]).unwrap()
+                .as_f64().unwrap(),
+            0.5
+        );
+        assert_eq!(
+            rounds[1].at(&["transfer_wait_s"]).unwrap().as_f64().unwrap(),
+            0.75
+        );
+    }
+
+    #[test]
+    fn json_maps_non_finite_to_null() {
+        // A fully-dropped recorded round carries a NaN train loss; the
+        // export must still be valid JSON (null, not a bare NaN).
+        let mut r = Recorder::new("nan");
+        let mut rec = rec().rounds[0].clone();
+        rec.train_loss = f64::NAN;
+        r.push(rec);
+        let text = r.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert!(parsed.at(&["rounds"]).unwrap().as_arr().unwrap()[0]
+            .at(&["train_loss"])
+            .unwrap()
+            .is_null());
     }
 
     #[test]

@@ -7,7 +7,8 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::model::{build_spec, ModelCfg, ParamKind, Segment, Variant};
+use crate::model::{build_spec, ModelCfg, ParamKind, ParamSpec, Segment,
+                   Variant, MODELS};
 use crate::util::json::{self, Json};
 
 /// Files for one lowered spec.
@@ -145,6 +146,55 @@ impl Manifest {
                 self.specs.keys().collect::<Vec<_>>()
             ))
         })
+    }
+
+    /// The synthetic backend's manifest: every model × variant × rank
+    /// the in-repo spec arithmetic can express, with placeholder file
+    /// names (nothing is ever loaded) and no quant oracles. Entries
+    /// are derived from [`build_spec`], so
+    /// [`SpecEntry::validate`] holds by construction.
+    pub fn synthetic() -> Manifest {
+        let mut specs = BTreeMap::new();
+        for cfg in MODELS {
+            for variant in [Variant::Full, Variant::LoraAll,
+                            Variant::LoraNorm, Variant::LoraFc] {
+                let ranks: &[usize] = if variant == Variant::Full {
+                    &[0]
+                } else {
+                    &[1, 2, 4, 8, 16, 32, 64, 128]
+                };
+                for &rank in ranks {
+                    let entry = Manifest::synthetic_entry(
+                        &build_spec(cfg, variant, rank),
+                    );
+                    specs.insert(entry.tag.clone(), entry);
+                }
+            }
+        }
+        Manifest { specs, quant_oracles: BTreeMap::new() }
+    }
+
+    /// One synthetic-manifest entry from a resolved layout.
+    pub fn synthetic_entry(spec: &ParamSpec) -> SpecEntry {
+        let tag = spec.tag();
+        SpecEntry {
+            model: spec.cfg.name.to_string(),
+            variant: spec.variant,
+            rank: spec.rank,
+            image_size: spec.cfg.image_size,
+            batch_size: spec.cfg.batch_size,
+            num_classes: spec.cfg.num_classes,
+            num_trainable: spec.num_trainable(),
+            num_frozen: spec.num_frozen(),
+            files: SpecFiles {
+                train: format!("synthetic://{tag}/train"),
+                eval: format!("synthetic://{tag}/eval"),
+                init: format!("synthetic://{tag}/init"),
+            },
+            trainable_segments: spec.trainable.clone(),
+            frozen_segments: spec.frozen.clone(),
+            tag,
+        }
     }
 }
 

@@ -1,9 +1,21 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//! Model runtime: the PJRT backend (AOT-compiled HLO artifacts) and
+//! the synthetic backend (pure-Rust surrogate dynamics).
 //!
-//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. HLO *text* is the interchange format
-//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects).
+//! **PJRT** — pattern per /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos
+//! that xla_extension 0.5.1 rejects).
+//!
+//! **Synthetic** — [`Engine::synthetic`] (or the artifact-dir sentinel
+//! [`SYNTHETIC_ARTIFACTS`], i.e. `--artifacts synthetic` on the CLI)
+//! swaps every executable for the deterministic pure-Rust surrogate in
+//! [`synthetic`]: same specs, same flat-vector API, no XLA anywhere.
+//! It exists so the *protocol* layers — transport accounting, round
+//! engine, executor parity, straggler machinery — run end-to-end in
+//! environments without artifacts (CI's `sim-smoke` job, this repo's
+//! offline container). It proves determinism and plumbing, not
+//! learning.
 //!
 //! [`Engine`] owns the client and an executable cache (compile once per
 //! artifact per process); [`ModelSession`] bundles the train/eval/init
@@ -24,6 +36,7 @@
 //! `Mutex`.
 
 pub mod manifest;
+pub mod synthetic;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -31,6 +44,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 pub use manifest::{Manifest, QuantOracle, SpecEntry};
+
+/// Artifact-directory sentinel that selects the synthetic backend
+/// (`flocora train --artifacts synthetic`).
+pub const SYNTHETIC_ARTIFACTS: &str = "synthetic";
 
 /// A compiled PJRT executable handle, shareable across executor
 /// threads. `Send + Sync` follows automatically from the inner type —
@@ -46,22 +63,60 @@ impl std::ops::Deref for Executable {
     }
 }
 
-/// PJRT client + compiled-executable cache over an artifact directory.
+/// The engine's execution substrate: a PJRT client + executable cache,
+/// or the synthetic surrogate (no XLA at all).
+enum EngineBackend {
+    Pjrt {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: Mutex<HashMap<String, Executable>>,
+    },
+    Synthetic,
+}
+
+/// Model runtime over an artifact directory (PJRT) or the synthetic
+/// surrogate.
 pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+    backend: EngineBackend,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Executable>>,
 }
 
 impl Engine {
     /// Open `dir` (usually `artifacts/`), parse + validate the manifest,
-    /// and stand up the CPU PJRT client.
+    /// and stand up the CPU PJRT client. The sentinel directory
+    /// [`SYNTHETIC_ARTIFACTS`] selects [`Engine::synthetic`] instead —
+    /// no filesystem, no XLA.
     pub fn new(dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = dir.as_ref().to_path_buf();
+        if dir.as_path() == Path::new(SYNTHETIC_ARTIFACTS) {
+            return Ok(Engine::synthetic());
+        }
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Engine {
+            backend: EngineBackend::Pjrt {
+                client,
+                dir,
+                cache: Mutex::new(HashMap::new()),
+            },
+            manifest,
+        })
+    }
+
+    /// The artifact-free engine: every known spec served by the
+    /// deterministic pure-Rust surrogate (see [`synthetic`]). Never
+    /// fails — there is nothing to load.
+    pub fn synthetic() -> Engine {
+        Engine {
+            backend: EngineBackend::Synthetic,
+            manifest: Manifest::synthetic(),
+        }
+    }
+
+    /// `true` when this engine runs the synthetic surrogate instead of
+    /// PJRT-compiled artifacts.
+    pub fn is_synthetic(&self) -> bool {
+        matches!(self.backend, EngineBackend::Synthetic)
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -69,21 +124,32 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            EngineBackend::Pjrt { client, .. } => client.platform_name(),
+            EngineBackend::Synthetic => "synthetic".to_string(),
+        }
     }
 
-    /// Compile (or fetch from cache) one HLO-text artifact.
+    /// Compile (or fetch from cache) one HLO-text artifact. PJRT only:
+    /// the synthetic backend has no executables.
     pub fn load(&self, file: &str) -> Result<Executable> {
-        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+        let EngineBackend::Pjrt { client, dir, cache } = &self.backend
+        else {
+            return Err(Error::invalid(format!(
+                "cannot load `{file}`: the synthetic engine has no \
+                 compiled executables"
+            )));
+        };
+        if let Some(exe) = cache.lock().unwrap().get(file) {
             return Ok(exe.clone());
         }
         // Compile outside the lock: XLA compilation is slow and two
         // threads racing on the same artifact just deduplicate below.
-        let path = self.dir.join(file);
+        let path = dir.join(file);
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Executable(Arc::new(self.client.compile(&comp)?));
-        let mut cache = self.cache.lock().unwrap();
+        let exe = Executable(Arc::new(client.compile(&comp)?));
+        let mut cache = cache.lock().unwrap();
         Ok(cache.entry(file.to_string()).or_insert(exe).clone())
     }
 
@@ -91,12 +157,15 @@ impl Engine {
     /// (e.g. `"tiny8_lora_fc_r8"`).
     pub fn session(&self, tag: &str) -> Result<ModelSession> {
         let spec = self.manifest.spec(tag)?.clone();
-        Ok(ModelSession {
-            train: self.load(&spec.files.train)?,
-            eval: self.load(&spec.files.eval)?,
-            init: self.load(&spec.files.init)?,
-            spec,
-        })
+        let backend = match &self.backend {
+            EngineBackend::Pjrt { .. } => SessionBackend::Pjrt {
+                train: self.load(&spec.files.train)?,
+                eval: self.load(&spec.files.eval)?,
+                init: self.load(&spec.files.init)?,
+            },
+            EngineBackend::Synthetic => SessionBackend::Synthetic,
+        };
+        Ok(ModelSession { spec, backend })
     }
 
     /// Execute a quant-oracle artifact: `w (rows, cols)` →
@@ -167,40 +236,60 @@ pub struct StepStats {
     pub acc: f32,
 }
 
-/// The train/eval/init executables of one lowered spec.
+/// A session's execution substrate: the three compiled executables, or
+/// the synthetic surrogate (pure functions of the spec).
+enum SessionBackend {
+    Pjrt {
+        train: Executable,
+        eval: Executable,
+        init: Executable,
+    },
+    Synthetic,
+}
+
+/// The train/eval/init entry points of one lowered spec.
 ///
-/// `Send + Sync` (via [`Executable`]): the parallel round engine shares
-/// one session across all client-executor threads.
+/// `Send + Sync` (via [`Executable`]; the synthetic backend is plain
+/// data): the parallel round engine shares one session across all
+/// client-executor threads.
 pub struct ModelSession {
     pub spec: SpecEntry,
-    train: Executable,
-    eval: Executable,
-    init: Executable,
+    backend: SessionBackend,
 }
 
 impl ModelSession {
-    fn batch_literals(
-        &self,
-        batch: &Batch,
-    ) -> Result<(xla::Literal, xla::Literal)> {
-        let s = self.spec.image_size as i64;
+    fn check_batch(&self, batch: &Batch) -> Result<()> {
+        let s = self.spec.image_size;
         let b = self.spec.batch_size;
-        if batch.x.len() != b * (s * s * 3) as usize || batch.y.len() != b {
+        if batch.x.len() != b * s * s * 3 || batch.y.len() != b {
             return Err(Error::invalid(format!(
                 "batch shape mismatch: x={} y={} expected b={b} s={s}",
                 batch.x.len(),
                 batch.y.len()
             )));
         }
-        let x = xla::Literal::vec1(&batch.x).reshape(&[b as i64, s, s, 3])?;
+        Ok(())
+    }
+
+    fn batch_literals(
+        &self,
+        batch: &Batch,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        self.check_batch(batch)?;
+        let s = self.spec.image_size as i64;
+        let b = self.spec.batch_size as i64;
+        let x = xla::Literal::vec1(&batch.x).reshape(&[b, s, s, 3])?;
         let y = xla::Literal::vec1(&batch.y);
         Ok((x, y))
     }
 
     /// Run the init artifact: seeded He init → `(trainable, frozen)`.
     pub fn init(&self, seed: u64) -> Result<(Vec<f32>, Vec<f32>)> {
+        let SessionBackend::Pjrt { init, .. } = &self.backend else {
+            return Ok(synthetic::init(&self.spec, seed));
+        };
         let key = xla::Literal::vec1(&[(seed >> 32) as u32, seed as u32]);
-        let mut outs = execute_tuple(&self.init, &[key])?;
+        let mut outs = execute_tuple(init, &[key])?;
         if outs.len() != 2 {
             return Err(Error::invalid("init must return (trainable, frozen)"));
         }
@@ -231,6 +320,12 @@ impl ModelSession {
         lr: f32,
         lora_scale: f32,
     ) -> Result<StepStats> {
+        let SessionBackend::Pjrt { train, .. } = &self.backend else {
+            self.check_batch(batch)?;
+            return Ok(synthetic::train_step(
+                &self.spec, params, momentum, batch, lr, lora_scale,
+            ));
+        };
         let (x, y) = self.batch_literals(batch)?;
         let args = [
             xla::Literal::vec1(params),
@@ -241,7 +336,7 @@ impl ModelSession {
             xla::Literal::scalar(lr),
             xla::Literal::scalar(lora_scale),
         ];
-        let mut outs = execute_tuple(&self.train, &args)?;
+        let mut outs = execute_tuple(train, &args)?;
         if outs.len() != 4 {
             return Err(Error::invalid("train must return 4 outputs"));
         }
@@ -262,6 +357,12 @@ impl ModelSession {
         batch: &Batch,
         lora_scale: f32,
     ) -> Result<(f64, f64)> {
+        let SessionBackend::Pjrt { eval, .. } = &self.backend else {
+            self.check_batch(batch)?;
+            return Ok(synthetic::eval_step(
+                &self.spec, params, batch, lora_scale,
+            ));
+        };
         let (x, y) = self.batch_literals(batch)?;
         let args = [
             xla::Literal::vec1(params),
@@ -271,7 +372,7 @@ impl ModelSession {
             xla::Literal::vec1(&batch.mask),
             xla::Literal::scalar(lora_scale),
         ];
-        let mut outs = execute_tuple(&self.eval, &args)?;
+        let mut outs = execute_tuple(eval, &args)?;
         if outs.len() != 2 {
             return Err(Error::invalid("eval must return 2 outputs"));
         }

@@ -1,0 +1,309 @@
+//! Deterministic pure-Rust surrogate dynamics — the artifact-free
+//! backend behind [`Engine::synthetic`](crate::runtime::Engine).
+//!
+//! The protocol layers (wire codecs, transport accounting, executors,
+//! samplers, aggregation) never look inside a training step: they only
+//! need `init`/`train_step`/`eval_step` to be **deterministic pure
+//! functions** with the right shapes. This module provides exactly
+//! that — a convex pseudo-objective whose target vector is derived by
+//! hashing the minibatch, optimized with the same SGD-with-momentum
+//! update rule the real artifacts lower:
+//!
+//! * every quantity is a pure function of `(spec, params, batch,
+//!   hyperparameters)`, so runs are bit-identical across executors,
+//!   thread counts, windows and overlap modes — the property the
+//!   engine's parity tests and CI's `sim-smoke` job pin;
+//! * loss decreases and the pseudo-accuracy rises as parameters
+//!   approach the data-dependent targets, so convergence plumbing
+//!   (recorders, summaries, CSV exports) sees realistic-shaped curves;
+//! * a step costs O(params + batch) with no BLAS, XLA or threads.
+//!
+//! It is a *plumbing* surrogate: nothing here claims to model real
+//! learning. Accuracy columns from synthetic runs are meaningless as
+//! science and are only compared against other synthetic runs.
+
+use crate::runtime::{Batch, SpecEntry, StepStats};
+use crate::util::rng::Rng;
+
+/// Stream salt separating synthetic init from every other consumer of
+/// the run seed.
+const INIT_SALT: u64 = 0x53_59_4E_54_48_45_54;
+
+/// Target amplitude of the pseudo-objective.
+const TARGET_AMP: f32 = 0.2;
+
+/// SGD momentum (matches the real train artifacts' 0.9).
+const MOMENTUM: f32 = 0.9;
+
+/// SplitMix64 finalizer — the per-coordinate hash behind targets and
+/// pseudo-accuracy draws.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to [-1, 1).
+fn unit(h: u64) -> f32 {
+    ((h >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+}
+
+/// Map a hash to [0, 1).
+fn uniform01(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// FNV-1a accumulator over word streams.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn u64(&mut self, v: u64) -> &mut Fnv {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        self
+    }
+
+    fn f32s(&mut self, vs: &[f32]) -> &mut Fnv {
+        for v in vs {
+            self.u64(v.to_bits() as u64);
+        }
+        self
+    }
+
+    fn i32s(&mut self, vs: &[i32]) -> &mut Fnv {
+        for v in vs {
+            self.u64(*v as u32 as u64);
+        }
+        self
+    }
+
+    fn finish(&self) -> u64 {
+        mix(self.0)
+    }
+}
+
+fn tag_hash(tag: &str) -> u64 {
+    let mut h = Fnv::new();
+    for b in tag.bytes() {
+        h.u64(b as u64);
+    }
+    h.finish()
+}
+
+/// Squash the LoRA scale so the effective curvature stays below 1 for
+/// any alpha/rank the configs produce (keeps SGD stable at paper
+/// learning rates while the scale still shapes the dynamics).
+fn scale_norm(lora_scale: f32) -> f32 {
+    lora_scale / (1.0 + lora_scale * lora_scale).sqrt()
+}
+
+/// Per-coordinate target derived from the batch digest.
+fn target(digest: u64, j: usize) -> f32 {
+    TARGET_AMP * unit(mix(digest ^ (j as u64).wrapping_mul(0x9E3779B97F4A7C15)))
+}
+
+/// Seeded surrogate init: `(trainable, frozen)` with the spec's exact
+/// lengths, deterministic in `(tag, seed)` like the real init
+/// artifact.
+pub fn init(spec: &SpecEntry, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::derive(seed ^ INIT_SALT, &[tag_hash(&spec.tag)]);
+    let trainable = (0..spec.num_trainable)
+        .map(|_| 0.05 * rng.normal() as f32)
+        .collect();
+    let frozen = (0..spec.num_frozen)
+        .map(|_| 0.05 * rng.normal() as f32)
+        .collect();
+    (trainable, frozen)
+}
+
+/// Mean residual loss of `params` against the digest's targets, and
+/// the scaled residual needed for the gradient. O(params).
+fn residual_loss(params: &[f32], digest: u64, ls: f32) -> f64 {
+    if params.is_empty() {
+        return 0.0;
+    }
+    let mut sum = 0.0f64;
+    for (j, &p) in params.iter().enumerate() {
+        let r = ls * p - target(digest, j);
+        sum += (r * r) as f64;
+    }
+    0.5 * sum / params.len() as f64
+}
+
+/// Monotone map from loss to a plausible accuracy in (0, 1).
+fn pseudo_acc(loss: f64) -> f64 {
+    1.0 / (1.0 + 40.0 * loss)
+}
+
+/// One surrogate SGD-with-momentum step: pull `params` toward the
+/// batch's hashed target vector. Updates `params`/`momentum` in place,
+/// mirroring the PJRT train step's contract.
+pub fn train_step(
+    spec: &SpecEntry,
+    params: &mut [f32],
+    momentum: &mut [f32],
+    batch: &Batch,
+    lr: f32,
+    lora_scale: f32,
+) -> StepStats {
+    let digest = Fnv::new()
+        .u64(tag_hash(&spec.tag))
+        .i32s(&batch.y)
+        .f32s(&batch.x)
+        .finish();
+    let ls = scale_norm(lora_scale);
+    let mut loss_sum = 0.0f64;
+    for (j, (p, m)) in params.iter_mut().zip(momentum.iter_mut()).enumerate()
+    {
+        let r = ls * *p - target(digest, j);
+        loss_sum += (r * r) as f64;
+        let g = ls * r;
+        *m = MOMENTUM * *m + g;
+        *p -= lr * *m;
+    }
+    let n = params.len().max(1) as f64;
+    let loss = 0.5 * loss_sum / n;
+    StepStats {
+        loss: loss as f32,
+        acc: pseudo_acc(loss) as f32,
+    }
+}
+
+/// Masked surrogate eval → `(loss_sum, correct_count)` over the
+/// batch's valid examples, mirroring the PJRT eval step's contract.
+pub fn eval_step(
+    spec: &SpecEntry,
+    params: &[f32],
+    batch: &Batch,
+    lora_scale: f32,
+) -> (f64, f64) {
+    let digest = Fnv::new()
+        .u64(tag_hash(&spec.tag))
+        .i32s(&batch.y)
+        .f32s(&batch.x)
+        .finish();
+    let ls = scale_norm(lora_scale);
+    let loss = residual_loss(params, digest, ls);
+    let p_acc = pseudo_acc(loss);
+    // Fold the parameter state into the per-example draws so the
+    // correctness pattern evolves with training, not just its rate.
+    let param_digest = Fnv::new().f32s(params).finish();
+    let px = spec.image_size * spec.image_size * 3;
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    for i in 0..batch.y.len() {
+        let mask = *batch.mask.get(i).unwrap_or(&1.0) as f64;
+        if mask == 0.0 {
+            continue;
+        }
+        let ex = Fnv::new()
+            .u64(i as u64)
+            .i32s(&batch.y[i..i + 1])
+            .f32s(&batch.x[i * px..(i + 1) * px])
+            .finish();
+        // Deterministic per-example spread around the batch loss.
+        loss_sum += mask * loss * (1.0 + 0.1 * unit(ex) as f64);
+        if uniform01(mix(ex ^ param_digest)) < p_acc {
+            correct += mask;
+        }
+    }
+    (loss_sum, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build_spec, ModelCfg, Variant};
+    use crate::runtime::manifest::Manifest;
+
+    fn spec() -> SpecEntry {
+        Manifest::synthetic_entry(
+            &build_spec(ModelCfg::by_name("micro8").unwrap(),
+                        Variant::LoraFc, 4),
+        )
+    }
+
+    fn batch(spec: &SpecEntry, seed: u64) -> Batch {
+        let px = spec.image_size * spec.image_size * 3;
+        let mut rng = Rng::new(seed);
+        Batch {
+            x: (0..spec.batch_size * px).map(|_| rng.f32()).collect(),
+            y: (0..spec.batch_size).map(|_| rng.below(10) as i32).collect(),
+            mask: vec![1.0; spec.batch_size],
+            n: spec.batch_size,
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_sized() {
+        let s = spec();
+        let (t1, f1) = init(&s, 7);
+        let (t2, f2) = init(&s, 7);
+        let (t3, _) = init(&s, 8);
+        assert_eq!(t1.len(), s.num_trainable);
+        assert_eq!(f1.len(), s.num_frozen);
+        assert_eq!(t1, t2);
+        assert_eq!(f1, f2);
+        assert_ne!(t1, t3, "seed must matter");
+    }
+
+    #[test]
+    fn train_step_is_deterministic_and_converges() {
+        let s = spec();
+        let b = batch(&s, 1);
+        let (mut p1, _) = init(&s, 3);
+        let mut m1 = vec![0.0f32; p1.len()];
+        let (mut p2, _) = init(&s, 3);
+        let mut m2 = vec![0.0f32; p2.len()];
+        let first = train_step(&s, &mut p1, &mut m1, &b, 0.05, 16.0);
+        train_step(&s, &mut p2, &mut m2, &b, 0.05, 16.0);
+        assert_eq!(p1, p2, "same inputs must give the same step");
+        let mut last = first.loss;
+        for _ in 0..30 {
+            last = train_step(&s, &mut p1, &mut m1, &b, 0.05, 16.0).loss;
+        }
+        assert!(last < 0.2 * first.loss,
+                "no convergence: {} -> {}", first.loss, last);
+    }
+
+    #[test]
+    fn different_batches_pull_differently() {
+        let s = spec();
+        let (p0, _) = init(&s, 3);
+        let mut pa = p0.clone();
+        let mut pb = p0;
+        let mut ma = vec![0.0f32; pa.len()];
+        let mut mb = vec![0.0f32; pb.len()];
+        train_step(&s, &mut pa, &mut ma, &batch(&s, 1), 0.05, 16.0);
+        train_step(&s, &mut pb, &mut mb, &batch(&s, 2), 0.05, 16.0);
+        assert_ne!(pa, pb, "batch content must shape the update");
+    }
+
+    #[test]
+    fn eval_respects_the_mask() {
+        let s = spec();
+        let b = batch(&s, 5);
+        let (p, _) = init(&s, 3);
+        let (full_loss, full_correct) = eval_step(&s, &p, &b, 16.0);
+        let mut masked = batch(&s, 5);
+        masked.mask = vec![0.0; s.batch_size];
+        let (l0, c0) = eval_step(&s, &p, &masked, 16.0);
+        assert_eq!((l0, c0), (0.0, 0.0));
+        assert!(full_loss > 0.0);
+        assert!((0.0..=s.batch_size as f64).contains(&full_correct));
+    }
+
+    #[test]
+    fn scale_norm_is_bounded() {
+        for ls in [0.5f32, 1.0, 16.0, 512.0] {
+            let n = scale_norm(ls);
+            assert!(n > 0.0 && n < 1.0, "{ls} -> {n}");
+        }
+    }
+}

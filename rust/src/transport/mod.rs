@@ -1,11 +1,15 @@
 //! Transport substrate: message framing, communication-cost accounting
-//! (the paper's Eq. 2, generalised to measured bytes), and a simple
-//! bandwidth/latency network model for wall-clock estimates.
+//! (the paper's Eq. 2, generalised to measured bytes), a simple
+//! bandwidth/latency network model for wall-clock estimates, and the
+//! transport stage that charges wire time from stage events so
+//! transfer/compute overlap is modellable (`overlap = transfer`).
 
 pub mod accounting;
 pub mod network;
 pub mod profile;
+pub mod stage;
 
 pub use accounting::{tcc_equation2, CommLedger, Direction};
 pub use network::{NetworkKind, NetworkModel, RoundLoad, Sharing};
 pub use profile::{ClientProfile, ClientProfiles, ProfileKind};
+pub use stage::{OverlapKind, RoundTransport, StageEvent, TransferStage};

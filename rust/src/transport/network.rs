@@ -18,6 +18,21 @@
 //!   a concurrent round costs total-bits-over-capacity per direction,
 //!   so adding clients stops being free.
 //!
+//! Three concurrency estimators, all computed from the same streamed
+//! loads:
+//!
+//! * `round_time_serial` — clients one after another (sum).
+//! * `round_time_parallel` — clients concurrent, but each client's
+//!   download → compute → upload chain stays on its own critical path
+//!   (transfer charged *inside* the client task — the pre-transport-
+//!   stage engine).
+//! * `round_time_pipelined` — the transport-stage regime: transfer is
+//!   decoupled from the client task and streamed, so a client's wire
+//!   time overlaps compute (its own chunked transfers and every other
+//!   client's training). A round is then bounded by its slowest single
+//!   *stage* and, under a shared pipe, by each direction's busy time —
+//!   the ideal-overlap envelope the staged executor approaches.
+//!
 //! The per-round accumulation is streaming ([`RoundLoad`]): the merge
 //! sink feeds each client's `(down, up)` bytes as it drains, nothing
 //! is buffered per client.
@@ -102,6 +117,11 @@ impl NetworkKind {
 /// // Under shared bandwidth, concurrent clients contend for the pipe.
 /// let shared = net.with_sharing(flocora::transport::Sharing::Shared);
 /// assert!(shared.round_time_parallel(&loads) > parallel);
+///
+/// // A transport stage that streams transfer off the client task
+/// // (`overlap = transfer`) is bounded by the slowest single stage,
+/// // not the download + upload chain.
+/// assert!(net.round_time_pipelined(&loads) < parallel);
 /// ```
 #[derive(Debug, Clone, Copy)]
 pub struct NetworkModel {
@@ -156,18 +176,6 @@ impl NetworkModel {
         self.download_time(down_bytes) + self.upload_time(up_bytes)
     }
 
-    /// One client's time on the wire. `up_bytes == 0` means the client
-    /// never uploaded (it dropped mid-round), so no uplink latency is
-    /// charged.
-    fn client_time(&self, down_bytes: usize, up_bytes: usize) -> f64 {
-        let down = self.download_time(down_bytes);
-        if up_bytes > 0 {
-            down + self.upload_time(up_bytes)
-        } else {
-            down
-        }
-    }
-
     /// Simulated duration of one round if clients use the link strictly
     /// one after another: the sum of per-client round trips. `loads` is
     /// one `(down_bytes, up_bytes)` pair per sampled client (`up_bytes
@@ -183,6 +191,20 @@ impl NetworkModel {
     /// costs total bits over pipe capacity per direction instead.
     pub fn round_time_parallel(&self, loads: &[(usize, usize)]) -> f64 {
         self.accumulate(loads).parallel_s(self)
+    }
+
+    /// Simulated duration of one round under the transport-stage
+    /// overlap regime (`overlap = transfer`): wire transfer is
+    /// decoupled from the client task, so a client's download/upload
+    /// streams concurrently with compute instead of extending its
+    /// critical path. The round is bounded by the slowest single stage
+    /// of any waited-on client and — under [`Sharing::Shared`] — by
+    /// each direction's pipe busy time (the two directions are full
+    /// duplex, so they no longer add). Never exceeds
+    /// [`NetworkModel::round_time_parallel`], and equals it when every
+    /// client has a single non-zero stage.
+    pub fn round_time_pipelined(&self, loads: &[(usize, usize)]) -> f64 {
+        self.accumulate(loads).pipelined_s(self)
     }
 
     fn accumulate(&self, loads: &[(usize, usize)]) -> RoundLoad {
@@ -203,6 +225,14 @@ impl NetworkModel {
 pub struct RoundLoad {
     serial_s: f64,
     slowest_s: f64,
+    /// Slowest single *stage* (download, compute or upload) of any
+    /// waited-on client — the dedicated-link bound of the pipelined
+    /// regime, where a client's other stages hide behind its largest.
+    slowest_stage_s: f64,
+    /// Total simulated time-on-wire (downloads + uploads, cancelled
+    /// downloads included): the wait the transport stage can overlap
+    /// with compute.
+    wire_s: f64,
     down_bytes: u64,
     up_bytes: u64,
     uploads: usize,
@@ -218,8 +248,9 @@ impl RoundLoad {
     /// that dropped before uploading) at the base link rate.
     pub fn add(&mut self, net: &NetworkModel, down_bytes: usize,
                up_bytes: usize) {
-        let t = net.client_time(down_bytes, up_bytes);
-        self.add_timed(t, down_bytes, up_bytes);
+        let td = net.download_time(down_bytes);
+        let tu = if up_bytes > 0 { net.upload_time(up_bytes) } else { 0.0 };
+        self.add_stages(td, 0.0, tu, down_bytes, up_bytes);
     }
 
     /// Fold in one client whose simulated time `t` the caller already
@@ -227,10 +258,39 @@ impl RoundLoad {
     /// [`ClientProfiles`](crate::transport::ClientProfiles) table,
     /// which may fold compute and per-client link multipliers into
     /// `t`). `up_bytes == 0` still means "dropped before uploading".
+    ///
+    /// The stage split of `t` is unknown here, so the pipelined
+    /// estimator treats the whole `t` as one unsplittable stage
+    /// (nothing to overlap — conservative). Callers that know the
+    /// split should use [`RoundLoad::add_stages`] instead.
     pub fn add_timed(&mut self, t: f64, down_bytes: usize,
                      up_bytes: usize) {
         self.serial_s += t;
         self.slowest_s = self.slowest_s.max(t);
+        self.slowest_stage_s = self.slowest_stage_s.max(t);
+        self.wire_s += t;
+        self.down_bytes += down_bytes as u64;
+        self.up_bytes += up_bytes as u64;
+        if up_bytes > 0 {
+            self.uploads += 1;
+        }
+        self.clients += 1;
+    }
+
+    /// Fold in one client's simulated round trip split into its three
+    /// stages: download `td`, local compute `tc`, upload `tu` (all
+    /// seconds; `tc == tu == 0.0` for a client that dropped before
+    /// uploading). The serial/parallel estimators see the sum `td +
+    /// (tc + tu)` — bit-identical to the pre-stage arithmetic — while
+    /// the pipelined estimator keeps the per-stage maxima it needs to
+    /// model transfer/compute overlap.
+    pub fn add_stages(&mut self, td: f64, tc: f64, tu: f64,
+                      down_bytes: usize, up_bytes: usize) {
+        let t = td + (tc + tu);
+        self.serial_s += t;
+        self.slowest_s = self.slowest_s.max(t);
+        self.slowest_stage_s = self.slowest_stage_s.max(td.max(tc).max(tu));
+        self.wire_s += td + tu;
         self.down_bytes += down_bytes as u64;
         self.up_bytes += up_bytes as u64;
         if up_bytes > 0 {
@@ -243,9 +303,12 @@ impl RoundLoad {
     /// rounds end at the K-th accepted upload). Its download happened
     /// — the bytes and the serial-regime time `t_down` are charged —
     /// but the concurrent round never waits for it, so it is excluded
-    /// from the straggler max.
+    /// from the straggler max (and, under `overlap = transfer`, from
+    /// the pipelined stage max: the transport stage cuts it
+    /// mid-transfer when the round completes).
     pub fn add_cancelled(&mut self, t_down: f64, down_bytes: usize) {
         self.serial_s += t_down;
+        self.wire_s += t_down;
         self.down_bytes += down_bytes as u64;
         self.clients += 1;
     }
@@ -272,16 +335,55 @@ impl RoundLoad {
                 if self.clients == 0 {
                     return 0.0;
                 }
-                let down = net.latency_s
-                    + self.down_bytes as f64 * 8.0 / net.down_bps;
-                let up = if self.uploads > 0 {
-                    net.latency_s + self.up_bytes as f64 * 8.0 / net.up_bps
-                } else {
-                    0.0
-                };
+                let (down, up) = self.pipe_times(net);
                 (down + up).max(self.slowest_s)
             }
         }
+    }
+
+    /// The transport-stage overlap regime (`overlap = transfer`):
+    /// transfer is streamed off the client task, so every stage that is
+    /// not a client's single slowest hides behind compute — its own and
+    /// other clients'. Under [`Sharing::Dedicated`] the round costs the
+    /// slowest single stage of any waited-on client; under
+    /// [`Sharing::Shared`] the two directions are full duplex, so the
+    /// round additionally floors at each pipe's busy time but the pipes
+    /// no longer add. Always `<=` [`RoundLoad::parallel_s`] (stage max
+    /// `<=` stage sum, `max(down, up) <= down + up`), and equal to it
+    /// when no client has two overlappable stages.
+    pub fn pipelined_s(&self, net: &NetworkModel) -> f64 {
+        match net.sharing {
+            Sharing::Dedicated => self.slowest_stage_s,
+            Sharing::Shared => {
+                if self.clients == 0 {
+                    return 0.0;
+                }
+                let (down, up) = self.pipe_times(net);
+                down.max(up).max(self.slowest_stage_s)
+            }
+        }
+    }
+
+    /// Simulated time-on-wire across the round's clients (downloads
+    /// plus uploads, cancelled downloads included; compute excluded) —
+    /// the transfer wait a pipelined transport stage can overlap with
+    /// compute. Where the stage split is unknown
+    /// ([`RoundLoad::add_timed`]) the whole lump is counted.
+    pub fn wire_s(&self) -> f64 {
+        self.wire_s
+    }
+
+    /// Per-direction shared-pipe busy times (total bits over capacity,
+    /// one latency each; zero uplink if nobody uploaded).
+    fn pipe_times(&self, net: &NetworkModel) -> (f64, f64) {
+        let down = net.latency_s
+            + self.down_bytes as f64 * 8.0 / net.down_bps;
+        let up = if self.uploads > 0 {
+            net.latency_s + self.up_bytes as f64 * 8.0 / net.up_bps
+        } else {
+            0.0
+        };
+        (down, up)
     }
 }
 
@@ -389,6 +491,75 @@ mod tests {
         let shared = net.with_sharing(Sharing::Shared);
         // Its bytes still contend for a shared pipe, though.
         assert!(acc.parallel_s(&shared) > base);
+    }
+
+    #[test]
+    fn pipelined_is_slowest_stage_on_dedicated_links() {
+        let net = NetworkModel::edge_lte();
+        let mut acc = RoundLoad::new();
+        // download 0.1s, compute 0.5s, upload 0.3s: the parallel regime
+        // charges the chain (0.9s), the pipelined regime the slowest
+        // stage (compute, 0.5s).
+        acc.add_stages(0.1, 0.5, 0.3, 1_000, 2_000);
+        assert_eq!(acc.parallel_s(&net), 0.9);
+        assert_eq!(acc.pipelined_s(&net), 0.5);
+        assert_eq!(acc.wire_s(), 0.4);
+        // A transfer-dominated client: its upload is the stage bound.
+        acc.add_stages(0.2, 0.1, 0.6, 1_000, 2_000);
+        assert_eq!(acc.pipelined_s(&net), 0.6);
+        assert!(acc.pipelined_s(&net) < acc.parallel_s(&net));
+        assert!(acc.parallel_s(&net) <= acc.serial_s());
+    }
+
+    #[test]
+    fn pipelined_shared_pipes_are_full_duplex() {
+        let net = NetworkModel::edge_lte().with_sharing(Sharing::Shared);
+        let loads = [(1_000_000, 1_000_000); 4];
+        let parallel = net.round_time_parallel(&loads);
+        let pipelined = net.round_time_pipelined(&loads);
+        // The parallel estimator adds the two pipe phases; the
+        // transport stage overlaps them (full duplex), so the round is
+        // bounded by the busier direction (the 10 Mbit/s uplink).
+        let up = 0.02 + 4_000_000.0 * 8.0 / 10e6;
+        assert!((pipelined - up).abs() < 1e-9, "{pipelined} vs {up}");
+        assert!(pipelined < parallel);
+    }
+
+    #[test]
+    fn pipelined_equals_parallel_for_single_stage_clients() {
+        // Zero-transfer loads leave only the compute stage: nothing to
+        // overlap, both estimators see the same max — bit-for-bit.
+        let net = NetworkModel {
+            up_bps: 10e6,
+            down_bps: 30e6,
+            latency_s: 0.0,
+            sharing: Sharing::Dedicated,
+        };
+        let mut acc = RoundLoad::new();
+        for tc in [0.25, 1.5, 0.6] {
+            acc.add_stages(0.0, tc, 0.0, 0, 0);
+        }
+        assert_eq!(acc.pipelined_s(&net), acc.parallel_s(&net));
+        assert_eq!(acc.pipelined_s(&net), 1.5);
+        // Dropped clients (download only) are single-stage too.
+        let loads = [(5_000, 0), (9_000, 0)];
+        assert_eq!(
+            net.round_time_pipelined(&loads),
+            net.round_time_parallel(&loads)
+        );
+    }
+
+    #[test]
+    fn cancelled_clients_charge_wire_but_not_pipelined_max() {
+        let net = NetworkModel::edge_lte();
+        let mut acc = RoundLoad::new();
+        acc.add_stages(0.1, 0.2, 0.1, 1_000, 1_000);
+        let base = acc.pipelined_s(&net);
+        acc.add_cancelled(99.0, 50_000_000);
+        // Cut mid-transfer: serial and wire time grow, the pipelined
+        // round does not wait.
+        assert_eq!(acc.pipelined_s(&net), base);
+        assert!(acc.wire_s() > 99.0);
     }
 
     #[test]

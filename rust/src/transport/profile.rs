@@ -182,12 +182,31 @@ impl ClientProfiles {
         down_bytes: usize,
         up_bytes: usize,
     ) -> f64 {
+        let (td, tc, tu) = self.stage_times(net, cid, down_bytes, up_bytes);
+        td + (tc + tu)
+    }
+
+    /// Client `cid`'s round trip split into its three pipeline stages:
+    /// `(download, compute, upload)` seconds. A dropped client
+    /// (`up_bytes == 0`) has zero compute and upload stages — it never
+    /// trained. Summing the stages as `td + (tc + tu)` reproduces
+    /// [`ClientProfiles::client_time`] bit-for-bit; the split exists so
+    /// the transport stage can model transfer/compute overlap
+    /// ([`RoundLoad::add_stages`](crate::transport::RoundLoad::add_stages)).
+    pub fn stage_times(
+        &self,
+        net: &NetworkModel,
+        cid: usize,
+        down_bytes: usize,
+        up_bytes: usize,
+    ) -> (f64, f64, f64) {
         let p = self.get(cid);
-        let mut t = p.download_time(net, down_bytes);
+        let td = p.download_time(net, down_bytes);
         if up_bytes > 0 {
-            t += self.compute_s(cid) + p.upload_time(net, up_bytes);
+            (td, self.compute_s(cid), p.upload_time(net, up_bytes))
+        } else {
+            (td, 0.0, 0.0)
         }
-        t
     }
 }
 
@@ -255,6 +274,24 @@ mod tests {
         assert!(mid < slow, "{mid} vs {slow}");
         assert!(slow > 3.0 * mid, "slow tier not separated: {slow} vs {mid}");
         assert!(table.compute_s(2) > table.compute_s(0));
+    }
+
+    #[test]
+    fn stage_times_sum_to_client_time_bitwise() {
+        let net = NetworkModel::edge_lte();
+        let table = ClientProfiles::tiered(9, 5);
+        for cid in 0..9 {
+            for &(d, u) in &[(1_000_000usize, 500_000usize), (10_000, 0)] {
+                let (td, tc, tu) = table.stage_times(&net, cid, d, u);
+                assert_eq!(td + (tc + tu), table.client_time(&net, cid, d, u),
+                           "cid {cid}");
+                if u == 0 {
+                    assert_eq!((tc, tu), (0.0, 0.0));
+                } else {
+                    assert!(tc > 0.0 && tu > 0.0);
+                }
+            }
+        }
     }
 
     #[test]

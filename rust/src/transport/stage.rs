@@ -1,0 +1,316 @@
+//! The simulated transport stage: where wire time gets charged.
+//!
+//! Before this module, the round merge charged each client's whole
+//! simulated round trip as one lump the moment its result drained —
+//! wire transfer was priced *inside* the client task, so the engine
+//! could only express the no-overlap regime. The transport stage
+//! decouples that accounting: executors and the round sink describe
+//! what happened as a stream of [`StageEvent`]s (download, train,
+//! upload, drop, cancel), and the [`TransferStage`] — which owns the
+//! [`NetworkModel`]/[`ClientProfiles`] clock and the round's
+//! [`RoundLoad`] accumulator — turns them into the three concurrency
+//! estimates (`serial`, `parallel`, `pipelined`) plus the transfer
+//! wait the pipelined regime hides.
+//!
+//! **Event contract.** Events arrive on the coordinator thread, in
+//! result-drain order (the sink contract guarantees sampling order).
+//! Per client the legal sequences are:
+//!
+//! * `Download → Train → Upload` — a surviving client;
+//! * `Download → Dropped` — failure injection before the upload;
+//! * `Download → Cancelled` — the server cut the client mid-round
+//!   (oversampled rounds end at the K-th accepted upload). Under
+//!   `overlap = transfer` the cut lands mid-*transfer*: the wire and
+//!   serial clocks still charge the download that was in flight, but
+//!   the pipelined round never waits for it.
+//!
+//! **Once-per-direction charging.** The stage keys its per-client
+//! state by `cid` and finalizes each client exactly once: a duplicate
+//! terminal event for a cid that already settled is ignored. This
+//! fixes a double-count the raw `RoundLoad` API allowed — calling
+//! `add_timed` and then `add_cancelled` for the same client (e.g. an
+//! oversampled round feeding one cid through both paths) charged its
+//! download leg twice. The regression is pinned in this module's
+//! tests.
+
+use std::collections::BTreeMap;
+
+use crate::transport::network::{NetworkModel, RoundLoad};
+use crate::transport::profile::ClientProfiles;
+
+/// The `overlap` knob: what may run concurrently with client compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapKind {
+    /// Transfer stays on the client task's critical path (the
+    /// reference engine). Executors run each client's
+    /// download → train → upload as one unit of work.
+    #[default]
+    None,
+    /// Wire transfer overlaps compute: the parallel executor moves
+    /// decode/encode onto dedicated transport threads, so client A's
+    /// upload is prepared while client B still trains. Results and
+    /// every simulated estimate stay bit-identical — only wall clock
+    /// and the regime the `sim_net_pipelined_s` column models change.
+    Transfer,
+}
+
+impl OverlapKind {
+    /// Parse `none | transfer`.
+    pub fn parse(s: &str) -> Option<OverlapKind> {
+        match s {
+            "none" => Some(OverlapKind::None),
+            "transfer" => Some(OverlapKind::Transfer),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OverlapKind::None => "none",
+            OverlapKind::Transfer => "transfer",
+        }
+    }
+}
+
+/// One observed step of a client's round, pushed by the round sink as
+/// results drain (see the module docs for the legal per-client
+/// sequences).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageEvent {
+    /// The client pulled its download message.
+    Download { cid: usize, bytes: usize },
+    /// The client ran its local epochs (compute happened).
+    Train { cid: usize },
+    /// The client pushed its update — terminal for a survivor.
+    Upload { cid: usize, bytes: usize },
+    /// The client failed before uploading — terminal for a dropout.
+    Dropped { cid: usize },
+    /// The server cut the client mid-transfer — terminal for a
+    /// cancellation.
+    Cancelled { cid: usize },
+}
+
+impl StageEvent {
+    fn cid(&self) -> usize {
+        match *self {
+            StageEvent::Download { cid, .. }
+            | StageEvent::Train { cid }
+            | StageEvent::Upload { cid, .. }
+            | StageEvent::Dropped { cid }
+            | StageEvent::Cancelled { cid } => cid,
+        }
+    }
+}
+
+/// Per-client in-flight state (between its `Download` and its terminal
+/// event).
+#[derive(Debug, Default, Clone, Copy)]
+struct ClientStage {
+    down_bytes: usize,
+    /// Terminal event already charged: further events for this cid are
+    /// duplicates and are ignored (once-per-direction charging).
+    settled: bool,
+}
+
+/// Everything one round's transport accounting produced.
+#[derive(Debug, Clone)]
+pub struct RoundTransport {
+    /// Clients one after another: sum of full round trips.
+    pub serial_s: f64,
+    /// Clients concurrent, transfer inside each client task.
+    pub parallel_s: f64,
+    /// Clients concurrent, transfer streamed off the client task
+    /// (`overlap = transfer`) — never above `parallel_s`.
+    pub pipelined_s: f64,
+    /// Simulated time-on-wire the pipelined regime overlaps with
+    /// compute (downloads + uploads, cancelled downloads included).
+    pub transfer_wait_s: f64,
+    /// Simulated round trip of every client the server waited on
+    /// (survivors and dropouts, sampling order) — feeds the straggler
+    /// p50/max stats.
+    pub times: Vec<f64>,
+}
+
+/// One round's transport accountant: owns the link clock
+/// ([`NetworkModel`] + [`ClientProfiles`]) and the [`RoundLoad`]
+/// accumulator, fed by [`StageEvent`]s.
+pub struct TransferStage<'a> {
+    net: &'a NetworkModel,
+    profiles: &'a ClientProfiles,
+    load: RoundLoad,
+    times: Vec<f64>,
+    states: BTreeMap<usize, ClientStage>,
+}
+
+impl<'a> TransferStage<'a> {
+    /// Start a round's accounting against a link profile table.
+    pub fn begin_round(
+        net: &'a NetworkModel,
+        profiles: &'a ClientProfiles,
+    ) -> TransferStage<'a> {
+        TransferStage {
+            net,
+            profiles,
+            load: RoundLoad::new(),
+            times: Vec::new(),
+            states: BTreeMap::new(),
+        }
+    }
+
+    /// Feed one event. Out-of-contract duplicates (a second terminal
+    /// event for an already-settled cid, a repeated `Download`) are
+    /// ignored rather than double-charged.
+    pub fn push(&mut self, event: StageEvent) {
+        let state = self.states.entry(event.cid()).or_default();
+        if state.settled {
+            return;
+        }
+        match event {
+            StageEvent::Download { bytes, .. } => {
+                state.down_bytes = state.down_bytes.max(bytes);
+            }
+            // Compute is priced from the profile table when the client
+            // settles (a dropout never trained, so its terminal event
+            // charges no compute); the event marks the sequence.
+            StageEvent::Train { .. } => {}
+            StageEvent::Upload { cid, bytes } => {
+                state.settled = true;
+                let down = state.down_bytes;
+                let (td, tc, tu) =
+                    self.profiles.stage_times(self.net, cid, down, bytes);
+                self.load.add_stages(td, tc, tu, down, bytes);
+                self.times.push(td + (tc + tu));
+            }
+            StageEvent::Dropped { cid } => {
+                state.settled = true;
+                let down = state.down_bytes;
+                let (td, tc, tu) =
+                    self.profiles.stage_times(self.net, cid, down, 0);
+                self.load.add_stages(td, tc, tu, down, 0);
+                self.times.push(td + (tc + tu));
+            }
+            StageEvent::Cancelled { cid } => {
+                state.settled = true;
+                let down = state.down_bytes;
+                let t_down =
+                    self.profiles.get(cid).download_time(self.net, down);
+                self.load.add_cancelled(t_down, down);
+            }
+        }
+    }
+
+    /// Close the round: the three concurrency estimates, the transfer
+    /// wait, and the per-client waited-on times.
+    pub fn finish(self) -> RoundTransport {
+        RoundTransport {
+            serial_s: self.load.serial_s(),
+            parallel_s: self.load.parallel_s(self.net),
+            pipelined_s: self.load.pipelined_s(self.net),
+            transfer_wait_s: self.load.wire_s(),
+            times: self.times,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::network::Sharing;
+
+    fn net() -> NetworkModel {
+        NetworkModel::edge_lte()
+    }
+
+    #[test]
+    fn overlap_kind_parses_and_labels() {
+        assert_eq!(OverlapKind::parse("none"), Some(OverlapKind::None));
+        assert_eq!(OverlapKind::parse("transfer"),
+                   Some(OverlapKind::Transfer));
+        assert_eq!(OverlapKind::parse("both"), None);
+        assert_eq!(OverlapKind::None.label(), "none");
+        assert_eq!(OverlapKind::Transfer.label(), "transfer");
+        assert_eq!(OverlapKind::default(), OverlapKind::None);
+    }
+
+    #[test]
+    fn survivor_events_match_direct_accounting() {
+        let net = net();
+        let profiles = ClientProfiles::tiered(6, 3);
+        let mut stage = TransferStage::begin_round(&net, &profiles);
+        stage.push(StageEvent::Download { cid: 2, bytes: 10_000 });
+        stage.push(StageEvent::Train { cid: 2 });
+        stage.push(StageEvent::Upload { cid: 2, bytes: 8_000 });
+        let out = stage.finish();
+        let expect = profiles.client_time(&net, 2, 10_000, 8_000);
+        assert_eq!(out.serial_s, expect);
+        assert_eq!(out.parallel_s, expect);
+        assert_eq!(out.times, vec![expect]);
+        let (td, tc, tu) = profiles.stage_times(&net, 2, 10_000, 8_000);
+        assert_eq!(out.pipelined_s, td.max(tc).max(tu));
+        assert_eq!(out.transfer_wait_s, td + tu);
+        assert!(out.pipelined_s < out.parallel_s);
+    }
+
+    #[test]
+    fn dropped_and_cancelled_terminalize() {
+        let net = net();
+        let profiles = ClientProfiles::tiered(6, 7);
+        let mut stage = TransferStage::begin_round(&net, &profiles);
+        stage.push(StageEvent::Download { cid: 0, bytes: 5_000 });
+        stage.push(StageEvent::Dropped { cid: 0 });
+        stage.push(StageEvent::Download { cid: 1, bytes: 5_000 });
+        stage.push(StageEvent::Cancelled { cid: 1 });
+        let out = stage.finish();
+        let dropped = profiles.client_time(&net, 0, 5_000, 0);
+        let cancelled = profiles.get(1).download_time(&net, 5_000);
+        assert_eq!(out.serial_s, dropped + cancelled);
+        // Only the dropped client is waited on.
+        assert_eq!(out.times, vec![dropped]);
+        assert_eq!(out.parallel_s, dropped);
+    }
+
+    #[test]
+    fn duplicate_terminal_events_charge_once_per_direction() {
+        // The regression the raw RoundLoad API allowed: a cid fed
+        // through both the survivor and the cancellation path had its
+        // download leg charged twice. The stage settles each client
+        // exactly once.
+        let net = net();
+        let profiles = ClientProfiles::uniform(4);
+        let run = |dup: bool| {
+            let mut stage = TransferStage::begin_round(&net, &profiles);
+            stage.push(StageEvent::Download { cid: 3, bytes: 10_000 });
+            stage.push(StageEvent::Train { cid: 3 });
+            stage.push(StageEvent::Upload { cid: 3, bytes: 10_000 });
+            if dup {
+                // A second pass over the same client must be inert.
+                stage.push(StageEvent::Download { cid: 3, bytes: 10_000 });
+                stage.push(StageEvent::Cancelled { cid: 3 });
+            }
+            stage.finish()
+        };
+        let clean = run(false);
+        let with_dup = run(true);
+        assert_eq!(clean.serial_s, with_dup.serial_s);
+        assert_eq!(clean.transfer_wait_s, with_dup.transfer_wait_s);
+        assert_eq!(clean.times, with_dup.times);
+    }
+
+    #[test]
+    fn shared_pipe_estimates_flow_through() {
+        let net = NetworkModel::edge_lte().with_sharing(Sharing::Shared);
+        let profiles = ClientProfiles::uniform(8);
+        let mut stage = TransferStage::begin_round(&net, &profiles);
+        for cid in 0..4 {
+            stage.push(StageEvent::Download { cid, bytes: 1_000_000 });
+            stage.push(StageEvent::Train { cid });
+            stage.push(StageEvent::Upload { cid, bytes: 1_000_000 });
+        }
+        let out = stage.finish();
+        assert!(out.pipelined_s < out.parallel_s);
+        assert!(out.parallel_s < out.serial_s);
+        let loads = [(1_000_000, 1_000_000); 4];
+        assert_eq!(out.parallel_s, net.round_time_parallel(&loads));
+        assert_eq!(out.pipelined_s, net.round_time_pipelined(&loads));
+    }
+}

@@ -75,6 +75,8 @@ struct Observed {
     cancelled: u64,
     tier_bytes: Vec<u64>,
     sim_net_parallel_s: f64,
+    sim_net_pipelined_s: f64,
+    transfer_wait_s: f64,
     sim_client_p50_s: f64,
     sim_client_max_s: f64,
 }
@@ -96,6 +98,8 @@ fn run(cfg: FlConfig) -> Observed {
         cancelled: sim.cancelled_clients,
         tier_bytes: sim.tier_bytes().to_vec(),
         sim_net_parallel_s: summary.sim_net_parallel_s,
+        sim_net_pipelined_s: summary.sim_net_pipelined_s,
+        transfer_wait_s: summary.transfer_wait_s,
         sim_client_p50_s: summary.sim_client_p50_s,
         sim_client_max_s: summary.sim_client_max_s,
     }
@@ -128,6 +132,10 @@ fn assert_identical(a: &Observed, b: &Observed, what: &str) {
     assert_eq!(a.tier_bytes, b.tier_bytes, "{what}: per-tier bytes");
     assert_eq!(a.sim_net_parallel_s, b.sim_net_parallel_s,
                "{what}: simulated net time");
+    assert_eq!(a.sim_net_pipelined_s, b.sim_net_pipelined_s,
+               "{what}: simulated pipelined time");
+    assert_eq!(a.transfer_wait_s, b.transfer_wait_s,
+               "{what}: transfer wait");
     assert_eq!(a.sim_client_p50_s, b.sim_client_p50_s,
                "{what}: client p50 time");
     assert_eq!(a.sim_client_max_s, b.sim_client_max_s,
@@ -437,6 +445,37 @@ fn oversample_is_bit_identical_across_executors() {
     let p = run(with_executor(drop_cfg, ExecutorKind::Parallel, 0));
     assert!(s.dropped > 0, "injection never fired at dropout=0.3");
     assert_identical(&s, &p, "oversample+dropout serial vs parallel");
+}
+
+#[test]
+fn pipelined_overlap_is_bit_identical_under_stragglers() {
+    // The staged `overlap = transfer` engine against the serial
+    // reference, in the regime with every moving part at once: tiered
+    // link/compute profiles, oversampled sampling, planned
+    // cancellations. Only simulated-time *modelling* may differ — and
+    // it is computed identically in both modes, so the whole Observed
+    // struct must match bit-for-bit. The pipelined estimate itself
+    // must strictly beat the no-overlap concurrent estimate here
+    // (every accepted client has three non-zero stages to overlap).
+    let mut cfg = straggler_cfg();
+    cfg.overlap = flocora::transport::OverlapKind::Transfer;
+    let serial_none = run(with_executor(straggler_cfg(),
+                                        ExecutorKind::Serial, 0));
+    let pipelined = run(with_executor(cfg.clone(),
+                                      ExecutorKind::Parallel, 3));
+    let pipelined_w2 = run(with_window(cfg, 2));
+    assert!(serial_none.cancelled > 0, "no cancellations exercised");
+    assert_identical(&serial_none, &pipelined,
+                     "serial/none vs pipelined/transfer");
+    assert_identical(&serial_none, &pipelined_w2,
+                     "serial/none vs pipelined/transfer w=2");
+    assert!(
+        pipelined.sim_net_pipelined_s < pipelined.sim_net_parallel_s,
+        "pipelined {:.4}s did not beat parallel {:.4}s",
+        pipelined.sim_net_pipelined_s,
+        pipelined.sim_net_parallel_s
+    );
+    assert!(pipelined.transfer_wait_s > 0.0);
 }
 
 #[test]

@@ -1,0 +1,383 @@
+//! Transport-stage pipeline parity on the synthetic backend.
+//!
+//! These are the artifact-free twins of `tests/executor.rs`: the
+//! synthetic engine ([`Engine::synthetic`]) swaps the PJRT train step
+//! for deterministic pure-Rust surrogate dynamics, so the *protocol*
+//! invariants — bit-identical model trajectories across
+//! serial/parallel/windowed/pipelined execution with only simulated
+//! time accounting differing — run everywhere, including CI's plain
+//! runners (`cargo test --test pipeline`) and this repo's offline
+//! container. CI's `sim-smoke` job re-verifies the same bit-identity
+//! end-to-end through the binary.
+
+use flocora::compression::Fp32Codec;
+use flocora::config::{presets, FlConfig};
+use flocora::coordinator::executor::{ClientResult, Downloads,
+                                     PipelinedExecutor, RoundContext};
+use flocora::coordinator::sink::RoundSink;
+use flocora::coordinator::{ClientExecutor, ExecutorKind, LocalTrainer,
+                           SamplerKind, Simulation};
+use flocora::data::lda_partition;
+use flocora::metrics::Recorder;
+use flocora::runtime::Engine;
+use flocora::transport::OverlapKind;
+
+fn base_cfg() -> FlConfig {
+    FlConfig {
+        tag: "micro8_lora_fc_r4".into(),
+        num_clients: 8,
+        clients_per_round: 4,
+        rounds: 3,
+        local_epochs: 1,
+        samples_per_client: 16,
+        test_samples: 40,
+        seed: 21,
+        ..FlConfig::default()
+    }
+}
+
+/// The straggler regime at test size: tiered profiles, oversampled
+/// participation, planned cancellations.
+fn straggler_cfg() -> FlConfig {
+    let mut cfg = presets::by_name("straggler_micro").unwrap();
+    cfg.rounds = 8;
+    cfg.local_epochs = 1;
+    cfg.samples_per_client = 16;
+    cfg.test_samples = 40;
+    cfg.seed = 21;
+    cfg
+}
+
+fn hetero_cfg() -> FlConfig {
+    FlConfig {
+        tag: "micro8_lora_fc_r8".into(),
+        num_clients: 12,
+        clients_per_round: 4,
+        rounds: 3,
+        local_epochs: 1,
+        lora_alpha: 64.0,
+        samples_per_client: 16,
+        test_samples: 40,
+        seed: 33,
+        hetero_ranks: vec![2, 4, 8],
+        ..FlConfig::default()
+    }
+}
+
+/// Full observable state of one finished synthetic run.
+struct Observed {
+    global: Vec<f32>,
+    final_acc: f64,
+    final_train_loss: f64,
+    total_bytes: u64,
+    per_round: Vec<u64>,
+    dropped: u64,
+    cancelled: u64,
+    tier_bytes: Vec<u64>,
+    sim_net_serial_s: f64,
+    sim_net_parallel_s: f64,
+    sim_net_pipelined_s: f64,
+    transfer_wait_s: f64,
+    sim_client_p50_s: f64,
+    sim_client_max_s: f64,
+    record_pipelined_sum: f64,
+    record_wait_sum: f64,
+}
+
+fn run(cfg: FlConfig) -> Observed {
+    let engine = Engine::synthetic();
+    let mut sim = Simulation::new(&engine, cfg).unwrap();
+    let mut rec = Recorder::new("pipeline");
+    let summary = sim.run(&mut rec).unwrap();
+    Observed {
+        global: sim.global.clone(),
+        final_acc: summary.final_acc,
+        final_train_loss: summary.final_train_loss,
+        total_bytes: summary.total_bytes,
+        per_round: sim.ledger.per_round.clone(),
+        dropped: sim.dropped_clients,
+        cancelled: sim.cancelled_clients,
+        tier_bytes: sim.tier_bytes().to_vec(),
+        sim_net_serial_s: summary.sim_net_serial_s,
+        sim_net_parallel_s: summary.sim_net_parallel_s,
+        sim_net_pipelined_s: summary.sim_net_pipelined_s,
+        transfer_wait_s: summary.transfer_wait_s,
+        sim_client_p50_s: summary.sim_client_p50_s,
+        sim_client_max_s: summary.sim_client_max_s,
+        record_pipelined_sum: rec.rounds.iter()
+            .map(|r| r.sim_net_pipelined_s).sum(),
+        record_wait_sum: rec.rounds.iter()
+            .map(|r| r.transfer_wait_s).sum(),
+    }
+}
+
+fn with_exec(mut cfg: FlConfig, kind: ExecutorKind, threads: usize,
+             window: usize, overlap: OverlapKind) -> FlConfig {
+    cfg.executor = kind;
+    cfg.threads = threads;
+    cfg.window = window;
+    cfg.overlap = overlap;
+    cfg
+}
+
+fn assert_identical(a: &Observed, b: &Observed, what: &str) {
+    assert_eq!(a.global, b.global, "{what}: global vector diverged");
+    assert_eq!(a.final_acc, b.final_acc, "{what}: final_acc");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: total_bytes");
+    assert_eq!(a.per_round, b.per_round, "{what}: per-round ledger");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropout count");
+    assert_eq!(a.cancelled, b.cancelled, "{what}: cancelled count");
+    assert_eq!(a.tier_bytes, b.tier_bytes, "{what}: per-tier bytes");
+    assert_eq!(a.sim_net_serial_s, b.sim_net_serial_s,
+               "{what}: serial time");
+    assert_eq!(a.sim_net_parallel_s, b.sim_net_parallel_s,
+               "{what}: parallel time");
+    assert_eq!(a.sim_net_pipelined_s, b.sim_net_pipelined_s,
+               "{what}: pipelined time");
+    assert_eq!(a.transfer_wait_s, b.transfer_wait_s,
+               "{what}: transfer wait");
+    assert_eq!(a.sim_client_p50_s, b.sim_client_p50_s, "{what}: p50");
+    assert_eq!(a.sim_client_max_s, b.sim_client_max_s, "{what}: max");
+    assert!(
+        a.final_train_loss == b.final_train_loss
+            || (a.final_train_loss.is_nan() && b.final_train_loss.is_nan()),
+        "{what}: final_train_loss {} vs {}",
+        a.final_train_loss,
+        b.final_train_loss
+    );
+}
+
+#[test]
+fn synthetic_engine_serves_sessions_without_artifacts() {
+    let engine = Engine::synthetic();
+    assert!(engine.is_synthetic());
+    assert_eq!(engine.platform(), "synthetic");
+    let session = engine.session("micro8_lora_fc_r4").unwrap();
+    let (t, f) = session.init(42).unwrap();
+    assert_eq!(t.len(), session.spec.num_trainable);
+    assert_eq!(f.len(), session.spec.num_frozen);
+    // The sentinel artifact dir resolves to the same backend.
+    assert!(Engine::new("synthetic").unwrap().is_synthetic());
+    assert!(engine.session("no_such_tag").is_err());
+}
+
+#[test]
+fn overlap_transfer_is_bit_identical_to_serial() {
+    let serial = run(with_exec(base_cfg(), ExecutorKind::Serial, 0, 0,
+                               OverlapKind::None));
+    let parallel = run(with_exec(base_cfg(), ExecutorKind::Parallel, 0, 0,
+                                 OverlapKind::None));
+    let pipelined = run(with_exec(base_cfg(), ExecutorKind::Parallel, 0, 0,
+                                  OverlapKind::Transfer));
+    let windowed = run(with_exec(base_cfg(), ExecutorKind::Parallel, 4, 2,
+                                 OverlapKind::Transfer));
+    assert_identical(&serial, &parallel, "serial vs parallel");
+    assert_identical(&serial, &pipelined, "serial vs pipelined");
+    assert_identical(&serial, &windowed, "serial vs pipelined w=2");
+}
+
+#[test]
+fn overlap_identical_under_dropout() {
+    let mut cfg = base_cfg();
+    cfg.dropout = 0.4;
+    cfg.rounds = 4;
+    let serial = run(with_exec(cfg.clone(), ExecutorKind::Serial, 0, 0,
+                               OverlapKind::None));
+    let pipelined = run(with_exec(cfg, ExecutorKind::Parallel, 3, 2,
+                                  OverlapKind::Transfer));
+    assert!(serial.dropped > 0, "injection never fired at dropout=0.4");
+    assert_identical(&serial, &pipelined, "dropout serial vs pipelined");
+}
+
+#[test]
+fn straggler_preset_identical_across_overlap_modes() {
+    // The acceptance bar: on straggler_micro, `overlap = transfer`
+    // leaves the model trajectory, ledger bytes and straggler stats
+    // bit-identical under every executor — only wall clock (and the
+    // regime sim_net_pipelined_s models) may differ.
+    let none_serial = run(with_exec(straggler_cfg(), ExecutorKind::Serial,
+                                    0, 0, OverlapKind::None));
+    let none_parallel = run(with_exec(straggler_cfg(),
+                                      ExecutorKind::Parallel, 3, 0,
+                                      OverlapKind::None));
+    let transfer_serial = run(with_exec(straggler_cfg(),
+                                        ExecutorKind::Serial, 0, 0,
+                                        OverlapKind::Transfer));
+    let transfer_pipe = run(with_exec(straggler_cfg(),
+                                      ExecutorKind::Parallel, 3, 0,
+                                      OverlapKind::Transfer));
+    let transfer_w2 = run(with_exec(straggler_cfg(),
+                                    ExecutorKind::Parallel, 3, 2,
+                                    OverlapKind::Transfer));
+    assert!(none_serial.cancelled > 0, "oversampling never cancelled");
+    assert_identical(&none_serial, &none_parallel, "none: serial vs par");
+    assert_identical(&none_serial, &transfer_serial,
+                     "serial: none vs transfer");
+    assert_identical(&none_serial, &transfer_pipe,
+                     "none serial vs transfer pipelined");
+    assert_identical(&none_serial, &transfer_w2,
+                     "none serial vs transfer w=2");
+}
+
+#[test]
+fn pipelined_time_strictly_beats_parallel_on_stragglers() {
+    // Tiered profiles give every client all three stages (wire down,
+    // compute, wire up), so overlap must strictly shrink the round:
+    // pipelined < parallel <= serial, with a positive hidden wait.
+    let o = run(with_exec(straggler_cfg(), ExecutorKind::Parallel, 0, 0,
+                          OverlapKind::Transfer));
+    assert!(
+        o.sim_net_pipelined_s < o.sim_net_parallel_s,
+        "pipelined {:.4}s did not beat parallel {:.4}s",
+        o.sim_net_pipelined_s,
+        o.sim_net_parallel_s
+    );
+    assert!(o.sim_net_parallel_s <= o.sim_net_serial_s);
+    assert!(o.transfer_wait_s > 0.0);
+    // The per-record column partitions the run total.
+    assert!((o.record_pipelined_sum - o.sim_net_pipelined_s).abs() < 1e-9);
+    assert!((o.record_wait_sum - o.transfer_wait_s).abs() < 1e-9);
+}
+
+#[test]
+fn hetero_tiers_identical_under_overlap() {
+    let serial = run(with_exec(hetero_cfg(), ExecutorKind::Serial, 0, 0,
+                               OverlapKind::None));
+    let pipelined = run(with_exec(hetero_cfg(), ExecutorKind::Parallel, 3,
+                                  0, OverlapKind::Transfer));
+    assert_identical(&serial, &pipelined, "hetero serial vs pipelined");
+    assert_eq!(serial.tier_bytes.len(), 3);
+    assert_eq!(serial.tier_bytes.iter().sum::<u64>(), serial.total_bytes,
+               "tier bytes must partition total traffic");
+}
+
+#[test]
+fn latency_biased_identical_under_overlap() {
+    let mut cfg = straggler_cfg();
+    cfg.sampler = SamplerKind::LatencyBiased;
+    let serial = run(with_exec(cfg.clone(), ExecutorKind::Serial, 0, 0,
+                               OverlapKind::None));
+    let pipelined = run(with_exec(cfg, ExecutorKind::Parallel, 3, 2,
+                                  OverlapKind::Transfer));
+    assert_identical(&serial, &pipelined, "latency_biased overlap");
+    assert_eq!(serial.cancelled, 0);
+}
+
+/// In-order assertion sink that dawdles on every push, giving the
+/// pipeline every opportunity to run ahead of the merge.
+struct SlowCountingSink {
+    next: usize,
+    clients: Vec<usize>,
+}
+
+impl RoundSink for SlowCountingSink {
+    fn push(&mut self, index: usize, result: ClientResult)
+            -> flocora::Result<()> {
+        assert_eq!(index, self.next, "sink saw an out-of-order push");
+        assert_eq!(result.cid, self.clients[index],
+                   "slot {index} carries the wrong client");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        self.next += 1;
+        Ok(())
+    }
+}
+
+#[test]
+fn pipelined_peak_buffered_never_exceeds_window() {
+    let engine = Engine::synthetic();
+    let cfg = base_cfg();
+    let session = engine.session(&cfg.tag).unwrap();
+    let spec = session.spec.clone();
+    let federation = lda_partition(
+        cfg.num_clients,
+        cfg.samples_per_client,
+        spec.num_classes,
+        spec.image_size,
+        cfg.lda_alpha,
+        cfg.seed,
+    );
+    let (global, frozen) = session.init(cfg.seed).unwrap();
+    let codec = Fp32Codec;
+    let down_msg = flocora::compression::Codec::encode(
+        &codec, &global, &spec.trainable_segments).unwrap();
+    let ctx = RoundContext {
+        session: &session,
+        codec: &codec,
+        federation: &federation,
+        frozen: &frozen,
+        downloads: Downloads::Homogeneous(&down_msg),
+        trainer: LocalTrainer {
+            local_epochs: 1,
+            lr: cfg.lr,
+            lora_scale: cfg.lora_scale(spec.rank),
+        },
+        cfg: &cfg,
+        round: 0,
+        plan: None,
+        cancelled: &[],
+    };
+    let clients: Vec<usize> = (0..cfg.num_clients).collect();
+    for window in [1usize, 2, 3] {
+        let exec = PipelinedExecutor::new(4).with_window(window);
+        let mut sink =
+            SlowCountingSink { next: 0, clients: clients.clone() };
+        exec.execute(&ctx, &clients, &mut sink).unwrap();
+        assert_eq!(sink.next, clients.len(), "sink missed pushes");
+        let peak = exec.peak_buffered();
+        assert!(peak >= 1, "window {window}: nothing ever buffered?");
+        assert!(peak <= window,
+                "window {window}: {peak} results buffered simultaneously");
+    }
+}
+
+#[test]
+fn pipelined_respects_planned_cancellations() {
+    // Cancelled clients must short-circuit in the transport-in stage —
+    // no training, no upload — under the staged pipeline exactly as
+    // under the inline executors.
+    let engine = Engine::synthetic();
+    let cfg = base_cfg();
+    let session = engine.session(&cfg.tag).unwrap();
+    let spec = session.spec.clone();
+    let federation = lda_partition(
+        cfg.num_clients,
+        cfg.samples_per_client,
+        spec.num_classes,
+        spec.image_size,
+        cfg.lda_alpha,
+        cfg.seed,
+    );
+    let (global, frozen) = session.init(cfg.seed).unwrap();
+    let codec = Fp32Codec;
+    let down_msg = flocora::compression::Codec::encode(
+        &codec, &global, &spec.trainable_segments).unwrap();
+    let cancelled = vec![1usize, 5];
+    let ctx = RoundContext {
+        session: &session,
+        codec: &codec,
+        federation: &federation,
+        frozen: &frozen,
+        downloads: Downloads::Homogeneous(&down_msg),
+        trainer: LocalTrainer {
+            local_epochs: 1,
+            lr: cfg.lr,
+            lora_scale: cfg.lora_scale(spec.rank),
+        },
+        cfg: &cfg,
+        round: 0,
+        plan: None,
+        cancelled: &cancelled,
+    };
+    let clients: Vec<usize> = (0..8).collect();
+    let exec = PipelinedExecutor::new(3).with_window(2);
+    let results =
+        flocora::coordinator::sink::collect_round(&exec, &ctx, &clients)
+            .unwrap();
+    assert_eq!(results.len(), 8);
+    for r in &results {
+        let expect_cancel = cancelled.contains(&r.cid);
+        assert_eq!(r.cancelled, expect_cancel, "cid {}", r.cid);
+        assert_eq!(r.update.is_none(), expect_cancel, "cid {}", r.cid);
+        assert!(r.down_bytes > 0);
+    }
+}

@@ -311,6 +311,94 @@ fn prop_latency_biased_covers_all_clients_over_time() {
 }
 
 #[test]
+fn prop_pipelined_round_time_bounded_by_serial_and_parallel() {
+    // For arbitrary load sets — any mix of surviving, dropped and
+    // cancelled clients, profiled slowdowns, both sharing regimes —
+    // the transfer-overlap estimate never exceeds the no-overlap
+    // concurrent estimate, which never exceeds… well, pipelined must
+    // also never exceed fully-serial execution.
+    use flocora::transport::{NetworkModel, RoundLoad, Sharing};
+    let mut rng = Rng::new(113);
+    for case in 0..CASES {
+        for sharing in [Sharing::Dedicated, Sharing::Shared] {
+            let net = NetworkModel::edge_lte().with_sharing(sharing);
+            let mut acc = RoundLoad::new();
+            let n = 1 + rng.below(12);
+            for _ in 0..n {
+                let down = rng.below(4_000_000);
+                match rng.below(4) {
+                    0 => {
+                        // Dropped before uploading: download only.
+                        acc.add(&net, down, 0);
+                    }
+                    1 => {
+                        // Cancelled mid-transfer.
+                        let mult = rng.range_f64(1.0, 10.0);
+                        acc.add_cancelled(
+                            net.download_time(down) * mult, down);
+                    }
+                    _ => {
+                        // Survivor with a profiled slowdown and some
+                        // local compute.
+                        let up = 1 + rng.below(4_000_000);
+                        let mult = rng.range_f64(1.0, 10.0);
+                        acc.add_stages(
+                            net.download_time(down) * mult,
+                            rng.range_f64(0.0, 3.0),
+                            net.upload_time(up) * mult,
+                            down,
+                            up,
+                        );
+                    }
+                }
+            }
+            let serial = acc.serial_s();
+            let parallel = acc.parallel_s(&net);
+            let pipelined = acc.pipelined_s(&net);
+            assert!(
+                pipelined <= parallel + 1e-12,
+                "case {case} {sharing:?}: pipelined {pipelined} > \
+                 parallel {parallel}"
+            );
+            assert!(
+                pipelined <= serial + 1e-12,
+                "case {case} {sharing:?}: pipelined {pipelined} > \
+                 serial {serial}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pipelined_equals_parallel_when_transfer_is_zero() {
+    // With zero wire time (no bytes, zero latency) only the compute
+    // stage remains, so there is nothing to overlap: the pipelined and
+    // no-overlap concurrent estimates must agree bit-for-bit, under
+    // both sharing regimes.
+    use flocora::transport::{NetworkModel, RoundLoad, Sharing};
+    let mut rng = Rng::new(114);
+    for case in 0..CASES {
+        for sharing in [Sharing::Dedicated, Sharing::Shared] {
+            let net = NetworkModel {
+                up_bps: 10e6,
+                down_bps: 30e6,
+                latency_s: 0.0,
+                sharing,
+            };
+            let mut acc = RoundLoad::new();
+            for _ in 0..1 + rng.below(10) {
+                acc.add_stages(0.0, rng.range_f64(0.0, 5.0), 0.0, 0, 0);
+            }
+            assert_eq!(
+                acc.pipelined_s(&net),
+                acc.parallel_s(&net),
+                "case {case} {sharing:?}"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_oversample_beta_zero_is_bit_identical_to_uniform() {
     // β = 0 must replay the uniform stream exactly — for any pool
     // size, round budget and seed, not just the defaults.
