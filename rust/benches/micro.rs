@@ -12,6 +12,8 @@ use flocora::data::{gen_image, lda_partition};
 use flocora::model::{build_spec, ModelCfg, Variant};
 use flocora::runtime::{Batch, Engine};
 use flocora::tensor;
+use flocora::transport::{simulate_round, ClientLoad, ClientProfiles,
+                         NetworkModel, RoundLoad, SimParams};
 use flocora::util::benchkit::{bench, env_usize, header};
 use flocora::util::rng::Rng;
 
@@ -82,6 +84,58 @@ fn main() {
             .total_samples());
     });
     println!("{}", st.row());
+
+    // ---- round-time models: closed forms vs event simulator -------------
+    // A 1000-client synthetic round (tiered profiles, 700 kB FLoCoRA-
+    // sized messages each way) priced by the closed estimators and by
+    // the discrete-event simulator at two chunk granularities. The
+    // simulator's own cost must stay visible in the perf trajectory:
+    // it runs per round, so a regression here taxes every event-model
+    // experiment.
+    {
+        let net = NetworkModel::edge_lte();
+        let profiles = ClientProfiles::tiered(1000, 7);
+        let loads: Vec<ClientLoad> = (0..1000)
+            .map(|cid| {
+                let (td, tc, tu) =
+                    profiles.stage_times(&net, cid, 700_000, 700_000);
+                ClientLoad {
+                    cid,
+                    td,
+                    tc,
+                    tu,
+                    down_bytes: 700_000,
+                    up_bytes: 700_000,
+                    waited: true,
+                }
+            })
+            .collect();
+        let st = bench("closed estimators, 1000 clients", 3, 200, || {
+            let mut acc = RoundLoad::new();
+            for l in &loads {
+                acc.add_stages(l.td, l.tc, l.tu, l.down_bytes, l.up_bytes);
+            }
+            std::hint::black_box(
+                (acc.serial_s(), acc.parallel_s(&net), acc.pipelined_s(&net)),
+            );
+        });
+        println!("{}", st.row());
+        let closed_mean = st.mean_s;
+        for (label, params) in [
+            ("event sim, 1000 clients, 256 kB chunks",
+             SimParams { chunk_kb: 256, stage_queue: 4 }),
+            ("event sim, 1000 clients, 64 kB chunks",
+             SimParams { chunk_kb: 64, stage_queue: 4 }),
+        ] {
+            let st = bench(label, 2, 10, || {
+                std::hint::black_box(
+                    simulate_round(&net, &loads, &params).round_s,
+                );
+            });
+            println!("{}   ({:.0}x closed forms)", st.row(),
+                     st.mean_s / closed_mean);
+        }
+    }
 
     // ---- PJRT train-step round trip (the L2/L1 hot path) ----------------
     let engine = Engine::new("artifacts").expect("make artifacts");

@@ -10,7 +10,8 @@ use crate::compression::CodecKind;
 use crate::coordinator::executor::ExecutorKind;
 use crate::coordinator::sampler::SamplerKind;
 use crate::error::{Error, Result};
-use crate::transport::{NetworkKind, OverlapKind, ProfileKind, Sharing};
+use crate::transport::{NetworkKind, OverlapKind, ProfileKind, Sharing,
+                       TimeModelKind, DEFAULT_COMPUTE_BASE_S};
 
 /// Full description of one FL run.
 #[derive(Debug, Clone)]
@@ -76,11 +77,29 @@ pub struct FlConfig {
     /// uploads and cancels the stragglers. `0.0` reproduces `uniform`
     /// bit-for-bit. Ignored by the other strategies.
     pub oversample_beta: f64,
-    /// Per-client link/compute profile table (`uniform | tiered`).
-    /// `uniform` keeps every client on the base `network` link
-    /// (pre-profile behaviour); `tiered` splits clients round-robin
-    /// over fast/mid/slow device classes with seeded jitter.
+    /// Per-client link/compute profile table
+    /// (`uniform | tiered | file:PATH`). `uniform` keeps every client
+    /// on the base `network` link (pre-profile behaviour); `tiered`
+    /// splits clients round-robin over fast/mid/slow device classes
+    /// with seeded jitter; `file:PATH` pins an exact cid-range →
+    /// multipliers table from a config file.
     pub client_profiles: ProfileKind,
+    /// Seconds of simulated client compute per round at profile
+    /// multiplier 1.0 (scaled tables only; `uniform` stays at zero
+    /// compute). Default 0.25 — the former hardcoded baseline, so
+    /// existing presets are bit-identical.
+    pub compute_base_s: f64,
+    /// Which backend computes the `sim_net_event_s` round time
+    /// (`closed | event`). `closed` reports the ideal pipelined
+    /// envelope; `event` replays the round through the discrete-event
+    /// simulator (`transport::sim`) at chunk granularity. Never
+    /// affects training, sampling or the other simulated columns.
+    pub time_model: TimeModelKind,
+    /// Event-simulator transfer chunk size in KiB (>= 1).
+    pub chunk_kb: usize,
+    /// Event-simulator inter-stage queue capacity in chunks
+    /// (0 = unbounded).
+    pub stage_queue: usize,
     /// Rank tiers for a heterogeneous federation, e.g. `[2, 4, 8]`
     /// (clients are assigned round-robin by id). Empty = homogeneous.
     /// The server tag must be a LoRA variant; each tier needs the
@@ -119,6 +138,10 @@ impl Default for FlConfig {
             sampler: SamplerKind::Uniform,
             oversample_beta: 0.0,
             client_profiles: ProfileKind::Uniform,
+            compute_base_s: DEFAULT_COMPUTE_BASE_S,
+            time_model: TimeModelKind::Closed,
+            chunk_kb: 64,
+            stage_queue: 4,
             hetero_ranks: Vec::new(),
             hetero_codecs: Vec::new(),
         }
@@ -184,6 +207,12 @@ impl FlConfig {
         if !(self.oversample_beta >= 0.0 && self.oversample_beta.is_finite())
         {
             return Err(Error::invalid("oversample_beta must be >= 0"));
+        }
+        if !(self.compute_base_s >= 0.0 && self.compute_base_s.is_finite()) {
+            return Err(Error::invalid("compute_base_s must be >= 0"));
+        }
+        if self.chunk_kb == 0 {
+            return Err(Error::invalid("chunk_kb must be > 0"));
         }
         if self.hetero_ranks.iter().any(|&r| r == 0) {
             return Err(Error::invalid("hetero_ranks entries must be > 0"));
@@ -259,10 +288,21 @@ impl FlConfig {
                     ProfileKind::parse(value).ok_or_else(|| {
                         Error::parse(format!(
                             "unknown client_profiles `{value}` \
-                             (uniform|tiered)"
+                             (uniform|tiered|file:PATH)"
                         ))
                     })?
             }
+            "compute_base_s" => self.compute_base_s = p(key, value)?,
+            "time_model" => {
+                self.time_model =
+                    TimeModelKind::parse(value).ok_or_else(|| {
+                        Error::parse(format!(
+                            "unknown time_model `{value}` (closed|event)"
+                        ))
+                    })?
+            }
+            "chunk_kb" => self.chunk_kb = p(key, value)?,
+            "stage_queue" => self.stage_queue = p(key, value)?,
             "hetero_ranks" => {
                 self.hetero_ranks = parse_list(key, value, |v| {
                     v.parse::<usize>().ok()
@@ -376,6 +416,47 @@ mod tests {
         assert!(c.set("oversample_beta", "x").is_err());
         // Negative beta survives parsing but fails validation.
         c.set("oversample_beta", "-0.1").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn time_model_knobs_parse_and_validate() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.time_model, TimeModelKind::Closed);
+        assert_eq!(c.chunk_kb, 64);
+        assert_eq!(c.stage_queue, 4);
+        c.set("time_model", "event").unwrap();
+        c.set("chunk_kb", "16").unwrap();
+        c.set("stage_queue", "0").unwrap();
+        assert_eq!(c.time_model, TimeModelKind::Event);
+        assert_eq!(c.chunk_kb, 16);
+        assert_eq!(c.stage_queue, 0);
+        c.validate().unwrap();
+        assert!(c.set("time_model", "fluid").is_err());
+        assert!(c.set("chunk_kb", "x").is_err());
+        // chunk_kb = 0 survives parsing but fails validation.
+        c.set("chunk_kb", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn compute_base_and_file_profile_knobs_parse() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.compute_base_s, 0.25);
+        c.set("compute_base_s", "0.75").unwrap();
+        assert_eq!(c.compute_base_s, 0.75);
+        c.validate().unwrap();
+        c.set("client_profiles", "file:fleet.toml").unwrap();
+        assert_eq!(
+            c.client_profiles,
+            ProfileKind::File("fleet.toml".into())
+        );
+        c.validate().unwrap();
+        assert!(c.set("client_profiles", "file:").is_err());
+        assert!(c.set("compute_base_s", "x").is_err());
+        c.set("compute_base_s", "-0.5").unwrap();
+        assert!(c.validate().is_err());
+        c.set("compute_base_s", "nan").unwrap();
         assert!(c.validate().is_err());
     }
 

@@ -11,7 +11,7 @@ use crate::compression::CodecKind;
 use crate::config::FlConfig;
 use crate::coordinator::executor::ExecutorKind;
 use crate::coordinator::sampler::SamplerKind;
-use crate::transport::ProfileKind;
+use crate::transport::{ProfileKind, TimeModelKind};
 
 /// Paper §IV main setup: ResNet-8, CIFAR-10-scale, LDA 0.5, 100 rounds.
 pub fn paper_resnet8(rank: usize, codec: CodecKind) -> FlConfig {
@@ -149,6 +149,22 @@ pub fn straggler_micro() -> FlConfig {
     }
 }
 
+/// The straggler regime priced by the discrete-event time model
+/// instead of the closed envelopes: fine-grained chunks through tight
+/// stage queues, so the `sim_net_event_s` column lands strictly
+/// between the pipelined and parallel estimates (queueing made
+/// visible). Training, sampling and every other column are
+/// bit-identical to `straggler_micro` — the time model only prices
+/// rounds.
+pub fn event_micro() -> FlConfig {
+    FlConfig {
+        time_model: TimeModelKind::Event,
+        chunk_kb: 1,
+        stage_queue: 2,
+        ..straggler_micro()
+    }
+}
+
 /// Look a preset up by CLI name (`flocora train --preset NAME`).
 pub fn by_name(name: &str) -> Option<FlConfig> {
     match name {
@@ -162,6 +178,7 @@ pub fn by_name(name: &str) -> Option<FlConfig> {
         }
         "hetero_micro" => Some(hetero_micro()),
         "straggler_micro" => Some(straggler_micro()),
+        "event_micro" => Some(event_micro()),
         _ => None,
     }
 }
@@ -225,9 +242,25 @@ mod tests {
     }
 
     #[test]
+    fn event_preset_prices_rounds_with_the_simulator() {
+        let cfg = event_micro();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.time_model, TimeModelKind::Event);
+        assert!(cfg.chunk_kb >= 1);
+        // Everything that reaches training matches straggler_micro.
+        let base = straggler_micro();
+        assert_eq!(cfg.tag, base.tag);
+        assert_eq!(cfg.seed, base.seed);
+        assert_eq!(cfg.rounds, base.rounds);
+        assert_eq!(cfg.sampler, base.sampler);
+        assert_eq!(cfg.client_profiles, base.client_profiles);
+    }
+
+    #[test]
     fn presets_resolve_by_name() {
         for name in ["paper_resnet8", "paper_resnet18", "scaled_micro",
-                     "scaled_tiny", "hetero_micro", "straggler_micro"] {
+                     "scaled_tiny", "hetero_micro", "straggler_micro",
+                     "event_micro"] {
             let cfg = by_name(name).unwrap_or_else(|| {
                 panic!("preset {name} missing")
             });

@@ -40,7 +40,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{p50, Recorder, RoundRecord};
 use crate::runtime::{Engine, ModelSession};
 use crate::transport::{ClientProfiles, CommLedger, Direction, NetworkModel,
-                       StageEvent, TransferStage};
+                       StageEvent, TimeModel, TransferStage};
 use crate::util::rng::Rng;
 
 /// Aggregate results of one run.
@@ -74,6 +74,17 @@ pub struct RunSummary {
     /// uploads, cancelled downloads included) — the wire time the
     /// pipelined regime hides behind compute.
     pub transfer_wait_s: f64,
+    /// The active `time_model`'s simulated round time, summed over the
+    /// run: bit-identical to `sim_net_pipelined_s` under `closed`, the
+    /// chunk-granularity discrete-event result under `event` (always
+    /// within `[pipelined, parallel]` on dedicated links).
+    pub sim_net_event_s: f64,
+    /// Peak inter-stage queue occupancy (chunks) any round's event
+    /// simulation observed; 0 under `time_model = closed`.
+    pub queue_peak: usize,
+    /// Total simulated producer-blocked time on full stage queues
+    /// across the run; 0 under `time_model = closed`.
+    pub queue_block_s: f64,
     /// Sampled clients the server cancelled across the run
     /// (`sampler = oversample_k` ends each round at the K-th accepted
     /// upload; 0 for the other strategies).
@@ -127,6 +138,9 @@ pub struct Simulation {
     net: NetworkModel,
     /// Per-client link/compute deviations from the base link.
     profiles: ClientProfiles,
+    /// Round-time backend (`time_model` knob): closed envelopes or the
+    /// chunk-granularity discrete-event simulator.
+    time_model: Box<dyn TimeModel>,
     /// Rank-tier plan (`hetero_ranks`); `None` = homogeneous.
     plan: Option<ClientPlan>,
     /// Bytes moved per tier (down + up), indexed like the plan's
@@ -150,6 +164,10 @@ pub struct Simulation {
     sim_net_parallel_s: f64,
     sim_net_pipelined_s: f64,
     transfer_wait_s: f64,
+    sim_net_event_s: f64,
+    queue_peak: usize,
+    queue_block_s: f64,
+    last_round_queue_peak: usize,
     /// Clients that failed mid-round (failure injection diagnostics).
     pub dropped_clients: u64,
     /// Clients the server cancelled after their round already had K
@@ -221,7 +239,12 @@ impl Simulation {
         let tier_bytes = vec![0u64; plan.as_ref()
             .map_or(0, |p| p.tiers().len())];
         let net = cfg.network.build().with_sharing(cfg.net_sharing);
-        let profiles = cfg.client_profiles.build(cfg.num_clients, cfg.seed);
+        let profiles = cfg.client_profiles.build(
+            cfg.num_clients,
+            cfg.seed,
+            cfg.compute_base_s,
+        )?;
+        let time_model = cfg.time_model.build(cfg.chunk_kb, cfg.stage_queue);
         let sampler: Box<dyn Sampler> = match cfg.sampler {
             SamplerKind::Uniform => {
                 Box::new(UniformSampler::new(cfg.num_clients, cfg.seed))
@@ -252,6 +275,7 @@ impl Simulation {
                                          cfg.overlap),
             net,
             profiles,
+            time_model,
             plan,
             tier_bytes,
             cfg,
@@ -271,6 +295,10 @@ impl Simulation {
             sim_net_parallel_s: 0.0,
             sim_net_pipelined_s: 0.0,
             transfer_wait_s: 0.0,
+            sim_net_event_s: 0.0,
+            queue_peak: 0,
+            queue_block_s: 0.0,
+            last_round_queue_peak: 0,
             dropped_clients: 0,
             cancelled_clients: 0,
         })
@@ -398,7 +426,8 @@ impl Simulation {
             plan: self.plan.as_ref(),
             ledger: &mut self.ledger,
             tier_bytes: &mut self.tier_bytes,
-            stage: TransferStage::begin_round(&self.net, &self.profiles),
+            stage: TransferStage::begin_round(&self.net, &self.profiles,
+                                              &*self.time_model),
             agg: FedAvg::new(self.global.len()),
             loss_sum: 0.0,
             acc_sum: 0.0,
@@ -432,6 +461,10 @@ impl Simulation {
         self.sim_net_parallel_s += transport.parallel_s;
         self.sim_net_pipelined_s += transport.pipelined_s;
         self.transfer_wait_s += transport.transfer_wait_s;
+        self.sim_net_event_s += transport.event_s;
+        self.queue_peak = self.queue_peak.max(transport.queue_peak);
+        self.queue_block_s += transport.queue_block_s;
+        self.last_round_queue_peak = transport.queue_peak;
         self.dropped_clients += dropped;
         self.last_round_dropped = dropped;
         self.cancelled_clients += cancelled;
@@ -515,6 +548,9 @@ impl Simulation {
         let mut cancelled_since_record = 0u64;
         let mut pipelined_at_record = 0.0f64;
         let mut wait_at_record = 0.0f64;
+        let mut event_at_record = 0.0f64;
+        let mut block_at_record = 0.0f64;
+        let mut window_queue_peak = 0usize;
         let mut window_times: Vec<f64> = Vec::new();
         // Whole-run client times for the summary percentiles; bounded
         // by rounds × clients_per_round f64s.
@@ -524,6 +560,8 @@ impl Simulation {
             self.last_train_loss = train_loss;
             drops_since_record += self.last_round_dropped;
             cancelled_since_record += self.last_round_cancelled;
+            window_queue_peak =
+                window_queue_peak.max(self.last_round_queue_peak);
             window_times.extend_from_slice(&self.last_round_times);
             all_times.extend_from_slice(&self.last_round_times);
             let is_last = r + 1 == self.cfg.rounds;
@@ -543,12 +581,18 @@ impl Simulation {
                     sim_net_pipelined_s: self.sim_net_pipelined_s
                         - pipelined_at_record,
                     transfer_wait_s: self.transfer_wait_s - wait_at_record,
+                    sim_net_event_s: self.sim_net_event_s - event_at_record,
+                    queue_peak: window_queue_peak,
+                    queue_block_s: self.queue_block_s - block_at_record,
                     wall_ms: t0.elapsed().as_secs_f64() * 1e3,
                 });
                 drops_since_record = 0;
                 cancelled_since_record = 0;
                 pipelined_at_record = self.sim_net_pipelined_s;
                 wait_at_record = self.transfer_wait_s;
+                event_at_record = self.sim_net_event_s;
+                block_at_record = self.queue_block_s;
+                window_queue_peak = 0;
                 window_times.clear();
             }
         }
@@ -565,6 +609,9 @@ impl Simulation {
             sim_net_parallel_s: self.sim_net_parallel_s,
             sim_net_pipelined_s: self.sim_net_pipelined_s,
             transfer_wait_s: self.transfer_wait_s,
+            sim_net_event_s: self.sim_net_event_s,
+            queue_peak: self.queue_peak,
+            queue_block_s: self.queue_block_s,
             cancelled_clients: self.cancelled_clients,
             sim_client_p50_s: p50(&all_times),
             sim_client_max_s: all_times.iter().copied().fold(0.0, f64::max),

@@ -13,14 +13,14 @@
 use flocora::cli::Args;
 use flocora::compression::Codec;
 use flocora::config::{loader, presets, FlConfig};
-use flocora::coordinator::{RunSummary, Simulation};
+use flocora::coordinator::Simulation;
 use flocora::error::{Error, Result};
 use flocora::experiments::tables;
-use flocora::metrics::Recorder;
+use flocora::metrics::{run_json, Recorder};
 use flocora::model::ParamKind;
 use flocora::runtime::{Batch, Engine};
 use flocora::tensor;
-use flocora::util::json::{arr, num, obj, s, Json};
+use flocora::transport::TimeModelKind;
 use flocora::util::rng::Rng;
 
 fn main() {
@@ -63,7 +63,10 @@ fn print_usage() {
          \x20               [--net_sharing dedicated|shared]\n\
          \x20               [--sampler uniform|latency_biased|oversample_k]\n\
          \x20               [--oversample_beta B]\n\
-         \x20               [--client_profiles uniform|tiered]\n\
+         \x20               [--client_profiles uniform|tiered|file:PATH]\n\
+         \x20               [--compute_base_s S]\n\
+         \x20               [--time_model closed|event] [--chunk_kb N]\n\
+         \x20               [--stage_queue N]\n\
          \x20               [--hetero_ranks 2,4,8] [--hetero_codecs ...] ...\n\
          \x20               (--artifacts synthetic runs the PJRT-free\n\
          \x20               surrogate backend — what CI's sim-smoke uses)\n\
@@ -90,7 +93,8 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         Some(name) => presets::by_name(&name).ok_or_else(|| {
             Error::invalid(format!(
                 "unknown preset `{name}` (paper_resnet8|paper_resnet18|\
-                 scaled_micro|scaled_tiny|hetero_micro|straggler_micro)"
+                 scaled_micro|scaled_tiny|hetero_micro|straggler_micro|\
+                 event_micro)"
             ))
         })?,
         None => FlConfig::default(),
@@ -172,6 +176,17 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         summary.cancelled_clients, sim.dropped_clients,
         summary.sim_client_p50_s, summary.sim_client_max_s
     );
+    if sim.config().time_model == TimeModelKind::Event {
+        println!(
+            "event model ({} kB chunks, queue {}): {:.1}s simulated \
+             (queue peak {}, producers blocked {:.1}s)",
+            sim.config().chunk_kb,
+            if sim.config().stage_queue == 0 { "unbounded".to_string() }
+            else { sim.config().stage_queue.to_string() },
+            summary.sim_net_event_s, summary.queue_peak,
+            summary.queue_block_s
+        );
+    }
     if !sim.tier_bytes().is_empty() {
         let plan = sim.plan().expect("tier bytes imply a plan");
         for (tier, bytes) in plan.tiers().iter().zip(sim.tier_bytes()) {
@@ -193,46 +208,6 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
-}
-
-/// JSON export of one run: the summary plus the per-round records.
-/// Wall-clock fields (`wall_s`, `wall_ms`) are the only
-/// non-deterministic values; CI's sim-smoke job strips them and diffs
-/// the rest to pin bit-identity across `overlap` modes.
-fn run_json(rec: &Recorder, summary: &RunSummary, dropped: u64) -> Json {
-    // NaN is not valid JSON (a fully-dropped final round reports a NaN
-    // train loss); map non-finite to null.
-    let fnum = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
-    obj(vec![
-        ("name", s(rec.name.clone())),
-        (
-            "summary",
-            obj(vec![
-                ("final_acc", fnum(summary.final_acc)),
-                ("tail_acc", fnum(summary.tail_acc)),
-                ("final_train_loss", fnum(summary.final_train_loss)),
-                ("total_bytes", num(summary.total_bytes as f64)),
-                ("mean_up_msg_bytes", fnum(summary.mean_up_msg_bytes)),
-                ("per_client_tcc_bytes", fnum(summary.per_client_tcc_bytes)),
-                ("rounds", num(summary.rounds as f64)),
-                ("sim_net_serial_s", fnum(summary.sim_net_serial_s)),
-                ("sim_net_parallel_s", fnum(summary.sim_net_parallel_s)),
-                ("sim_net_pipelined_s", fnum(summary.sim_net_pipelined_s)),
-                ("transfer_wait_s", fnum(summary.transfer_wait_s)),
-                ("cancelled_clients", num(summary.cancelled_clients as f64)),
-                ("dropped_clients", num(dropped as f64)),
-                ("sim_client_p50_s", fnum(summary.sim_client_p50_s)),
-                ("sim_client_max_s", fnum(summary.sim_client_max_s)),
-                ("wall_s", fnum(summary.wall_s)),
-            ]),
-        ),
-        ("rounds", {
-            let Json::Obj(m) = rec.to_json() else {
-                unreachable!("Recorder::to_json returns an object")
-            };
-            m.get("rounds").cloned().unwrap_or_else(|| arr(Vec::new()))
-        }),
-    ])
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

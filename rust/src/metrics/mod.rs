@@ -4,6 +4,7 @@
 use std::io::Write;
 use std::path::Path;
 
+use crate::coordinator::RunSummary;
 use crate::error::Result;
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -39,6 +40,16 @@ pub struct RoundRecord {
     /// — the time the pipelined regime hides behind compute; sums to
     /// `RunSummary::transfer_wait_s`.
     pub transfer_wait_s: f64,
+    /// The active `time_model`'s simulated round time over the covered
+    /// rounds (pipelined envelope under `closed`, discrete-event
+    /// result under `event`); sums to `RunSummary::sim_net_event_s`.
+    pub sim_net_event_s: f64,
+    /// Peak inter-stage queue occupancy (chunks) the event simulator
+    /// saw in the covered rounds; run max in `RunSummary::queue_peak`.
+    pub queue_peak: usize,
+    /// Simulated producer-blocked time on full stage queues in the
+    /// covered rounds; sums to `RunSummary::queue_block_s`.
+    pub queue_block_s: f64,
     pub wall_ms: f64,
 }
 
@@ -87,15 +98,17 @@ impl Recorder {
         let mut out = String::from(
             "round,test_acc,test_loss,train_loss,cum_bytes,dropped,\
              cancelled,client_p50_s,client_max_s,sim_net_pipelined_s,\
-             transfer_wait_s,wall_ms\n",
+             transfer_wait_s,sim_net_event_s,queue_peak,queue_block_s,\
+             wall_ms\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
                 "{},{:.4},{:.4},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},\
-                 {:.1}\n",
+                 {:.4},{},{:.4},{:.1}\n",
                 r.round, r.test_acc, r.test_loss, r.train_loss, r.cum_bytes,
                 r.dropped, r.cancelled, r.client_p50_s, r.client_max_s,
-                r.sim_net_pipelined_s, r.transfer_wait_s, r.wall_ms
+                r.sim_net_pipelined_s, r.transfer_wait_s, r.sim_net_event_s,
+                r.queue_peak, r.queue_block_s, r.wall_ms
             ));
         }
         out
@@ -127,6 +140,9 @@ impl Recorder {
                             ("sim_net_pipelined_s",
                              fnum(r.sim_net_pipelined_s)),
                             ("transfer_wait_s", fnum(r.transfer_wait_s)),
+                            ("sim_net_event_s", fnum(r.sim_net_event_s)),
+                            ("queue_peak", num(r.queue_peak as f64)),
+                            ("queue_block_s", fnum(r.queue_block_s)),
                             ("wall_ms", fnum(r.wall_ms)),
                         ])
                     })
@@ -140,6 +156,52 @@ impl Recorder {
         f.write_all(self.to_csv().as_bytes())?;
         Ok(())
     }
+}
+
+/// JSON export of one run (the `--json` flag): the summary plus the
+/// per-round records. Wall-clock fields (`wall_s`, `wall_ms`) are the
+/// only non-deterministic values; CI's sim-smoke job strips them and
+/// diffs the rest to pin bit-identity across overlap modes, executors
+/// and time models. Every `RunSummary` field must appear here —
+/// `tests/pipeline.rs` round-trips the export and fails if a field is
+/// silently dropped.
+pub fn run_json(rec: &Recorder, summary: &RunSummary, dropped: u64) -> Json {
+    // NaN is not valid JSON (a fully-dropped final round reports a NaN
+    // train loss); map non-finite to null.
+    let fnum = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
+    obj(vec![
+        ("name", s(rec.name.clone())),
+        (
+            "summary",
+            obj(vec![
+                ("final_acc", fnum(summary.final_acc)),
+                ("tail_acc", fnum(summary.tail_acc)),
+                ("final_train_loss", fnum(summary.final_train_loss)),
+                ("total_bytes", num(summary.total_bytes as f64)),
+                ("mean_up_msg_bytes", fnum(summary.mean_up_msg_bytes)),
+                ("per_client_tcc_bytes", fnum(summary.per_client_tcc_bytes)),
+                ("rounds", num(summary.rounds as f64)),
+                ("sim_net_serial_s", fnum(summary.sim_net_serial_s)),
+                ("sim_net_parallel_s", fnum(summary.sim_net_parallel_s)),
+                ("sim_net_pipelined_s", fnum(summary.sim_net_pipelined_s)),
+                ("transfer_wait_s", fnum(summary.transfer_wait_s)),
+                ("sim_net_event_s", fnum(summary.sim_net_event_s)),
+                ("queue_peak", num(summary.queue_peak as f64)),
+                ("queue_block_s", fnum(summary.queue_block_s)),
+                ("cancelled_clients", num(summary.cancelled_clients as f64)),
+                ("dropped_clients", num(dropped as f64)),
+                ("sim_client_p50_s", fnum(summary.sim_client_p50_s)),
+                ("sim_client_max_s", fnum(summary.sim_client_max_s)),
+                ("wall_s", fnum(summary.wall_s)),
+            ]),
+        ),
+        ("rounds", {
+            let Json::Obj(m) = rec.to_json() else {
+                unreachable!("Recorder::to_json returns an object")
+            };
+            m.get("rounds").cloned().unwrap_or_else(|| arr(Vec::new()))
+        }),
+    ])
 }
 
 /// Median (p50) of a sample; 0.0 for an empty slice. Used for the
@@ -192,6 +254,9 @@ mod tests {
                 client_max_s: 1.5,
                 sim_net_pipelined_s: 0.25 * i as f64,
                 transfer_wait_s: 0.75,
+                sim_net_event_s: 0.3 * i as f64,
+                queue_peak: i,
+                queue_block_s: 0.125,
                 wall_ms: 1.0,
             });
         }
@@ -244,7 +309,8 @@ mod tests {
         let header: Vec<&str> = csv.lines().next().unwrap().split(',')
             .collect();
         for col in ["cancelled", "client_p50_s", "client_max_s",
-                    "sim_net_pipelined_s", "transfer_wait_s"] {
+                    "sim_net_pipelined_s", "transfer_wait_s",
+                    "sim_net_event_s", "queue_peak", "queue_block_s"] {
             assert!(header.contains(&col), "{header:?} missing {col}");
         }
         // Row for round 2 (cancelled = 2), right after `dropped`.
@@ -265,6 +331,18 @@ mod tests {
         assert_eq!(
             rounds[1].at(&["transfer_wait_s"]).unwrap().as_f64().unwrap(),
             0.75
+        );
+        assert_eq!(
+            rounds[2].at(&["sim_net_event_s"]).unwrap().as_f64().unwrap(),
+            0.6
+        );
+        assert_eq!(
+            rounds[3].at(&["queue_peak"]).unwrap().as_usize().unwrap(),
+            3
+        );
+        assert_eq!(
+            rounds[1].at(&["queue_block_s"]).unwrap().as_f64().unwrap(),
+            0.125
         );
     }
 

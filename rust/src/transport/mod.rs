@@ -1,15 +1,21 @@
 //! Transport substrate: message framing, communication-cost accounting
 //! (the paper's Eq. 2, generalised to measured bytes), a simple
-//! bandwidth/latency network model for wall-clock estimates, and the
+//! bandwidth/latency network model for wall-clock estimates, the
 //! transport stage that charges wire time from stage events so
-//! transfer/compute overlap is modellable (`overlap = transfer`).
+//! transfer/compute overlap is modellable (`overlap = transfer`), and
+//! the discrete-event simulator that replays those events at chunk
+//! granularity (`time_model = event`).
 
 pub mod accounting;
 pub mod network;
 pub mod profile;
+pub mod sim;
 pub mod stage;
 
 pub use accounting::{tcc_equation2, CommLedger, Direction};
 pub use network::{NetworkKind, NetworkModel, RoundLoad, Sharing};
-pub use profile::{ClientProfile, ClientProfiles, ProfileKind};
+pub use profile::{ClientProfile, ClientProfiles, ProfileKind,
+                  DEFAULT_COMPUTE_BASE_S};
+pub use sim::{simulate_round, ClientLoad, ClosedTimeModel, EventTimeModel,
+              SimParams, TimeEstimate, TimeModel, TimeModelKind};
 pub use stage::{OverlapKind, RoundTransport, StageEvent, TransferStage};

@@ -10,7 +10,7 @@
 //! every client id to its profile, deterministically from the run seed
 //! (so profiles are stable across rounds, executors and threads).
 //!
-//! Two table shapes ([`ProfileKind`], the `client_profiles` knob):
+//! Three table shapes ([`ProfileKind`], the `client_profiles` knob):
 //!
 //! * [`ProfileKind::Uniform`] — every client at exactly 1.0× with zero
 //!   simulated compute: bit-identical to the pre-profile symmetric
@@ -20,7 +20,21 @@
 //!   fast/mid/slow device classes (the same `cid % 3` assignment the
 //!   hetero-rank plan uses), each with a seeded ±10% per-client jitter
 //!   so no two clients are perfectly identical.
+//! * [`ProfileKind::File`] (`client_profiles = file:PATH`) — a pinned
+//!   tier table loaded from a TOML-ish file: one
+//!   `LO-HI = up, down, compute` line per client-id range (see
+//!   [`ClientProfiles::parse_table`]). No jitter, no seed — configs
+//!   own the exact numbers.
+//!
+//! The per-round compute baseline the multipliers scale is the
+//! `compute_base_s` config knob (default
+//! [`DEFAULT_COMPUTE_BASE_S`] = 0.25 s, the former hardcoded value, so
+//! existing presets are bit-identical). Uniform tables keep zero
+//! compute regardless — that is their bit-identity contract.
 
+use std::path::Path;
+
+use crate::error::{Error, Result};
 use crate::transport::NetworkModel;
 use crate::util::rng::Rng;
 
@@ -56,8 +70,8 @@ impl ClientProfile {
 }
 
 /// Profile-table selection, parseable from CLI/config strings (the
-/// `client_profiles = uniform | tiered` knob).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// `client_profiles = uniform | tiered | file:PATH` knob).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub enum ProfileKind {
     /// Every client owns an identical base-rate link (pre-profile
     /// behaviour, bit-identical).
@@ -66,15 +80,22 @@ pub enum ProfileKind {
     /// Fast/mid/slow device classes, round-robin by client id, with
     /// seeded per-client jitter.
     Tiered,
+    /// A pinned tier table loaded from the given path (see
+    /// [`ClientProfiles::parse_table`] for the format).
+    File(String),
 }
 
 impl ProfileKind {
-    /// Parse `uniform | tiered`.
+    /// Parse `uniform | tiered | file:PATH`.
     pub fn parse(s: &str) -> Option<ProfileKind> {
         match s {
             "uniform" => Some(ProfileKind::Uniform),
             "tiered" => Some(ProfileKind::Tiered),
-            _ => None,
+            _ => s
+                .strip_prefix("file:")
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(|p| ProfileKind::File(p.to_string())),
         }
     }
 
@@ -82,15 +103,25 @@ impl ProfileKind {
         match self {
             ProfileKind::Uniform => "uniform",
             ProfileKind::Tiered => "tiered",
+            ProfileKind::File(_) => "file",
         }
     }
 
     /// Build the per-client table for a federation of `num_clients`,
-    /// deterministically from `seed`.
-    pub fn build(&self, num_clients: usize, seed: u64) -> ClientProfiles {
+    /// deterministically from `seed`; scaled tables price one round of
+    /// client compute at `compute_base_s × compute_mult` seconds.
+    /// Fails on an unreadable or malformed `file:` table.
+    pub fn build(&self, num_clients: usize, seed: u64, compute_base_s: f64)
+                 -> Result<ClientProfiles> {
         match self {
-            ProfileKind::Uniform => ClientProfiles::uniform(num_clients),
-            ProfileKind::Tiered => ClientProfiles::tiered(num_clients, seed),
+            ProfileKind::Uniform => Ok(ClientProfiles::uniform(num_clients)),
+            ProfileKind::Tiered => Ok(ClientProfiles::tiered(
+                num_clients, seed,
+            )
+            .with_compute_base(compute_base_s)),
+            ProfileKind::File(path) => {
+                ClientProfiles::from_file(path, num_clients, compute_base_s)
+            }
         }
     }
 }
@@ -103,10 +134,10 @@ const TIERS: [(f64, f64, f64); 3] = [
     (8.0, 8.0, 6.0),  // slow: congested uplink, old device
 ];
 
-/// Seconds of simulated client compute per round at `compute_mult`
-/// 1.0 in a tiered table (uniform tables use 0.0 so legacy arithmetic
-/// is untouched).
-const TIERED_COMPUTE_BASE_S: f64 = 0.25;
+/// Default seconds of simulated client compute per round at
+/// `compute_mult` 1.0 (the `compute_base_s` config knob's default;
+/// uniform tables use 0.0 so legacy arithmetic is untouched).
+pub const DEFAULT_COMPUTE_BASE_S: f64 = 0.25;
 
 /// Immutable per-client profile table for one federation.
 ///
@@ -148,7 +179,120 @@ impl ClientProfiles {
                 }
             })
             .collect();
-        ClientProfiles { profiles, compute_base_s: TIERED_COMPUTE_BASE_S }
+        ClientProfiles { profiles, compute_base_s: DEFAULT_COMPUTE_BASE_S }
+    }
+
+    /// Same table, different per-round compute baseline (the
+    /// `compute_base_s` knob; [`DEFAULT_COMPUTE_BASE_S`] keeps the
+    /// table bit-identical to the pre-knob arithmetic).
+    pub fn with_compute_base(mut self, compute_base_s: f64)
+                             -> ClientProfiles {
+        self.compute_base_s = compute_base_s;
+        self
+    }
+
+    /// Load a pinned tier table from a file (`client_profiles =
+    /// file:PATH`); see [`ClientProfiles::parse_table`].
+    pub fn from_file(path: impl AsRef<Path>, num_clients: usize,
+                     compute_base_s: f64) -> Result<ClientProfiles> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::parse(format!(
+                "client_profiles file `{}`: {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse_table(&text, num_clients, compute_base_s).map_err(|e| {
+            Error::parse(format!(
+                "client_profiles file `{}`: {e}",
+                path.display()
+            ))
+        })
+    }
+
+    /// Parse a tier table: one `RANGE = up, down, compute` line per
+    /// client-id range, where `RANGE` is `LO-HI` (inclusive) or a
+    /// single `CID`, and the three values are the time multipliers.
+    /// `#` comments, blank lines and `[section]` headers are ignored
+    /// (same TOML-subset family as the config loader). Clients no line
+    /// covers stay at [`ClientProfile::UNIT`]; later lines override
+    /// earlier ones. Ranges beyond `num_clients - 1`, non-finite or
+    /// negative multipliers, and malformed lines are errors.
+    pub fn parse_table(text: &str, num_clients: usize,
+                       compute_base_s: f64) -> Result<ClientProfiles> {
+        let mut profiles = vec![ClientProfile::UNIT; num_clients];
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty()
+                || (line.starts_with('[') && line.ends_with(']'))
+            {
+                continue;
+            }
+            let err = |msg: String| {
+                Error::parse(format!("line {}: {msg}", lineno + 1))
+            };
+            let (range, values) = line.split_once('=').ok_or_else(|| {
+                err("expected `LO-HI = up, down, compute`".into())
+            })?;
+            let range = range.trim();
+            let (lo, hi) = match range.split_once('-') {
+                Some((lo, hi)) => (
+                    lo.trim().parse::<usize>(),
+                    hi.trim().parse::<usize>(),
+                ),
+                None => {
+                    let cid = range.parse::<usize>();
+                    (cid.clone(), cid)
+                }
+            };
+            let (lo, hi) = match (lo, hi) {
+                (Ok(lo), Ok(hi)) => (lo, hi),
+                _ => {
+                    return Err(err(format!(
+                        "bad client range `{range}`"
+                    )))
+                }
+            };
+            if lo > hi {
+                return Err(err(format!(
+                    "empty client range `{range}` (lo > hi)"
+                )));
+            }
+            if hi >= num_clients {
+                return Err(err(format!(
+                    "client {hi} out of range for a {num_clients}-client \
+                     federation"
+                )));
+            }
+            let mults: Vec<f64> = values
+                .split(',')
+                .map(|v| v.trim().parse::<f64>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| {
+                    err(format!("bad multipliers `{}`", values.trim()))
+                })?;
+            let &[up, down, compute] = &mults[..] else {
+                return Err(err(format!(
+                    "expected 3 multipliers (up, down, compute), got {}",
+                    mults.len()
+                )));
+            };
+            for m in [up, down, compute] {
+                if !m.is_finite() || m < 0.0 {
+                    return Err(err(format!(
+                        "multiplier {m} must be finite and >= 0"
+                    )));
+                }
+            }
+            for p in profiles.iter_mut().take(hi + 1).skip(lo) {
+                *p = ClientProfile {
+                    up_mult: up,
+                    down_mult: down,
+                    compute_mult: compute,
+                };
+            }
+        }
+        Ok(ClientProfiles { profiles, compute_base_s })
     }
 
     pub fn len(&self) -> usize {
@@ -219,9 +363,104 @@ mod tests {
         assert_eq!(ProfileKind::parse("uniform"), Some(ProfileKind::Uniform));
         assert_eq!(ProfileKind::parse("tiered"), Some(ProfileKind::Tiered));
         assert_eq!(ProfileKind::parse("fast"), None);
+        assert_eq!(
+            ProfileKind::parse("file:profiles.toml"),
+            Some(ProfileKind::File("profiles.toml".into()))
+        );
+        assert_eq!(ProfileKind::parse("file:"), None);
         assert_eq!(ProfileKind::Uniform.label(), "uniform");
         assert_eq!(ProfileKind::Tiered.label(), "tiered");
+        assert_eq!(ProfileKind::File("x".into()).label(), "file");
         assert_eq!(ProfileKind::default(), ProfileKind::Uniform);
+    }
+
+    #[test]
+    fn compute_base_knob_scales_tiered_compute() {
+        let base = ClientProfiles::tiered(6, 9);
+        let doubled =
+            ClientProfiles::tiered(6, 9).with_compute_base(0.5);
+        for cid in 0..6 {
+            // Same multipliers, doubled baseline.
+            assert_eq!(base.get(cid), doubled.get(cid));
+            assert!(
+                (doubled.compute_s(cid) - 2.0 * base.compute_s(cid)).abs()
+                    < 1e-12,
+                "cid {cid}"
+            );
+        }
+        // The default baseline is the former hardcoded 0.25 — knob off
+        // means bit-identical presets.
+        let built = ProfileKind::Tiered
+            .build(6, 9, DEFAULT_COMPUTE_BASE_S)
+            .unwrap();
+        for cid in 0..6 {
+            assert_eq!(built.compute_s(cid), base.compute_s(cid));
+        }
+    }
+
+    #[test]
+    fn table_files_pin_exact_tiers() {
+        let table = ClientProfiles::parse_table(
+            "# custom fleet\n\
+             [profiles]\n\
+             0-3 = 0.8, 0.8, 0.6   # fiber\n\
+             4 = 1.0, 1.0, 1.0\n\
+             5-7 = 8.0, 6.0, 4.0\n\
+             6 = 2.0, 2.0, 2.0     # later lines override\n",
+            10,
+            0.5,
+        )
+        .unwrap();
+        assert_eq!(table.len(), 10);
+        assert_eq!(
+            *table.get(0),
+            ClientProfile { up_mult: 0.8, down_mult: 0.8, compute_mult: 0.6 }
+        );
+        assert_eq!(*table.get(4), ClientProfile::UNIT);
+        assert_eq!(table.get(5).up_mult, 8.0);
+        assert_eq!(table.get(6).up_mult, 2.0, "override line lost");
+        // Uncovered cids default to the unit profile.
+        assert_eq!(*table.get(9), ClientProfile::UNIT);
+        // compute_base_s flows through.
+        assert!((table.compute_s(4) - 0.5).abs() < 1e-12);
+        let net = NetworkModel::edge_lte();
+        assert!(
+            table.client_time(&net, 5, 1_000_000, 1_000_000)
+                > table.client_time(&net, 0, 1_000_000, 1_000_000)
+        );
+    }
+
+    #[test]
+    fn malformed_table_files_error_with_line_numbers() {
+        let cases = [
+            ("0-3 = 0.8, 0.8", "expected 3 multipliers"),
+            ("0-3 = a, b, c", "bad multipliers"),
+            ("x-3 = 1, 1, 1", "bad client range"),
+            ("3-1 = 1, 1, 1", "lo > hi"),
+            ("0-12 = 1, 1, 1", "out of range"),
+            ("0-2 = -1, 1, 1", "must be finite"),
+            ("0-2 = inf, 1, 1", "must be finite"),
+            ("just words", "expected `LO-HI"),
+        ];
+        for (line, needle) in cases {
+            let text = format!("# header\n{line}\n");
+            let err = ClientProfiles::parse_table(&text, 8, 0.25)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("line 2"), "{line}: {err}");
+            assert!(err.contains(needle), "{line}: {err}");
+        }
+        // A missing file is a config error, not a panic.
+        let err = ClientProfiles::from_file(
+            "/nonexistent/profiles.toml", 8, 0.25,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("profiles.toml"), "{err}");
+        // And ProfileKind::build surfaces it.
+        assert!(ProfileKind::File("/nonexistent/p.toml".into())
+            .build(8, 1, 0.25)
+            .is_err());
     }
 
     #[test]

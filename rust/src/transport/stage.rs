@@ -37,6 +37,7 @@ use std::collections::BTreeMap;
 
 use crate::transport::network::{NetworkModel, RoundLoad};
 use crate::transport::profile::ClientProfiles;
+use crate::transport::sim::{ClientLoad, TimeModel};
 
 /// The `overlap` knob: what may run concurrently with client compute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -125,6 +126,17 @@ pub struct RoundTransport {
     /// Simulated time-on-wire the pipelined regime overlaps with
     /// compute (downloads + uploads, cancelled downloads included).
     pub transfer_wait_s: f64,
+    /// The active [`TimeModel`]'s round estimate: the ideal pipelined
+    /// envelope under `time_model = closed`, the chunk-granularity
+    /// discrete-event result under `time_model = event` (see
+    /// [`crate::transport::sim`]).
+    pub event_s: f64,
+    /// Peak inter-stage queue occupancy the event simulator observed
+    /// (chunks; 0 under the closed backend).
+    pub queue_peak: usize,
+    /// Total producer-blocked time on full stage queues (seconds; 0
+    /// under the closed backend).
+    pub queue_block_s: f64,
     /// Simulated round trip of every client the server waited on
     /// (survivors and dropouts, sampling order) — feeds the straggler
     /// p50/max stats.
@@ -137,22 +149,32 @@ pub struct RoundTransport {
 pub struct TransferStage<'a> {
     net: &'a NetworkModel,
     profiles: &'a ClientProfiles,
+    /// The backend that prices the round from the settled loads (the
+    /// `time_model` knob: closed envelope or discrete-event replay).
+    model: &'a dyn TimeModel,
     load: RoundLoad,
     times: Vec<f64>,
+    /// Per-client stage splits in settle order, for the event
+    /// simulator's chunk-granularity replay.
+    loads: Vec<ClientLoad>,
     states: BTreeMap<usize, ClientStage>,
 }
 
 impl<'a> TransferStage<'a> {
-    /// Start a round's accounting against a link profile table.
+    /// Start a round's accounting against a link profile table and a
+    /// round-time backend.
     pub fn begin_round(
         net: &'a NetworkModel,
         profiles: &'a ClientProfiles,
+        model: &'a dyn TimeModel,
     ) -> TransferStage<'a> {
         TransferStage {
             net,
             profiles,
+            model,
             load: RoundLoad::new(),
             times: Vec::new(),
+            loads: Vec::new(),
             states: BTreeMap::new(),
         }
     }
@@ -180,6 +202,15 @@ impl<'a> TransferStage<'a> {
                     self.profiles.stage_times(self.net, cid, down, bytes);
                 self.load.add_stages(td, tc, tu, down, bytes);
                 self.times.push(td + (tc + tu));
+                self.loads.push(ClientLoad {
+                    cid,
+                    td,
+                    tc,
+                    tu,
+                    down_bytes: down,
+                    up_bytes: bytes,
+                    waited: true,
+                });
             }
             StageEvent::Dropped { cid } => {
                 state.settled = true;
@@ -188,6 +219,15 @@ impl<'a> TransferStage<'a> {
                     self.profiles.stage_times(self.net, cid, down, 0);
                 self.load.add_stages(td, tc, tu, down, 0);
                 self.times.push(td + (tc + tu));
+                self.loads.push(ClientLoad {
+                    cid,
+                    td,
+                    tc,
+                    tu,
+                    down_bytes: down,
+                    up_bytes: 0,
+                    waited: true,
+                });
             }
             StageEvent::Cancelled { cid } => {
                 state.settled = true;
@@ -195,18 +235,32 @@ impl<'a> TransferStage<'a> {
                 let t_down =
                     self.profiles.get(cid).download_time(self.net, down);
                 self.load.add_cancelled(t_down, down);
+                self.loads.push(ClientLoad {
+                    cid,
+                    td: t_down,
+                    tc: 0.0,
+                    tu: 0.0,
+                    down_bytes: down,
+                    up_bytes: 0,
+                    waited: false,
+                });
             }
         }
     }
 
     /// Close the round: the three concurrency estimates, the transfer
-    /// wait, and the per-client waited-on times.
+    /// wait, the active time model's round estimate and the per-client
+    /// waited-on times.
     pub fn finish(self) -> RoundTransport {
+        let est = self.model.round_time(self.net, &self.load, &self.loads);
         RoundTransport {
             serial_s: self.load.serial_s(),
             parallel_s: self.load.parallel_s(self.net),
             pipelined_s: self.load.pipelined_s(self.net),
             transfer_wait_s: self.load.wire_s(),
+            event_s: est.round_s,
+            queue_peak: est.queue_peak,
+            queue_block_s: est.queue_block_s,
             times: self.times,
         }
     }
@@ -216,10 +270,13 @@ impl<'a> TransferStage<'a> {
 mod tests {
     use super::*;
     use crate::transport::network::Sharing;
+    use crate::transport::sim::{ClosedTimeModel, EventTimeModel, SimParams};
 
     fn net() -> NetworkModel {
         NetworkModel::edge_lte()
     }
+
+    const CLOSED: ClosedTimeModel = ClosedTimeModel;
 
     #[test]
     fn overlap_kind_parses_and_labels() {
@@ -236,7 +293,7 @@ mod tests {
     fn survivor_events_match_direct_accounting() {
         let net = net();
         let profiles = ClientProfiles::tiered(6, 3);
-        let mut stage = TransferStage::begin_round(&net, &profiles);
+        let mut stage = TransferStage::begin_round(&net, &profiles, &CLOSED);
         stage.push(StageEvent::Download { cid: 2, bytes: 10_000 });
         stage.push(StageEvent::Train { cid: 2 });
         stage.push(StageEvent::Upload { cid: 2, bytes: 8_000 });
@@ -255,7 +312,7 @@ mod tests {
     fn dropped_and_cancelled_terminalize() {
         let net = net();
         let profiles = ClientProfiles::tiered(6, 7);
-        let mut stage = TransferStage::begin_round(&net, &profiles);
+        let mut stage = TransferStage::begin_round(&net, &profiles, &CLOSED);
         stage.push(StageEvent::Download { cid: 0, bytes: 5_000 });
         stage.push(StageEvent::Dropped { cid: 0 });
         stage.push(StageEvent::Download { cid: 1, bytes: 5_000 });
@@ -278,7 +335,7 @@ mod tests {
         let net = net();
         let profiles = ClientProfiles::uniform(4);
         let run = |dup: bool| {
-            let mut stage = TransferStage::begin_round(&net, &profiles);
+            let mut stage = TransferStage::begin_round(&net, &profiles, &CLOSED);
             stage.push(StageEvent::Download { cid: 3, bytes: 10_000 });
             stage.push(StageEvent::Train { cid: 3 });
             stage.push(StageEvent::Upload { cid: 3, bytes: 10_000 });
@@ -297,10 +354,54 @@ mod tests {
     }
 
     #[test]
+    fn closed_model_pins_event_column_to_the_pipelined_envelope() {
+        let net = net();
+        let profiles = ClientProfiles::tiered(6, 3);
+        let mut stage = TransferStage::begin_round(&net, &profiles, &CLOSED);
+        stage.push(StageEvent::Download { cid: 2, bytes: 10_000 });
+        stage.push(StageEvent::Train { cid: 2 });
+        stage.push(StageEvent::Upload { cid: 2, bytes: 8_000 });
+        let out = stage.finish();
+        assert_eq!(out.event_s, out.pipelined_s);
+        assert_eq!(out.queue_peak, 0);
+        assert_eq!(out.queue_block_s, 0.0);
+    }
+
+    #[test]
+    fn event_model_lands_between_the_envelopes() {
+        let net = net();
+        let profiles = ClientProfiles::tiered(6, 3);
+        let event = EventTimeModel {
+            params: SimParams { chunk_kb: 1, stage_queue: 2 },
+        };
+        let mut stage = TransferStage::begin_round(&net, &profiles, &event);
+        for cid in 0..4 {
+            stage.push(StageEvent::Download { cid, bytes: 40_000 });
+            stage.push(StageEvent::Train { cid });
+            stage.push(StageEvent::Upload { cid, bytes: 40_000 });
+        }
+        let out = stage.finish();
+        assert!(
+            out.pipelined_s - 1e-9 <= out.event_s
+                && out.event_s <= out.parallel_s + 1e-9,
+            "event {} outside [{}, {}]",
+            out.event_s,
+            out.pipelined_s,
+            out.parallel_s
+        );
+        // 40 kB at 1 kB chunks: real chunking, so the event round sits
+        // strictly inside the envelopes (every client has all three
+        // stages).
+        assert!(out.event_s > out.pipelined_s);
+        assert!(out.event_s < out.parallel_s);
+        assert!(out.queue_peak >= 1);
+    }
+
+    #[test]
     fn shared_pipe_estimates_flow_through() {
         let net = NetworkModel::edge_lte().with_sharing(Sharing::Shared);
         let profiles = ClientProfiles::uniform(8);
-        let mut stage = TransferStage::begin_round(&net, &profiles);
+        let mut stage = TransferStage::begin_round(&net, &profiles, &CLOSED);
         for cid in 0..4 {
             stage.push(StageEvent::Download { cid, bytes: 1_000_000 });
             stage.push(StageEvent::Train { cid });

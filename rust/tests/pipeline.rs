@@ -78,10 +78,14 @@ struct Observed {
     sim_net_parallel_s: f64,
     sim_net_pipelined_s: f64,
     transfer_wait_s: f64,
+    sim_net_event_s: f64,
+    queue_peak: usize,
+    queue_block_s: f64,
     sim_client_p50_s: f64,
     sim_client_max_s: f64,
     record_pipelined_sum: f64,
     record_wait_sum: f64,
+    record_event_sum: f64,
 }
 
 fn run(cfg: FlConfig) -> Observed {
@@ -102,12 +106,17 @@ fn run(cfg: FlConfig) -> Observed {
         sim_net_parallel_s: summary.sim_net_parallel_s,
         sim_net_pipelined_s: summary.sim_net_pipelined_s,
         transfer_wait_s: summary.transfer_wait_s,
+        sim_net_event_s: summary.sim_net_event_s,
+        queue_peak: summary.queue_peak,
+        queue_block_s: summary.queue_block_s,
         sim_client_p50_s: summary.sim_client_p50_s,
         sim_client_max_s: summary.sim_client_max_s,
         record_pipelined_sum: rec.rounds.iter()
             .map(|r| r.sim_net_pipelined_s).sum(),
         record_wait_sum: rec.rounds.iter()
             .map(|r| r.transfer_wait_s).sum(),
+        record_event_sum: rec.rounds.iter()
+            .map(|r| r.sim_net_event_s).sum(),
     }
 }
 
@@ -136,6 +145,10 @@ fn assert_identical(a: &Observed, b: &Observed, what: &str) {
                "{what}: pipelined time");
     assert_eq!(a.transfer_wait_s, b.transfer_wait_s,
                "{what}: transfer wait");
+    assert_eq!(a.sim_net_event_s, b.sim_net_event_s,
+               "{what}: event-model time");
+    assert_eq!(a.queue_peak, b.queue_peak, "{what}: queue peak");
+    assert_eq!(a.queue_block_s, b.queue_block_s, "{what}: queue block");
     assert_eq!(a.sim_client_p50_s, b.sim_client_p50_s, "{what}: p50");
     assert_eq!(a.sim_client_max_s, b.sim_client_max_s, "{what}: max");
     assert!(
@@ -261,6 +274,151 @@ fn latency_biased_identical_under_overlap() {
                                   OverlapKind::Transfer));
     assert_identical(&serial, &pipelined, "latency_biased overlap");
     assert_eq!(serial.cancelled, 0);
+}
+
+#[test]
+fn event_time_model_bit_identical_across_executors() {
+    // The discrete-event simulator prices rounds from loads delivered
+    // in sampling order, so `time_model = event` must be bit-identical
+    // across serial/parallel/windowed/pipelined execution — including
+    // the new sim_net_event_s and queue columns.
+    let mut cfg = presets::by_name("event_micro").unwrap();
+    cfg.rounds = 8;
+    cfg.local_epochs = 1;
+    cfg.samples_per_client = 16;
+    cfg.test_samples = 40;
+    cfg.seed = 21;
+    let serial = run(with_exec(cfg.clone(), ExecutorKind::Serial, 0, 0,
+                               OverlapKind::None));
+    let parallel = run(with_exec(cfg.clone(), ExecutorKind::Parallel, 3, 0,
+                                 OverlapKind::None));
+    let pipelined = run(with_exec(cfg.clone(), ExecutorKind::Parallel, 3, 0,
+                                  OverlapKind::Transfer));
+    let windowed = run(with_exec(cfg, ExecutorKind::Parallel, 3, 2,
+                                 OverlapKind::Transfer));
+    assert_identical(&serial, &parallel, "event: serial vs parallel");
+    assert_identical(&serial, &pipelined, "event: serial vs pipelined");
+    assert_identical(&serial, &windowed, "event: serial vs windowed");
+    // The event round is a real simulation: sandwiched between the
+    // closed envelopes on these dedicated links, with the per-record
+    // column partitioning the run total.
+    assert!(
+        serial.sim_net_pipelined_s <= serial.sim_net_event_s + 1e-9
+            && serial.sim_net_event_s <= serial.sim_net_parallel_s + 1e-9,
+        "event {} outside [{}, {}]",
+        serial.sim_net_event_s,
+        serial.sim_net_pipelined_s,
+        serial.sim_net_parallel_s
+    );
+    assert!((serial.record_event_sum - serial.sim_net_event_s).abs()
+            < 1e-9);
+}
+
+#[test]
+fn time_model_never_perturbs_training() {
+    // Swapping the round-time backend must leave everything that
+    // reaches training — the model trajectory, the ledger, sampling,
+    // cancellations, the closed-form columns — bit-identical; only
+    // sim_net_event_s and the queue stats may move.
+    let closed = run(with_exec(straggler_cfg(), ExecutorKind::Serial, 0, 0,
+                               OverlapKind::None));
+    let mut cfg = straggler_cfg();
+    cfg.time_model = flocora::transport::TimeModelKind::Event;
+    cfg.chunk_kb = 1;
+    cfg.stage_queue = 2;
+    let event = run(with_exec(cfg, ExecutorKind::Serial, 0, 0,
+                              OverlapKind::None));
+    assert_eq!(closed.global, event.global, "trajectory diverged");
+    assert_eq!(closed.final_acc, event.final_acc);
+    assert_eq!(closed.total_bytes, event.total_bytes);
+    assert_eq!(closed.per_round, event.per_round);
+    assert_eq!(closed.dropped, event.dropped);
+    assert_eq!(closed.cancelled, event.cancelled);
+    assert_eq!(closed.sim_net_serial_s, event.sim_net_serial_s);
+    assert_eq!(closed.sim_net_parallel_s, event.sim_net_parallel_s);
+    assert_eq!(closed.sim_net_pipelined_s, event.sim_net_pipelined_s);
+    assert_eq!(closed.transfer_wait_s, event.transfer_wait_s);
+    // The closed backend reports the pipelined envelope in the event
+    // column; the simulator reports something strictly above it here
+    // (tiered survivors all have three stages to serialize).
+    assert_eq!(closed.sim_net_event_s, closed.sim_net_pipelined_s);
+    assert_eq!(closed.queue_peak, 0);
+    assert!(
+        event.sim_net_event_s > closed.sim_net_event_s,
+        "event {} did not exceed the pipelined envelope {}",
+        event.sim_net_event_s,
+        closed.sim_net_event_s
+    );
+    assert!(event.queue_peak >= 1);
+}
+
+#[test]
+fn json_export_round_trips_every_field() {
+    // Guard for the `--json` run export: every RunSummary and
+    // RoundRecord field must survive a trip through util::json — a
+    // new field that never reaches `metrics::run_json` (or
+    // `Recorder::to_json`) fails here instead of silently vanishing
+    // from CI's determinism diffs.
+    let engine = Engine::synthetic();
+    let mut sim = Simulation::new(&engine, straggler_cfg()).unwrap();
+    let mut rec = Recorder::new("roundtrip");
+    let summary = sim.run(&mut rec).unwrap();
+    let doc = flocora::metrics::run_json(&rec, &summary,
+                                         sim.dropped_clients);
+    let parsed = flocora::util::json::parse(&doc.to_string()).unwrap();
+
+    let summary_keys: Vec<&str> = parsed
+        .at(&["summary"]).unwrap()
+        .as_obj().unwrap()
+        .keys().map(String::as_str).collect();
+    let expect_summary = [
+        "final_acc", "tail_acc", "final_train_loss", "total_bytes",
+        "mean_up_msg_bytes", "per_client_tcc_bytes", "rounds",
+        "sim_net_serial_s", "sim_net_parallel_s", "sim_net_pipelined_s",
+        "transfer_wait_s", "sim_net_event_s", "queue_peak",
+        "queue_block_s", "cancelled_clients", "dropped_clients",
+        "sim_client_p50_s", "sim_client_max_s", "wall_s",
+    ];
+    for key in expect_summary {
+        assert!(summary_keys.contains(&key), "summary lost `{key}`");
+    }
+    assert_eq!(summary_keys.len(), expect_summary.len(),
+               "summary grew a field the test does not pin: \
+                {summary_keys:?}");
+
+    let rounds = parsed.at(&["rounds"]).unwrap().as_arr().unwrap();
+    assert_eq!(rounds.len(), rec.rounds.len());
+    let round_keys: Vec<&str> = rounds[0]
+        .as_obj().unwrap()
+        .keys().map(String::as_str).collect();
+    let expect_round = [
+        "round", "test_acc", "test_loss", "train_loss", "cum_bytes",
+        "dropped", "cancelled", "client_p50_s", "client_max_s",
+        "sim_net_pipelined_s", "transfer_wait_s", "sim_net_event_s",
+        "queue_peak", "queue_block_s", "wall_ms",
+    ];
+    for key in expect_round {
+        assert!(round_keys.contains(&key), "round record lost `{key}`");
+    }
+    assert_eq!(round_keys.len(), expect_round.len(),
+               "round record grew a field the test does not pin: \
+                {round_keys:?}");
+
+    // Values survive, not just keys: spot-check against the run.
+    let s = parsed.at(&["summary"]).unwrap();
+    assert_eq!(s.at(&["total_bytes"]).unwrap().as_usize().unwrap() as u64,
+               summary.total_bytes);
+    assert_eq!(
+        s.at(&["cancelled_clients"]).unwrap().as_usize().unwrap() as u64,
+        summary.cancelled_clients
+    );
+    assert_eq!(s.at(&["sim_net_event_s"]).unwrap().as_f64().unwrap(),
+               summary.sim_net_event_s);
+    let last = rounds.last().unwrap();
+    assert_eq!(last.at(&["round"]).unwrap().as_usize().unwrap(),
+               rec.rounds.last().unwrap().round);
+    assert_eq!(last.at(&["cum_bytes"]).unwrap().as_usize().unwrap() as u64,
+               rec.rounds.last().unwrap().cum_bytes);
 }
 
 /// In-order assertion sink that dawdles on every push, giving the

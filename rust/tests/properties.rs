@@ -398,6 +398,222 @@ fn prop_pipelined_equals_parallel_when_transfer_is_zero() {
     }
 }
 
+/// Shared generator for the event-simulator properties: an arbitrary
+/// mix of survivors (profiled slowdowns + compute), dropouts and
+/// cancellations, returned both as the simulator's `ClientLoad`s and
+/// folded into the closed-form `RoundLoad` accumulator.
+fn rand_event_loads(
+    rng: &mut Rng,
+    net: &flocora::transport::NetworkModel,
+    allow_partial: bool,
+) -> (Vec<flocora::transport::ClientLoad>, flocora::transport::RoundLoad) {
+    use flocora::transport::{ClientLoad, RoundLoad};
+    let mut loads = Vec::new();
+    let mut acc = RoundLoad::new();
+    let n = 1 + rng.below(10);
+    for cid in 0..n {
+        let down = 1 + rng.below(400_000);
+        let mult = rng.range_f64(1.0, 10.0);
+        match if allow_partial { rng.below(5) } else { 2 } {
+            0 => {
+                // Dropped before uploading: download only.
+                let td = net.download_time(down) * mult;
+                acc.add_stages(td, 0.0, 0.0, down, 0);
+                loads.push(ClientLoad {
+                    cid,
+                    td,
+                    tc: 0.0,
+                    tu: 0.0,
+                    down_bytes: down,
+                    up_bytes: 0,
+                    waited: true,
+                });
+            }
+            1 => {
+                // Cancelled mid-transfer: charged, never waited on.
+                let td = net.download_time(down) * mult;
+                acc.add_cancelled(td, down);
+                loads.push(ClientLoad {
+                    cid,
+                    td,
+                    tc: 0.0,
+                    tu: 0.0,
+                    down_bytes: down,
+                    up_bytes: 0,
+                    waited: false,
+                });
+            }
+            _ => {
+                // Survivor with profiled wire and some local compute.
+                let up = 1 + rng.below(400_000);
+                let td = net.download_time(down) * mult;
+                let tc = rng.range_f64(0.0, 3.0);
+                let tu = net.upload_time(up) * mult;
+                acc.add_stages(td, tc, tu, down, up);
+                loads.push(ClientLoad {
+                    cid,
+                    td,
+                    tc,
+                    tu,
+                    down_bytes: down,
+                    up_bytes: up,
+                    waited: true,
+                });
+            }
+        }
+    }
+    (loads, acc)
+}
+
+#[test]
+fn prop_event_time_sandwiched_between_pipelined_and_parallel() {
+    // The tentpole pin: on dedicated links, for ARBITRARY loads, chunk
+    // sizes and queue capacities, the discrete-event round lands
+    // between the ideal-overlap envelope and the no-overlap one:
+    //   pipelined <= event <= parallel <= serial.
+    use flocora::transport::{simulate_round, NetworkModel, SimParams};
+    let chunk_choices = [1usize, 4, 16, 64, 256, 2048];
+    let queue_choices = [0usize, 1, 2, 4, 8];
+    let mut rng = Rng::new(115);
+    for case in 0..40 {
+        let net = NetworkModel::edge_lte();
+        let (loads, acc) = rand_event_loads(&mut rng, &net, true);
+        let params = SimParams {
+            chunk_kb: chunk_choices[rng.below(chunk_choices.len())],
+            stage_queue: queue_choices[rng.below(queue_choices.len())],
+        };
+        let event = simulate_round(&net, &loads, &params).round_s;
+        let pipelined = acc.pipelined_s(&net);
+        let parallel = acc.parallel_s(&net);
+        let serial = acc.serial_s();
+        assert!(
+            pipelined - 1e-9 <= event,
+            "case {case} {params:?}: event {event} < pipelined {pipelined}"
+        );
+        assert!(
+            event <= parallel + 1e-9,
+            "case {case} {params:?}: event {event} > parallel {parallel}"
+        );
+        assert!(event <= serial + 1e-9,
+                "case {case}: event {event} > serial {serial}");
+    }
+}
+
+#[test]
+fn prop_event_converges_to_pipelined_envelope() {
+    // chunk_kb -> 0, stage_queue -> unbounded: the event round
+    // converges to the pipelined envelope. The per-client gap is
+    // (chain - slowest_stage) / n_chunks, so it shrinks monotonically
+    // with the chunk size and is bounded by max_i chain_i / n_i.
+    use flocora::transport::{simulate_round, NetworkModel, SimParams};
+    let mut rng = Rng::new(116);
+    for case in 0..30 {
+        let net = NetworkModel::edge_lte();
+        let (loads, acc) = rand_event_loads(&mut rng, &net, false);
+        let pipelined = acc.pipelined_s(&net);
+        let mut last_gap = f64::INFINITY;
+        for chunk_kb in [2048usize, 256, 16, 1] {
+            let params = SimParams { chunk_kb, stage_queue: 0 };
+            let event = simulate_round(&net, &loads, &params).round_s;
+            let gap = event - pipelined;
+            assert!(gap >= -1e-9, "case {case} chunk {chunk_kb}: {gap}");
+            assert!(
+                gap <= last_gap + 1e-9,
+                "case {case}: gap grew {last_gap} -> {gap} at chunk \
+                 {chunk_kb} kB"
+            );
+            last_gap = gap;
+            // Analytic bound on the residual at this granularity.
+            let bound = loads
+                .iter()
+                .map(|l| {
+                    let n = l.down_bytes.max(l.up_bytes)
+                        .div_ceil(chunk_kb * 1024).max(1);
+                    (l.td + l.tc + l.tu) / n as f64
+                })
+                .fold(0.0f64, f64::max);
+            assert!(
+                gap <= bound + 1e-9,
+                "case {case} chunk {chunk_kb}: gap {gap} > bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_event_equals_parallel_at_one_chunk_per_message() {
+    // A chunk bigger than any message leaves nothing to pipeline: the
+    // event time degenerates to the no-overlap parallel envelope.
+    use flocora::transport::{simulate_round, NetworkModel, SimParams};
+    let mut rng = Rng::new(117);
+    for case in 0..30 {
+        let net = NetworkModel::edge_lte();
+        let (loads, acc) = rand_event_loads(&mut rng, &net, true);
+        // 400 kB max message << 1 GiB chunk.
+        let params = SimParams { chunk_kb: 1 << 20, stage_queue: 1 };
+        let event = simulate_round(&net, &loads, &params).round_s;
+        let parallel = acc.parallel_s(&net);
+        assert!(
+            (event - parallel).abs() <= 1e-9 * parallel.max(1.0),
+            "case {case}: event {event} != parallel {parallel}"
+        );
+    }
+}
+
+#[test]
+fn prop_event_shared_pipe_floors_at_pipelined_envelope() {
+    // On a shared pipe the closed parallel form is itself optimistic
+    // about compute, so only the lower bound is universal: the event
+    // round never beats the full-duplex pipelined envelope (pipe busy
+    // times, slowest stage) for loads the round actually waits on.
+    use flocora::transport::{simulate_round, NetworkModel, Sharing,
+                             SimParams};
+    let chunk_choices = [1usize, 16, 256, 2048];
+    let mut rng = Rng::new(118);
+    for case in 0..30 {
+        let net = NetworkModel::edge_lte().with_sharing(Sharing::Shared);
+        let (loads, acc) = rand_event_loads(&mut rng, &net, false);
+        let params = SimParams {
+            chunk_kb: chunk_choices[rng.below(chunk_choices.len())],
+            stage_queue: 1 + rng.below(4),
+        };
+        let event = simulate_round(&net, &loads, &params).round_s;
+        let pipelined = acc.pipelined_s(&net);
+        assert!(
+            pipelined - 1e-9 <= event,
+            "case {case} {params:?}: event {event} < pipelined {pipelined}"
+        );
+    }
+}
+
+#[test]
+fn prop_event_simulation_is_reproducible_bitwise() {
+    // The simulator is a pure function of the load set: same loads,
+    // same result, to the bit — in any arrival order, under both
+    // sharing regimes (this is what keeps `time_model = event` runs
+    // bit-identical across executors and windows).
+    use flocora::transport::{simulate_round, NetworkModel, Sharing,
+                             SimParams};
+    let mut rng = Rng::new(119);
+    for case in 0..30 {
+        for sharing in [Sharing::Dedicated, Sharing::Shared] {
+            let net = NetworkModel::edge_lte().with_sharing(sharing);
+            let (loads, _) = rand_event_loads(&mut rng, &net, true);
+            let params = SimParams {
+                chunk_kb: 1 + rng.below(64),
+                stage_queue: rng.below(4),
+            };
+            let a = simulate_round(&net, &loads, &params);
+            let b = simulate_round(&net, &loads, &params);
+            assert_eq!(a, b, "case {case} {sharing:?}");
+            let mut shuffled = loads.clone();
+            shuffled.reverse();
+            let c = simulate_round(&net, &shuffled, &params);
+            assert_eq!(a, c, "case {case} {sharing:?}: arrival order leaked");
+        }
+    }
+}
+
 #[test]
 fn prop_oversample_beta_zero_is_bit_identical_to_uniform() {
     // β = 0 must replay the uniform stream exactly — for any pool
