@@ -10,6 +10,9 @@
 //!   largest-|w| fraction, bitmap + packed survivors.
 //! * [`CodecKind::ZeroFl`]  — ZeroFL-style baseline [12]: SP sparsity +
 //!   mask-ratio extra upload, (index, value)-pair encoding.
+//! * [`CodecKind::SparseEf`] — FLASC-style sparse LoRA upload with
+//!   per-client error-feedback residuals (aggregation zoo): top-k
+//!   masks where the dropped mass re-enters next round's upload.
 //!
 //! Every codec is *lossy-transparent*: `decode(encode(v))` returns a
 //! dense vector the aggregator can consume; message size is the exact
@@ -23,7 +26,7 @@ use crate::error::Result;
 use crate::model::Segment;
 
 pub use affine::AffineCodec;
-pub use sparse::{TopKCodec, ZeroFlCodec};
+pub use sparse::{SparseEfCodec, TopKCodec, ZeroFlCodec};
 
 /// An encoded message plus provenance.
 #[derive(Debug, Clone)]
@@ -41,9 +44,13 @@ impl Message {
 /// A parameter-vector codec.
 ///
 /// Implementations must be `Send + Sync`: the parallel round engine
-/// shares one codec instance across all client-executor threads (every
-/// implementation in this crate is stateless, so encode/decode are
-/// naturally reentrant).
+/// shares one codec instance across all client-executor threads. Most
+/// implementations are stateless, so encode/decode are naturally
+/// reentrant; the stateful exception ([`SparseEfCodec`]'s per-client
+/// residuals) keys its state on the client id via
+/// [`Codec::encode_client`], which the engine calls with each upload —
+/// one writer per client per round, so thread scheduling cannot
+/// perturb it.
 ///
 /// ```
 /// use flocora::compression::{Codec, CodecKind};
@@ -74,6 +81,19 @@ pub trait Codec: Send + Sync {
     /// Encode `v` (layout described by `segments`, whose `numel`s must
     /// sum to `v.len()`).
     fn encode(&self, v: &[f32], segments: &[Segment]) -> Result<Message>;
+
+    /// Encode client `cid`'s *upload*. The default forwards to
+    /// [`Codec::encode`]; stateful codecs (error feedback) override it
+    /// to key per-client accumulators on the id. Broadcasts always use
+    /// the plain `encode` — the server has no client identity.
+    fn encode_client(
+        &self,
+        _cid: usize,
+        v: &[f32],
+        segments: &[Segment],
+    ) -> Result<Message> {
+        self.encode(v, segments)
+    }
 
     /// Decode back to a dense vector of the layout's total length.
     fn decode(&self, msg: &Message, segments: &[Segment]) -> Result<Vec<f32>>;
@@ -114,10 +134,16 @@ pub enum CodecKind {
     TopK(f32),
     /// (sparsity SP, mask ratio MR); paper rows: (0.9, 0.2), (0.9, 0.0).
     ZeroFl(f32, f32),
+    /// keep fraction ∈ (0, 1] with per-client error-feedback residuals
+    /// on the upload path.
+    SparseEf(f32),
 }
 
 impl CodecKind {
-    /// Parse `fp32 | q8 | q4 | q2 | topk:<keep> | zerofl:<sp>:<mr>`.
+    /// Parse `fp32 | q8 | q4 | q2 | topk:<keep> | zerofl:<sp>:<mr> |
+    /// sparse_ef:<keep>`. Out-of-range or non-finite parameters are a
+    /// parse failure, not a deferred panic in the constructor —
+    /// `topk:nan` used to parse here and abort at build time.
     pub fn parse(s: &str) -> Option<CodecKind> {
         match s {
             "fp32" => return Some(CodecKind::Fp32),
@@ -126,11 +152,25 @@ impl CodecKind {
             "q2" => return Some(CodecKind::Affine(2)),
             _ => {}
         }
+        let keep_ok = |k: &f32| k.is_finite() && *k > 0.0 && *k <= 1.0;
         let parts: Vec<&str> = s.split(':').collect();
         match parts.as_slice() {
-            ["topk", keep] => keep.parse().ok().map(CodecKind::TopK),
+            ["topk", keep] => {
+                keep.parse().ok().filter(keep_ok).map(CodecKind::TopK)
+            }
+            ["sparse_ef", keep] => {
+                keep.parse().ok().filter(keep_ok).map(CodecKind::SparseEf)
+            }
             ["zerofl", sp, mr] => {
-                Some(CodecKind::ZeroFl(sp.parse().ok()?, mr.parse().ok()?))
+                let sp: f32 = sp.parse().ok()?;
+                let mr: f32 = mr.parse().ok()?;
+                if !sp.is_finite() || !(0.0..1.0).contains(&sp) {
+                    return None;
+                }
+                if !mr.is_finite() || !(0.0..=1.0).contains(&mr) {
+                    return None;
+                }
+                Some(CodecKind::ZeroFl(sp, mr))
             }
             _ => None,
         }
@@ -142,6 +182,7 @@ impl CodecKind {
             CodecKind::Affine(bits) => Box::new(AffineCodec::new(bits)),
             CodecKind::TopK(keep) => Box::new(TopKCodec::new(keep)),
             CodecKind::ZeroFl(sp, mr) => Box::new(ZeroFlCodec::new(sp, mr)),
+            CodecKind::SparseEf(keep) => Box::new(SparseEfCodec::new(keep)),
         }
     }
 
@@ -151,6 +192,7 @@ impl CodecKind {
             CodecKind::Affine(b) => format!("q{b}"),
             CodecKind::TopK(k) => format!("topk:{k}"),
             CodecKind::ZeroFl(sp, mr) => format!("zerofl:{sp}:{mr}"),
+            CodecKind::SparseEf(k) => format!("sparse_ef:{k}"),
         }
     }
 }
@@ -184,8 +226,25 @@ mod tests {
         assert_eq!(CodecKind::parse("topk:0.6"), Some(CodecKind::TopK(0.6)));
         assert_eq!(CodecKind::parse("zerofl:0.9:0.2"),
                    Some(CodecKind::ZeroFl(0.9, 0.2)));
+        assert_eq!(CodecKind::parse("sparse_ef:0.25"),
+                   Some(CodecKind::SparseEf(0.25)));
         assert_eq!(CodecKind::parse("nope"), None);
         assert_eq!(CodecKind::parse("topk:x"), None);
+    }
+
+    #[test]
+    fn kind_parsing_rejects_out_of_range_params() {
+        // These used to parse and then abort inside the constructor.
+        for s in ["topk:nan", "topk:0", "topk:-0.5", "topk:1.5", "topk:inf",
+                  "sparse_ef:nan", "sparse_ef:0", "sparse_ef:2",
+                  "zerofl:nan:0.2", "zerofl:1.0:0.2", "zerofl:-0.1:0.2",
+                  "zerofl:0.9:nan", "zerofl:0.9:1.5", "zerofl:0.9:-0.1"] {
+            assert_eq!(CodecKind::parse(s), None, "{s}");
+        }
+        // Boundary values that are valid stay valid.
+        assert!(CodecKind::parse("topk:1.0").is_some());
+        assert!(CodecKind::parse("zerofl:0.0:1.0").is_some());
+        assert!(CodecKind::parse("sparse_ef:1.0").is_some());
     }
 
     #[test]
@@ -195,11 +254,16 @@ mod tests {
         let v = test_vec(spec.num_trainable(), 2);
         for kind in [CodecKind::Fp32, CodecKind::Affine(8),
                      CodecKind::Affine(4), CodecKind::Affine(2),
-                     CodecKind::TopK(0.5), CodecKind::ZeroFl(0.9, 0.2)] {
+                     CodecKind::TopK(0.5), CodecKind::ZeroFl(0.9, 0.2),
+                     CodecKind::SparseEf(0.25)] {
             let c = kind.build();
             let msg = c.encode(&v, &spec.trainable).unwrap();
             let out = c.decode(&msg, &spec.trainable).unwrap();
             assert_eq!(out.len(), v.len(), "{:?}", kind);
+            // The client path round-trips to the same length too.
+            let msg = c.encode_client(3, &v, &spec.trainable).unwrap();
+            let out = c.decode(&msg, &spec.trainable).unwrap();
+            assert_eq!(out.len(), v.len(), "{:?} client path", kind);
         }
     }
 }

@@ -1,4 +1,5 @@
-//! Sparse baselines the paper compares against in Table IV.
+//! Sparse baselines the paper compares against in Table IV, plus the
+//! error-feedback sparsifier from the aggregation zoo.
 //!
 //! * [`TopKCodec`] — Magnitude Pruning [4]: keep the global top-`keep`
 //!   fraction by |w|; wire format = presence bitmap (1 bit/element) +
@@ -10,6 +11,18 @@
 //!   the next-largest entries, as (u32 index, f32 value) pairs — the
 //!   8-byte-per-entry encoding reproduces ZeroFL's reported 27.3 MB /
 //!   10.1 MB messages for (0.9, 0.2) / (0.9, 0.0).
+//! * [`SparseEfCodec`] — FLASC-style sparse LoRA communication with
+//!   error feedback (arXiv 2406.05233): the same bitmap wire format as
+//!   top-k, but each client carries a residual accumulator across
+//!   rounds — what the mask drops this round is added back before
+//!   masking next round, so no update mass is ever lost, only delayed.
+//!   Residuals key on the client id (the
+//!   [`Codec::encode_client`](crate::compression::Codec::encode_client)
+//!   path), each slot written by exactly one client per round, so
+//!   executor choice and thread count cannot perturb the stream.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::compression::{Codec, Message};
 use crate::error::{Error, Result};
@@ -31,6 +44,63 @@ fn top_k_indices(v: &[f32], k: usize) -> Vec<u32> {
     idx
 }
 
+/// Round a keep-fraction to an element count: at least one survivor on
+/// non-empty inputs, and exactly zero on empty ones (an `n = 0` vector
+/// has nothing to keep — `clamp(1, 0)` would panic).
+fn fraction_count(n: usize, fraction: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    ((n as f64 * fraction).round() as usize).clamp(1, n)
+}
+
+/// Bitmap + survivors payload shared by [`TopKCodec`] and
+/// [`SparseEfCodec`]: u64 element count, presence bitmap
+/// (1 bit/element), surviving values in index order as f32.
+fn encode_bitmap_payload(v: &[f32], keep_idx: &[u32]) -> Vec<u8> {
+    let mut bitmap = vec![0u8; v.len().div_ceil(8)];
+    let mut payload =
+        Vec::with_capacity(8 + bitmap.len() + 4 * keep_idx.len());
+    payload.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for &i in keep_idx {
+        bitmap[(i / 8) as usize] |= 1 << (i % 8);
+    }
+    payload.extend_from_slice(&bitmap);
+    for &i in keep_idx {
+        payload.extend_from_slice(&v[i as usize].to_le_bytes());
+    }
+    payload
+}
+
+/// Inverse of [`encode_bitmap_payload`]; `tag` labels decode errors
+/// with the owning codec's name.
+fn decode_bitmap_payload(b: &[u8], tag: &str) -> Result<Vec<f32>> {
+    if b.len() < 8 {
+        return Err(Error::parse(format!("{tag}: truncated header")));
+    }
+    let n = u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
+    let bm_len = n.div_ceil(8);
+    if b.len() < 8 + bm_len {
+        return Err(Error::parse(format!("{tag}: truncated bitmap")));
+    }
+    let bitmap = &b[8..8 + bm_len];
+    let mut out = vec![0.0f32; n];
+    let mut pos = 8 + bm_len;
+    for (i, slot) in out.iter_mut().enumerate() {
+        if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+            if pos + 4 > b.len() {
+                return Err(Error::parse(format!("{tag}: truncated values")));
+            }
+            *slot = f32::from_le_bytes(b[pos..pos + 4].try_into().unwrap());
+            pos += 4;
+        }
+    }
+    if pos != b.len() {
+        return Err(Error::parse(format!("{tag}: trailing bytes")));
+    }
+    Ok(out)
+}
+
 // ---------------------------------------------------------------------------
 // Magnitude pruning: bitmap + values
 // ---------------------------------------------------------------------------
@@ -46,7 +116,7 @@ impl TopKCodec {
     }
 
     pub fn kept_count(&self, n: usize) -> usize {
-        ((n as f64 * self.keep as f64).round() as usize).clamp(1, n)
+        fraction_count(n, self.keep as f64)
     }
 }
 
@@ -56,48 +126,16 @@ impl Codec for TopKCodec {
     }
 
     fn encode(&self, v: &[f32], _segments: &[Segment]) -> Result<Message> {
-        let k = self.kept_count(v.len());
-        let mut keep_idx = top_k_indices(v, k);
+        let mut keep_idx = top_k_indices(v, self.kept_count(v.len()));
         keep_idx.sort_unstable();
-        let mut bitmap = vec![0u8; v.len().div_ceil(8)];
-        let mut payload = Vec::with_capacity(bitmap.len() + 4 * k + 8);
-        payload.extend_from_slice(&(v.len() as u64).to_le_bytes());
-        for &i in &keep_idx {
-            bitmap[(i / 8) as usize] |= 1 << (i % 8);
-        }
-        payload.extend_from_slice(&bitmap);
-        for &i in &keep_idx {
-            payload.extend_from_slice(&v[i as usize].to_le_bytes());
-        }
-        Ok(Message { payload, codec: self.name() })
+        Ok(Message {
+            payload: encode_bitmap_payload(v, &keep_idx),
+            codec: self.name(),
+        })
     }
 
     fn decode(&self, msg: &Message, _segments: &[Segment]) -> Result<Vec<f32>> {
-        let b = &msg.payload;
-        if b.len() < 8 {
-            return Err(Error::parse("topk: truncated header"));
-        }
-        let n = u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
-        let bm_len = n.div_ceil(8);
-        if b.len() < 8 + bm_len {
-            return Err(Error::parse("topk: truncated bitmap"));
-        }
-        let bitmap = &b[8..8 + bm_len];
-        let mut out = vec![0.0f32; n];
-        let mut pos = 8 + bm_len;
-        for (i, slot) in out.iter_mut().enumerate() {
-            if bitmap[i / 8] & (1 << (i % 8)) != 0 {
-                if pos + 4 > b.len() {
-                    return Err(Error::parse("topk: truncated values"));
-                }
-                *slot = f32::from_le_bytes(b[pos..pos + 4].try_into().unwrap());
-                pos += 4;
-            }
-        }
-        if pos != b.len() {
-            return Err(Error::parse("topk: trailing bytes"));
-        }
-        Ok(out)
+        decode_bitmap_payload(&msg.payload, "topk")
     }
 }
 
@@ -124,7 +162,7 @@ impl ZeroFlCodec {
     }
 
     pub fn kept_count(&self, n: usize) -> usize {
-        ((n as f64 * self.kept_fraction()).round() as usize).clamp(1, n)
+        fraction_count(n, self.kept_fraction())
     }
 }
 
@@ -164,6 +202,106 @@ impl Codec for ZeroFlCodec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Top-k with per-client error feedback
+// ---------------------------------------------------------------------------
+
+/// FLASC-style sparse upload with error-feedback residuals.
+///
+/// On the upload path ([`Codec::encode_client`]) the client's stored
+/// residual is added to the fresh vector before masking; the mass the
+/// mask drops becomes the next round's residual. The invariant the
+/// property suite pins:
+///
+/// ```text
+/// decode(encode_client(cid, v)) + residual'(cid) == v + residual(cid)
+/// ```
+///
+/// bit-for-bit in f32 — the kept and dropped entries partition the
+/// corrected vector, no arithmetic crosses the partition.
+///
+/// The keyed residual map makes the codec stateful but still
+/// deterministic: each client id's slot is read and written by exactly
+/// one upload per round, and map iteration order is never observed.
+/// The plain [`Codec::encode`] path (server broadcasts, size
+/// estimates) is stateless top-k with the same wire format.
+pub struct SparseEfCodec {
+    keep: f32,
+    residuals: Mutex<HashMap<usize, Vec<f32>>>,
+}
+
+impl SparseEfCodec {
+    pub fn new(keep: f32) -> SparseEfCodec {
+        assert!(keep > 0.0 && keep <= 1.0, "keep fraction in (0,1]");
+        SparseEfCodec { keep, residuals: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn kept_count(&self, n: usize) -> usize {
+        fraction_count(n, self.keep as f64)
+    }
+
+    /// A snapshot of client `cid`'s residual accumulator (`None`
+    /// before its first upload) — exposed for the conservation
+    /// property tests.
+    pub fn residual(&self, cid: usize) -> Option<Vec<f32>> {
+        self.residuals.lock().unwrap().get(&cid).cloned()
+    }
+}
+
+impl Codec for SparseEfCodec {
+    fn name(&self) -> String {
+        format!("sparse_ef:{}", self.keep)
+    }
+
+    fn encode(&self, v: &[f32], _segments: &[Segment]) -> Result<Message> {
+        let mut keep_idx = top_k_indices(v, self.kept_count(v.len()));
+        keep_idx.sort_unstable();
+        Ok(Message {
+            payload: encode_bitmap_payload(v, &keep_idx),
+            codec: self.name(),
+        })
+    }
+
+    fn encode_client(
+        &self,
+        cid: usize,
+        v: &[f32],
+        _segments: &[Segment],
+    ) -> Result<Message> {
+        let mut map = self.residuals.lock().unwrap();
+        let residual =
+            map.entry(cid).or_insert_with(|| vec![0.0f32; v.len()]);
+        if residual.len() != v.len() {
+            // A rank change mid-run cannot happen today (tier
+            // assignment is static); a stale residual would silently
+            // corrupt the stream, so fail loudly.
+            return Err(Error::invalid(format!(
+                "sparse_ef: client {cid} residual dim {} vs upload {}",
+                residual.len(),
+                v.len()
+            )));
+        }
+        let corrected: Vec<f32> =
+            v.iter().zip(residual.iter()).map(|(a, b)| a + b).collect();
+        let mut keep_idx =
+            top_k_indices(&corrected, self.kept_count(corrected.len()));
+        keep_idx.sort_unstable();
+        // New residual = corrected with the transmitted entries zeroed.
+        residual.copy_from_slice(&corrected);
+        for &i in &keep_idx {
+            residual[i as usize] = 0.0;
+        }
+        Ok(Message {
+            payload: encode_bitmap_payload(&corrected, &keep_idx),
+            codec: self.name(),
+        })
+    }
+
+    fn decode(&self, msg: &Message, _segments: &[Segment]) -> Result<Vec<f32>> {
+        decode_bitmap_payload(&msg.payload, "sparse_ef")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +336,48 @@ mod tests {
         let one = TopKCodec::new(1e-9);
         let out = one.decode(&one.encode(&v, &[]).unwrap(), &[]).unwrap();
         assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+
+    /// The `n = 0` edge the kept_count audit found: `clamp(1, 0)`
+    /// panics, so empty vectors must short-circuit to zero survivors —
+    /// and the wire format must round-trip them (8-byte header only).
+    #[test]
+    fn kept_count_edge_cases() {
+        for keep in [1e-9f32, 0.5, 1.0] {
+            assert_eq!(TopKCodec::new(keep).kept_count(0), 0, "{keep}");
+            assert_eq!(SparseEfCodec::new(keep).kept_count(0), 0, "{keep}");
+            assert_eq!(TopKCodec::new(keep).kept_count(1), 1, "{keep}");
+        }
+        assert_eq!(ZeroFlCodec::new(0.9, 0.2).kept_count(0), 0);
+        assert_eq!(ZeroFlCodec::new(0.999, 0.0).kept_count(1), 1);
+        // keep = 1.0 keeps everything, tiny keep keeps exactly one.
+        assert_eq!(TopKCodec::new(1.0).kept_count(777), 777);
+        assert_eq!(TopKCodec::new(1e-9).kept_count(777), 1);
+        for codec in [&TopKCodec::new(0.5) as &dyn Codec,
+                      &ZeroFlCodec::new(0.5, 0.0),
+                      &SparseEfCodec::new(0.5)] {
+            let msg = codec.encode(&[], &[]).unwrap();
+            assert_eq!(msg.size_bytes(), 8, "{}", codec.name());
+            assert_eq!(codec.decode(&msg, &[]).unwrap(), Vec::<f32>::new());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "keep fraction")]
+    fn topk_rejects_zero_keep() {
+        TopKCodec::new(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "keep fraction")]
+    fn topk_rejects_nan_keep() {
+        TopKCodec::new(f32::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "keep fraction")]
+    fn sparse_ef_rejects_oversized_keep() {
+        SparseEfCodec::new(1.5);
     }
 
     #[test]
@@ -245,5 +425,69 @@ mod tests {
         let mut m = zf.encode(&v, &[]).unwrap();
         m.payload[8..12].copy_from_slice(&1000u32.to_le_bytes());
         assert!(zf.decode(&m, &[]).is_err());
+
+        let ef = SparseEfCodec::new(0.5);
+        let mut m = ef.encode(&v, &[]).unwrap();
+        m.payload.push(0);
+        let err = ef.decode(&m, &[]).unwrap_err().to_string();
+        assert!(err.contains("sparse_ef"), "{err}");
+    }
+
+    #[test]
+    fn sparse_ef_first_upload_matches_plain_topk() {
+        let v = randv(256, 6);
+        let ef = SparseEfCodec::new(0.25);
+        let tk = TopKCodec::new(0.25);
+        // No residual yet: the corrected vector is v itself.
+        let from_ef =
+            ef.decode(&ef.encode_client(3, &v, &[]).unwrap(), &[]).unwrap();
+        let from_tk = tk.decode(&tk.encode(&v, &[]).unwrap(), &[]).unwrap();
+        assert_eq!(from_ef, from_tk);
+    }
+
+    #[test]
+    fn sparse_ef_residual_conserves_mass() {
+        let ef = SparseEfCodec::new(0.25);
+        let mut carried = vec![0.0f32; 200];
+        for round in 0..5 {
+            let v = randv(200, 100 + round);
+            let sent = ef
+                .decode(&ef.encode_client(7, &v, &[]).unwrap(), &[])
+                .unwrap();
+            let residual = ef.residual(7).unwrap();
+            // sent + residual' == v + residual, bit-for-bit.
+            for i in 0..200 {
+                let expect = v[i] + carried[i];
+                assert_eq!(sent[i] + residual[i], expect, "round {round} i {i}");
+                // And the partition is strict: one side is zero.
+                assert!(sent[i] == 0.0 || residual[i] == 0.0);
+            }
+            carried = residual;
+        }
+        // A dropped round (no upload) leaves the residual untouched.
+        assert_eq!(ef.residual(7).unwrap(), carried);
+        assert!(ef.residual(9).is_none(), "unseen client has no residual");
+    }
+
+    #[test]
+    fn sparse_ef_residuals_are_per_client() {
+        let ef = SparseEfCodec::new(0.5);
+        let (a, b) = (randv(64, 8), randv(64, 9));
+        ef.encode_client(0, &a, &[]).unwrap();
+        ef.encode_client(1, &b, &[]).unwrap();
+        assert_ne!(ef.residual(0).unwrap(), ef.residual(1).unwrap());
+        // Client order cannot matter: fresh codec, swapped order.
+        let ef2 = SparseEfCodec::new(0.5);
+        ef2.encode_client(1, &b, &[]).unwrap();
+        ef2.encode_client(0, &a, &[]).unwrap();
+        assert_eq!(ef.residual(0), ef2.residual(0));
+        assert_eq!(ef.residual(1), ef2.residual(1));
+    }
+
+    #[test]
+    fn sparse_ef_rejects_dim_change() {
+        let ef = SparseEfCodec::new(0.5);
+        ef.encode_client(0, &randv(64, 10), &[]).unwrap();
+        assert!(ef.encode_client(0, &randv(32, 11), &[]).is_err());
     }
 }

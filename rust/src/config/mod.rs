@@ -7,6 +7,7 @@ pub mod loader;
 pub mod presets;
 
 use crate::compression::CodecKind;
+use crate::coordinator::aggregator::AggregatorKind;
 use crate::coordinator::executor::ExecutorKind;
 use crate::coordinator::sampler::SamplerKind;
 use crate::error::{Error, Result};
@@ -109,6 +110,15 @@ pub struct FlConfig {
     /// Per-tier wire codecs, parallel to `hetero_ranks`. Empty = every
     /// tier uses `codec`.
     pub hetero_codecs: Vec<CodecKind>,
+    /// Server-side merge strategy (`fedavg | svt | exact`). The
+    /// factor-aware modes act on the layout's adapter pairs and fall
+    /// back to plain FedAvg on layouts without any (full models).
+    pub aggregator: AggregatorKind,
+    /// Retained-energy threshold τ ∈ (0, 1] for `aggregator = svt`:
+    /// keep the smallest head of singular directions whose Σσ² reaches
+    /// τ of the total. τ = 1.0 is bit-for-bit FedAvg. Ignored by the
+    /// other aggregators.
+    pub svt_energy: f64,
 }
 
 impl Default for FlConfig {
@@ -144,6 +154,8 @@ impl Default for FlConfig {
             stage_queue: 4,
             hetero_ranks: Vec::new(),
             hetero_codecs: Vec::new(),
+            aggregator: AggregatorKind::FedAvg,
+            svt_energy: 0.9,
         }
     }
 }
@@ -225,6 +237,12 @@ impl FlConfig {
                 self.hetero_codecs.len(),
                 self.hetero_ranks.len()
             )));
+        }
+        if !(self.svt_energy > 0.0
+            && self.svt_energy <= 1.0
+            && self.svt_energy.is_finite())
+        {
+            return Err(Error::invalid("svt_energy must be in (0, 1]"));
         }
         Ok(())
     }
@@ -324,6 +342,16 @@ impl FlConfig {
                     Error::parse(format!("unknown codec `{value}`"))
                 })?
             }
+            "aggregator" => {
+                self.aggregator =
+                    AggregatorKind::parse(value).ok_or_else(|| {
+                        Error::parse(format!(
+                            "unknown aggregator `{value}` \
+                             (fedavg|svt|exact)"
+                        ))
+                    })?
+            }
+            "svt_energy" => self.svt_energy = p(key, value)?,
             _ => return Err(Error::parse(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -485,6 +513,31 @@ mod tests {
         // A zero rank survives parsing but fails validation.
         c.set("hetero_ranks", "0,4").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn aggregator_knobs_parse_and_validate() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.aggregator, AggregatorKind::FedAvg);
+        assert_eq!(c.svt_energy, 0.9);
+        c.set("aggregator", "svt").unwrap();
+        c.set("svt_energy", "0.8").unwrap();
+        assert_eq!(c.aggregator, AggregatorKind::Svt);
+        assert_eq!(c.svt_energy, 0.8);
+        c.validate().unwrap();
+        c.set("aggregator", "exact").unwrap();
+        c.validate().unwrap();
+        c.set("aggregator", "fedavg").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("aggregator", "median").is_err());
+        assert!(c.set("svt_energy", "x").is_err());
+        // Out-of-range thresholds survive parsing, fail validation.
+        for bad in ["0", "-0.5", "1.5", "nan"] {
+            c.set("svt_energy", bad).unwrap();
+            assert!(c.validate().is_err(), "svt_energy = {bad}");
+        }
+        c.set("svt_energy", "1.0").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::compression::CodecKind;
 use crate::config::FlConfig;
+use crate::coordinator::aggregator::AggregatorKind;
 use crate::coordinator::executor::ExecutorKind;
 use crate::coordinator::sampler::SamplerKind;
 use crate::transport::{ProfileKind, TimeModelKind};
@@ -165,6 +166,31 @@ pub fn event_micro() -> FlConfig {
     }
 }
 
+/// SVT aggregation regime on micro8: the server stacks the uploaded
+/// LoRA factors per adapter pair, truncates the exact weighted-mean
+/// product at 90% retained spectral energy, and broadcasts the
+/// re-factored adapter (FLoRIST-style singular-value thresholding; see
+/// PAPERS.md). A 10% dropout keeps the contributor set ragged so the
+/// truncation actually has variance to trim, and the `eff_rank`
+/// column records what survives each round.
+pub fn svt_micro() -> FlConfig {
+    let mut cfg = scaled_micro("micro8_lora_fc_r8", 8, CodecKind::Fp32);
+    cfg.aggregator = AggregatorKind::Svt;
+    cfg.svt_energy = 0.9;
+    cfg.dropout = 0.1;
+    cfg.rounds = 24;
+    cfg
+}
+
+/// Sparse error-feedback regime on micro8: uploads keep the top 25%
+/// of coordinates by magnitude and bank the rest in a per-client
+/// residual that is replayed (and re-ranked) next time the client is
+/// sampled — nothing is silently dropped, it is only deferred. The
+/// residual-conservation invariant is pinned in `tests/aggregation.rs`.
+pub fn sparse_ef_micro() -> FlConfig {
+    scaled_micro("micro8_lora_fc_r4", 4, CodecKind::SparseEf(0.25))
+}
+
 /// Look a preset up by CLI name (`flocora train --preset NAME`).
 pub fn by_name(name: &str) -> Option<FlConfig> {
     match name {
@@ -179,6 +205,8 @@ pub fn by_name(name: &str) -> Option<FlConfig> {
         "hetero_micro" => Some(hetero_micro()),
         "straggler_micro" => Some(straggler_micro()),
         "event_micro" => Some(event_micro()),
+        "svt_micro" => Some(svt_micro()),
+        "sparse_ef_micro" => Some(sparse_ef_micro()),
         _ => None,
     }
 }
@@ -257,10 +285,25 @@ mod tests {
     }
 
     #[test]
+    fn zoo_presets_select_their_aggregation_paths() {
+        let svt = svt_micro();
+        svt.validate().unwrap();
+        assert_eq!(svt.aggregator, AggregatorKind::Svt);
+        assert_eq!(svt.svt_energy, 0.9);
+        assert!(svt.dropout > 0.0, "SVT preset wants ragged rounds");
+        assert_eq!(svt.tag, "micro8_lora_fc_r8");
+
+        let ef = sparse_ef_micro();
+        ef.validate().unwrap();
+        assert_eq!(ef.aggregator, AggregatorKind::FedAvg);
+        assert_eq!(ef.codec, CodecKind::SparseEf(0.25));
+    }
+
+    #[test]
     fn presets_resolve_by_name() {
         for name in ["paper_resnet8", "paper_resnet18", "scaled_micro",
                      "scaled_tiny", "hetero_micro", "straggler_micro",
-                     "event_micro"] {
+                     "event_micro", "svt_micro", "sparse_ef_micro"] {
             let cfg = by_name(name).unwrap_or_else(|| {
                 panic!("preset {name} missing")
             });

@@ -1,11 +1,37 @@
-//! FedAvg aggregation over opaque flat vectors.
+//! The aggregation zoo: FedAvg plus factor-aware LoRA aggregators.
 //!
-//! `w_{t+1} = Σ_k (n_k / n) w_k` (paper Eq. 1's minimizer step). The
-//! accumulator is f64-free by design — the paper's method aggregates in
-//! the same precision the messages arrive in (f32), and the weighted
-//! accumulation is the per-round O(K·P) hot loop (DESIGN.md §7).
+//! `w_{t+1} = Σ_k (n_k / n) w_k` (paper Eq. 1's minimizer step) is the
+//! baseline [`FedAvg`]; its accumulator is f64-free by design — the
+//! paper's method aggregates in the same precision the messages arrive
+//! in (f32), and the weighted accumulation is the per-round O(K·P) hot
+//! loop (DESIGN.md §7).
+//!
+//! Averaging LoRA factors independently is *biased*: the mean of the
+//! products `Σ w_k L_k R_k / W` is not the product of the means
+//! `L̄ · R̄`. Two factor-aware modes correct for that behind the one
+//! [`Aggregator`] seam (the `aggregator = fedavg|svt|exact` knob):
+//!
+//! * [`SvtAggregator`] — FLoRIST-style server-side singular-value
+//!   thresholding: stack every client's scaled factors per adapter
+//!   pair, refactor the exact weighted-mean product through a thin QR +
+//!   core-SVD, and keep the smallest head of singular directions whose
+//!   energy (Σσ²) reaches the `svt_energy` threshold. Reports the
+//!   per-round effective rank. `svt_energy >= 1.0` skips the refactor
+//!   entirely and is bit-for-bit FedAvg.
+//! * [`ExactAggregator`] — the same stacked refactor with no energy
+//!   cut: the broadcast factors reproduce the true mean product up to
+//!   the server rank budget (the optimal rank-r correction of the
+//!   A·B averaging bias). A single-contributor round is bit-for-bit
+//!   FedAvg — the mean of one product *is* the product of one mean.
+//!
+//! Both run on the coordinator thread after the round's contributions
+//! merge, in f64, with deterministic loop order — executor choice and
+//! window size cannot perturb the result. Non-adapter segments (norms,
+//! fc head) always take the plain FedAvg path.
 
+use crate::coordinator::hetero::rank_geometry;
 use crate::error::{Error, Result};
+use crate::model::Segment;
 use crate::tensor;
 
 /// Streaming weighted-average accumulator.
@@ -50,9 +76,572 @@ impl FedAvg {
     }
 }
 
+/// What one round of aggregation produced.
+pub struct AggOutcome {
+    /// The new global trainable vector.
+    pub global: Vec<f32>,
+    /// Mean effective adapter rank the server broadcasts this round
+    /// (mean over adapter pairs of the rank slots actually carrying
+    /// signal; the static server rank for FedAvg, 0.0 for layouts with
+    /// no adapter pairs).
+    pub eff_rank: f64,
+}
+
+/// One round's server-side merge strategy, behind a common seam so the
+/// round engine can swap FedAvg for factor-aware modes
+/// (`aggregator = fedavg|svt|exact`).
+pub trait Aggregator: Send {
+    /// Add one client's trainable vector with sample-count weight.
+    fn add(&mut self, v: &[f32], weight: f64) -> Result<()>;
+    /// Total weight contributed so far.
+    fn contributions(&self) -> f64;
+    /// Consume the accumulator and produce the new global vector plus
+    /// the round's effective-rank report.
+    fn finish(self: Box<Self>) -> Result<AggOutcome>;
+}
+
+/// One LoRA adapter pair located inside the flat trainable vector:
+/// `ΔW = L · R` with `L` the rank-minor factor (`outer × rank`,
+/// row-major at `left_offset`) and `R` the rank-major factor
+/// (`rank × inner`, row-major at `right_offset`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdapterPair {
+    pub left_offset: usize,
+    pub outer: usize,
+    pub right_offset: usize,
+    pub inner: usize,
+    pub rank: usize,
+}
+
+/// Locate every adapter factor pair in a trainable layout: two
+/// consecutive segments that are both adapters at the same rank, one
+/// rank-minor (the left factor) and one rank-major (the right). Matches
+/// both orderings the spec emits (`lora_b` then `lora_a` for convs,
+/// `fc.lora_b` then `fc.lora_a` for the head).
+pub fn adapter_pairs(segments: &[Segment]) -> Vec<AdapterPair> {
+    let mut pairs = Vec::new();
+    let mut i = 0;
+    while i + 1 < segments.len() {
+        let (a, b) = (&segments[i], &segments[i + 1]);
+        if let (Some((ra, da, lead_a)), Some((rb, db, lead_b))) =
+            (rank_geometry(a), rank_geometry(b))
+        {
+            if ra == rb && ra > 0 && lead_a != lead_b {
+                let (left, outer, right, inner) = if lead_a {
+                    // a is rank-major (right factor), b is the left.
+                    (b, db, a, da)
+                } else {
+                    (a, da, b, db)
+                };
+                pairs.push(AdapterPair {
+                    left_offset: left.offset,
+                    outer,
+                    right_offset: right.offset,
+                    inner,
+                    rank: ra,
+                });
+                i += 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    pairs
+}
+
+/// Aggregation-mode selection, parseable from CLI/config strings (the
+/// `aggregator = fedavg | svt | exact` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggregatorKind {
+    /// Plain factor-wise weighted mean (the paper's method).
+    #[default]
+    FedAvg,
+    /// Stacked-factor refactor with energy-threshold truncation
+    /// (FLoRIST-style SVT; the `svt_energy` knob).
+    Svt,
+    /// Stacked-factor refactor with no energy cut — the optimal
+    /// rank-budget correction of the A·B averaging bias.
+    Exact,
+}
+
+impl AggregatorKind {
+    /// Parse `fedavg | svt | exact`.
+    pub fn parse(s: &str) -> Option<AggregatorKind> {
+        match s {
+            "fedavg" => Some(AggregatorKind::FedAvg),
+            "svt" => Some(AggregatorKind::Svt),
+            "exact" => Some(AggregatorKind::Exact),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AggregatorKind::FedAvg => "fedavg",
+            AggregatorKind::Svt => "svt",
+            AggregatorKind::Exact => "exact",
+        }
+    }
+
+    /// Build a fresh per-round aggregator for a `dim`-element trainable
+    /// vector whose adapter pairs are `pairs` (precomputed once per
+    /// run via [`adapter_pairs`]). `svt_energy` is only read by
+    /// [`AggregatorKind::Svt`].
+    pub fn build(
+        &self,
+        dim: usize,
+        pairs: &[AdapterPair],
+        svt_energy: f64,
+    ) -> Box<dyn Aggregator> {
+        match self {
+            AggregatorKind::FedAvg => Box::new(FedAvgAggregator {
+                inner: FedAvg::new(dim),
+                eff_rank: static_rank(pairs),
+            }),
+            AggregatorKind::Svt => Box::new(SvtAggregator::new(
+                dim,
+                pairs.to_vec(),
+                svt_energy,
+            )),
+            AggregatorKind::Exact => {
+                Box::new(ExactAggregator::new(dim, pairs.to_vec()))
+            }
+        }
+    }
+}
+
+/// Mean server rank over adapter pairs — what a FedAvg round
+/// effectively broadcasts (0.0 when the layout has no adapter pairs,
+/// i.e. full-model variants).
+fn static_rank(pairs: &[AdapterPair]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.iter().map(|p| p.rank as f64).sum::<f64>() / pairs.len() as f64
+}
+
+/// [`FedAvg`] behind the [`Aggregator`] seam, reporting the static
+/// server rank as its effective rank.
+struct FedAvgAggregator {
+    inner: FedAvg,
+    eff_rank: f64,
+}
+
+impl Aggregator for FedAvgAggregator {
+    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
+        self.inner.add(v, weight)
+    }
+
+    fn contributions(&self) -> f64 {
+        self.inner.contributions()
+    }
+
+    fn finish(self: Box<Self>) -> Result<AggOutcome> {
+        Ok(AggOutcome { global: self.inner.finish()?, eff_rank: self.eff_rank })
+    }
+}
+
+/// Per-pair stack of scaled client factors: left columns (`outer`-long,
+/// pre-scaled by the client weight) and matching right rows
+/// (`inner`-long). Column `j` of the conceptual `outer × m` left stack
+/// pairs with row `j` of the `m × inner` right stack, so
+/// `Σ_k w_k L_k R_k = L_stack · R_stack` exactly.
+#[derive(Default)]
+struct PairStack {
+    left_cols: Vec<Vec<f64>>,
+    right_rows: Vec<Vec<f64>>,
+}
+
+/// Shared core of the factor-aware modes: a full-vector [`FedAvg`]
+/// (non-adapter segments, and the τ ≥ 1.0 passthrough) plus per-pair
+/// factor stacks refactored at finish.
+struct StackedAggregator {
+    mean: FedAvg,
+    pairs: Vec<AdapterPair>,
+    stacks: Vec<PairStack>,
+    clients: usize,
+    /// Retained-energy threshold in (0, 1]; `None` means keep every
+    /// numerically nonzero direction (the exact mode).
+    energy: Option<f64>,
+    /// Skip stacking and refactoring entirely — the svt τ ≥ 1.0 mode,
+    /// defined as bit-for-bit FedAvg.
+    passthrough: bool,
+}
+
+/// FLoRIST-style server-side singular-value thresholding
+/// (`aggregator = svt`): see the module docs for the refactor.
+pub struct SvtAggregator(StackedAggregator);
+
+impl SvtAggregator {
+    /// `energy` is the retained-energy threshold τ ∈ (0, 1]; τ ≥ 1.0
+    /// degrades to bit-for-bit FedAvg (no stacking, no refactor).
+    pub fn new(dim: usize, pairs: Vec<AdapterPair>, energy: f64) -> Self {
+        let mut inner =
+            StackedAggregator::new(dim, pairs, Some(energy.min(1.0)));
+        inner.passthrough = energy >= 1.0;
+        SvtAggregator(inner)
+    }
+}
+
+impl Aggregator for SvtAggregator {
+    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
+        self.0.add(v, weight)
+    }
+
+    fn contributions(&self) -> f64 {
+        self.0.mean.contributions()
+    }
+
+    fn finish(self: Box<Self>) -> Result<AggOutcome> {
+        self.0.finish()
+    }
+}
+
+/// Exact-aggregation correction of the A·B averaging bias
+/// (`aggregator = exact`): the broadcast factors reproduce the true
+/// weighted-mean product up to the server rank budget.
+pub struct ExactAggregator(StackedAggregator);
+
+impl ExactAggregator {
+    pub fn new(dim: usize, pairs: Vec<AdapterPair>) -> Self {
+        ExactAggregator(StackedAggregator::new(dim, pairs, None))
+    }
+}
+
+impl Aggregator for ExactAggregator {
+    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
+        self.0.add(v, weight)
+    }
+
+    fn contributions(&self) -> f64 {
+        self.0.mean.contributions()
+    }
+
+    fn finish(self: Box<Self>) -> Result<AggOutcome> {
+        self.0.finish()
+    }
+}
+
+impl StackedAggregator {
+    fn new(
+        dim: usize,
+        pairs: Vec<AdapterPair>,
+        energy: Option<f64>,
+    ) -> StackedAggregator {
+        let stacks = pairs.iter().map(|_| PairStack::default()).collect();
+        StackedAggregator {
+            mean: FedAvg::new(dim),
+            pairs,
+            stacks,
+            clients: 0,
+            energy,
+            passthrough: false,
+        }
+    }
+
+    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
+        self.mean.add(v, weight)?;
+        self.clients += 1;
+        if self.passthrough {
+            return Ok(());
+        }
+        for (pair, stack) in self.pairs.iter().zip(self.stacks.iter_mut()) {
+            let r = pair.rank;
+            for j in 0..r {
+                // Left column j (scaled by the weight) and right row j;
+                // a slot whose column or row is all-zero contributes
+                // nothing to the product — skip it (hetero clients
+                // zero-pad their unused rank slots).
+                let col: Vec<f64> = (0..pair.outer)
+                    .map(|o| v[pair.left_offset + o * r + j] as f64 * weight)
+                    .collect();
+                let row: Vec<f64> = (0..pair.inner)
+                    .map(|t| v[pair.right_offset + j * pair.inner + t] as f64)
+                    .collect();
+                if col.iter().all(|&x| x == 0.0)
+                    || row.iter().all(|&x| x == 0.0)
+                {
+                    continue;
+                }
+                stack.left_cols.push(col);
+                stack.right_rows.push(row);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self: StackedAggregator) -> Result<AggOutcome> {
+        let total_weight = self.mean.contributions();
+        let mut global = self.mean.finish()?;
+        // Passthrough cases are bit-for-bit FedAvg: τ ≥ 1.0, a
+        // non-adapter layout, or a single contributor (the mean of one
+        // product is the product of one mean). The rank report still
+        // covers the pairs — it is the static server rank then.
+        if self.passthrough || self.pairs.is_empty() || self.clients <= 1 {
+            return Ok(AggOutcome {
+                global,
+                eff_rank: static_rank(&self.pairs),
+            });
+        }
+        let mut rank_sum = 0.0;
+        for (pair, stack) in self.pairs.iter().zip(self.stacks.into_iter()) {
+            rank_sum += refactor_pair(
+                &mut global,
+                pair,
+                stack,
+                total_weight,
+                self.energy,
+            ) as f64;
+        }
+        Ok(AggOutcome {
+            global,
+            eff_rank: rank_sum / self.pairs.len() as f64,
+        })
+    }
+}
+
+/// Refactor one adapter pair's stacked contribution into at most
+/// `pair.rank` broadcast slots and write the result into `global`.
+/// Returns the number of slots kept (the pair's effective rank).
+///
+/// The exact weighted-mean product is `P̄ = L_s · R_s / W` with
+/// `L_s` `outer × m` and `R_s` `m × inner` (m = Σ stacked slots). Thin
+/// QR of both sides (`L_s = Q_l T_l`, `R_sᵀ = Q_r T_r`) reduces the
+/// SVD to the small `m × m` core `M = T_l T_rᵀ = U Σ Vᵀ`, giving
+/// `P̄ = (Q_l U) (Σ/W) (Q_r V)ᵀ` — computed entirely in f64 on the
+/// coordinator thread, so the result is independent of executor mode.
+fn refactor_pair(
+    global: &mut [f32],
+    pair: &AdapterPair,
+    stack: PairStack,
+    total_weight: f64,
+    energy: Option<f64>,
+) -> usize {
+    let m = stack.left_cols.len();
+    let r = pair.rank;
+    // Zero the pair's broadcast slots first; kept directions are
+    // written below and an all-zero stack stays all-zero.
+    for o in 0..pair.outer {
+        for j in 0..r {
+            global[pair.left_offset + o * r + j] = 0.0;
+        }
+    }
+    for x in global
+        .iter_mut()
+        .skip(pair.right_offset)
+        .take(r * pair.inner)
+    {
+        *x = 0.0;
+    }
+    if m == 0 {
+        return 0;
+    }
+    let (ql, tl) = mgs_qr(&stack.left_cols);
+    let (qr, tr) = mgs_qr(&stack.right_rows);
+    // Core M = T_l · T_rᵀ (m × m).
+    let mut core = vec![vec![0.0f64; m]; m];
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0.0;
+            for (a, b) in tl[i].iter().zip(tr[j].iter()) {
+                s += a * b;
+            }
+            core[i][j] = s;
+        }
+    }
+    let (u_sigma, v) = jacobi_svd(&mut core);
+    // σ_j = ‖column j of UΣ‖; order indices by σ descending
+    // (index-ascending tie-break keeps the sort deterministic).
+    let mut sigmas: Vec<(usize, f64)> = (0..m)
+        .map(|j| {
+            let s = (0..m)
+                .map(|i| u_sigma[i][j] * u_sigma[i][j])
+                .sum::<f64>()
+                .sqrt();
+            (j, s)
+        })
+        .collect();
+    sigmas.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+    });
+    let sigma_max = sigmas.first().map(|&(_, s)| s).unwrap_or(0.0);
+    if sigma_max <= 0.0 {
+        return 0;
+    }
+    let nonzero = sigmas
+        .iter()
+        .take_while(|&&(_, s)| s > sigma_max * 1e-9)
+        .count();
+    let keep = match energy {
+        None => nonzero.min(r),
+        Some(tau) => {
+            let total: f64 = sigmas.iter().map(|&(_, s)| s * s).sum();
+            let mut acc = 0.0;
+            let mut k = 0;
+            for &(_, s) in sigmas.iter().take(nonzero) {
+                k += 1;
+                acc += s * s;
+                if acc >= tau * total {
+                    break;
+                }
+            }
+            k.min(r)
+        }
+    };
+    // Write kept directions: left slot j gets (Q_l u_j) · σ_j / W,
+    // right slot j gets (Q_r v_j)ᵀ.
+    for (slot, &(jj, sigma)) in sigmas.iter().take(keep).enumerate() {
+        let scale = sigma / total_weight;
+        for o in 0..pair.outer {
+            let mut val = 0.0;
+            for i in 0..m {
+                val += ql[i][o] * u_sigma[i][jj] / sigma;
+            }
+            global[pair.left_offset + o * r + slot] = (val * scale) as f32;
+        }
+        for t in 0..pair.inner {
+            let mut val = 0.0;
+            for i in 0..m {
+                val += qr[i][t] * v[i][jj];
+            }
+            global[pair.right_offset + slot * pair.inner + t] = val as f32;
+        }
+    }
+    keep
+}
+
+/// Modified Gram-Schmidt QR of the matrix whose columns are `cols`
+/// (each a length-`d` vector). Returns `(q, t)` with `q[i]` the i-th
+/// orthonormal column (all-zero when the input column was linearly
+/// dependent) and `t[i][j]` upper-triangular such that
+/// `cols[j] = Σ_i q[i] · t[i][j]`.
+fn mgs_qr(cols: &[Vec<f64>]) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let m = cols.len();
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut t = vec![vec![0.0f64; m]; m];
+    for j in 0..m {
+        let mut v = cols[j].clone();
+        for i in 0..j {
+            let dot: f64 = q[i].iter().zip(v.iter()).map(|(a, b)| a * b).sum();
+            t[i][j] = dot;
+            for (x, &qx) in v.iter_mut().zip(q[i].iter()) {
+                *x -= dot * qx;
+            }
+        }
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let col_norm: f64 =
+            cols[j].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > col_norm.max(1e-300) * 1e-12 {
+            t[j][j] = norm;
+            for x in v.iter_mut() {
+                *x /= norm;
+            }
+            q.push(v);
+        } else {
+            t[j][j] = 0.0;
+            q.push(vec![0.0; cols[j].len()]);
+        }
+    }
+    (q, t)
+}
+
+/// One-sided Jacobi SVD of the square matrix `a` (row-major `m × m`,
+/// consumed): returns `(u_sigma, v)` where `u_sigma`'s columns are
+/// `u_j σ_j` and `v` is orthogonal, with `a = (UΣ) Vᵀ`. Fixed sweep
+/// order and a pure-f64 inner loop keep the decomposition
+/// deterministic across platforms and executors.
+fn jacobi_svd(a: &mut [Vec<f64>]) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let m = a.len();
+    let mut v = vec![vec![0.0f64; m]; m];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for _sweep in 0..60 {
+        let mut rotated = false;
+        for p in 0..m {
+            for q in (p + 1)..m {
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for row in a.iter() {
+                    app += row[p] * row[p];
+                    aqq += row[q] * row[q];
+                    apq += row[p] * row[q];
+                }
+                if apq.abs() <= 1e-15 * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                rotated = true;
+                let theta = 0.5 * (2.0 * apq).atan2(app - aqq);
+                let (s, c) = theta.sin_cos();
+                for row in a.iter_mut() {
+                    let (xp, xq) = (row[p], row[q]);
+                    row[p] = c * xp + s * xq;
+                    row[q] = -s * xp + c * xq;
+                }
+                for row in v.iter_mut() {
+                    let (xp, xq) = (row[p], row[q]);
+                    row[p] = c * xp + s * xq;
+                    row[q] = -s * xp + c * xq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+    (a.to_vec(), v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{build_spec, ModelCfg, ParamKind, Variant};
+    use crate::util::rng::Rng;
+
+    fn lora_segments(rank: usize) -> Vec<Segment> {
+        build_spec(
+            ModelCfg::by_name("micro8").unwrap(),
+            Variant::LoraFc,
+            rank,
+        )
+        .trainable
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    /// Dense product of one pair's factors read from a flat vector.
+    fn pair_product(v: &[f32], p: &AdapterPair) -> Vec<f64> {
+        let mut out = vec![0.0f64; p.outer * p.inner];
+        for o in 0..p.outer {
+            for t in 0..p.inner {
+                let mut s = 0.0;
+                for j in 0..p.rank {
+                    s += v[p.left_offset + o * p.rank + j] as f64
+                        * v[p.right_offset + j * p.inner + t] as f64;
+                }
+                out[o * p.inner + t] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn kind_parses_and_labels() {
+        assert_eq!(AggregatorKind::parse("fedavg"),
+                   Some(AggregatorKind::FedAvg));
+        assert_eq!(AggregatorKind::parse("svt"), Some(AggregatorKind::Svt));
+        assert_eq!(AggregatorKind::parse("exact"),
+                   Some(AggregatorKind::Exact));
+        assert_eq!(AggregatorKind::parse("trimmed_mean"), None);
+        assert_eq!(AggregatorKind::FedAvg.label(), "fedavg");
+        assert_eq!(AggregatorKind::Svt.label(), "svt");
+        assert_eq!(AggregatorKind::Exact.label(), "exact");
+        assert_eq!(AggregatorKind::default(), AggregatorKind::FedAvg);
+    }
 
     #[test]
     fn weighted_mean() {
@@ -82,5 +671,228 @@ mod tests {
         assert!(agg.add(&[1.0], 1.0).is_err());
         assert!(agg.add(&[1.0, 2.0], 0.0).is_err());
         assert!(FedAvg::new(2).finish().is_err());
+        // The boxed seam surfaces the same errors.
+        for kind in
+            [AggregatorKind::FedAvg, AggregatorKind::Svt, AggregatorKind::Exact]
+        {
+            let mut agg = kind.build(2, &[], 0.9);
+            assert!(agg.add(&[1.0], 1.0).is_err(), "{kind:?}");
+            assert!(agg.add(&[1.0, 2.0], -1.0).is_err(), "{kind:?}");
+            assert!(kind.build(2, &[], 0.9).finish().is_err(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn adapter_pairs_cover_every_adapter_segment() {
+        let segs = lora_segments(4);
+        let pairs = adapter_pairs(&segs);
+        assert!(!pairs.is_empty());
+        // Every adapter segment's elements are covered exactly once.
+        let adapter_numel: usize = segs
+            .iter()
+            .filter(|s| rank_geometry(s).is_some())
+            .map(|s| s.numel)
+            .sum();
+        let paired_numel: usize = pairs
+            .iter()
+            .map(|p| p.rank * (p.outer + p.inner))
+            .sum();
+        assert_eq!(adapter_numel, paired_numel);
+        for p in &pairs {
+            assert_eq!(p.rank, 4);
+            assert!(p.outer > 0 && p.inner > 0);
+        }
+        // Full-model layouts have no pairs.
+        let full = build_spec(
+            ModelCfg::by_name("micro8").unwrap(),
+            Variant::Full,
+            0,
+        )
+        .trainable;
+        assert!(adapter_pairs(&full).is_empty());
+        assert!(
+            full.iter().all(|s| !matches!(
+                s.kind,
+                ParamKind::LoraA | ParamKind::LoraB
+            )),
+            "full variant unexpectedly grew adapters"
+        );
+    }
+
+    #[test]
+    fn svt_full_energy_is_bitwise_fedavg() {
+        let segs = lora_segments(4);
+        let pairs = adapter_pairs(&segs);
+        let n: usize = segs.iter().map(|s| s.numel).sum();
+        let (a, b) = (randv(n, 1), randv(n, 2));
+        let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
+        let mut svt = AggregatorKind::Svt.build(n, &pairs, 1.0);
+        for agg in [&mut fed, &mut svt] {
+            agg.add(&a, 2.0).unwrap();
+            agg.add(&b, 3.0).unwrap();
+        }
+        let fed = fed.finish().unwrap();
+        let svt = svt.finish().unwrap();
+        assert_eq!(fed.global, svt.global, "τ=1.0 must be exact FedAvg");
+        assert_eq!(fed.eff_rank, svt.eff_rank);
+        assert_eq!(fed.eff_rank, 4.0);
+    }
+
+    #[test]
+    fn exact_single_client_is_bitwise_fedavg() {
+        let segs = lora_segments(4);
+        let pairs = adapter_pairs(&segs);
+        let n: usize = segs.iter().map(|s| s.numel).sum();
+        let v = randv(n, 7);
+        let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
+        let mut exact = AggregatorKind::Exact.build(n, &pairs, 0.9);
+        fed.add(&v, 5.0).unwrap();
+        exact.add(&v, 5.0).unwrap();
+        let fed = fed.finish().unwrap();
+        let exact = exact.finish().unwrap();
+        assert_eq!(fed.global, exact.global);
+        assert_eq!(fed.eff_rank, exact.eff_rank);
+    }
+
+    /// Two clients that each use disjoint rank slots: the true mean
+    /// product has rank ≤ r, so the exact mode must reproduce it —
+    /// while factor-wise FedAvg is biased by construction.
+    #[test]
+    fn exact_mode_corrects_the_averaging_bias() {
+        // One synthetic pair: L is 3×2 rank-minor, R is 2×3 rank-major.
+        let pair = AdapterPair {
+            left_offset: 0,
+            outer: 3,
+            right_offset: 6,
+            inner: 3,
+            rank: 2,
+        };
+        let n = 15; // 6 + 9
+        // Client 1 uses slot 0 only; client 2 uses slot 1 only.
+        let mut c1 = vec![0.0f32; n];
+        let mut c2 = vec![0.0f32; n];
+        for o in 0..3 {
+            c1[o * 2] = (o + 1) as f32; // L[:,0] = [1,2,3]
+            c2[o * 2 + 1] = (o as f32) - 1.0; // L[:,1] = [-1,0,1]
+        }
+        for t in 0..3 {
+            c1[6 + t] = 1.0 + t as f32; // R[0,:] = [1,2,3]
+            c2[6 + 3 + t] = 2.0 - t as f32; // R[1,:] = [2,1,0]
+        }
+        let expect: Vec<f64> = {
+            let p1 = pair_product(&c1, &pair);
+            let p2 = pair_product(&c2, &pair);
+            p1.iter().zip(&p2).map(|(a, b)| (a + b) / 2.0).collect()
+        };
+        let pairs = vec![pair];
+        let mut exact = AggregatorKind::Exact.build(n, &pairs, 0.9);
+        let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
+        for agg in [&mut exact, &mut fed] {
+            agg.add(&c1, 1.0).unwrap();
+            agg.add(&c2, 1.0).unwrap();
+        }
+        let exact = exact.finish().unwrap();
+        let got = pair_product(&exact.global, &pair);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-5, "exact: {got:?} vs {expect:?}");
+        }
+        assert!((exact.eff_rank - 2.0).abs() < 1e-12);
+        // FedAvg halves each factor, quartering the product: biased.
+        let fed = fed.finish().unwrap();
+        let biased = pair_product(&fed.global, &pair);
+        let err: f64 = biased
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err > 0.5, "FedAvg should be visibly biased here: {err}");
+    }
+
+    #[test]
+    fn svt_threshold_truncates_rank() {
+        // Same disjoint-slot construction, but slot 0 carries almost
+        // all the energy — a low threshold keeps only that direction.
+        let pair = AdapterPair {
+            left_offset: 0,
+            outer: 3,
+            right_offset: 6,
+            inner: 3,
+            rank: 2,
+        };
+        let n = 15;
+        let mut c1 = vec![0.0f32; n];
+        let mut c2 = vec![0.0f32; n];
+        for o in 0..3 {
+            c1[o * 2] = 10.0 * (o + 1) as f32;
+            c2[o * 2 + 1] = 0.01 * ((o as f32) - 1.0);
+        }
+        for t in 0..3 {
+            c1[6 + t] = 10.0;
+            c2[6 + 3 + t] = 0.01;
+        }
+        let pairs = vec![pair];
+        let run = |tau: f64| {
+            let mut agg = AggregatorKind::Svt.build(n, &pairs, tau);
+            agg.add(&c1, 1.0).unwrap();
+            agg.add(&c2, 1.0).unwrap();
+            agg.finish().unwrap()
+        };
+        let low = run(0.5);
+        assert!((low.eff_rank - 1.0).abs() < 1e-12, "{}", low.eff_rank);
+        // The kept direction reproduces the dominant client's product.
+        let got = pair_product(&low.global, &pair);
+        let p1 = pair_product(&c1, &pair);
+        for (g, e) in got.iter().zip(&p1) {
+            assert!((g - e / 2.0).abs() < 1e-3, "{got:?}");
+        }
+        let high = run(0.999999);
+        assert!(high.eff_rank >= low.eff_rank);
+        assert!((high.eff_rank - 2.0).abs() < 1e-12, "{}", high.eff_rank);
+    }
+
+    #[test]
+    fn factor_modes_match_fedavg_on_nonadapter_segments() {
+        let segs = lora_segments(4);
+        let pairs = adapter_pairs(&segs);
+        let n: usize = segs.iter().map(|s| s.numel).sum();
+        let (a, b) = (randv(n, 3), randv(n, 4));
+        let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
+        let mut exact = AggregatorKind::Exact.build(n, &pairs, 0.9);
+        for agg in [&mut fed, &mut exact] {
+            agg.add(&a, 1.0).unwrap();
+            agg.add(&b, 4.0).unwrap();
+        }
+        let fed = fed.finish().unwrap();
+        let exact = exact.finish().unwrap();
+        for s in segs.iter().filter(|s| rank_geometry(s).is_none()) {
+            assert_eq!(
+                &fed.global[s.offset..s.offset + s.numel],
+                &exact.global[s.offset..s.offset + s.numel],
+                "{} must take the plain FedAvg path",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn refactor_is_deterministic_in_add_order_of_values() {
+        // Same clients, same weights, two separate aggregator
+        // instances: bitwise-identical output (the in-round order is
+        // fixed by the sampler, but rebuildability matters for replay).
+        let segs = lora_segments(8);
+        let pairs = adapter_pairs(&segs);
+        let n: usize = segs.iter().map(|s| s.numel).sum();
+        let vs: Vec<Vec<f32>> =
+            (0..3).map(|i| randv(n, 10 + i as u64)).collect();
+        let run = || {
+            let mut agg = AggregatorKind::Svt.build(n, &pairs, 0.8);
+            for (i, v) in vs.iter().enumerate() {
+                agg.add(v, 1.0 + i as f64).unwrap();
+            }
+            agg.finish().unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.global, b.global);
+        assert_eq!(a.eff_rank, b.eff_rank);
     }
 }

@@ -258,7 +258,10 @@ fn stage_upload(ctx: &RoundContext<'_>, cid: usize, outcome: LocalOutcome)
                 -> Result<ClientUpdate> {
     let (session, codec, _, _) = client_gear(ctx, cid)?;
     let segments = &session.spec.trainable_segments;
-    let up_msg = codec.encode(&outcome.params, segments)?;
+    // The client-keyed path lets stateful codecs (sparse_ef's error
+    // feedback) tie their residuals to the client id; stateless codecs
+    // fall through to the plain encode.
+    let up_msg = codec.encode_client(cid, &outcome.params, segments)?;
     let up_bytes = up_msg.size_bytes();
     let received = codec.decode(&up_msg, segments)?;
 

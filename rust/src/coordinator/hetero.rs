@@ -29,10 +29,15 @@ use crate::error::{Error, Result};
 use crate::model::{ParamKind, Segment};
 use crate::runtime::ModelSession;
 
-fn rank_geometry(seg: &Segment) -> Option<(usize, usize, bool)> {
-    // Returns (rank, inner_block, rank_is_leading):
-    // leading => memory is rank-major ([r][inner]);
-    // trailing => per-row rank columns ([outer][r]).
+/// Adapter-rank geometry of a segment: `(rank, other_dim,
+/// rank_is_leading)`, or `None` for non-adapter segments.
+///
+/// `rank_is_leading` => memory is rank-major (`[r][inner]`, the right
+/// factor of the adapter product); otherwise the segment is per-row
+/// rank columns (`[outer][r]`, the left factor). The aggregation zoo
+/// ([`adapter_pairs`](crate::coordinator::aggregator::adapter_pairs))
+/// uses this to locate each ΔW = L·R factor pair in the flat vector.
+pub fn rank_geometry(seg: &Segment) -> Option<(usize, usize, bool)> {
     match seg.kind {
         ParamKind::LoraB => {
             // (r, I, K, K): rank-major.

@@ -9,7 +9,9 @@
 //!    base `W_initial` never moves and is never re-transmitted);
 //! 3. clients **upload** their updated adapter vectors `Δ_{t+1}^k L`
 //!    (same codec);
-//! 4. the server **aggregates** with FedAvg's `n_k / n` weighted mean.
+//! 4. the server **aggregates** with FedAvg's `n_k / n` weighted mean —
+//!    or a factor-aware mode from the aggregation zoo (`aggregator =
+//!    svt|exact`, see [`aggregator`]).
 //!
 //! The aggregator never inspects what the vector means — full model
 //! (FedAvg baseline), adapters (FLoCoRA), or a sparsified variant
@@ -38,7 +40,9 @@ pub mod server;
 pub mod sink;
 pub mod trainer;
 
-pub use aggregator::FedAvg;
+pub use aggregator::{adapter_pairs, AdapterPair, AggOutcome, Aggregator,
+                     AggregatorKind, ExactAggregator, FedAvg,
+                     SvtAggregator};
 pub use executor::{ClientExecutor, ExecutorKind, ParallelExecutor,
                    PipelinedExecutor, SerialExecutor};
 pub use hetero::{ClientPlan, PlanTier};

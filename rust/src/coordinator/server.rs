@@ -13,9 +13,10 @@
 //! (serial reference or windowed thread-pool), which **streams** each
 //! result into the server's in-place merge
 //! ([`RoundSink`](crate::coordinator::sink::RoundSink)) in sampling
-//! order: ledger entries, FedAvg adds, dropout counts and network
-//! loads fold in as each client's slot drains, so a round's peak
-//! memory is O(params + window) and the executors stay bit-identical.
+//! order: ledger entries, aggregator adds (`aggregator =
+//! fedavg|svt|exact`), dropout counts and network loads fold in as
+//! each client's slot drains, so a round's peak memory is
+//! O(params + window) and the executors stay bit-identical.
 //!
 //! With `hetero_ranks` configured, the round runs a
 //! [`ClientPlan`](crate::coordinator::hetero::ClientPlan): each client
@@ -26,7 +27,8 @@ use std::time::Instant;
 
 use crate::compression::{Codec, Message};
 use crate::config::FlConfig;
-use crate::coordinator::aggregator::FedAvg;
+use crate::coordinator::aggregator::{adapter_pairs, AdapterPair,
+                                     Aggregator};
 use crate::coordinator::executor::{ClientExecutor, ClientResult,
                                    Downloads, RoundContext};
 use crate::coordinator::hetero::{ClientPlan, PlanTier};
@@ -94,6 +96,12 @@ pub struct RunSummary {
     pub sim_client_p50_s: f64,
     /// Slowest simulated client round-trip seen in the run.
     pub sim_client_max_s: f64,
+    /// Mean effective adapter rank the server broadcast, averaged over
+    /// every aggregated round (rounds every client lost are excluded).
+    /// The static server rank under `aggregator = fedavg`; what the
+    /// energy threshold kept under `svt`; 0.0 for layouts with no
+    /// adapter pairs.
+    pub mean_eff_rank: f64,
 }
 
 /// One federated-learning simulation.
@@ -168,6 +176,12 @@ pub struct Simulation {
     queue_peak: usize,
     queue_block_s: f64,
     last_round_queue_peak: usize,
+    /// Adapter factor pairs of the server layout, precomputed once for
+    /// the per-round aggregator builds (`aggregator = svt|exact`).
+    agg_pairs: Vec<AdapterPair>,
+    /// Effective rank the most recent aggregated round broadcast (NaN
+    /// while no round has aggregated, and after a lost round).
+    last_round_eff_rank: f64,
     /// Clients that failed mid-round (failure injection diagnostics).
     pub dropped_clients: u64,
     /// Clients the server cancelled after their round already had K
@@ -238,6 +252,10 @@ impl Simulation {
         };
         let tier_bytes = vec![0u64; plan.as_ref()
             .map_or(0, |p| p.tiers().len())];
+        // Factor pairs for the aggregation zoo — located once in the
+        // server layout; hetero uploads are already projected into it
+        // before the sink sees them.
+        let agg_pairs = adapter_pairs(&spec.trainable_segments);
         let net = cfg.network.build().with_sharing(cfg.net_sharing);
         let profiles = cfg.client_profiles.build(
             cfg.num_clients,
@@ -299,6 +317,8 @@ impl Simulation {
             queue_peak: 0,
             queue_block_s: 0.0,
             last_round_queue_peak: 0,
+            agg_pairs,
+            last_round_eff_rank: f64::NAN,
             dropped_clients: 0,
             cancelled_clients: 0,
         })
@@ -428,7 +448,11 @@ impl Simulation {
             tier_bytes: &mut self.tier_bytes,
             stage: TransferStage::begin_round(&self.net, &self.profiles,
                                               &*self.time_model),
-            agg: FedAvg::new(self.global.len()),
+            agg: self.cfg.aggregator.build(
+                self.global.len(),
+                &self.agg_pairs,
+                self.cfg.svt_energy,
+            ),
             loss_sum: 0.0,
             acc_sum: 0.0,
             survivors: 0,
@@ -474,10 +498,14 @@ impl Simulation {
         self.rounds_done += 1;
         if survivors == 0 {
             // Every sampled client failed: the round is lost but the
-            // federation survives — global state is unchanged.
+            // federation survives — global state is unchanged (and no
+            // effective rank was broadcast).
+            self.last_round_eff_rank = f64::NAN;
             return Ok((f64::NAN, f64::NAN));
         }
-        self.global = agg.finish()?;
+        let outcome = agg.finish()?;
+        self.global = outcome.global;
+        self.last_round_eff_rank = outcome.eff_rank;
         let k = survivors as f64;
         Ok((loss_sum / k, acc_sum / k))
     }
@@ -555,6 +583,10 @@ impl Simulation {
         // Whole-run client times for the summary percentiles; bounded
         // by rounds × clients_per_round f64s.
         let mut all_times: Vec<f64> = Vec::new();
+        // Effective-rank means, per record window and whole-run; lost
+        // rounds (NaN) broadcast nothing and are excluded.
+        let (mut eff_sum_window, mut eff_rounds_window) = (0.0f64, 0u64);
+        let (mut eff_sum_run, mut eff_rounds_run) = (0.0f64, 0u64);
         for r in 0..self.cfg.rounds {
             let (train_loss, _train_acc) = self.round()?;
             self.last_train_loss = train_loss;
@@ -564,6 +596,12 @@ impl Simulation {
                 window_queue_peak.max(self.last_round_queue_peak);
             window_times.extend_from_slice(&self.last_round_times);
             all_times.extend_from_slice(&self.last_round_times);
+            if self.last_round_eff_rank.is_finite() {
+                eff_sum_window += self.last_round_eff_rank;
+                eff_rounds_window += 1;
+                eff_sum_run += self.last_round_eff_rank;
+                eff_rounds_run += 1;
+            }
             let is_last = r + 1 == self.cfg.rounds;
             if (r + 1) % self.cfg.eval_every == 0 || is_last {
                 let (test_loss, test_acc) = self.evaluate()?;
@@ -584,10 +622,17 @@ impl Simulation {
                     sim_net_event_s: self.sim_net_event_s - event_at_record,
                     queue_peak: window_queue_peak,
                     queue_block_s: self.queue_block_s - block_at_record,
+                    eff_rank: if eff_rounds_window > 0 {
+                        eff_sum_window / eff_rounds_window as f64
+                    } else {
+                        0.0
+                    },
                     wall_ms: t0.elapsed().as_secs_f64() * 1e3,
                 });
                 drops_since_record = 0;
                 cancelled_since_record = 0;
+                eff_sum_window = 0.0;
+                eff_rounds_window = 0;
                 pipelined_at_record = self.sim_net_pipelined_s;
                 wait_at_record = self.transfer_wait_s;
                 event_at_record = self.sim_net_event_s;
@@ -615,16 +660,23 @@ impl Simulation {
             cancelled_clients: self.cancelled_clients,
             sim_client_p50_s: p50(&all_times),
             sim_client_max_s: all_times.iter().copied().fold(0.0, f64::max),
+            mean_eff_rank: if eff_rounds_run > 0 {
+                eff_sum_run / eff_rounds_run as f64
+            } else {
+                0.0
+            },
         })
     }
 }
 
 /// The server's in-place round merge: one [`RoundSink`] holding the
 /// round's accumulators. Every push folds one client straight into the
-/// ledger and the FedAvg accumulator, and narrates the client's round
-/// to the transport stage as [`StageEvent`]s — wire-time charging
-/// lives there now, not in the merge. The decoded update is freed as
-/// soon as its `agg.add` returns.
+/// ledger and the configured [`Aggregator`] (`fedavg|svt|exact`), and
+/// narrates the client's round to the transport stage as
+/// [`StageEvent`]s — wire-time charging lives there now, not in the
+/// merge. The decoded update is freed as soon as its `agg.add`
+/// returns; factor-aware aggregators do their refactor work inside
+/// `finish`, on the coordinator thread, after the merge completes.
 struct RoundMerge<'a> {
     expected: &'a [usize],
     plan: Option<&'a ClientPlan>,
@@ -633,7 +685,7 @@ struct RoundMerge<'a> {
     /// The round's transport accountant (owns the link clock and the
     /// load accumulator; see `transport::stage`).
     stage: TransferStage<'a>,
-    agg: FedAvg,
+    agg: Box<dyn Aggregator>,
     loss_sum: f64,
     acc_sum: f64,
     survivors: usize,

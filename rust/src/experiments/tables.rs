@@ -3,7 +3,7 @@
 //! the artifacts are built from (no training required).
 
 use crate::compression::affine::segment_encoded_size;
-use crate::compression::{TopKCodec, ZeroFlCodec};
+use crate::compression::{SparseEfCodec, TopKCodec, ZeroFlCodec};
 use crate::model::{build_spec, ModelCfg, ParamSpec, Variant};
 use crate::transport::tcc_equation2;
 
@@ -205,6 +205,60 @@ pub fn table4_sizes() -> (TableOut, Vec<(String, f64)>) {
     )
 }
 
+/// Aggregation-zoo bytes table — per-round upload message size for
+/// each wire codec on the ResNet-8 r=32 adapter vector, plus the
+/// broadcast size SVT reaches when the energy threshold keeps only
+/// `k` of the 32 singular directions (adapter params scale linearly
+/// in rank, so rank-k broadcast ≡ the rank-k layout's vector).
+/// Accuracy columns come from training runs (`--preset svt_micro`,
+/// `--preset sparse_ef_micro` with `--json`); this table prices the
+/// bytes axis exactly. Returns `(label, bytes)` pairs for tests.
+pub fn table_zoo() -> (TableOut, Vec<(String, f64)>) {
+    let lora = resnet8(Variant::LoraFc, 32);
+    let n = lora.num_trainable();
+    let fp_bytes = n as f64 * 4.0;
+    let mut pairs = Vec::new();
+    let mut rows = Vec::new();
+    let mut push = |label: &str, bytes: f64, note: &str| {
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1} kB", bytes / 1e3),
+            format!("÷{:.1}", fp_bytes / bytes),
+            note.to_string(),
+        ]);
+        pairs.push((label.to_string(), bytes));
+    };
+
+    push("FP32", fp_bytes, "baseline adapter vector");
+    push("Q8", quantized_message_bytes(&lora, 8) as f64,
+         "affine per-row quantization");
+    // Bitmap sparse codecs: header + presence bitmap + survivors.
+    let bitmap = |keep: usize| 8.0 + n.div_ceil(8) as f64 + keep as f64 * 4.0;
+    push("TopK 25%", bitmap(TopKCodec::new(0.25).kept_count(n)),
+         "stateless magnitude top-k");
+    push("SparseEF 25%", bitmap(SparseEfCodec::new(0.25).kept_count(n)),
+         "same wire as TopK + residual carry");
+    // SVT: the kept rank prices the broadcast.
+    for k in [8usize, 16, 32] {
+        let spec = resnet8(Variant::LoraFc, k);
+        push(&format!("SVT rank {k}"),
+             spec.num_trainable() as f64 * 4.0,
+             if k == 32 { "τ = 1.0 (no truncation)" }
+             else { "energy-thresholded broadcast" });
+    }
+
+    (
+        TableOut {
+            title: "Aggregation zoo — per-round message bytes, ResNet-8 r=32"
+                .into(),
+            header: vec!["Method".into(), "Msg".into(), "Ratio".into(),
+                         "Notes".into()],
+            rows,
+        },
+        pairs,
+    )
+}
+
 /// Fig. 2 x-axis: trained parameters per rank (exact).
 pub fn fig2_param_axis() -> Vec<(usize, usize)> {
     [8usize, 16, 32, 64, 128]
@@ -282,6 +336,28 @@ mod tests {
             assert!((ours - paper_mb).abs() / paper_mb < 0.15,
                     "{label}: {ours} vs {paper_mb}");
         }
+    }
+
+    #[test]
+    fn table_zoo_prices_the_bytes_axis() {
+        let (t, pairs) = table_zoo();
+        assert_eq!(t.rows.len(), pairs.len());
+        let get = |l: &str| pairs.iter().find(|(p, _)| p == l).unwrap().1;
+        // Sparse-EF changes payload contents, never payload size.
+        assert_eq!(get("SparseEF 25%"), get("TopK 25%"));
+        // Every truncating row beats the FP32 baseline (SVT at τ = 1.0
+        // is deliberately the identity).
+        let fp = get("FP32");
+        for (label, bytes) in &pairs {
+            if label != "FP32" && label != "SVT rank 32" {
+                assert!(*bytes < fp, "{label}: {bytes} >= {fp}");
+            }
+        }
+        // SVT broadcast bytes grow monotonically with the kept rank,
+        // and τ = 1.0 (rank 32) prices as the untruncated adapter.
+        assert!(get("SVT rank 8") < get("SVT rank 16"));
+        assert!(get("SVT rank 16") < get("SVT rank 32"));
+        assert_eq!(get("SVT rank 32"), fp);
     }
 
     #[test]

@@ -56,7 +56,10 @@ fn print_usage() {
          \x20 train         run a federated simulation\n\
          \x20               [--config FILE] [--preset NAME] [--csv OUT]\n\
          \x20               [--json OUT] [--tag T] [--rounds N]\n\
-         \x20               [--codec fp32|q8|q4|q2|topk:K|zerofl:SP:MR]\n\
+         \x20               [--codec fp32|q8|q4|q2|topk:K|zerofl:SP:MR\n\
+         \x20               |sparse_ef:K]\n\
+         \x20               [--aggregator fedavg|svt|exact]\n\
+         \x20               [--svt_energy TAU]\n\
          \x20               [--executor serial|parallel] [--threads N]\n\
          \x20               [--window N] [--overlap none|transfer]\n\
          \x20               [--network edge_lte|wifi]\n\
@@ -70,7 +73,9 @@ fn print_usage() {
          \x20               [--hetero_ranks 2,4,8] [--hetero_codecs ...] ...\n\
          \x20               (--artifacts synthetic runs the PJRT-free\n\
          \x20               surrogate backend — what CI's sim-smoke uses)\n\
-         \x20 tables        print analytic Table I/III/IV vs the paper\n\
+         \x20 tables        print analytic Table I/III/IV + the\n\
+         \x20               aggregation-zoo bytes table\n\
+         \x20               [--table all|1|2|3|4|zoo]\n\
          \x20 inspect       list artifact manifest\n\
          \x20 quant-parity  rust codec vs pallas HLO oracle\n\
          \x20 bench-step    time the PJRT train step [--tag T] [--steps N]"
@@ -94,7 +99,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
             Error::invalid(format!(
                 "unknown preset `{name}` (paper_resnet8|paper_resnet18|\
                  scaled_micro|scaled_tiny|hetero_micro|straggler_micro|\
-                 event_micro)"
+                 event_micro|svt_micro|sparse_ef_micro)"
             ))
         })?,
         None => FlConfig::default(),
@@ -129,10 +134,11 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         )
     };
     println!(
-        "run: tag={} codec={} clients={} ({}/round) rounds={} epochs={} \
-         lr={} alpha={} lda={} seed={} executor={} threads={} window={} \
-         overlap={} network={}:{} sampler={} profiles={}{}{}",
-        cfg.tag, cfg.codec.label(), cfg.num_clients, cfg.clients_per_round,
+        "run: tag={} codec={} aggregator={} clients={} ({}/round) rounds={} \
+         epochs={} lr={} alpha={} lda={} seed={} executor={} threads={} \
+         window={} overlap={} network={}:{} sampler={} profiles={}{}{}",
+        cfg.tag, cfg.codec.label(), cfg.aggregator.label(),
+        cfg.num_clients, cfg.clients_per_round,
         cfg.rounds, cfg.local_epochs, cfg.lr, cfg.lora_alpha, cfg.lda_alpha,
         cfg.seed, cfg.executor.label(),
         if cfg.threads == 0 { "auto".to_string() }
@@ -176,6 +182,14 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         summary.cancelled_clients, sim.dropped_clients,
         summary.sim_client_p50_s, summary.sim_client_max_s
     );
+    if sim.config().aggregator != flocora::coordinator::AggregatorKind::FedAvg
+    {
+        println!(
+            "aggregation: {} mean effective rank {:.2} over {} rounds",
+            sim.config().aggregator.label(), summary.mean_eff_rank,
+            summary.rounds
+        );
+    }
     if sim.config().time_model == TimeModelKind::Event {
         println!(
             "event model ({} kB chunks, queue {}): {:.1}s simulated \
@@ -223,6 +237,10 @@ fn cmd_tables(args: &Args) -> Result<()> {
     }
     if which == "all" || which == "4" {
         print!("{}", tables::table4_sizes().0.render());
+        println!();
+    }
+    if which == "all" || which == "zoo" {
+        print!("{}", tables::table_zoo().0.render());
         println!();
     }
     if which == "all" || which == "2" {

@@ -50,6 +50,11 @@ pub struct RoundRecord {
     /// Simulated producer-blocked time on full stage queues in the
     /// covered rounds; sums to `RunSummary::queue_block_s`.
     pub queue_block_s: f64,
+    /// Mean effective adapter rank the server broadcast over the
+    /// covered rounds (static server rank under `aggregator = fedavg`,
+    /// the energy-kept rank under `svt`; 0.0 when no round aggregated
+    /// or the layout has no adapter pairs).
+    pub eff_rank: f64,
     pub wall_ms: f64,
 }
 
@@ -95,20 +100,22 @@ impl Recorder {
     }
 
     pub fn to_csv(&self) -> String {
+        // `wall_ms` must stay the last column: CI's cross-executor CSV
+        // diffs strip it positionally (`rev | cut -d, -f2- | rev`).
         let mut out = String::from(
             "round,test_acc,test_loss,train_loss,cum_bytes,dropped,\
              cancelled,client_p50_s,client_max_s,sim_net_pipelined_s,\
              transfer_wait_s,sim_net_event_s,queue_peak,queue_block_s,\
-             wall_ms\n",
+             eff_rank,wall_ms\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
                 "{},{:.4},{:.4},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},\
-                 {:.4},{},{:.4},{:.1}\n",
+                 {:.4},{},{:.4},{:.4},{:.1}\n",
                 r.round, r.test_acc, r.test_loss, r.train_loss, r.cum_bytes,
                 r.dropped, r.cancelled, r.client_p50_s, r.client_max_s,
                 r.sim_net_pipelined_s, r.transfer_wait_s, r.sim_net_event_s,
-                r.queue_peak, r.queue_block_s, r.wall_ms
+                r.queue_peak, r.queue_block_s, r.eff_rank, r.wall_ms
             ));
         }
         out
@@ -143,6 +150,7 @@ impl Recorder {
                             ("sim_net_event_s", fnum(r.sim_net_event_s)),
                             ("queue_peak", num(r.queue_peak as f64)),
                             ("queue_block_s", fnum(r.queue_block_s)),
+                            ("eff_rank", fnum(r.eff_rank)),
                             ("wall_ms", fnum(r.wall_ms)),
                         ])
                     })
@@ -192,6 +200,7 @@ pub fn run_json(rec: &Recorder, summary: &RunSummary, dropped: u64) -> Json {
                 ("dropped_clients", num(dropped as f64)),
                 ("sim_client_p50_s", fnum(summary.sim_client_p50_s)),
                 ("sim_client_max_s", fnum(summary.sim_client_max_s)),
+                ("mean_eff_rank", fnum(summary.mean_eff_rank)),
                 ("wall_s", fnum(summary.wall_s)),
             ]),
         ),
@@ -257,6 +266,7 @@ mod tests {
                 sim_net_event_s: 0.3 * i as f64,
                 queue_peak: i,
                 queue_block_s: 0.125,
+                eff_rank: 4.0,
                 wall_ms: 1.0,
             });
         }
@@ -343,6 +353,26 @@ mod tests {
         assert_eq!(
             rounds[1].at(&["queue_block_s"]).unwrap().as_f64().unwrap(),
             0.125
+        );
+    }
+
+    #[test]
+    fn eff_rank_column_sits_before_wall_ms() {
+        // CI strips the wall column positionally (`rev | cut -d, -f2- |
+        // rev`), so `wall_ms` must stay last and `eff_rank` just before.
+        let csv = rec().to_csv();
+        let header: Vec<&str> = csv.lines().next().unwrap().split(',')
+            .map(str::trim).collect();
+        assert_eq!(header[header.len() - 1], "wall_ms");
+        assert_eq!(header[header.len() - 2], "eff_rank");
+        let row: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row[row.len() - 2], "4.0000");
+        let j = rec().to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let rounds = parsed.at(&["rounds"]).unwrap().as_arr().unwrap();
+        assert_eq!(
+            rounds[0].at(&["eff_rank"]).unwrap().as_f64().unwrap(),
+            4.0
         );
     }
 

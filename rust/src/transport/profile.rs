@@ -464,6 +464,73 @@ mod tests {
     }
 
     #[test]
+    fn overlapping_ranges_pin_later_wins() {
+        // Overlap is legal and documented: later lines override earlier
+        // ones for every cid they share, and only for those.
+        let table = ClientProfiles::parse_table(
+            "0-5 = 2.0, 2.0, 2.0\n\
+             3-7 = 9.0, 9.0, 9.0\n\
+             5 = 1.0, 1.0, 1.0\n",
+            10,
+            0.25,
+        )
+        .unwrap();
+        for cid in 0..3 {
+            assert_eq!(table.get(cid).up_mult, 2.0, "cid {cid}");
+        }
+        for cid in [3, 4, 6, 7] {
+            assert_eq!(table.get(cid).up_mult, 9.0, "cid {cid}");
+        }
+        assert_eq!(*table.get(5), ClientProfile::UNIT);
+        assert_eq!(*table.get(8), ClientProfile::UNIT);
+    }
+
+    #[test]
+    fn empty_table_file_is_all_unit_profiles() {
+        // An empty file (or one that is only comments/sections) is not
+        // an error: every client stays at the unit profile and the
+        // compute base still applies.
+        for text in ["", "\n\n", "# nothing here\n[profiles]\n"] {
+            let table =
+                ClientProfiles::parse_table(text, 4, 0.75).unwrap();
+            assert_eq!(table.len(), 4);
+            for cid in 0..4 {
+                assert_eq!(*table.get(cid), ClientProfile::UNIT,
+                           "{text:?} cid {cid}");
+                assert!((table.compute_s(cid) - 0.75).abs() < 1e-12);
+            }
+        }
+        // Zero clients is degenerate but well-defined.
+        assert_eq!(ClientProfiles::parse_table("", 0, 0.25).unwrap().len(),
+                   0);
+    }
+
+    #[test]
+    fn trailing_garbage_after_a_valid_line_is_an_error() {
+        // Anything after the three multipliers that is not a `#`
+        // comment must fail loudly, with the offending line number —
+        // silent acceptance would hide typos like a forgotten comma.
+        let cases = [
+            ("0-2 = 1, 1, 1 extra", "bad multipliers"),
+            ("0-2 = 1, 1, 1,", "bad multipliers"),
+            ("0-2 = 1, 1, 1, 1", "expected 3 multipliers"),
+            ("0-2 = 1, 1, 1 = 2", "bad multipliers"),
+        ];
+        for (line, needle) in cases {
+            let text = format!("0-1 = 1, 1, 1\n{line}\n");
+            let err = ClientProfiles::parse_table(&text, 8, 0.25)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("line 2"), "{line}: {err}");
+            assert!(err.contains(needle), "{line}: {err}");
+        }
+        // The same garbage behind a comment marker is fine.
+        let ok = ClientProfiles::parse_table(
+            "0-2 = 1, 1, 1 # extra\n", 8, 0.25);
+        assert!(ok.is_ok());
+    }
+
+    #[test]
     fn uniform_table_matches_bare_network_model() {
         let net = NetworkModel::edge_lte();
         let table = ClientProfiles::uniform(8);

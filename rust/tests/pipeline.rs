@@ -377,7 +377,7 @@ fn json_export_round_trips_every_field() {
         "sim_net_serial_s", "sim_net_parallel_s", "sim_net_pipelined_s",
         "transfer_wait_s", "sim_net_event_s", "queue_peak",
         "queue_block_s", "cancelled_clients", "dropped_clients",
-        "sim_client_p50_s", "sim_client_max_s", "wall_s",
+        "sim_client_p50_s", "sim_client_max_s", "mean_eff_rank", "wall_s",
     ];
     for key in expect_summary {
         assert!(summary_keys.contains(&key), "summary lost `{key}`");
@@ -395,7 +395,7 @@ fn json_export_round_trips_every_field() {
         "round", "test_acc", "test_loss", "train_loss", "cum_bytes",
         "dropped", "cancelled", "client_p50_s", "client_max_s",
         "sim_net_pipelined_s", "transfer_wait_s", "sim_net_event_s",
-        "queue_peak", "queue_block_s", "wall_ms",
+        "queue_peak", "queue_block_s", "eff_rank", "wall_ms",
     ];
     for key in expect_round {
         assert!(round_keys.contains(&key), "round record lost `{key}`");
