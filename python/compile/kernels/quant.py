@@ -2,11 +2,13 @@
 
 Implements the paper's §IV quantization scheme (after Nagel et al. [22]):
 per-row (— "per channel" for convs, "per column" for the FC, once the
-tensor is reshaped to (rows, cols)) asymmetric affine quantization
+tensor is reshaped to (rows, cols)) asymmetric affine quantization over
+the *true* row range (no zero-anchoring — an all-positive or
+all-negative row uses its own [min, max], not [min(min,0), max(max,0)]):
 
     scale = (max - min) / (2^bits - 1)
-    zp    = clip(floor(-min / scale + 0.5), 0, 2^bits - 1)
-    q     = clip(floor(w / scale + 0.5) + zp, 0, 2^bits - 1)
+    zp    = -min / scale            # real-valued, travels as f32
+    q     = clip(floor((w - min) / scale + 0.5), 0, 2^bits - 1)
     deq   = (q - zp) * scale
 
 Rounding is *floor(x + 0.5)* (round-half-up), chosen deliberately so the
@@ -33,17 +35,17 @@ def _quant_kernel(w_ref, o_ref, scale_ref, zp_ref, *, bits: int):
     """One block of rows.  Row-wise min/max reductions stay in VMEM."""
     w = w_ref[...]
     qmax = float(2 ** bits - 1)
-    # Extend the row range to include 0 (Nagel et al. [22]): keeps the
-    # zero-point inside [0, qmax] so the grid never shifts and the RTN
-    # error stays bounded by scale/2.
-    wmin = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
-    wmax = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    # True row range: seeding with the row's own min/max (not 0) keeps
+    # the grid tight for one-sided rows; the real-valued zero point
+    # shifts the grid so RTN error stays bounded by scale/2.
+    wmin = jnp.min(w, axis=1, keepdims=True)
+    wmax = jnp.max(w, axis=1, keepdims=True)
     rng = wmax - wmin
-    # Degenerate all-zero rows: scale would be 0/0; use 1.0 (the row
-    # quantizes to q == zp == 0 and dequantizes to exactly 0).
+    # Degenerate constant rows: scale would be 0/0; use 1.0 (the row
+    # quantizes to q == 0, zp == -min, and dequantizes exactly).
     scale = jnp.where(rng > 0, rng / qmax, jnp.ones_like(rng))
-    zp = jnp.clip(_round_half_up(-wmin / scale), 0.0, qmax)
-    q = jnp.clip(_round_half_up(w / scale) + zp, 0.0, qmax)
+    zp = -wmin / scale
+    q = jnp.clip(_round_half_up((w - wmin) / scale), 0.0, qmax)
     o_ref[...] = (q - zp) * scale
     scale_ref[...] = scale
     zp_ref[...] = zp

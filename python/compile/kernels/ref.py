@@ -16,12 +16,13 @@ def matmul_ref(x, y):
 
 def fake_quant_ref(w, bits):
     """Affine RTN fake-quant, row-wise; mirrors kernels/quant.py exactly
-    (floor(x+0.5) rounding, degenerate-row scale := 1.0)."""
+    (true row range, real-valued zero point, floor(x+0.5) rounding,
+    degenerate-row scale := 1.0)."""
     qmax = float(2 ** bits - 1)
-    wmin = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
-    wmax = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    wmin = jnp.min(w, axis=1, keepdims=True)
+    wmax = jnp.max(w, axis=1, keepdims=True)
     rng = wmax - wmin
     scale = jnp.where(rng > 0, rng / qmax, jnp.ones_like(rng))
-    zp = jnp.clip(jnp.floor(-wmin / scale + 0.5), 0.0, qmax)
-    q = jnp.clip(jnp.floor(w / scale + 0.5) + zp, 0.0, qmax)
+    zp = -wmin / scale
+    q = jnp.clip(jnp.floor((w - wmin) / scale + 0.5), 0.0, qmax)
     return (q - zp) * scale, scale, zp

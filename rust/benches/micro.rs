@@ -2,6 +2,13 @@
 //! FedAvg accumulation, data generation, and the PJRT train-step
 //! round trip. These are the numbers the §Perf log in EXPERIMENTS.md
 //! tracks before/after optimization.
+//!
+//! The "kernels" section is the before/after harness for the chunked
+//! hot-loop kernels (`flocora::kernels`): every kernel is timed against
+//! its retained scalar `_ref` twin on paper-scale geometry, and with
+//! `FLOCORA_BENCH_JSON=<path>` the run emits the `BENCH_hotpaths.json`
+//! trajectory file (ns/elem + speedup per kernel, round wall-time per
+//! preset) that the CI `perf-smoke` job uploads and ratio-gates.
 
 use flocora::compression::{AffineCodec, Codec, Fp32Codec, TopKCodec,
                            ZeroFlCodec};
@@ -9,16 +16,46 @@ use flocora::config::FlConfig;
 use flocora::coordinator::aggregator::FedAvg;
 use flocora::coordinator::{ExecutorKind, Simulation};
 use flocora::data::{gen_image, lda_partition};
+use flocora::kernels;
 use flocora::model::{build_spec, ModelCfg, Variant};
 use flocora::runtime::{Batch, Engine};
 use flocora::tensor;
 use flocora::transport::{simulate_round, ClientLoad, ClientProfiles,
                          NetworkModel, RoundLoad, SimParams};
-use flocora::util::benchkit::{bench, env_usize, header};
+use flocora::util::benchkit::{bench, env_usize, header, BenchStats};
+use flocora::util::json::{self, Json};
 use flocora::util::rng::Rng;
+
+/// One before/after row: the scalar reference vs the chunked kernel on
+/// the same data, printed as a table line and returned as the JSON
+/// entry `BENCH_hotpaths.json` pins (ns/elem both ways + the ratio).
+fn kernel_row(name: &str, geometry: &str, n: usize, scalar: &BenchStats,
+              kernel: &BenchStats) -> Json {
+    let sn = scalar.mean_s * 1e9 / n as f64;
+    let kn = kernel.mean_s * 1e9 / n as f64;
+    let speedup = scalar.mean_s / kernel.mean_s;
+    println!("{name:<24} {n:>9} {sn:>14.3} {kn:>14.3} {speedup:>9.2}x");
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("geometry", json::s(geometry)),
+        ("n", json::num(n as f64)),
+        ("scalar_ns_per_elem", json::num(sn)),
+        ("kernel_ns_per_elem", json::num(kn)),
+        ("speedup", json::num(speedup)),
+    ])
+}
+
+fn round_entry(preset: &str, mean_s: f64) -> Json {
+    json::obj(vec![
+        ("preset", json::s(preset)),
+        ("mean_s", json::num(mean_s)),
+    ])
+}
 
 fn main() {
     println!("{}", header());
+    let mut kernel_entries: Vec<Json> = Vec::new();
+    let mut round_entries: Vec<Json> = Vec::new();
 
     // ---- codecs on the real ResNet-8 r=32 adapter layout ---------------
     let spec = build_spec(ModelCfg::by_name("resnet8").unwrap(),
@@ -56,6 +93,173 @@ fn main() {
     let st = bench("zerofl 0.9/0.2 encode (258K)", 3, 30,
                    || { std::hint::black_box(zf.encode(&v, &[]).unwrap()); });
     println!("{}", st.row());
+
+    // ---- kernels: scalar reference vs 8-lane chunked --------------------
+    // Paper-scale geometry: the ResNet-8 r=32 adapter vector (~258K
+    // f32) for the element-wise loops, the ResNet-18 r=32→r=16 rank
+    // projection for the row gather, 1000 concurrent flows for
+    // water-filling. tests/properties.rs pins every pair bit-identical;
+    // this section prices them and feeds BENCH_hotpaths.json.
+    {
+        println!();
+        println!("{:<24} {:>9} {:>14} {:>14} {:>10}",
+                 "kernel", "n", "scalar ns/el", "kernel ns/el", "speedup");
+        let it = env_usize("FLOCORA_BENCH_KERNEL_ITERS", 40);
+        let g8 = "resnet8 lora_fc r32 adapter";
+
+        // Row-range scan (the affine encode min/max pass).
+        let sr = bench("minmax_ref", 3, it,
+                       || { std::hint::black_box(kernels::minmax_ref(&v)); });
+        let kr = bench("minmax", 3, it,
+                       || { std::hint::black_box(kernels::minmax(&v)); });
+        kernel_entries.push(kernel_row("minmax", g8, n, &sr, &kr));
+
+        // Quantize to q8 codes.
+        let (lo, hi) = kernels::minmax(&v);
+        let scale = ((hi - lo) / 255.0).max(1e-12);
+        let mut codes_vec: Vec<u8> = Vec::with_capacity(n);
+        let sr = bench("quant_ref", 3, it, || {
+            codes_vec.clear();
+            kernels::quant_codes_ref(&v, lo, scale, 255.0, &mut codes_vec);
+            std::hint::black_box(codes_vec.len());
+        });
+        let mut codes = vec![0u8; n];
+        let kr = bench("quant", 3, it, || {
+            kernels::quant_codes(&v, lo, scale, 255.0, &mut codes);
+            std::hint::black_box(codes[0]);
+        });
+        kernel_entries.push(kernel_row("quant_q8", g8, n, &sr, &kr));
+
+        // Dequantize.
+        let zp = -lo / scale;
+        let mut dst = vec![0.0f32; n];
+        let sr = bench("dequant_ref", 3, it, || {
+            kernels::dequant_ref(&codes, scale, zp, &mut dst);
+            std::hint::black_box(dst[0]);
+        });
+        let kr = bench("dequant", 3, it, || {
+            kernels::dequant(&codes, scale, zp, &mut dst);
+            std::hint::black_box(dst[0]);
+        });
+        kernel_entries.push(kernel_row("dequant_q8", g8, n, &sr, &kr));
+
+        // Zero-copy merge fold: dequantize straight into the FedAvg
+        // accumulator vs materialize-then-add (the pre-kernel path).
+        let mut acc = vec![0.0f32; n];
+        let sr = bench("decode_then_add", 3, it, || {
+            kernels::dequant_ref(&codes, scale, zp, &mut dst);
+            kernels::axpy_ref(&mut acc, &dst, 0.125);
+            std::hint::black_box(acc[0]);
+        });
+        let kr = bench("dequant_axpy", 3, it, || {
+            kernels::dequant_axpy(&codes, scale, zp, 0.125, &mut acc);
+            std::hint::black_box(acc[0]);
+        });
+        kernel_entries.push(kernel_row("dequant_axpy", g8, n, &sr, &kr));
+
+        // FedAvg weighted fold.
+        let sr = bench("axpy_ref", 3, it, || {
+            kernels::axpy_ref(&mut acc, &v, 0.125);
+            std::hint::black_box(acc[0]);
+        });
+        let kr = bench("axpy", 3, it, || {
+            kernels::axpy(&mut acc, &v, 0.125);
+            std::hint::black_box(acc[0]);
+        });
+        kernel_entries.push(kernel_row("axpy", g8, n, &sr, &kr));
+
+        // fp32 wire fold: little-endian payload straight into the
+        // accumulator vs decoding a temporary f32 vector first.
+        let bytes: Vec<u8> =
+            v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let sr = bench("le_decode_then_add", 3, it, || {
+            let tmp: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            kernels::axpy_ref(&mut acc, &tmp, 0.125);
+            std::hint::black_box(acc[0]);
+        });
+        let kr = bench("axpy_from_le", 3, it, || {
+            kernels::axpy_from_le(&bytes, 0.125, &mut acc);
+            std::hint::black_box(acc[0]);
+        });
+        kernel_entries.push(kernel_row("axpy_from_le", g8, n, &sr, &kr));
+
+        // q4 bit-packing, both directions.
+        let codes4: Vec<u8> = codes.iter().map(|c| c >> 4).collect();
+        let mut packed = vec![0u8; kernels::packed_len(n, 4)];
+        let sr = bench("pack_ref q4", 3, it, || {
+            kernels::pack_ref(&codes4, 4, &mut packed);
+            std::hint::black_box(packed[0]);
+        });
+        let kr = bench("pack q4", 3, it, || {
+            kernels::pack_into(&codes4, 4, &mut packed);
+            std::hint::black_box(packed[0]);
+        });
+        kernel_entries.push(kernel_row("pack_q4", g8, n, &sr, &kr));
+
+        let mut unpacked = vec![0u8; n];
+        let sr = bench("unpack_ref q4", 3, it, || {
+            kernels::unpack_ref(&packed, 4, &mut unpacked);
+            std::hint::black_box(unpacked[0]);
+        });
+        let kr = bench("unpack q4", 3, it, || {
+            kernels::unpack_into(&packed, 4, &mut unpacked);
+            std::hint::black_box(unpacked[0]);
+        });
+        kernel_entries.push(kernel_row("unpack_q4", g8, n, &sr, &kr));
+
+        // Top-k magnitude selection (20% sparse upload).
+        let k = n / 5;
+        let tk_it = env_usize("FLOCORA_BENCH_TOPK_ITERS", 20);
+        let sr = bench("topk_ref", 2, tk_it, || {
+            std::hint::black_box(kernels::topk_indices_ref(&v, k).len());
+        });
+        let kr = bench("topk", 2, tk_it, || {
+            std::hint::black_box(kernels::topk_indices(&v, k).len());
+        });
+        kernel_entries.push(kernel_row("topk_20pct", g8, n, &sr, &kr));
+
+        // Hetero rank projection: ResNet-18 r=32 server rows sliced
+        // down to an r=16 client (the rank-minor gather).
+        let s18 = build_spec(ModelCfg::by_name("resnet18").unwrap(),
+                             Variant::LoraFc, 32);
+        let outer = s18.num_trainable() / 32;
+        let src: Vec<f32> = (0..outer * 32).map(|i| i as f32).collect();
+        let mut proj = vec![0.0f32; outer * 16];
+        let gn = outer * 16;
+        let sr = bench("gather_rows_ref", 3, it, || {
+            kernels::gather_rows_ref(&src, 32, &mut proj, 16, 16);
+            std::hint::black_box(proj[0]);
+        });
+        let kr = bench("gather_rows", 3, it, || {
+            kernels::gather_rows(&src, 32, &mut proj, 16, 16);
+            std::hint::black_box(proj[0]);
+        });
+        kernel_entries.push(kernel_row("gather_rows_r32_to_r16",
+                                       "resnet18 lora_fc r32->r16",
+                                       gn, &sr, &kr));
+
+        // Max-min water-filling over 1000 concurrent flows (the
+        // per-event rate recompute in the network simulator).
+        let mut wrng = Rng::new(11);
+        let caps: Vec<f64> =
+            (0..1000).map(|_| 0.0005 + 0.01 * wrng.f64()).collect();
+        let mut rates = vec![0.0f64; 1000];
+        let mut scratch: Vec<u32> = Vec::new();
+        let sr = bench("waterfill_ref", 3, it, || {
+            kernels::waterfill_ref(&caps, &mut rates);
+            std::hint::black_box(rates[0]);
+        });
+        let kr = bench("waterfill", 3, it, || {
+            kernels::waterfill(&caps, &mut rates, &mut scratch);
+            std::hint::black_box(rates[0]);
+        });
+        kernel_entries.push(kernel_row("waterfill_1000", "1000 flows",
+                                       1000, &sr, &kr));
+        println!();
+    }
 
     // ---- aggregation ----------------------------------------------------
     let st = bench("fedavg add (258K params)", 3, 100, || {
@@ -121,10 +325,12 @@ fn main() {
         });
         println!("{}", st.row());
         let closed_mean = st.mean_s;
-        for (label, params) in [
-            ("event sim, 1000 clients, 256 kB chunks",
+        for (key, label, params) in [
+            ("event_sim_1000c_256kb",
+             "event sim, 1000 clients, 256 kB chunks",
              SimParams { chunk_kb: 256, stage_queue: 4 }),
-            ("event sim, 1000 clients, 64 kB chunks",
+            ("event_sim_1000c_64kb",
+             "event sim, 1000 clients, 64 kB chunks",
              SimParams { chunk_kb: 64, stage_queue: 4 }),
         ] {
             let st = bench(label, 2, 10, || {
@@ -134,11 +340,19 @@ fn main() {
             });
             println!("{}   ({:.0}x closed forms)", st.row(),
                      st.mean_s / closed_mean);
+            round_entries.push(round_entry(key, st.mean_s));
         }
     }
 
     // ---- PJRT train-step round trip (the L2/L1 hot path) ----------------
-    let engine = Engine::new("artifacts").expect("make artifacts");
+    // Falls back to the artifact-free synthetic engine when artifacts/
+    // is absent (CI perf-smoke runs without PJRT artifacts); the rows
+    // then price the surrogate, which is what the FL-round presets
+    // below exercise anyway.
+    let engine = Engine::new("artifacts").unwrap_or_else(|_| {
+        println!("(artifacts/ unavailable — synthetic engine fallback)");
+        Engine::synthetic()
+    });
     for tag in ["micro8_lora_fc_r4", "micro8_full", "tiny8_lora_fc_r8"] {
         let session = engine.session(tag).expect("session");
         let s = &session.spec;
@@ -189,10 +403,13 @@ fn main() {
             ExecutorKind::Serial => {
                 serial_mean = st.mean_s;
                 println!("{}", st.row());
+                round_entries.push(round_entry("fl_round_serial", st.mean_s));
             }
             ExecutorKind::Parallel => {
                 println!("{}   ({:.2}x vs serial)", st.row(),
                          serial_mean / st.mean_s);
+                round_entries
+                    .push(round_entry("fl_round_parallel", st.mean_s));
             }
         }
     }
@@ -205,6 +422,7 @@ fn main() {
     let st = bench("fl round, 8 clients, window=2", 1, iters,
                    || { sim.round().unwrap(); });
     println!("{}   ({:.2}x vs serial)", st.row(), serial_mean / st.mean_s);
+    round_entries.push(round_entry("fl_round_window2", st.mean_s));
 
     // Straggler regime: tiered link/compute profiles + oversampled
     // sampling (K·(1+β) drawn, late clients cancelled before they
@@ -220,6 +438,7 @@ fn main() {
                    || { sim.round().unwrap(); });
     println!("{}   ({} cancelled so far)", st.row(),
              sim.cancelled_clients);
+    round_entries.push(round_entry("fl_round_straggler", st.mean_s));
 
     // Transfer overlap: same preset, codec work moved onto the
     // transport threads (`overlap = transfer`). Bits are identical to
@@ -230,5 +449,22 @@ fn main() {
     let st = bench("fl round, straggler preset (overlap=transfer)", 1,
                    iters, || { sim.round().unwrap(); });
     println!("{}", st.row());
+    round_entries.push(round_entry("fl_round_straggler_overlap", st.mean_s));
+
+    // ---- BENCH_hotpaths.json --------------------------------------------
+    // Written when FLOCORA_BENCH_JSON names a path (the CI perf-smoke
+    // job sets it). The committed copy at the repo root is the baseline
+    // the CI ratio gate compares fresh runs against — speedup ratios,
+    // not wall times, so shared-runner noise cancels out.
+    if let Ok(path) = std::env::var("FLOCORA_BENCH_JSON") {
+        let doc = json::obj(vec![
+            ("schema", json::s("flocora-bench-hotpaths-v1")),
+            ("kernels", json::arr(kernel_entries)),
+            ("rounds", json::arr(round_entries)),
+        ]);
+        std::fs::write(&path, doc.to_string() + "\n")
+            .expect("write FLOCORA_BENCH_JSON");
+        println!("wrote {path}");
+    }
     println!("\nmicro bench OK");
 }

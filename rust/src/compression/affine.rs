@@ -2,12 +2,23 @@
 //! with the L1 pallas kernel (`python/compile/kernels/quant.py`):
 //!
 //! ```text
-//! lo = min(min(w), 0);  hi = max(max(w), 0)     (range includes 0)
+//! lo = min(w);  hi = max(w)                 (true per-row range)
 //! scale = (hi - lo) / (2^bits - 1)          (1.0 if the row is constant)
-//! zp    = clip(floor(-min / scale + 0.5), 0, 2^bits - 1)
-//! q     = clip(floor(w / scale + 0.5) + zp, 0, 2^bits - 1)
+//! zp    = -lo / scale                       (real-valued, f32 on the wire)
+//! q     = clip(floor((w - lo) / scale + 0.5), 0, 2^bits - 1)
 //! deq   = (q - zp) * scale
 //! ```
+//!
+//! The range is the row's *actual* min/max — an earlier revision
+//! anchored it at 0 (`min(min(w), 0)`, `max(max(w), 0)`), which
+//! inflated the quantization step for every all-positive or
+//! all-negative row (e.g. a row in `[10.0, 10.6]` paid a step sized
+//! for `[0, 10.6]`). With the true range the zero-point is fractional,
+//! so it travels as plain f32 (it always did on the wire) instead of
+//! being rounded into the grid, and the RTN error stays `<= scale/2`
+//! for every row: `(w - lo)/scale` lands in `[0, qmax]` by
+//! construction, so the clip never bites. Constant rows round-trip
+//! exactly (`scale = 1`, `zp = -lo`, `q = 0`).
 //!
 //! Grouping follows the paper: per *channel* for conv-shaped tensors,
 //! per *column* for the FC (both expressed as `Segment::quant_rows` —
@@ -15,17 +26,21 @@
 //! layers (`quant_rows == None`) travel in fp32.
 //!
 //! Wire format, per segment, in layout order:
-//! * quantized segment: `[scale f32 x rows][zp u8/u16-packed? no — f32 x rows][codes packed bits]`
-//!   (scales and zero-points in f32, exactly the overhead the paper
-//!   says it includes in its TCC numbers)
+//! * quantized segment: `[scales f32 x rows][zps f32 x rows][codes
+//!   packed bits]` (scales and zero-points in f32, exactly the
+//!   overhead the paper says it includes in its TCC numbers)
 //! * fp segment: raw f32 little-endian.
 //!
-//! An `Engine::quant_oracle` integration test asserts
-//! `decode(encode(x)) == HLO fake_quant(x)` to float tolerance.
+//! The per-row loops (range scan, code mapping, dequantize, and the
+//! fused dequantize-accumulate behind [`Codec::decode_into`]) live in
+//! [`crate::kernels`]. An `Engine::quant_oracle` integration test
+//! asserts `decode(encode(x)) == HLO fake_quant(x)` to float
+//! tolerance.
 
-use crate::compression::pack::{pack, packed_len, unpack};
-use crate::compression::{Codec, Message};
+use crate::compression::pack::packed_len;
+use crate::compression::{check_fold_dim, Codec, Message};
 use crate::error::{Error, Result};
+use crate::kernels;
 use crate::model::Segment;
 
 pub struct AffineCodec {
@@ -41,26 +56,23 @@ impl AffineCodec {
     fn qmax(&self) -> f32 {
         ((1u32 << self.bits) - 1) as f32
     }
+}
 
-    /// Quantize one row; returns (scale, zp) and appends codes.
-    fn quant_row(&self, row: &[f32], codes: &mut Vec<u8>) -> (f32, f32) {
-        let qmax = self.qmax();
-        // Range extended to include 0 (Nagel et al. [22]) so the
-        // zero-point never clamps and RTN error stays <= scale/2.
-        let mut lo = 0.0f32;
-        let mut hi = 0.0f32;
-        for &v in row {
-            lo = lo.min(v);
-            hi = hi.max(v);
-        }
-        let rng = hi - lo;
-        let scale = if rng > 0.0 { rng / qmax } else { 1.0 };
-        let zp = (-lo / scale + 0.5).floor().clamp(0.0, qmax);
-        for &v in row {
-            let q = ((v / scale + 0.5).floor() + zp).clamp(0.0, qmax);
-            codes.push(q as u8);
-        }
-        (scale, zp)
+/// Per-row affine parameters from the row's true range: `(scale, zp)`
+/// with `scale = (hi - lo)/qmax` (1.0 for constant or empty rows) and
+/// the real-valued zero-point `zp = -lo/scale`.
+fn row_params(lo: f32, hi: f32, qmax: f32) -> (f32, f32) {
+    let rng = hi - lo;
+    if rng > 0.0 {
+        let scale = rng / qmax;
+        (scale, -lo / scale)
+    } else if lo.is_finite() {
+        // Constant row: any value is exactly representable as code 0.
+        (1.0, -lo)
+    } else {
+        // Empty row (minmax returned the +/-inf seeds): nothing to
+        // encode, keep the wire parameters finite.
+        (1.0, 0.0)
     }
 }
 
@@ -90,6 +102,33 @@ fn check_quant_rows(seg: &Segment, rows: usize, dir: &str) -> Result<()> {
     Ok(())
 }
 
+/// Read one little-endian f32, advancing `pos`.
+fn rd_f32(b: &[u8], pos: &mut usize) -> Result<f32> {
+    if *pos + 4 > b.len() {
+        return Err(Error::parse("affine decode: truncated payload"));
+    }
+    let v = f32::from_le_bytes(b[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+/// Per-quantized-segment header: scales then zero-points, f32 each.
+fn rd_row_params(
+    b: &[u8],
+    pos: &mut usize,
+    rows: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut scales = Vec::with_capacity(rows);
+    let mut zps = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        scales.push(rd_f32(b, pos)?);
+    }
+    for _ in 0..rows {
+        zps.push(rd_f32(b, pos)?);
+    }
+    Ok((scales, zps))
+}
+
 impl Codec for AffineCodec {
     fn name(&self) -> String {
         format!("q{}", self.bits)
@@ -104,7 +143,9 @@ impl Codec for AffineCodec {
                 v.len()
             )));
         }
+        let qmax = self.qmax();
         let mut payload = Vec::new();
+        let mut codes: Vec<u8> = Vec::new();
         for seg in segments {
             let data = &v[seg.offset..seg.offset + seg.numel];
             match seg.quant_rows {
@@ -116,15 +157,19 @@ impl Codec for AffineCodec {
                 Some(rows) => {
                     check_quant_rows(seg, rows, "encode")?;
                     let cols = seg.numel / rows;
+                    codes.clear();
+                    codes.resize(seg.numel, 0);
                     let mut scales = Vec::with_capacity(rows);
                     let mut zps = Vec::with_capacity(rows);
-                    let mut codes = Vec::with_capacity(seg.numel);
-                    for r in 0..rows {
-                        let (s, z) =
-                            self.quant_row(&data[r * cols..(r + 1) * cols],
-                                           &mut codes);
-                        scales.push(s);
-                        zps.push(z);
+                    for (row, out) in data
+                        .chunks_exact(cols)
+                        .zip(codes.chunks_exact_mut(cols))
+                    {
+                        let (lo, hi) = kernels::minmax(row);
+                        let (scale, zp) = row_params(lo, hi, qmax);
+                        kernels::quant_codes(row, lo, scale, qmax, out);
+                        scales.push(scale);
+                        zps.push(zp);
                     }
                     for s in &scales {
                         payload.extend_from_slice(&s.to_le_bytes());
@@ -132,7 +177,9 @@ impl Codec for AffineCodec {
                     for z in &zps {
                         payload.extend_from_slice(&z.to_le_bytes());
                     }
-                    payload.extend_from_slice(&pack(&codes, self.bits));
+                    let start = payload.len();
+                    payload.resize(start + packed_len(seg.numel, self.bits), 0);
+                    kernels::pack_into(&codes, self.bits, &mut payload[start..]);
                 }
             }
         }
@@ -144,14 +191,7 @@ impl Codec for AffineCodec {
         let mut out = vec![0.0f32; total];
         let b = &msg.payload;
         let mut pos = 0usize;
-        let rd_f32 = |b: &[u8], pos: &mut usize| -> Result<f32> {
-            if *pos + 4 > b.len() {
-                return Err(Error::parse("affine decode: truncated payload"));
-            }
-            let v = f32::from_le_bytes(b[*pos..*pos + 4].try_into().unwrap());
-            *pos += 4;
-            Ok(v)
-        };
+        let mut codes: Vec<u8> = Vec::new();
         for seg in segments {
             let dst = &mut out[seg.offset..seg.offset + seg.numel];
             match seg.quant_rows {
@@ -163,27 +203,22 @@ impl Codec for AffineCodec {
                 Some(rows) => {
                     check_quant_rows(seg, rows, "decode")?;
                     let cols = seg.numel / rows;
-                    let mut scales = Vec::with_capacity(rows);
-                    let mut zps = Vec::with_capacity(rows);
-                    for _ in 0..rows {
-                        scales.push(rd_f32(b, &mut pos)?);
-                    }
-                    for _ in 0..rows {
-                        zps.push(rd_f32(b, &mut pos)?);
-                    }
+                    let (scales, zps) = rd_row_params(b, &mut pos, rows)?;
                     let plen = packed_len(seg.numel, self.bits);
                     if pos + plen > b.len() {
                         return Err(Error::parse("affine decode: truncated codes"));
                     }
-                    let codes = unpack(&b[pos..pos + plen], self.bits, seg.numel);
+                    codes.clear();
+                    codes.resize(seg.numel, 0);
+                    kernels::unpack_into(&b[pos..pos + plen], self.bits,
+                                         &mut codes);
                     pos += plen;
-                    for r in 0..rows {
-                        let s = scales[r];
-                        let z = zps[r];
-                        for c in 0..cols {
-                            dst[r * cols + c] =
-                                (codes[r * cols + c] as f32 - z) * s;
-                        }
+                    for (r, (crow, drow)) in codes
+                        .chunks_exact(cols)
+                        .zip(dst.chunks_exact_mut(cols))
+                        .enumerate()
+                    {
+                        kernels::dequant(crow, scales[r], zps[r], drow);
                     }
                 }
             }
@@ -195,6 +230,61 @@ impl Codec for AffineCodec {
             )));
         }
         Ok(out)
+    }
+
+    /// Streaming decode-and-fold: dequantized rows go straight into
+    /// the accumulator via the fused [`kernels::dequant_axpy`] — the
+    /// dense per-client vector never materializes.
+    fn decode_into(
+        &self,
+        msg: &Message,
+        segments: &[Segment],
+        acc: &mut [f32],
+        w: f32,
+    ) -> Result<()> {
+        let total: usize = segments.iter().map(|s| s.numel).sum();
+        check_fold_dim(total, acc.len())?;
+        let b = &msg.payload;
+        let mut pos = 0usize;
+        let mut codes: Vec<u8> = Vec::new();
+        for seg in segments {
+            let dst = &mut acc[seg.offset..seg.offset + seg.numel];
+            match seg.quant_rows {
+                None => {
+                    for d in dst.iter_mut() {
+                        *d += w * rd_f32(b, &mut pos)?;
+                    }
+                }
+                Some(rows) => {
+                    check_quant_rows(seg, rows, "decode")?;
+                    let cols = seg.numel / rows;
+                    let (scales, zps) = rd_row_params(b, &mut pos, rows)?;
+                    let plen = packed_len(seg.numel, self.bits);
+                    if pos + plen > b.len() {
+                        return Err(Error::parse("affine decode: truncated codes"));
+                    }
+                    codes.clear();
+                    codes.resize(seg.numel, 0);
+                    kernels::unpack_into(&b[pos..pos + plen], self.bits,
+                                         &mut codes);
+                    pos += plen;
+                    for (r, (crow, drow)) in codes
+                        .chunks_exact(cols)
+                        .zip(dst.chunks_exact_mut(cols))
+                        .enumerate()
+                    {
+                        kernels::dequant_axpy(crow, scales[r], zps[r], w, drow);
+                    }
+                }
+            }
+        }
+        if pos != b.len() {
+            return Err(Error::parse(format!(
+                "affine decode: {} trailing bytes",
+                b.len() - pos
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -226,16 +316,18 @@ mod tests {
             let out = c.decode(&msg, &segs).unwrap();
             // fp segment exact:
             assert_eq!(&out[64..74], &v[64..74]);
-            // quantized segments bounded by scale/2 per row; scale is
-            // range/qmax <= (2*maxabs)/qmax.
+            // quantized segments bounded by scale/2 per row, with the
+            // scale built from the row's *true* range.
             let qmax = ((1u32 << bits) - 1) as f32;
             for (seg_range, rows) in [(0..64, 8), (74..104, 10)] {
                 let cols = seg_range.len() / rows;
                 for r in 0..rows {
                     let row: Vec<f32> = v[seg_range.clone()]
                         [r * cols..(r + 1) * cols].to_vec();
-                    let lo = row.iter().cloned().fold(0.0f32, f32::min);
-                    let hi = row.iter().cloned().fold(0.0f32, f32::max);
+                    let lo = row.iter().cloned()
+                        .fold(f32::INFINITY, f32::min);
+                    let hi = row.iter().cloned()
+                        .fold(f32::NEG_INFINITY, f32::max);
                     let scale = ((hi - lo) / qmax).max(1e-12);
                     for c_ in 0..cols {
                         let i = seg_range.start + r * cols + c_;
@@ -244,6 +336,33 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn strictly_positive_rows_use_the_true_range() {
+        // Regression for the 0-anchored range scan: a row in
+        // [10.0, 10.63] must quantize with scale ~ 0.63/qmax, not
+        // ~ 10.63/qmax. At 8 bits that is a ~17x tighter error bound
+        // than the old scheme could ever meet.
+        let c = AffineCodec::new(8);
+        let segs = vec![seg("p", 64, 0, Some(1))];
+        let v: Vec<f32> = (0..64).map(|i| 10.0 + 0.01 * i as f32).collect();
+        let out = c.decode(&c.encode(&v, &segs).unwrap(), &segs).unwrap();
+        // 2e-5 slack absorbs the f32 zero-point rounding (zp ~ 4048
+        // here, whose ulp scaled back by `scale` is ~1e-6); the old
+        // 0-anchored scheme's half-step was ~0.0208, three orders off.
+        let true_scale = (10.63 - 10.0) / 255.0;
+        for i in 0..64 {
+            let err = (out[i] - v[i]).abs();
+            assert!(err <= true_scale * 0.5 + 2e-5,
+                    "i={i} err={err} vs half-scale {}", true_scale * 0.5);
+        }
+        // Strictly negative rows get the same treatment.
+        let neg: Vec<f32> = v.iter().map(|x| -x).collect();
+        let out = c.decode(&c.encode(&neg, &segs).unwrap(), &segs).unwrap();
+        for i in 0..64 {
+            assert!((out[i] - neg[i]).abs() <= true_scale * 0.5 + 2e-5);
         }
     }
 
@@ -285,6 +404,25 @@ mod tests {
     }
 
     #[test]
+    fn decode_into_matches_decode_then_fold() {
+        for bits in [2u32, 4, 8] {
+            let c = AffineCodec::new(bits);
+            let segs = vec![seg("a", 64, 0, Some(8)), seg("n", 10, 64, None),
+                            seg("b", 30, 74, Some(10))];
+            let v = randv(104, 40 + bits as u64);
+            let msg = c.encode(&v, &segs).unwrap();
+            let mut acc = randv(104, 50);
+            let mut acc2 = acc.clone();
+            c.decode_into(&msg, &segs, &mut acc, 0.73).unwrap();
+            let dec = c.decode(&msg, &segs).unwrap();
+            crate::kernels::axpy_ref(&mut acc2, &dec, 0.73);
+            let same = acc.iter().zip(acc2.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "bits={bits}");
+        }
+    }
+
+    #[test]
     fn malformed_quant_rows_rejected_not_panicking() {
         let c = AffineCodec::new(8);
         let v = randv(64, 7);
@@ -301,6 +439,8 @@ mod tests {
         let msg = c.encode(&v, &good).unwrap();
         assert!(c.decode(&msg, &zero_rows).is_err());
         assert!(c.decode(&msg, &ragged).is_err());
+        let mut acc = vec![0.0f32; 64];
+        assert!(c.decode_into(&msg, &zero_rows, &mut acc, 1.0).is_err());
         // The error is typed, not a bare panic/parse failure.
         match c.encode(&v, &zero_rows) {
             Err(crate::error::Error::Invalid(m)) => {
@@ -318,7 +458,10 @@ mod tests {
         let mut msg = c.encode(&v, &segs).unwrap();
         msg.payload.truncate(msg.payload.len() - 3);
         assert!(c.decode(&msg, &segs).is_err());
+        let mut acc = vec![0.0f32; 64];
+        assert!(c.decode_into(&msg, &segs, &mut acc, 1.0).is_err());
         msg.payload.extend_from_slice(&[0; 10]);
         assert!(c.decode(&msg, &segs).is_err());
+        assert!(c.decode_into(&msg, &segs, &mut acc, 1.0).is_err());
     }
 }

@@ -22,7 +22,8 @@ pub mod affine;
 pub mod pack;
 pub mod sparse;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::kernels;
 use crate::model::Segment;
 
 pub use affine::AffineCodec;
@@ -97,6 +98,48 @@ pub trait Codec: Send + Sync {
 
     /// Decode back to a dense vector of the layout's total length.
     fn decode(&self, msg: &Message, segments: &[Segment]) -> Result<Vec<f32>>;
+
+    /// Decode `msg` and fold it straight into `acc` with weight `w`:
+    /// `acc[i] += w * decoded[i]` — the zero-copy merge path. The
+    /// default materializes via [`Codec::decode`] and folds; codecs
+    /// with streaming decoders override it to skip the intermediate
+    /// vector entirely.
+    ///
+    /// Contract: bit-identical to `decode` followed by the weighted
+    /// fold. Overrides keep it by running the same per-element float
+    /// ops on the same operands in the same element order (sparse
+    /// overrides may skip absent slots: folding `w * 0.0` into an
+    /// accumulator that is not `-0.0` is a bitwise no-op, and FedAvg
+    /// accumulators never hold `-0.0` — they start at `+0.0` and
+    /// round-to-nearest addition cannot produce `-0.0` from it).
+    /// `tests/properties.rs` pins the equivalence for every codec.
+    ///
+    /// On error the accumulator contents are unspecified (a streaming
+    /// override may have partially folded before detecting a corrupt
+    /// tail); callers treat a failed fold as fatal to the round.
+    fn decode_into(
+        &self,
+        msg: &Message,
+        segments: &[Segment],
+        acc: &mut [f32],
+        w: f32,
+    ) -> Result<()> {
+        let v = self.decode(msg, segments)?;
+        check_fold_dim(v.len(), acc.len())?;
+        kernels::axpy(acc, &v, w);
+        Ok(())
+    }
+}
+
+/// Shared dimension guard for [`Codec::decode_into`] implementations.
+pub(crate) fn check_fold_dim(decoded: usize, acc: usize) -> Result<()> {
+    if decoded != acc {
+        return Err(Error::invalid(format!(
+            "decode_into: decoded {decoded} elements into a {acc}-dim \
+             accumulator"
+        )));
+    }
+    Ok(())
 }
 
 /// Plain little-endian fp32 — the uncompressed baseline (Q_p = 32).
@@ -121,6 +164,18 @@ impl Codec for Fp32Codec {
             out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
         }
         Ok(out)
+    }
+
+    fn decode_into(
+        &self,
+        msg: &Message,
+        _segments: &[Segment],
+        acc: &mut [f32],
+        w: f32,
+    ) -> Result<()> {
+        check_fold_dim(msg.payload.len() / 4, acc.len())?;
+        kernels::axpy_from_le(&msg.payload[..acc.len() * 4], w, acc);
+        Ok(())
     }
 }
 

@@ -1,38 +1,39 @@
-//! Sub-byte integer packing: 2/4/8-bit codes, little-endian within the
-//! byte (code 0 in the lowest bits). 8-bit is a plain byte per code.
+//! Sub-byte integer packing: 1..=8-bit codes, little-endian within
+//! the byte (code 0 in the lowest bits). 8-bit is a plain byte per
+//! code; widths that do not divide 8 (3, 5, 6, 7) pack
+//! `floor(8/bits)` codes per byte and waste the remainder bits.
+//!
+//! The inner loops live in [`crate::kernels`] (byte-group processing,
+//! no per-element div/mod); these wrappers own allocation and the
+//! width validation: `bits == 0` and `bits > 8` are rejected loudly
+//! instead of shifting by garbage.
+
+use crate::kernels;
 
 /// Pack `codes` (each < 2^bits) at `bits` per element.
+///
+/// Panics if `bits` is 0 or greater than 8.
 pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
-    assert!(matches!(bits, 2 | 4 | 8));
-    let per = 8 / bits as usize;
-    let mut out = vec![0u8; codes.len().div_ceil(per)];
-    for (i, &c) in codes.iter().enumerate() {
-        debug_assert!(u32::from(c) < (1 << bits), "code {c} exceeds {bits} bits");
-        let byte = i / per;
-        let slot = (i % per) as u32;
-        out[byte] |= c << (slot * bits);
-    }
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
+    kernels::pack_into(codes, bits, &mut out);
     out
 }
 
 /// Unpack `n` codes at `bits` per element.
+///
+/// Panics if `bits` is 0 or greater than 8, or if `bytes` is shorter
+/// than `packed_len(n, bits)`.
 pub fn unpack(bytes: &[u8], bits: u32, n: usize) -> Vec<u8> {
-    assert!(matches!(bits, 2 | 4 | 8));
-    let per = 8 / bits as usize;
-    assert!(bytes.len() >= n.div_ceil(per), "not enough packed bytes");
-    let mask = ((1u16 << bits) - 1) as u8;
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let byte = bytes[i / per];
-        let slot = (i % per) as u32;
-        out.push((byte >> (slot * bits)) & mask);
-    }
+    let mut out = vec![0u8; n];
+    kernels::unpack_into(bytes, bits, &mut out);
     out
 }
 
 /// Packed byte length for `n` codes at `bits`.
+///
+/// Panics if `bits` is 0 or greater than 8.
 pub fn packed_len(n: usize, bits: u32) -> usize {
-    n.div_ceil((8 / bits) as usize)
+    kernels::packed_len(n, bits)
 }
 
 #[cfg(test)]
@@ -43,7 +44,7 @@ mod tests {
     #[test]
     fn round_trip_all_widths() {
         let mut rng = Rng::new(11);
-        for bits in [2u32, 4, 8] {
+        for bits in 1..=8u32 {
             let max = (1u16 << bits) as usize;
             for n in [0usize, 1, 3, 8, 9, 255, 1000] {
                 let codes: Vec<u8> =
@@ -69,5 +70,44 @@ mod tests {
         assert_eq!(pack(&[1, 2, 3, 0], 2), vec![0b0011_1001]);
         // codes [0xA, 0x5] at 4 bits -> 0b0101_1010.
         assert_eq!(pack(&[0xA, 0x5], 4), vec![0b0101_1010]);
+    }
+
+    #[test]
+    fn empty_input_packs_to_empty() {
+        for bits in 1..=8u32 {
+            assert_eq!(pack(&[], bits), Vec::<u8>::new());
+            assert_eq!(unpack(&[], bits, 0), Vec::<u8>::new());
+            assert_eq!(packed_len(0, bits), 0);
+        }
+    }
+
+    #[test]
+    fn non_dividing_widths_are_defined() {
+        // 3 bits: floor(8/3) = 2 codes per byte, 2 wasted bits.
+        assert_eq!(packed_len(4, 3), 2);
+        let packed = pack(&[0b101, 0b011, 0b111, 0b001], 3);
+        assert_eq!(packed, vec![0b011_101, 0b001_111]);
+        assert_eq!(unpack(&packed, 3, 4), vec![0b101, 0b011, 0b111, 0b001]);
+        // 5..7 bits degrade to one code per byte.
+        assert_eq!(packed_len(3, 5), 3);
+        assert_eq!(packed_len(3, 7), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=8")]
+    fn zero_bits_rejected() {
+        pack(&[1], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=8")]
+    fn wide_bits_rejected() {
+        packed_len(10, 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough packed bytes")]
+    fn short_buffer_rejected() {
+        unpack(&[0u8; 1], 2, 9);
     }
 }

@@ -24,24 +24,17 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::compression::{Codec, Message};
+use crate::compression::{check_fold_dim, Codec, Message};
 use crate::error::{Error, Result};
+use crate::kernels;
 use crate::model::Segment;
 
 /// Indices of the `k` largest |v| (deterministic tie-break by index).
 fn top_k_indices(v: &[f32], k: usize) -> Vec<u32> {
-    let mut idx: Vec<u32> = (0..v.len() as u32).collect();
-    if k >= v.len() {
-        return idx;
-    }
-    idx.select_nth_unstable_by(k, |&a, &b| {
-        let ma = v[a as usize].abs();
-        let mb = v[b as usize].abs();
-        mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    idx.truncate(k);
-    idx
+    // Packed-key threshold selection; same (|v| desc, index asc) total
+    // order as the retained reference (`kernels::topk_indices_ref`),
+    // so the kept *set* is identical — property-pinned.
+    kernels::topk_indices(v, k)
 }
 
 /// Round a keep-fraction to an element count: at least one survivor on
@@ -101,6 +94,45 @@ fn decode_bitmap_payload(b: &[u8], tag: &str) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// Streaming fold of a bitmap payload: `acc[i] += w * value` for each
+/// present element, skipping the absent ones. The bitmap guarantees
+/// each index appears at most once, and skipping an absent slot is
+/// bitwise identical to the dense fold's `acc[i] += w * 0.0` (see
+/// [`Codec::decode_into`]'s contract), so this matches
+/// decode-then-fold exactly without materializing the dense vector.
+fn fold_bitmap_payload(
+    b: &[u8],
+    tag: &str,
+    acc: &mut [f32],
+    w: f32,
+) -> Result<()> {
+    if b.len() < 8 {
+        return Err(Error::parse(format!("{tag}: truncated header")));
+    }
+    let n = u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
+    check_fold_dim(n, acc.len())?;
+    let bm_len = n.div_ceil(8);
+    if b.len() < 8 + bm_len {
+        return Err(Error::parse(format!("{tag}: truncated bitmap")));
+    }
+    let bitmap = &b[8..8 + bm_len];
+    let mut pos = 8 + bm_len;
+    for (i, slot) in acc.iter_mut().enumerate() {
+        if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+            if pos + 4 > b.len() {
+                return Err(Error::parse(format!("{tag}: truncated values")));
+            }
+            let v = f32::from_le_bytes(b[pos..pos + 4].try_into().unwrap());
+            *slot += w * v;
+            pos += 4;
+        }
+    }
+    if pos != b.len() {
+        return Err(Error::parse(format!("{tag}: trailing bytes")));
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Magnitude pruning: bitmap + values
 // ---------------------------------------------------------------------------
@@ -136,6 +168,16 @@ impl Codec for TopKCodec {
 
     fn decode(&self, msg: &Message, _segments: &[Segment]) -> Result<Vec<f32>> {
         decode_bitmap_payload(&msg.payload, "topk")
+    }
+
+    fn decode_into(
+        &self,
+        msg: &Message,
+        _segments: &[Segment],
+        acc: &mut [f32],
+        w: f32,
+    ) -> Result<()> {
+        fold_bitmap_payload(&msg.payload, "topk", acc, w)
     }
 }
 
@@ -281,8 +323,7 @@ impl Codec for SparseEfCodec {
                 v.len()
             )));
         }
-        let corrected: Vec<f32> =
-            v.iter().zip(residual.iter()).map(|(a, b)| a + b).collect();
+        let corrected = kernels::vadd(v, residual);
         let mut keep_idx =
             top_k_indices(&corrected, self.kept_count(corrected.len()));
         keep_idx.sort_unstable();
@@ -299,6 +340,16 @@ impl Codec for SparseEfCodec {
 
     fn decode(&self, msg: &Message, _segments: &[Segment]) -> Result<Vec<f32>> {
         decode_bitmap_payload(&msg.payload, "sparse_ef")
+    }
+
+    fn decode_into(
+        &self,
+        msg: &Message,
+        _segments: &[Segment],
+        acc: &mut [f32],
+        w: f32,
+    ) -> Result<()> {
+        fold_bitmap_payload(&msg.payload, "sparse_ef", acc, w)
     }
 }
 

@@ -29,6 +29,7 @@
 //! window size cannot perturb the result. Non-adapter segments (norms,
 //! fc head) always take the plain FedAvg path.
 
+use crate::compression::{Codec, Message};
 use crate::coordinator::hetero::rank_geometry;
 use crate::error::{Error, Result};
 use crate::model::Segment;
@@ -58,6 +59,25 @@ impl FedAvg {
             return Err(Error::invalid(format!("bad weight {weight}")));
         }
         tensor::axpy_weighted(&mut self.acc, v, weight as f32);
+        self.total_weight += weight;
+        Ok(())
+    }
+
+    /// Zero-copy fold of a still-encoded upload: the codec's
+    /// [`Codec::decode_into`] streams `weight * decoded` straight into
+    /// the accumulator. Same validations, same arithmetic, no
+    /// intermediate vector.
+    pub fn add_encoded(
+        &mut self,
+        codec: &dyn Codec,
+        msg: &Message,
+        segments: &[Segment],
+        weight: f64,
+    ) -> Result<()> {
+        if !(weight > 0.0) {
+            return Err(Error::invalid(format!("bad weight {weight}")));
+        }
+        codec.decode_into(msg, segments, &mut self.acc, weight as f32)?;
         self.total_weight += weight;
         Ok(())
     }
@@ -93,6 +113,23 @@ pub struct AggOutcome {
 pub trait Aggregator: Send {
     /// Add one client's trainable vector with sample-count weight.
     fn add(&mut self, v: &[f32], weight: f64) -> Result<()>;
+    /// Fold one still-encoded client upload. The default materializes
+    /// via [`Codec::decode`] and forwards to [`Aggregator::add`];
+    /// plain-mean aggregators override it with the zero-copy
+    /// [`Codec::decode_into`] fold (bit-identical — same per-element
+    /// ops, same order — the decoded vector just never exists).
+    /// Factor-aware aggregators keep the default: they need the dense
+    /// vector to slice adapter factors out of.
+    fn add_encoded(
+        &mut self,
+        codec: &dyn Codec,
+        msg: &Message,
+        segments: &[Segment],
+        weight: f64,
+    ) -> Result<()> {
+        let v = codec.decode(msg, segments)?;
+        self.add(&v, weight)
+    }
     /// Total weight contributed so far.
     fn contributions(&self) -> f64;
     /// Consume the accumulator and produce the new global vector plus
@@ -230,6 +267,16 @@ struct FedAvgAggregator {
 impl Aggregator for FedAvgAggregator {
     fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
         self.inner.add(v, weight)
+    }
+
+    fn add_encoded(
+        &mut self,
+        codec: &dyn Codec,
+        msg: &Message,
+        segments: &[Segment],
+        weight: f64,
+    ) -> Result<()> {
+        self.inner.add_encoded(codec, msg, segments, weight)
     }
 
     fn contributions(&self) -> f64 {

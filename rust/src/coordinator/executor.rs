@@ -54,6 +54,7 @@ use crate::coordinator::sink::RoundSink;
 use crate::coordinator::trainer::{LocalOutcome, LocalTrainer};
 use crate::data::Federation;
 use crate::error::{Error, Result};
+use crate::model::Segment;
 use crate::runtime::ModelSession;
 use crate::transport::OverlapKind;
 use crate::util::rng::Rng;
@@ -159,13 +160,46 @@ pub struct ClientResult {
     pub cancelled: bool,
 }
 
+/// The payload of a surviving client's upload, as handed to the merge.
+///
+/// Homogeneous rounds keep the upload *encoded* all the way to the
+/// coordinator: the merge folds it straight into the aggregator via
+/// [`crate::compression::Codec::decode_into`] (the zero-copy path —
+/// the message is 4–18× smaller than the dense vector it decodes to,
+/// and the dense form never materializes). Tiered rounds decode on
+/// the worker because the rank projection needs the dense vector.
+/// Both forms produce bit-identical merges: the fused fold runs the
+/// same per-element arithmetic in the same order.
+#[derive(Debug, Clone)]
+pub enum UpdateVector {
+    /// Decoded dense vector in the server's rank space (tiered
+    /// clients: already projected).
+    Dense(Vec<f32>),
+    /// Still-encoded upload; decoded into the merge accumulator.
+    Encoded(Message),
+}
+
+impl UpdateVector {
+    /// Materialize the dense server-space vector (tests, inspection).
+    pub fn to_dense(
+        &self,
+        codec: &dyn Codec,
+        segments: &[Segment],
+    ) -> Result<Vec<f32>> {
+        match self {
+            UpdateVector::Dense(v) => Ok(v.clone()),
+            UpdateVector::Encoded(msg) => codec.decode(msg, segments),
+        }
+    }
+}
+
 /// A surviving client's contribution.
 #[derive(Debug, Clone)]
 pub struct ClientUpdate {
-    /// The update as the *server* sees it — after the uplink codec
-    /// round trip and (for tiered clients) the projection back into
-    /// the server's rank space, ready for FedAvg.
-    pub params: Vec<f32>,
+    /// The update as the *server* will see it — after the uplink
+    /// encode and (for tiered clients) the decode + projection back
+    /// into the server's rank space, ready for the merge fold.
+    pub params: UpdateVector,
     /// FedAvg weight `n_k` (local sample count).
     pub weight: f64,
     pub up_bytes: usize,
@@ -251,9 +285,10 @@ fn stage_train(ctx: &RoundContext<'_>, cid: usize, start: Vec<f32>)
     Ok(Trained::Outcome(outcome))
 }
 
-/// Stage 3 — encode/upload: encode → count bytes → decode as the
-/// server would (→ rank projection for tiered clients). Runs on a
-/// transport thread under `overlap = transfer`.
+/// Stage 3 — encode/upload: encode → count bytes → hand the encoded
+/// message to the merge (homogeneous rounds), or decode + rank-project
+/// on the worker (tiered rounds, where the projection needs the dense
+/// vector). Runs on a transport thread under `overlap = transfer`.
 fn stage_upload(ctx: &RoundContext<'_>, cid: usize, outcome: LocalOutcome)
                 -> Result<ClientUpdate> {
     let (session, codec, _, _) = client_gear(ctx, cid)?;
@@ -263,18 +298,24 @@ fn stage_upload(ctx: &RoundContext<'_>, cid: usize, outcome: LocalOutcome)
     // fall through to the plain encode.
     let up_msg = codec.encode_client(cid, &outcome.params, segments)?;
     let up_bytes = up_msg.size_bytes();
-    let received = codec.decode(&up_msg, segments)?;
 
-    // Tiered clients hand back a vector in their own rank space; embed
-    // it into the server's before the sink ever sees it (zero-padding
-    // is exact on the B·A product — see `coordinator::hetero`).
     let params = match ctx.plan {
-        None => received,
-        Some(_) => project_ranks(
-            &received,
-            segments,
-            &ctx.session.spec.trainable_segments,
-        )?,
+        // Homogeneous round: keep the upload encoded — the merge
+        // folds it straight into the aggregator (zero-copy), and the
+        // worker never materializes the decoded vector at all.
+        None => UpdateVector::Encoded(up_msg),
+        // Tiered clients hand back a vector in their own rank space;
+        // embed it into the server's before the sink ever sees it
+        // (zero-padding is exact on the B·A product — see
+        // `coordinator::hetero`).
+        Some(_) => {
+            let received = codec.decode(&up_msg, segments)?;
+            UpdateVector::Dense(project_ranks(
+                &received,
+                segments,
+                &ctx.session.spec.trainable_segments,
+            )?)
+        }
     };
 
     Ok(ClientUpdate {

@@ -110,11 +110,9 @@ pub fn project_ranks(
                     // rank-major: copy the first r blocks of `inner`.
                     dv[..r * inner_s].copy_from_slice(&sv[..r * inner_s]);
                 } else {
-                    // rank-minor: per outer row, copy first r columns.
-                    for o in 0..inner_s {
-                        dv[o * rd..o * rd + r]
-                            .copy_from_slice(&sv[o * rs..o * rs + r]);
-                    }
+                    // rank-minor: per outer row, copy first r columns
+                    // (strided row gather, see `kernels`).
+                    crate::kernels::gather_rows(sv, rs, dv, rd, r);
                 }
             }
             _ => {

@@ -30,7 +30,7 @@ use crate::config::FlConfig;
 use crate::coordinator::aggregator::{adapter_pairs, AdapterPair,
                                      Aggregator};
 use crate::coordinator::executor::{ClientExecutor, ClientResult,
-                                   Downloads, RoundContext};
+                                   Downloads, RoundContext, UpdateVector};
 use crate::coordinator::hetero::{ClientPlan, PlanTier};
 use crate::coordinator::sampler::{LatencyBiasedSampler, OversampleSampler,
                                   Sampler, SamplerKind, UniformSampler};
@@ -40,6 +40,7 @@ use crate::data::batcher::Tail;
 use crate::data::{lda_partition, BatchIter, Federation, TestSet};
 use crate::error::{Error, Result};
 use crate::metrics::{p50, Recorder, RoundRecord};
+use crate::model::Segment;
 use crate::runtime::{Engine, ModelSession};
 use crate::transport::{ClientProfiles, CommLedger, Direction, NetworkModel,
                        StageEvent, TimeModel, TransferStage};
@@ -444,6 +445,8 @@ impl Simulation {
         let mut merge = RoundMerge {
             expected: &client_ids,
             plan: self.plan.as_ref(),
+            codec: self.codec.as_ref(),
+            segments: &self.session.spec.trainable_segments,
             ledger: &mut self.ledger,
             tier_bytes: &mut self.tier_bytes,
             stage: TransferStage::begin_round(&self.net, &self.profiles,
@@ -680,6 +683,10 @@ impl Simulation {
 struct RoundMerge<'a> {
     expected: &'a [usize],
     plan: Option<&'a ClientPlan>,
+    /// Server-rank codec + segment layout, for folding still-encoded
+    /// uploads straight into the aggregator (`Aggregator::add_encoded`).
+    codec: &'a dyn Codec,
+    segments: &'a [Segment],
     ledger: &'a mut CommLedger,
     tier_bytes: &'a mut [u64],
     /// The round's transport accountant (owns the link clock and the
@@ -732,7 +739,15 @@ impl RoundSink for RoundMerge<'_> {
                     self.ledger.record(Direction::Up, up.up_bytes);
                     self.loss_sum += up.mean_loss;
                     self.acc_sum += up.mean_acc;
-                    self.agg.add(&up.params, up.weight)?;
+                    match &up.params {
+                        UpdateVector::Dense(v) => {
+                            self.agg.add(v, up.weight)?;
+                        }
+                        UpdateVector::Encoded(msg) => {
+                            self.agg.add_encoded(self.codec, msg,
+                                                 self.segments, up.weight)?;
+                        }
+                    }
                     self.stage.push(StageEvent::Train { cid: res.cid });
                     self.stage.push(StageEvent::Upload {
                         cid: res.cid,

@@ -1,0 +1,823 @@
+//! Chunked, autovectorization-friendly inner loops for the per-round
+//! hot paths, plus their retained scalar references.
+//!
+//! Every kernel here is written in the 8-lane `f32x8` style on stable
+//! Rust: the body walks the input in [`LANES`]-wide chunks with
+//! fixed-size array patterns so LLVM's autovectorizer emits packed
+//! SIMD, and the tail falls back to the scalar loop. No `unsafe`, no
+//! nightly `std::simd`.
+//!
+//! # Bit-identity contract
+//!
+//! Each kernel ships with a `*_ref` twin — a faithful scalar port of
+//! the pre-kernel call-site loop — and `tests/properties.rs` pins the
+//! pair bit-identical across lengths 0..~100 (including tails that
+//! are not a multiple of 8). The contract holds because every kernel
+//! is either purely element-wise (quantize, dequantize, axpy: lane
+//! order does not touch the arithmetic) or a min/max reduction, which
+//! is associative and commutative for NaN-free input. Inputs with
+//! NaNs are outside the contract (the references' own behavior is
+//! already order-dependent there), and a row holding both `+0.0` and
+//! `-0.0` may report either zero as its min/max — value-identical,
+//! sign-of-zero may differ.
+//!
+//! The f64 water-filling kernel is *not* element-wise — `left -=
+//! caps[i]` is a sequential chain — so [`waterfill`] replays the
+//! reference's exact visit order (ascending flow index, identical
+//! round structure) and only removes the per-call allocations.
+//!
+//! # Benchmarks
+//!
+//! `benches/micro.rs` times each kernel against its reference on the
+//! paper-scale geometry and emits `BENCH_hotpaths.json`; the CI
+//! `perf-smoke` job regresses the speedup ratios against the
+//! committed baseline. See ARCHITECTURE.md § "Hot paths & kernels".
+
+/// Lane count every chunked loop is written against. 8 × f32 = one
+/// AVX register, two NEON registers; narrower ISAs just unroll.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Min/max row scan (affine quantization's range pass)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference: sequential ±∞-seeded fold, the shape of the
+/// original `compression::affine` range loop.
+pub fn minmax_ref(v: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// 8-lane min/max scan. Returns `(+∞, -∞)` for an empty slice, like
+/// the reference.
+pub fn minmax(v: &[f32]) -> (f32, f32) {
+    let mut lo = [f32::INFINITY; LANES];
+    let mut hi = [f32::NEG_INFINITY; LANES];
+    let mut chunks = v.chunks_exact(LANES);
+    for c in &mut chunks {
+        for j in 0..LANES {
+            lo[j] = lo[j].min(c[j]);
+            hi[j] = hi[j].max(c[j]);
+        }
+    }
+    let (mut l, mut h) = (f32::INFINITY, f32::NEG_INFINITY);
+    for j in 0..LANES {
+        l = l.min(lo[j]);
+        h = h.max(hi[j]);
+    }
+    for &x in chunks.remainder() {
+        l = l.min(x);
+        h = h.max(x);
+    }
+    (l, h)
+}
+
+// ---------------------------------------------------------------------------
+// Affine quantize / dequantize / fused dequant-accumulate
+// ---------------------------------------------------------------------------
+
+/// One element of the affine RTN map: `clip(round_half_up((v - lo) /
+/// scale), 0, qmax)`. `(v - lo)/scale + 0.5` is never negative on the
+/// valid domain (`v >= lo`), so truncation == floor and the `as u8`
+/// cast realizes the round without a `floor` libcall.
+#[inline(always)]
+fn quant_one(v: f32, lo: f32, scale: f32, qmax: f32) -> u8 {
+    ((v - lo) / scale + 0.5).clamp(0.0, qmax) as u8
+}
+
+/// Scalar reference: push-based code emission, the shape of the
+/// original `quant_row` loop.
+pub fn quant_codes_ref(
+    row: &[f32],
+    lo: f32,
+    scale: f32,
+    qmax: f32,
+    out: &mut Vec<u8>,
+) {
+    for &v in row {
+        out.push(quant_one(v, lo, scale, qmax));
+    }
+}
+
+/// 8-lane quantize: map `row` to codes in `out` (same length).
+pub fn quant_codes(
+    row: &[f32],
+    lo: f32,
+    scale: f32,
+    qmax: f32,
+    out: &mut [u8],
+) {
+    assert_eq!(row.len(), out.len(), "quant_codes length mismatch");
+    let mut rc = row.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for (r, o) in (&mut rc).zip(&mut oc) {
+        for j in 0..LANES {
+            o[j] = quant_one(r[j], lo, scale, qmax);
+        }
+    }
+    for (&v, o) in rc.remainder().iter().zip(oc.into_remainder()) {
+        *o = quant_one(v, lo, scale, qmax);
+    }
+}
+
+/// Scalar reference: indexed dequantize, the shape of the original
+/// decode loop (`dst[i] = (codes[i] - zp) * scale`).
+#[allow(clippy::needless_range_loop)] // keeps the reference loop shape
+pub fn dequant_ref(codes: &[u8], scale: f32, zp: f32, dst: &mut [f32]) {
+    assert_eq!(codes.len(), dst.len(), "dequant length mismatch");
+    for i in 0..dst.len() {
+        dst[i] = (codes[i] as f32 - zp) * scale;
+    }
+}
+
+/// 8-lane dequantize.
+pub fn dequant(codes: &[u8], scale: f32, zp: f32, dst: &mut [f32]) {
+    assert_eq!(codes.len(), dst.len(), "dequant length mismatch");
+    let mut cc = codes.chunks_exact(LANES);
+    let mut dc = dst.chunks_exact_mut(LANES);
+    for (c, d) in (&mut cc).zip(&mut dc) {
+        for j in 0..LANES {
+            d[j] = (c[j] as f32 - zp) * scale;
+        }
+    }
+    for (&c, d) in cc.remainder().iter().zip(dc.into_remainder()) {
+        *d = (c as f32 - zp) * scale;
+    }
+}
+
+/// Fused dequantize-and-accumulate: `acc[i] += w * ((codes[i] - zp) *
+/// scale)` — the zero-copy merge fold. Bit-identical to [`dequant`]
+/// into a temporary followed by [`axpy`]: per element the same three
+/// float ops run on the same operands in the same order, the
+/// temporary just never materializes.
+pub fn dequant_axpy(
+    codes: &[u8],
+    scale: f32,
+    zp: f32,
+    w: f32,
+    acc: &mut [f32],
+) {
+    assert_eq!(codes.len(), acc.len(), "dequant_axpy length mismatch");
+    let mut cc = codes.chunks_exact(LANES);
+    let mut ac = acc.chunks_exact_mut(LANES);
+    for (c, a) in (&mut cc).zip(&mut ac) {
+        for j in 0..LANES {
+            a[j] += w * ((c[j] as f32 - zp) * scale);
+        }
+    }
+    for (&c, a) in cc.remainder().iter().zip(ac.into_remainder()) {
+        *a += w * ((c as f32 - zp) * scale);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weighted folds (FedAvg inner loops)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference: the original `tensor::axpy_weighted` zip loop.
+pub fn axpy_ref(acc: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+    for (a, &b) in acc.iter_mut().zip(x.iter()) {
+        *a += w * b;
+    }
+}
+
+/// 8-lane weighted accumulation `acc += w * x`.
+pub fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (a, b) in (&mut ac).zip(&mut xc) {
+        for j in 0..LANES {
+            a[j] += w * b[j];
+        }
+    }
+    for (a, &b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += w * b;
+    }
+}
+
+/// Fold little-endian f32 bytes into `acc` with weight `w` — the
+/// fp32 codec's zero-copy merge (`acc[i] += w * le_f32(bytes[4i..])`).
+/// `bytes.len()` must be `4 * acc.len()`.
+pub fn axpy_from_le(bytes: &[u8], w: f32, acc: &mut [f32]) {
+    assert_eq!(bytes.len(), acc.len() * 4, "axpy_from_le length mismatch");
+    let mut bc = bytes.chunks_exact(4 * LANES);
+    let mut ac = acc.chunks_exact_mut(LANES);
+    for (b, a) in (&mut bc).zip(&mut ac) {
+        for j in 0..LANES {
+            let v = f32::from_le_bytes(
+                b[4 * j..4 * j + 4].try_into().unwrap(),
+            );
+            a[j] += w * v;
+        }
+    }
+    for (b, a) in bc
+        .remainder()
+        .chunks_exact(4)
+        .zip(ac.into_remainder().iter_mut())
+    {
+        *a += w * f32::from_le_bytes(b.try_into().unwrap());
+    }
+}
+
+/// Scalar reference: elementwise sum via iterator collect, the shape
+/// of the original error-feedback `corrected` construction.
+pub fn vadd_ref(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len(), "vadd length mismatch");
+    a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+}
+
+/// 8-lane elementwise sum `a + b` (error-feedback residual apply).
+pub fn vadd(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len(), "vadd length mismatch");
+    let mut out = vec![0.0f32; a.len()];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for ((x, y), o) in (&mut ac).zip(&mut bc).zip(&mut oc) {
+        for j in 0..LANES {
+            o[j] = x[j] + y[j];
+        }
+    }
+    for ((&x, &y), o) in ac
+        .remainder()
+        .iter()
+        .zip(bc.remainder())
+        .zip(oc.into_remainder().iter_mut())
+    {
+        *o = x + y;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Sub-byte packing
+// ---------------------------------------------------------------------------
+
+/// Codes packed per byte at `bits` per code: `floor(8 / bits)`.
+/// Widths that do not divide 8 (3, 5, 6, 7) waste the remainder bits
+/// of each byte rather than splitting codes across bytes.
+#[inline]
+pub fn codes_per_byte(bits: u32) -> usize {
+    assert!(
+        (1..=8).contains(&bits),
+        "pack: bits must be in 1..=8, got {bits}"
+    );
+    (8 / bits) as usize
+}
+
+/// Packed byte length for `n` codes at `bits` per code.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    n.div_ceil(codes_per_byte(bits))
+}
+
+/// Scalar reference: the original per-element `i / per`, `i % per`
+/// pack loop, generalized to any width in 1..=8.
+pub fn pack_ref(codes: &[u8], bits: u32, out: &mut [u8]) {
+    let per = codes_per_byte(bits);
+    assert_eq!(out.len(), packed_len(codes.len(), bits));
+    out.fill(0);
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(
+            u32::from(c) < (1 << bits),
+            "code {c} exceeds {bits} bits"
+        );
+        out[i / per] |= c << ((i % per) as u32 * bits);
+    }
+}
+
+/// Byte-group pack: one output byte per loop step, no per-element
+/// div/mod. 8-bit is a straight copy; 4/2-bit shift whole groups;
+/// other widths fall back to the reference loop.
+pub fn pack_into(codes: &[u8], bits: u32, out: &mut [u8]) {
+    assert_eq!(out.len(), packed_len(codes.len(), bits));
+    match bits {
+        8 => out.copy_from_slice(codes),
+        4 => {
+            let mut cc = codes.chunks_exact(2);
+            for (c, o) in (&mut cc).zip(out.iter_mut()) {
+                debug_assert!(c[0] < 16 && c[1] < 16);
+                *o = c[0] | (c[1] << 4);
+            }
+            if let [c] = cc.remainder() {
+                debug_assert!(*c < 16);
+                out[codes.len() / 2] = *c;
+            }
+        }
+        2 => {
+            let mut cc = codes.chunks_exact(4);
+            for (c, o) in (&mut cc).zip(out.iter_mut()) {
+                debug_assert!(c.iter().all(|&x| x < 4));
+                *o = c[0] | (c[1] << 2) | (c[2] << 4) | (c[3] << 6);
+            }
+            let tail = cc.remainder();
+            if !tail.is_empty() {
+                let mut b = 0u8;
+                for (s, &c) in tail.iter().enumerate() {
+                    debug_assert!(c < 4);
+                    b |= c << (2 * s as u32);
+                }
+                out[codes.len() / 4] = b;
+            }
+        }
+        _ => pack_ref(codes, bits, out),
+    }
+}
+
+/// Scalar reference: the original per-element unpack loop.
+pub fn unpack_ref(bytes: &[u8], bits: u32, out: &mut [u8]) {
+    let per = codes_per_byte(bits);
+    assert!(
+        bytes.len() >= packed_len(out.len(), bits),
+        "not enough packed bytes"
+    );
+    let mask = ((1u16 << bits) - 1) as u8;
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (bytes[i / per] >> ((i % per) as u32 * bits)) & mask;
+    }
+}
+
+/// Byte-group unpack of `out.len()` codes.
+pub fn unpack_into(bytes: &[u8], bits: u32, out: &mut [u8]) {
+    assert!(
+        bytes.len() >= packed_len(out.len(), bits),
+        "not enough packed bytes"
+    );
+    match bits {
+        8 => out.copy_from_slice(&bytes[..out.len()]),
+        4 => {
+            let mut oc = out.chunks_exact_mut(2);
+            let mut used = 0usize;
+            for (o, &b) in (&mut oc).zip(bytes.iter()) {
+                o[0] = b & 0xF;
+                o[1] = b >> 4;
+                used += 1;
+            }
+            if let [o] = oc.into_remainder() {
+                *o = bytes[used] & 0xF;
+            }
+        }
+        2 => {
+            let mut oc = out.chunks_exact_mut(4);
+            let mut used = 0usize;
+            for (o, &b) in (&mut oc).zip(bytes.iter()) {
+                o[0] = b & 3;
+                o[1] = (b >> 2) & 3;
+                o[2] = (b >> 4) & 3;
+                o[3] = b >> 6;
+                used += 1;
+            }
+            let tail = oc.into_remainder();
+            if !tail.is_empty() {
+                let b = bytes[used];
+                for (s, o) in tail.iter_mut().enumerate() {
+                    *o = (b >> (2 * s as u32)) & 3;
+                }
+            }
+        }
+        _ => unpack_ref(bytes, bits, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Top-k threshold selection (sparse codecs)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference: the original index-array selection with an
+/// indirect `(|v| desc, index asc)` comparator.
+pub fn topk_indices_ref(v: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..v.len() as u32).collect();
+    if k >= v.len() {
+        return idx;
+    }
+    idx.select_nth_unstable_by(k, |&a, &b| {
+        let ma = v[a as usize].abs();
+        let mb = v[b as usize].abs();
+        mb.partial_cmp(&ma)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Indices of the `k` largest-magnitude elements, `(|v| desc, index
+/// asc)` order deciding ties — the same total order as the reference,
+/// so the returned *set* is identical (order within it is
+/// unspecified, as before; callers sort).
+///
+/// Packs `(|v|, index)` into one `u64` key — non-negative IEEE floats
+/// order like their bit patterns, and the complemented index in the
+/// low word turns "index asc" into plain integer "desc" — so the
+/// selection runs branchless u64 compares on a contiguous array
+/// instead of indirect float loads. Requires NaN-free input (the
+/// reference's comparator is ill-defined there anyway).
+pub fn topk_indices(v: &[f32], k: usize) -> Vec<u32> {
+    if k >= v.len() {
+        return (0..v.len() as u32).collect();
+    }
+    let mut keys: Vec<u64> = v
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            ((x.abs().to_bits() as u64) << 32) | u64::from(!(i as u32))
+        })
+        .collect();
+    keys.select_nth_unstable_by(k, |a, b| b.cmp(a));
+    keys.truncate(k);
+    keys.iter().map(|&key| !(key as u32)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Rank projection (hetero tiers)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference: the original indexed per-outer-row copy of the
+/// first `width` columns (`dst[o*dst_stride..][..width] <-
+/// src[o*src_stride..][..width]`).
+pub fn gather_rows_ref(
+    src: &[f32],
+    src_stride: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    width: usize,
+) {
+    let outer = src.len() / src_stride;
+    for o in 0..outer {
+        dst[o * dst_stride..o * dst_stride + width]
+            .copy_from_slice(&src[o * src_stride..o * src_stride + width]);
+    }
+}
+
+/// Strided row gather via exact chunk iterators — the index
+/// arithmetic and its bounds checks drop out of the loop.
+pub fn gather_rows(
+    src: &[f32],
+    src_stride: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    width: usize,
+) {
+    debug_assert!(width <= src_stride && width <= dst_stride);
+    for (s, d) in src
+        .chunks_exact(src_stride)
+        .zip(dst.chunks_exact_mut(dst_stride))
+    {
+        d[..width].copy_from_slice(&s[..width]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Max-min fair water-filling (transport::sim)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference: the original allocating progressive-filling loop
+/// from `transport::sim` — normalized rate 1.0 split max-min fairly
+/// across flows capped at `caps[i]`.
+pub fn waterfill_ref(caps: &[f64], rates: &mut [f64]) {
+    rates.fill(0.0);
+    let mut active: Vec<usize> = (0..caps.len()).collect();
+    let mut left = 1.0f64;
+    while !active.is_empty() && left > 0.0 {
+        let fair = left / active.len() as f64;
+        let mut kept = Vec::with_capacity(active.len());
+        for &i in &active {
+            if caps[i] <= fair {
+                rates[i] = caps[i];
+                left -= caps[i];
+            } else {
+                kept.push(i);
+            }
+        }
+        if kept.len() == active.len() {
+            for &i in &kept {
+                rates[i] = fair;
+            }
+            break;
+        }
+        active = kept;
+    }
+}
+
+/// Allocation-free water-filling. The first round walks `caps`
+/// directly (no index array at all — the common case resolves there);
+/// later rounds compact the survivor list in place in `scratch`,
+/// whose capacity is reused across calls. The f64 arithmetic replays
+/// the reference exactly: same ascending visit order, same
+/// `left -= caps[i]` chain, same all-uncapped early exit — so the
+/// rates are bit-identical, which the event simulator's cross-
+/// executor determinism contract depends on.
+#[allow(clippy::needless_range_loop)] // read + compact-in-place on `scratch`
+pub fn waterfill(caps: &[f64], rates: &mut [f64], scratch: &mut Vec<u32>) {
+    assert_eq!(caps.len(), rates.len(), "waterfill length mismatch");
+    rates.fill(0.0);
+    scratch.clear();
+    let mut left = 1.0f64;
+    let mut active_len = caps.len();
+    let mut dense = true;
+    while active_len > 0 && left > 0.0 {
+        let fair = left / active_len as f64;
+        let kept;
+        if dense {
+            for (i, (&c, r)) in caps.iter().zip(rates.iter_mut()).enumerate()
+            {
+                if c <= fair {
+                    *r = c;
+                    left -= c;
+                } else {
+                    scratch.push(i as u32);
+                }
+            }
+            kept = scratch.len();
+        } else {
+            let mut w = 0usize;
+            for r in 0..active_len {
+                let i = scratch[r] as usize;
+                if caps[i] <= fair {
+                    rates[i] = caps[i];
+                    left -= caps[i];
+                } else {
+                    scratch[w] = scratch[r];
+                    w += 1;
+                }
+            }
+            scratch.truncate(w);
+            kept = w;
+        }
+        if kept == active_len {
+            for &i in scratch.iter() {
+                rates[i as usize] = fair;
+            }
+            break;
+        }
+        active_len = kept;
+        dense = false;
+    }
+}
+
+/// Flow count above which [`waterfill_pair`] recomputes the two pipes
+/// on separate threads. Thread spawn costs tens of microseconds, so
+/// the split only pays once each pipe's fill is itself that large —
+/// far above the simulator's default presets, which stay sequential.
+pub const WATERFILL_PAR_MIN: usize = 4096;
+
+/// Recompute both pipes of a shared link (down + up) — the per-event
+/// hot call in `transport::sim`. Sequential below
+/// [`WATERFILL_PAR_MIN`] flows; above it the two independent fills
+/// run on scoped threads (the pipes share no state, so the result is
+/// identical either way).
+#[allow(clippy::too_many_arguments)]
+pub fn waterfill_pair(
+    down_caps: &[f64],
+    down_rates: &mut [f64],
+    down_scratch: &mut Vec<u32>,
+    up_caps: &[f64],
+    up_rates: &mut [f64],
+    up_scratch: &mut Vec<u32>,
+) {
+    if down_caps.len().min(up_caps.len()) >= WATERFILL_PAR_MIN {
+        std::thread::scope(|s| {
+            s.spawn(|| waterfill(down_caps, down_rates, down_scratch));
+            waterfill(up_caps, up_rates, up_scratch);
+        });
+    } else {
+        waterfill(down_caps, down_rates, down_scratch);
+        waterfill(up_caps, up_rates, up_scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| 2.0 * rng.normal() as f32).collect()
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn minmax_matches_ref_all_tails() {
+        for n in 0..100 {
+            let v = randv(n, n as u64);
+            let (l, h) = minmax(&v);
+            let (lr, hr) = minmax_ref(&v);
+            assert_eq!(l.to_bits(), lr.to_bits(), "n={n}");
+            assert_eq!(h.to_bits(), hr.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn quant_dequant_match_ref_all_tails() {
+        for n in 0..100 {
+            let v = randv(n, 1000 + n as u64);
+            let (lo, hi) = minmax(&v);
+            let (scale, _) = if hi > lo {
+                ((hi - lo) / 255.0, 0.0)
+            } else {
+                (1.0, 0.0)
+            };
+            let mut codes = vec![0u8; n];
+            quant_codes(&v, lo, scale, 255.0, &mut codes);
+            let mut codes_ref = Vec::new();
+            quant_codes_ref(&v, lo, scale, 255.0, &mut codes_ref);
+            assert_eq!(codes, codes_ref, "n={n}");
+
+            let zp = if scale > 0.0 { -lo / scale } else { 0.0 };
+            let mut d = vec![0.0f32; n];
+            let mut dr = vec![0.0f32; n];
+            dequant(&codes, scale, zp, &mut d);
+            dequant_ref(&codes, scale, zp, &mut dr);
+            assert!(bits_eq(&d, &dr), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dequant_axpy_is_fused_dequant_plus_axpy() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 100] {
+            let v = randv(n, 7);
+            let (lo, hi) = minmax(&v);
+            let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+            let zp = -lo / scale;
+            let mut codes = vec![0u8; n];
+            quant_codes(&v, lo, scale, 255.0, &mut codes);
+
+            let mut acc = randv(n, 8);
+            let mut acc2 = acc.clone();
+            dequant_axpy(&codes, scale, zp, 0.37, &mut acc);
+            let mut tmp = vec![0.0f32; n];
+            dequant_ref(&codes, scale, zp, &mut tmp);
+            axpy_ref(&mut acc2, &tmp, 0.37);
+            assert!(bits_eq(&acc, &acc2), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_vadd_match_ref_all_tails() {
+        for n in 0..100 {
+            let x = randv(n, 2000 + n as u64);
+            let mut a = randv(n, 3000 + n as u64);
+            let mut b = a.clone();
+            axpy(&mut a, &x, 0.5);
+            axpy_ref(&mut b, &x, 0.5);
+            assert!(bits_eq(&a, &b), "n={n}");
+
+            let s = vadd(&a, &x);
+            let sr = vadd_ref(&a, &x);
+            assert!(bits_eq(&s, &sr), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_from_le_matches_decode_then_axpy() {
+        for n in [0usize, 1, 7, 8, 9, 33, 100] {
+            let v = randv(n, 11);
+            let bytes: Vec<u8> =
+                v.iter().flat_map(|x| x.to_le_bytes()).collect();
+            let mut acc = randv(n, 12);
+            let mut acc2 = acc.clone();
+            axpy_from_le(&bytes, 1.7, &mut acc);
+            axpy_ref(&mut acc2, &v, 1.7);
+            assert!(bits_eq(&acc, &acc2), "n={n}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_match_ref_all_widths_and_tails() {
+        let mut rng = Rng::new(5);
+        for bits in 1..=8u32 {
+            let max = 1usize << bits;
+            for n in 0..80 {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.below(max) as u8).collect();
+                let plen = packed_len(n, bits);
+                let mut a = vec![0u8; plen];
+                let mut b = vec![0u8; plen];
+                pack_into(&codes, bits, &mut a);
+                pack_ref(&codes, bits, &mut b);
+                assert_eq!(a, b, "pack bits={bits} n={n}");
+
+                let mut ua = vec![0u8; n];
+                let mut ub = vec![0u8; n];
+                unpack_into(&a, bits, &mut ua);
+                unpack_ref(&a, bits, &mut ub);
+                assert_eq!(ua, codes, "unpack bits={bits} n={n}");
+                assert_eq!(ua, ub, "unpack ref bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=8")]
+    fn pack_rejects_zero_bits() {
+        packed_len(4, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=8")]
+    fn pack_rejects_wide_bits() {
+        let mut out = [0u8; 4];
+        pack_into(&[1, 2, 3, 4], 9, &mut out);
+    }
+
+    #[test]
+    fn topk_matches_ref_as_a_set() {
+        for n in 0..60 {
+            let v = randv(n, 4000 + n as u64);
+            for k in [0usize, 1, n / 3, n.saturating_sub(1), n, n + 5] {
+                let mut a = topk_indices(&v, k);
+                let mut b = topk_indices_ref(&v, k);
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_tie_break_prefers_low_index() {
+        // Equal magnitudes: the (|v| desc, index asc) order must keep
+        // the earliest indices, in both implementations.
+        let v = vec![1.0f32, -1.0, 1.0, -1.0, 1.0];
+        let mut a = topk_indices(&v, 3);
+        let mut b = topk_indices_ref(&v, 3);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, vec![0, 1, 2]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gather_rows_matches_ref() {
+        for (outer, rs, rd, w) in
+            [(4usize, 7usize, 9usize, 5usize), (3, 8, 8, 8), (1, 3, 2, 2)]
+        {
+            let src = randv(outer * rs, 6);
+            let mut a = vec![0.0f32; outer * rd];
+            let mut b = vec![0.0f32; outer * rd];
+            gather_rows(&src, rs, &mut a, rd, w);
+            gather_rows_ref(&src, rs, &mut b, rd, w);
+            assert!(bits_eq(&a, &b), "{outer}x{rs}->{rd} w={w}");
+        }
+    }
+
+    #[test]
+    fn waterfill_matches_ref_bitwise() {
+        let mut rng = Rng::new(9);
+        for n in 0..50 {
+            let caps: Vec<f64> =
+                (0..n).map(|_| 0.002 + rng.f64() * 0.2).collect();
+            let mut a = vec![0.0f64; n];
+            let mut b = vec![0.0f64; n];
+            let mut scratch = Vec::new();
+            waterfill(&caps, &mut a, &mut scratch);
+            waterfill_ref(&caps, &mut b);
+            for i in 0..n {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn waterfill_pair_equals_two_fills() {
+        let mut rng = Rng::new(10);
+        let dc: Vec<f64> = (0..37).map(|_| 0.01 + rng.f64()).collect();
+        let uc: Vec<f64> = (0..37).map(|_| 0.01 + rng.f64()).collect();
+        let (mut dr, mut ur) = (vec![0.0; 37], vec![0.0; 37]);
+        let (mut ds, mut us) = (Vec::new(), Vec::new());
+        waterfill_pair(&dc, &mut dr, &mut ds, &uc, &mut ur, &mut us);
+        let (mut dr2, mut ur2) = (vec![0.0; 37], vec![0.0; 37]);
+        waterfill_ref(&dc, &mut dr2);
+        waterfill_ref(&uc, &mut ur2);
+        assert_eq!(dr, dr2);
+        assert_eq!(ur, ur2);
+    }
+
+    #[test]
+    fn waterfill_scratch_is_reused_across_calls() {
+        let mut scratch = Vec::new();
+        let caps = vec![0.05f64, 0.9, 0.9, 0.9];
+        let mut rates = vec![0.0f64; 4];
+        waterfill(&caps, &mut rates, &mut scratch);
+        let cap_after_first = scratch.capacity();
+        assert!(cap_after_first > 0);
+        waterfill(&caps, &mut rates, &mut scratch);
+        assert_eq!(scratch.capacity(), cap_after_first);
+        // Capped flow got its cap; the rest split the remainder.
+        assert_eq!(rates[0], 0.05);
+        assert!((rates[1] - (1.0 - 0.05) / 3.0).abs() < 1e-12);
+    }
+}

@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod experiments;
+pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

@@ -2,15 +2,12 @@
 //!
 //! Model state crosses the PJRT boundary as flat vectors (DESIGN.md §4),
 //! so aggregation, quantization, pruning and accounting are all O(P)
-//! loops over `&[f32]`. The hot ones (`axpy_weighted`, used once per
-//! client per round) are written to autovectorize.
+//! loops over `&[f32]`. The hot one (`axpy_weighted`, used once per
+//! client per round) routes through [`crate::kernels`].
 
 /// Weighted accumulation `acc += w * x` (FedAvg's inner loop).
 pub fn axpy_weighted(acc: &mut [f32], x: &[f32], w: f32) {
-    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
-    for (a, &b) in acc.iter_mut().zip(x.iter()) {
-        *a += w * b;
-    }
+    crate::kernels::axpy(acc, x, w);
 }
 
 /// Elementwise scale in place.

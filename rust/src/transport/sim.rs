@@ -494,29 +494,17 @@ impl ClientSim {
 /// with per-flow rate caps (water-filling): flows whose cap is at or
 /// below the running fair share get their cap; the leftover is
 /// re-split among the rest.
+///
+/// Delegates to [`crate::kernels::waterfill`], which replays the exact
+/// sequential `left -= caps[i]` chain of the original allocating loop
+/// (retained as `kernels::waterfill_ref`, property-pinned bitwise) but
+/// without a per-call allocation. This wrapper keeps the old signature
+/// for the tests; the per-event hot call inside [`simulate_round`]
+/// uses [`crate::kernels::waterfill_pair`] with reused scratch.
+#[cfg(test)]
 fn max_min_rates(caps: &[f64], rates: &mut [f64]) {
-    rates.fill(0.0);
-    let mut active: Vec<usize> = (0..caps.len()).collect();
-    let mut left = 1.0f64;
-    while !active.is_empty() && left > 0.0 {
-        let fair = left / active.len() as f64;
-        let mut kept = Vec::with_capacity(active.len());
-        for &i in &active {
-            if caps[i] <= fair {
-                rates[i] = caps[i];
-                left -= caps[i];
-            } else {
-                kept.push(i);
-            }
-        }
-        if kept.len() == active.len() {
-            for &i in &kept {
-                rates[i] = fair;
-            }
-            break;
-        }
-        active = kept;
-    }
+    let mut scratch = Vec::new();
+    crate::kernels::waterfill(caps, rates, &mut scratch);
 }
 
 /// Replay one round's settled loads through the chunked three-stage
@@ -546,6 +534,10 @@ pub fn simulate_round(net: &NetworkModel, clients: &[ClientLoad],
     let mut up_rates = vec![1.0f64; cs.len()];
     let mut down_caps = vec![0.0f64; cs.len()];
     let mut up_caps = vec![0.0f64; cs.len()];
+    // Active-set scratch reused across every water-filling event (the
+    // per-event hot path allocates nothing; see `kernels::waterfill`).
+    let mut down_scratch: Vec<u32> = Vec::new();
+    let mut up_scratch: Vec<u32> = Vec::new();
 
     loop {
         // Settle every enabled zero-time transition, deterministically.
@@ -576,8 +568,10 @@ pub fn simulate_round(net: &NetworkModel, clients: &[ClientLoad],
                     0.0
                 };
             }
-            max_min_rates(&down_caps, &mut down_rates);
-            max_min_rates(&up_caps, &mut up_rates);
+            crate::kernels::waterfill_pair(
+                &down_caps, &mut down_rates, &mut down_scratch,
+                &up_caps, &mut up_rates, &mut up_scratch,
+            );
         }
 
         // Jump to the next completion anywhere in the system.

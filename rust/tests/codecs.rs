@@ -102,8 +102,11 @@ fn per_channel_grouping_beats_per_tensor_on_scaled_rows() {
             for r in 0..rows {
                 let base = seg.offset + r * cols;
                 let row = &v[base..base + cols];
-                let lo = row.iter().cloned().fold(0.0f32, f32::min);
-                let hi = row.iter().cloned().fold(0.0f32, f32::max);
+                // True-range seeds (the codec no longer anchors the
+                // row range at zero), so the bound is the tight one.
+                let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = row.iter().cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
                 let scale = ((hi - lo) / 255.0).max(1e-12);
                 for i in 0..cols {
                     assert!((out[base + i] - row[i]).abs() <= scale * 0.51,

@@ -10,7 +10,7 @@
 //! container. CI's `sim-smoke` job re-verifies the same bit-identity
 //! end-to-end through the binary.
 
-use flocora::compression::Fp32Codec;
+use flocora::compression::{CodecKind, Fp32Codec};
 use flocora::config::{presets, FlConfig};
 use flocora::coordinator::executor::{ClientResult, Downloads,
                                      PipelinedExecutor, RoundContext};
@@ -187,6 +187,30 @@ fn overlap_transfer_is_bit_identical_to_serial() {
     assert_identical(&serial, &parallel, "serial vs parallel");
     assert_identical(&serial, &pipelined, "serial vs pipelined");
     assert_identical(&serial, &windowed, "serial vs pipelined w=2");
+}
+
+#[test]
+fn every_codec_identical_across_executors_via_zero_copy_merge() {
+    // Homogeneous rounds now carry *encoded* uploads all the way to
+    // the merge (`UpdateVector::Encoded` → `Codec::decode_into`), so
+    // this matrix pins the zero-copy fold bit-identical across the
+    // serial / parallel / windowed-pipelined executors for every wire
+    // codec the engine can be configured with.
+    for codec in ["q8", "q4", "q2", "topk:0.5", "zerofl:0.9:0.2",
+                  "sparse_ef:0.5"] {
+        let mut cfg = base_cfg();
+        cfg.codec = CodecKind::parse(codec).unwrap();
+        let serial = run(with_exec(cfg.clone(), ExecutorKind::Serial, 0, 0,
+                                   OverlapKind::None));
+        let parallel = run(with_exec(cfg.clone(), ExecutorKind::Parallel,
+                                     3, 0, OverlapKind::None));
+        let windowed = run(with_exec(cfg, ExecutorKind::Parallel, 3, 2,
+                                     OverlapKind::Transfer));
+        assert_identical(&serial, &parallel,
+                         &format!("{codec}: serial vs parallel"));
+        assert_identical(&serial, &windowed,
+                         &format!("{codec}: serial vs windowed"));
+    }
 }
 
 #[test]

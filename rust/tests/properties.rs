@@ -7,9 +7,10 @@
 //! wide: codecs, aggregation, partitioning, packing, JSON, rank
 //! projection.
 
-use flocora::compression::{AffineCodec, Codec, Fp32Codec, TopKCodec,
-                           ZeroFlCodec};
+use flocora::compression::{AffineCodec, Codec, CodecKind, Fp32Codec,
+                           TopKCodec, ZeroFlCodec};
 use flocora::coordinator::aggregator::FedAvg;
+use flocora::kernels;
 use flocora::coordinator::hetero::project_ranks;
 use flocora::data::lda_partition;
 use flocora::model::{build_spec, ModelCfg, ParamKind, Segment, Variant};
@@ -610,6 +611,156 @@ fn prop_event_simulation_is_reproducible_bitwise() {
             shuffled.reverse();
             let c = simulate_round(&net, &shuffled, &params);
             assert_eq!(a, c, "case {case} {sharing:?}: arrival order leaked");
+        }
+    }
+}
+
+#[test]
+fn prop_kernels_bit_identical_to_scalar_refs() {
+    // The tentpole contract: every chunked kernel is bit-identical to
+    // its retained scalar reference, across every length 0..100 — the
+    // sweep crosses every tail residue mod 8 many times over.
+    let mut rng = Rng::new(120);
+    for n in 0..100usize {
+        let v: Vec<f32> =
+            (0..n).map(|_| 3.0 * rng.normal() as f32).collect();
+
+        // Min/max range scan.
+        let (l, h) = kernels::minmax(&v);
+        let (lr, hr) = kernels::minmax_ref(&v);
+        assert_eq!(l.to_bits(), lr.to_bits(), "minmax lo n={n}");
+        assert_eq!(h.to_bits(), hr.to_bits(), "minmax hi n={n}");
+
+        // Quantize / dequantize / fused dequant-accumulate.
+        let scale = if h > l { (h - l) / 255.0 } else { 1.0 };
+        let zp = if h > l { -l / scale } else { 0.0 };
+        let mut codes = vec![0u8; n];
+        kernels::quant_codes(&v, l, scale, 255.0, &mut codes);
+        let mut codes_ref = Vec::new();
+        kernels::quant_codes_ref(&v, l, scale, 255.0, &mut codes_ref);
+        assert_eq!(codes, codes_ref, "quant n={n}");
+
+        let mut d = vec![0.0f32; n];
+        let mut dr = vec![0.0f32; n];
+        kernels::dequant(&codes, scale, zp, &mut d);
+        kernels::dequant_ref(&codes, scale, zp, &mut dr);
+        assert!(d.iter().zip(&dr).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "dequant n={n}");
+
+        let w = 0.25 + rng.f32();
+        let base: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32).collect();
+        let mut acc = base.clone();
+        let mut acc_ref = base.clone();
+        kernels::dequant_axpy(&codes, scale, zp, w, &mut acc);
+        kernels::axpy_ref(&mut acc_ref, &dr, w);
+        assert!(acc.iter().zip(&acc_ref)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "dequant_axpy n={n}");
+
+        // Weighted folds.
+        let mut a1 = base.clone();
+        let mut a2 = base.clone();
+        kernels::axpy(&mut a1, &v, w);
+        kernels::axpy_ref(&mut a2, &v, w);
+        assert!(a1.iter().zip(&a2).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "axpy n={n}");
+        let s1 = kernels::vadd(&base, &v);
+        let s2 = kernels::vadd_ref(&base, &v);
+        assert!(s1.iter().zip(&s2).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "vadd n={n}");
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let mut f1 = base.clone();
+        let mut f2 = base.clone();
+        kernels::axpy_from_le(&bytes, w, &mut f1);
+        kernels::axpy_ref(&mut f2, &v, w);
+        assert!(f1.iter().zip(&f2).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "axpy_from_le n={n}");
+
+        // Sub-byte pack/unpack at every width.
+        for bits in 1..=8u32 {
+            let max = 1usize << bits;
+            let cs: Vec<u8> = (0..n).map(|_| rng.below(max) as u8).collect();
+            let plen = kernels::packed_len(n, bits);
+            let mut p1 = vec![0u8; plen];
+            let mut p2 = vec![0u8; plen];
+            kernels::pack_into(&cs, bits, &mut p1);
+            kernels::pack_ref(&cs, bits, &mut p2);
+            assert_eq!(p1, p2, "pack bits={bits} n={n}");
+            let mut u1 = vec![0u8; n];
+            let mut u2 = vec![0u8; n];
+            kernels::unpack_into(&p1, bits, &mut u1);
+            kernels::unpack_ref(&p1, bits, &mut u2);
+            assert_eq!(u1, cs, "unpack round-trip bits={bits} n={n}");
+            assert_eq!(u1, u2, "unpack ref bits={bits} n={n}");
+        }
+
+        // Top-k threshold selection: same kept set as the reference.
+        for k in [0usize, 1, n / 2, n] {
+            let mut t1 = kernels::topk_indices(&v, k);
+            let mut t2 = kernels::topk_indices_ref(&v, k);
+            t1.sort_unstable();
+            t2.sort_unstable();
+            assert_eq!(t1, t2, "topk n={n} k={k}");
+        }
+
+        // Water-filling replays the reference's f64 chain exactly.
+        let caps: Vec<f64> =
+            (0..n).map(|_| 0.001 + rng.f64() * 0.3).collect();
+        let mut r1 = vec![0.0f64; n];
+        let mut r2 = vec![0.0f64; n];
+        let mut scratch = Vec::new();
+        kernels::waterfill(&caps, &mut r1, &mut scratch);
+        kernels::waterfill_ref(&caps, &mut r2);
+        assert!(r1.iter().zip(&r2).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "waterfill n={n}");
+    }
+
+    // Strided row gather (rank projection's inner copy).
+    for (outer, rs, rd, w) in [(5usize, 9usize, 7usize, 6usize),
+                               (3, 8, 8, 8), (2, 3, 5, 2), (1, 1, 1, 1)] {
+        let src: Vec<f32> =
+            (0..outer * rs).map(|_| rng.normal() as f32).collect();
+        let mut d1 = vec![0.0f32; outer * rd];
+        let mut d2 = vec![0.0f32; outer * rd];
+        kernels::gather_rows(&src, rs, &mut d1, rd, w);
+        kernels::gather_rows_ref(&src, rs, &mut d2, rd, w);
+        assert_eq!(d1, d2, "gather {outer}x{rs}->{rd} w={w}");
+    }
+}
+
+#[test]
+fn prop_decode_into_equals_decode_then_fold_for_every_codec() {
+    // The zero-copy merge contract (`Codec::decode_into`): folding an
+    // encoded message straight into an accumulator is bit-identical to
+    // decoding it and running the weighted fold — for every codec kind
+    // the engine can be configured with, on random layouts, weights
+    // and accumulator contents.
+    let mut rng = Rng::new(121);
+    for case in 0..CASES {
+        let (segs, v) = rand_layout(&mut rng);
+        let kinds = [CodecKind::Fp32, CodecKind::Affine(8),
+                     CodecKind::Affine(4), CodecKind::Affine(2),
+                     CodecKind::TopK(0.4), CodecKind::ZeroFl(0.9, 0.2),
+                     CodecKind::SparseEf(0.3)];
+        for kind in kinds {
+            let c = kind.build();
+            let msg = c.encode_client(case, &v, &segs).unwrap();
+            let w = (0.1 + rng.f64() * 5.0) as f32;
+            let base: Vec<f32> =
+                (0..v.len()).map(|_| rng.normal() as f32).collect();
+            let mut streamed = base.clone();
+            c.decode_into(&msg, &segs, &mut streamed, w).unwrap();
+            let mut folded = base;
+            let dec = c.decode(&msg, &segs).unwrap();
+            kernels::axpy_ref(&mut folded, &dec, w);
+            let same = streamed.iter().zip(&folded)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "case {case} codec {}", c.name());
+            // A wrong-dimension accumulator is rejected, not folded.
+            let mut short = vec![0.0f32; v.len() + 1];
+            assert!(c.decode_into(&msg, &segs, &mut short, w).is_err(),
+                    "case {case} codec {} accepted a bad dim", c.name());
         }
     }
 }
