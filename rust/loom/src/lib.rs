@@ -1,0 +1,164 @@
+//! A miniature, dependency-free re-implementation of the [`loom`]
+//! model checker's API surface, vendored for flocora's determinism
+//! verification layer (the hand-maintained `Cargo.lock` admits no
+//! registry crates).
+//!
+//! [`loom`]: https://github.com/tokio-rs/loom
+//!
+//! # What it does
+//!
+//! [`model`] runs a closure repeatedly, exploring every order in which
+//! its threads can interleave at *instrumented operations* (the
+//! [`sync`] / [`thread`] primitives), within a CHESS-style preemption
+//! budget. A deterministic turnstile serializes the threads — exactly
+//! one runs between decision points — so each schedule is replayable,
+//! and a depth-first search over the decisions enumerates schedules
+//! without ever running the same one twice.
+//!
+//! Detected failures: **deadlocks / lost wakeups** (every live thread
+//! blocked — condvars here never wake spuriously, so a forgotten
+//! `notify` cannot be masked), **user assertions** failing under some
+//! schedule, and **nondeterminism** (replay divergence) in the checked
+//! closure itself.
+//!
+//! # Fidelity notes (vs. real loom)
+//!
+//! * Atomics are modeled as sequentially-consistent single ops —
+//!   weak-memory reorderings are *not* explored. flocora's hot-path
+//!   atomics are diagnostics counters, so this is the right trade.
+//! * `sync::Arc` is `std`'s; reference-count races are not modeled.
+//! * Condvar wakeups are FIFO and never spurious (stricter than
+//!   reality, so predicate-loop bugs surface as deadlocks).
+//! * `thread::scope` takes its closure under an independent borrow
+//!   lifetime (see `thread` module docs); call sites read the same.
+//!
+//! Used by the flocora crate under `RUSTFLAGS="--cfg loom"` through
+//! its `flocora::sync` shim; `rust/tests/loom.rs` holds the protocol
+//! models. This crate itself compiles (and self-tests) without any
+//! cfg flag.
+
+pub mod model;
+pub(crate) mod sched;
+pub mod sync;
+pub mod thread;
+
+pub use model::model;
+
+#[cfg(test)]
+mod tests {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    use crate::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::{Arc, Condvar, Mutex};
+    use crate::{model, thread};
+
+    #[test]
+    fn mutex_counter_is_exact_under_every_schedule() {
+        model(|| {
+            let n = Arc::new(Mutex::new(0usize));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let n2 = Arc::clone(&n);
+                    thread::spawn(move || {
+                        *n2.lock().unwrap() += 1;
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsynchronized_read_modify_write_race_is_found() {
+        model(|| {
+            let a = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let a2 = Arc::clone(&a);
+                    thread::spawn(move || {
+                        // BUG on purpose: load + store is not atomic.
+                        let v = a2.load(Ordering::SeqCst);
+                        a2.store(v + 1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn missed_notify_is_reported_as_deadlock() {
+        model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let h = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                let mut ready = m.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+            });
+            // BUG on purpose: flip the flag but never notify. Real
+            // condvars often save this with a spurious wakeup; the
+            // model must not.
+            *pair.0.lock().unwrap() = true;
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn condvar_handoff_terminates_under_every_schedule() {
+        model(|| {
+            let pair = Arc::new((Mutex::new(0usize), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let h = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock().unwrap() += 1;
+                cv.notify_one();
+            });
+            let (m, cv) = &*pair;
+            let mut g = m.lock().unwrap();
+            while *g == 0 {
+                g = cv.wait(g).unwrap();
+            }
+            assert_eq!(*g, 1);
+            drop(g);
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn scope_joins_workers_and_propagates_their_panic() {
+        model(|| {
+            let sum = Arc::new(Mutex::new(0usize));
+            thread::scope(|s| {
+                for add in [1usize, 2] {
+                    let sum2 = Arc::clone(&sum);
+                    s.spawn(move || {
+                        *sum2.lock().unwrap() += add;
+                    });
+                }
+            });
+            // Scope exit joined both workers.
+            assert_eq!(*sum.lock().unwrap(), 3);
+
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                thread::scope(|s| {
+                    s.spawn(|| panic!("worker boom"));
+                });
+            }));
+            assert!(
+                caught.is_err(),
+                "scope must re-raise an unjoined worker's panic"
+            );
+        });
+    }
+}

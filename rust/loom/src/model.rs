@@ -1,0 +1,134 @@
+//! The exploration driver: run the checked closure once per schedule
+//! until the (preemption-bounded) schedule tree is exhausted.
+
+use std::panic::{resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Once};
+
+use crate::sched::{self, AbortIteration, Sched};
+
+/// Exploration knobs. Environment overrides: `LOOM_PREEMPTION_BOUND`
+/// (a number, or `none` for unbounded DFS) and `LOOM_MAX_ITERATIONS`.
+pub struct Builder {
+    /// CHESS-style budget: how many times a schedule may switch away
+    /// from a still-runnable thread. `None` = full (unbounded) DFS.
+    /// The default of 2 finds the overwhelming majority of real
+    /// concurrency bugs while keeping iteration counts tractable.
+    pub preemption_bound: Option<usize>,
+    /// Hard cap on explored schedules; hitting it truncates coverage
+    /// (with a note on stderr) rather than hanging the suite.
+    pub max_iterations: u64,
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        let preemption_bound = match std::env::var("LOOM_PREEMPTION_BOUND")
+        {
+            Ok(v) if v == "none" => None,
+            Ok(v) => Some(v.parse().unwrap_or(2)),
+            Err(_) => Some(2),
+        };
+        let max_iterations = std::env::var("LOOM_MAX_ITERATIONS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200_000);
+        Builder { preemption_bound, max_iterations }
+    }
+
+    /// Model-check `f`: execute it under every schedule (within the
+    /// bounds), panicking on the first deadlock / lost wakeup /
+    /// user-assertion failure, with the failing schedule attached.
+    pub fn check<F>(&self, f: F)
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        install_abort_hook();
+        let sched = Arc::new(Sched::new(self.preemption_bound));
+        let f = Arc::new(f);
+        let mut iterations: u64 = 0;
+        loop {
+            iterations += 1;
+            sched.begin_iteration();
+            let s2 = Arc::clone(&sched);
+            let f2 = Arc::clone(&f);
+            let root = std::thread::Builder::new()
+                .name("loom-root".into())
+                .spawn(move || {
+                    sched::set_current(Some((Arc::clone(&s2), 0)));
+                    let out =
+                        std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            s2.start_park(0);
+                            f2();
+                        }));
+                    if let Err(p) = out {
+                        if p.downcast_ref::<AbortIteration>().is_none() {
+                            s2.set_root_panic(p);
+                        }
+                    }
+                    s2.op_finish(0);
+                })
+                .expect("loom: failed to spawn the root thread");
+            sched.wait_iteration_done();
+            let _ = root.join();
+
+            let failure = sched.take_failure();
+            // A user panic outranks the secondary deadlock it may have
+            // caused on its way down.
+            if let Some(p) = sched.take_root_panic() {
+                eprintln!(
+                    "loom (mini): panic on iteration {iterations}; \
+                     schedule: {}",
+                    sched.trail_string()
+                );
+                resume_unwind(p);
+            }
+            if let Some(msg) = failure {
+                panic!(
+                    "loom (mini): model failed on iteration \
+                     {iterations}: {msg}\n  schedule: {}",
+                    sched.trail_string()
+                );
+            }
+            if !sched.backtrack() {
+                return;
+            }
+            if iterations >= self.max_iterations {
+                eprintln!(
+                    "loom (mini): stopping after {iterations} \
+                     iterations (LOOM_MAX_ITERATIONS cap) — \
+                     exploration truncated"
+                );
+                return;
+            }
+        }
+    }
+}
+
+impl Default for Builder {
+    fn default() -> Builder {
+        Builder::new()
+    }
+}
+
+/// Model-check `f` with default bounds — the `loom::model` entry
+/// point.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check(f)
+}
+
+/// Suppress the panic-hook noise of [`AbortIteration`] sentinels (they
+/// unwind every parked thread of a failed iteration); anything else is
+/// forwarded to the previously installed hook.
+fn install_abort_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<AbortIteration>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}

@@ -1,0 +1,543 @@
+//! The deterministic exploring scheduler behind the model checker.
+//!
+//! One schedule = one *iteration*: the checked closure runs with every
+//! instrumented operation (lock, unlock, condvar wait/notify, spawn,
+//! join, atomic access) serialized through a turnstile — exactly one
+//! model thread is `active` at a time, everyone else parks on one
+//! process-wide condvar. Each operation is a *decision point*: the
+//! scheduler picks which runnable thread runs next, recording the
+//! choice (and the alternatives) in a DFS `path`. When the iteration
+//! finishes, the deepest decision with unexplored alternatives is
+//! flipped and the prefix replayed, until the schedule tree (bounded
+//! by a CHESS-style preemption budget) is exhausted.
+//!
+//! Failure modes detected:
+//!
+//! * **Deadlock / lost wakeup** — every live thread is blocked. Since
+//!   condvars here have no spurious wakeups, a protocol that only
+//!   terminates because real condvars happen to wake threads anyway is
+//!   caught, not masked.
+//! * **Replay divergence** — the checked closure behaved differently
+//!   on an identical schedule prefix, i.e. it is nondeterministic
+//!   (time, ambient randomness, un-instrumented races).
+//!
+//! On failure the scheduler wakes every parked thread with an
+//! [`AbortIteration`] sentinel panic so the iteration unwinds cleanly,
+//! then reports the failure with the recent op trail.
+
+use std::collections::VecDeque;
+use std::panic::panic_any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex,
+                MutexGuard as StdMutexGuard,
+                PoisonError as StdPoisonError};
+
+/// Sentinel panic payload used to unwind threads of a failed
+/// iteration. Never surfaces to the user: the thread wrappers catch
+/// it, and the process panic hook suppresses its message.
+pub(crate) struct AbortIteration;
+
+/// Monotonic iteration stamp; object ids registered under an older
+/// epoch are re-registered lazily, so primitives created outside the
+/// model (or surviving across iterations) stay sound.
+static EPOCH: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static CURRENT: std::cell::RefCell<Option<(Arc<Sched>, usize)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// The scheduler handle + thread id of the current model thread, if
+/// this OS thread is running inside a `model()` iteration.
+pub(crate) fn current() -> Option<(Arc<Sched>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+pub(crate) fn set_current(v: Option<(Arc<Sched>, usize)>) {
+    CURRENT.with(|c| *c.borrow_mut() = v);
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Run {
+    Runnable,
+    Blocked,
+    Finished,
+}
+
+/// One DFS decision: which thread was activated, and the runnable
+/// alternatives not yet explored (popped from the back on backtrack).
+struct Frame {
+    chosen: usize,
+    remaining: Vec<usize>,
+}
+
+pub(crate) struct Core {
+    pub(crate) epoch: u64,
+    threads: Vec<Run>,
+    /// Per-thread list of threads blocked joining it.
+    joiners: Vec<Vec<usize>>,
+    active: usize,
+    finished: usize,
+    mutex_holders: Vec<Option<usize>>,
+    mutex_waiters: Vec<Vec<usize>>,
+    cond_waiters: Vec<VecDeque<usize>>,
+    /// DFS over scheduling decisions; survives iterations.
+    path: Vec<Frame>,
+    /// Cursor into `path` for the current iteration (replay prefix).
+    pos: usize,
+    preemptions: usize,
+    pub(crate) failure: Option<String>,
+    trail: Vec<(usize, &'static str, usize)>,
+    root_panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+}
+
+impl Core {
+    fn trail_push(&mut self, tid: usize, op: &'static str, obj: usize) {
+        if self.trail.len() < 512 {
+            self.trail.push((tid, op, obj));
+        }
+    }
+}
+
+pub(crate) struct Sched {
+    core: StdMutex<Core>,
+    cv: StdCondvar,
+    preemption_bound: Option<usize>,
+}
+
+impl Sched {
+    pub(crate) fn new(preemption_bound: Option<usize>) -> Sched {
+        Sched {
+            core: StdMutex::new(Core {
+                epoch: 0,
+                threads: Vec::new(),
+                joiners: Vec::new(),
+                active: 0,
+                finished: 0,
+                mutex_holders: Vec::new(),
+                mutex_waiters: Vec::new(),
+                cond_waiters: Vec::new(),
+                path: Vec::new(),
+                pos: 0,
+                preemptions: 0,
+                failure: None,
+                trail: Vec::new(),
+                root_panic: None,
+            }),
+            cv: StdCondvar::new(),
+            preemption_bound,
+        }
+    }
+
+    fn lock_core(&self) -> StdMutexGuard<'_, Core> {
+        self.core.lock().unwrap_or_else(StdPoisonError::into_inner)
+    }
+
+    /// Reset per-iteration state (the DFS `path` survives; `pos`
+    /// rewinds so the recorded prefix replays).
+    pub(crate) fn begin_iteration(&self) {
+        let mut g = self.lock_core();
+        g.epoch = EPOCH.fetch_add(1, Ordering::Relaxed);
+        g.threads = vec![Run::Runnable];
+        g.joiners = vec![Vec::new()];
+        g.active = 0;
+        g.finished = 0;
+        g.mutex_holders.clear();
+        g.mutex_waiters.clear();
+        g.cond_waiters.clear();
+        g.pos = 0;
+        g.preemptions = 0;
+        g.failure = None;
+        g.trail.clear();
+        g.root_panic = None;
+    }
+
+    /// Pick the next active thread: replay the recorded path while it
+    /// lasts, then extend it with a fresh decision (preferring to keep
+    /// the current thread running — switching away from a
+    /// still-runnable thread is a preemption and counts against the
+    /// CHESS budget). No runnable thread while live ones remain is the
+    /// deadlock / lost-wakeup failure.
+    fn decide(&self, core: &mut Core) {
+        let runnable: Vec<usize> = core
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r == Run::Runnable)
+            .map(|(t, _)| t)
+            .collect();
+        if runnable.is_empty() {
+            if core.finished == core.threads.len() {
+                core.active = usize::MAX;
+                return;
+            }
+            let states: Vec<String> = core
+                .threads
+                .iter()
+                .enumerate()
+                .map(|(t, r)| format!("t{t}:{r:?}"))
+                .collect();
+            core.failure = Some(format!(
+                "deadlock (lost wakeup): every live thread is blocked \
+                 [{}]",
+                states.join(", ")
+            ));
+            return;
+        }
+        let prev = core.active;
+        let prev_runnable = runnable.contains(&prev);
+        let chosen = if core.pos < core.path.len() {
+            let c = core.path[core.pos].chosen;
+            if !runnable.contains(&c) {
+                core.failure = Some(format!(
+                    "replay diverged at step {}: recorded thread t{c} \
+                     is not runnable — the checked closure is \
+                     nondeterministic (time, ambient randomness, or an \
+                     un-instrumented race)",
+                    core.pos
+                ));
+                return;
+            }
+            c
+        } else {
+            let allow_preempt = !prev_runnable
+                || match self.preemption_bound {
+                    None => true,
+                    Some(b) => core.preemptions < b,
+                };
+            let mut cands = Vec::new();
+            if prev_runnable {
+                cands.push(prev);
+            }
+            if allow_preempt {
+                cands.extend(
+                    runnable.iter().copied().filter(|&t| t != prev),
+                );
+            }
+            let chosen = cands[0];
+            // Alternatives explored back-to-front on backtrack;
+            // reverse so lower thread ids are tried first.
+            let mut remaining = cands.split_off(1);
+            remaining.reverse();
+            core.path.push(Frame { chosen, remaining });
+            chosen
+        };
+        if prev_runnable && chosen != prev {
+            core.preemptions += 1;
+        }
+        core.pos += 1;
+        core.active = chosen;
+    }
+
+    /// Park until this thread is the active one. If the iteration
+    /// fails meanwhile, unwind with the [`AbortIteration`] sentinel —
+    /// unless this thread is already unwinding, in which case return
+    /// so the caller can wind down minimally (callers re-check
+    /// `failure` after every park).
+    fn park<'a>(
+        &self,
+        mut g: StdMutexGuard<'a, Core>,
+        me: usize,
+    ) -> StdMutexGuard<'a, Core> {
+        loop {
+            if g.failure.is_some() {
+                if std::thread::panicking() {
+                    return g;
+                }
+                drop(g);
+                panic_any(AbortIteration);
+            }
+            if g.active == me {
+                return g;
+            }
+            g = self
+                .cv
+                .wait(g)
+                .unwrap_or_else(StdPoisonError::into_inner);
+        }
+    }
+
+    /// The decision point before an instrumented op: record it, let
+    /// the scheduler (possibly) hand the turn to another thread, park
+    /// until it comes back to us.
+    fn boundary_locked<'a>(
+        &self,
+        mut g: StdMutexGuard<'a, Core>,
+        me: usize,
+        op: &'static str,
+        obj: usize,
+    ) -> StdMutexGuard<'a, Core> {
+        g.trail_push(me, op, obj);
+        self.decide(&mut g);
+        self.cv.notify_all();
+        self.park(g, me)
+    }
+
+    /// Run `f` with the core locked — used by the sync primitives to
+    /// resolve their lazily-registered object ids.
+    pub(crate) fn with_core<R>(&self, f: impl FnOnce(&mut Core) -> R) -> R {
+        f(&mut self.lock_core())
+    }
+
+    pub(crate) fn register_mutex(core: &mut Core) -> usize {
+        core.mutex_holders.push(None);
+        core.mutex_waiters.push(Vec::new());
+        core.mutex_holders.len() - 1
+    }
+
+    pub(crate) fn register_condvar(core: &mut Core) -> usize {
+        core.cond_waiters.push(VecDeque::new());
+        core.cond_waiters.len() - 1
+    }
+
+    /// Park the freshly spawned thread `me` until first scheduled.
+    pub(crate) fn start_park(&self, me: usize) {
+        let g = self.lock_core();
+        let _g = self.park(g, me);
+    }
+
+    /// Model-level mutex acquire. After a failed iteration this is a
+    /// no-op: the std mutex underneath still provides real exclusion
+    /// while everything unwinds.
+    pub(crate) fn op_lock(&self, me: usize, mid: usize) {
+        let mut g = self.lock_core();
+        if g.failure.is_none() {
+            g = self.boundary_locked(g, me, "lock", mid);
+        }
+        loop {
+            if g.failure.is_some() {
+                return;
+            }
+            if g.mutex_holders[mid].is_none() {
+                g.mutex_holders[mid] = Some(me);
+                return;
+            }
+            // Held: block; the unlocker wakes all waiters and the
+            // scheduler explores who wins the re-acquire race.
+            g.mutex_waiters[mid].push(me);
+            g.threads[me] = Run::Blocked;
+            self.decide(&mut g);
+            self.cv.notify_all();
+            g = self.park(g, me);
+        }
+    }
+
+    pub(crate) fn op_unlock(&self, me: usize, mid: usize) {
+        let mut g = self.lock_core();
+        if g.failure.is_some() {
+            return;
+        }
+        g = self.boundary_locked(g, me, "unlock", mid);
+        if g.failure.is_some() {
+            return;
+        }
+        debug_assert_eq!(g.mutex_holders[mid], Some(me));
+        g.mutex_holders[mid] = None;
+        let ws = std::mem::take(&mut g.mutex_waiters[mid]);
+        for w in ws {
+            g.threads[w] = Run::Runnable;
+        }
+    }
+
+    /// Atomically release `mid`, enqueue on condvar `cid`, block until
+    /// notified (FIFO, never spuriously), then re-acquire `mid`.
+    pub(crate) fn op_cond_wait(&self, me: usize, cid: usize, mid: usize) {
+        let mut g = self.lock_core();
+        if g.failure.is_some() {
+            return;
+        }
+        g = self.boundary_locked(g, me, "cond-wait", cid);
+        if g.failure.is_some() {
+            return;
+        }
+        debug_assert_eq!(g.mutex_holders[mid], Some(me));
+        g.mutex_holders[mid] = None;
+        let ws = std::mem::take(&mut g.mutex_waiters[mid]);
+        for w in ws {
+            g.threads[w] = Run::Runnable;
+        }
+        g.cond_waiters[cid].push_back(me);
+        g.threads[me] = Run::Blocked;
+        self.decide(&mut g);
+        self.cv.notify_all();
+        g = self.park(g, me);
+        // Notified (or winding down): re-acquire the mutex.
+        loop {
+            if g.failure.is_some() {
+                return;
+            }
+            if g.mutex_holders[mid].is_none() {
+                g.mutex_holders[mid] = Some(me);
+                return;
+            }
+            g.mutex_waiters[mid].push(me);
+            g.threads[me] = Run::Blocked;
+            self.decide(&mut g);
+            self.cv.notify_all();
+            g = self.park(g, me);
+        }
+    }
+
+    pub(crate) fn op_notify(&self, me: usize, cid: usize, all: bool) {
+        let mut g = self.lock_core();
+        if g.failure.is_some() {
+            return;
+        }
+        let label = if all { "notify-all" } else { "notify-one" };
+        g = self.boundary_locked(g, me, label, cid);
+        if g.failure.is_some() {
+            return;
+        }
+        if all {
+            while let Some(t) = g.cond_waiters[cid].pop_front() {
+                g.threads[t] = Run::Runnable;
+            }
+        } else if let Some(t) = g.cond_waiters[cid].pop_front() {
+            g.threads[t] = Run::Runnable;
+        }
+    }
+
+    /// Register a child thread; returns its tid. The child must call
+    /// [`Sched::start_park`] before touching anything shared.
+    pub(crate) fn op_spawn(&self, me: usize) -> usize {
+        let mut g = self.lock_core();
+        if g.failure.is_none() {
+            g = self.boundary_locked(g, me, "spawn", 0);
+        }
+        g.threads.push(Run::Runnable);
+        g.joiners.push(Vec::new());
+        g.threads.len() - 1
+    }
+
+    /// Block until `target` finishes. Safe to call mid-unwind (the
+    /// scope guard joining workers while a panic propagates): if the
+    /// iteration fails while we wait, return and let the real join
+    /// underneath finish the job.
+    pub(crate) fn op_join(&self, me: usize, target: usize) {
+        let unwinding = std::thread::panicking();
+        let mut g = self.lock_core();
+        if g.failure.is_some() {
+            if unwinding {
+                return;
+            }
+            drop(g);
+            panic_any(AbortIteration);
+        }
+        g = self.boundary_locked(g, me, "join", target);
+        loop {
+            if g.failure.is_some() {
+                if unwinding {
+                    return;
+                }
+                drop(g);
+                panic_any(AbortIteration);
+            }
+            if g.threads[target] == Run::Finished {
+                return;
+            }
+            g.joiners[target].push(me);
+            g.threads[me] = Run::Blocked;
+            self.decide(&mut g);
+            self.cv.notify_all();
+            g = self.park(g, me);
+        }
+    }
+
+    /// Mark `me` finished, wake its joiners, hand the turn onward.
+    /// Runs in every mode (normal, failed, unwinding): the iteration
+    /// only ends when every registered thread has finished.
+    pub(crate) fn op_finish(&self, me: usize) {
+        let mut g = self.lock_core();
+        g.threads[me] = Run::Finished;
+        g.finished += 1;
+        let js = std::mem::take(&mut g.joiners[me]);
+        for j in js {
+            g.threads[j] = Run::Runnable;
+        }
+        if g.failure.is_none() {
+            g.trail_push(me, "finish", 0);
+            self.decide(&mut g);
+        }
+        drop(g);
+        // Wakes the next active thread — and the model loop, which
+        // waits on the same condvar for the last finish.
+        self.cv.notify_all();
+    }
+
+    /// A sequentially-consistent atomic access: one decision point,
+    /// then the std op runs under the turnstile.
+    pub(crate) fn op_atomic(&self, me: usize, name: &'static str) {
+        let g = self.lock_core();
+        if g.failure.is_some() {
+            if std::thread::panicking() {
+                return;
+            }
+            drop(g);
+            panic_any(AbortIteration);
+        }
+        let _g = self.boundary_locked(g, me, name, 0);
+    }
+
+    /// Record the user panic that escaped the root closure.
+    pub(crate) fn set_root_panic(
+        &self,
+        p: Box<dyn std::any::Any + Send + 'static>,
+    ) {
+        let mut g = self.lock_core();
+        if g.root_panic.is_none() {
+            g.root_panic = Some(p);
+        }
+    }
+
+    /// Block the model loop until every registered thread finished.
+    pub(crate) fn wait_iteration_done(&self) {
+        let mut g = self.lock_core();
+        while g.finished < g.threads.len() {
+            g = self
+                .cv
+                .wait(g)
+                .unwrap_or_else(StdPoisonError::into_inner);
+        }
+    }
+
+    /// Advance the DFS to the next unexplored schedule. `false` =
+    /// the whole (bounded) schedule tree has been explored.
+    pub(crate) fn backtrack(&self) -> bool {
+        let mut g = self.lock_core();
+        loop {
+            match g.path.last_mut() {
+                None => return false,
+                Some(fr) => match fr.remaining.pop() {
+                    Some(next) => {
+                        fr.chosen = next;
+                        return true;
+                    }
+                    None => {
+                        g.path.pop();
+                    }
+                },
+            }
+        }
+    }
+
+    pub(crate) fn take_failure(&self) -> Option<String> {
+        self.lock_core().failure.take()
+    }
+
+    pub(crate) fn take_root_panic(
+        &self,
+    ) -> Option<Box<dyn std::any::Any + Send + 'static>> {
+        self.lock_core().root_panic.take()
+    }
+
+    /// The failing iteration's op trail, for diagnostics.
+    pub(crate) fn trail_string(&self) -> String {
+        let g = self.lock_core();
+        let steps: Vec<String> = g
+            .trail
+            .iter()
+            .map(|(t, op, obj)| format!("t{t}:{op}({obj})"))
+            .collect();
+        steps.join(" → ")
+    }
+}

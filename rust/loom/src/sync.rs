@@ -1,0 +1,263 @@
+//! Instrumented twins of `std::sync` primitives.
+//!
+//! Each primitive wraps its `std` counterpart for the actual data
+//! handling (so memory safety and poisoning come for free) and calls
+//! into the scheduler at every visible transition. Outside a
+//! [`crate::model`] run the hooks vanish and the primitives behave
+//! exactly like `std`'s.
+//!
+//! Fidelity notes (deliberate differences from real condvars):
+//! condvar waits here never wake spuriously and are FIFO — code that
+//! is only correct *because* real condvars wake threads it forgot to
+//! notify is therefore caught as a deadlock, not masked. Mixing model
+//! and non-model threads on one primitive is not supported.
+
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex,
+                MutexGuard as StdMutexGuard,
+                PoisonError as StdPoisonError};
+
+use crate::sched::{self, Sched};
+
+pub use std::sync::{Arc, LockResult, PoisonError};
+
+/// (epoch, id) cell for lazy per-iteration registration: an object
+/// created before the model run (or reused across iterations) simply
+/// re-registers the first time each iteration touches it.
+type IdCell = StdMutex<(u64, usize)>;
+
+fn fresh_cell() -> IdCell {
+    StdMutex::new((0, 0))
+}
+
+/// A mutual-exclusion primitive; `std::sync::Mutex` API subset.
+pub struct Mutex<T> {
+    id: IdCell,
+    data: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex { id: fresh_cell(), data: StdMutex::new(t) }
+    }
+
+    fn model_id(&self, sched: &Sched) -> usize {
+        sched.with_core(|core| {
+            let mut cell = self
+                .id
+                .lock()
+                .unwrap_or_else(StdPoisonError::into_inner);
+            if cell.0 != core.epoch {
+                cell.0 = core.epoch;
+                cell.1 = Sched::register_mutex(core);
+            }
+            cell.1
+        })
+    }
+
+    /// Acquire, asking the scheduler first; the std lock underneath is
+    /// uncontended once the model grants it. Poisoning is the std
+    /// mutex's, surfaced with the same `LockResult` shape.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let model = sched::current().map(|(sched, me)| {
+            let mid = self.model_id(&sched);
+            sched.op_lock(me, mid);
+            (sched, me, mid)
+        });
+        match self.data.lock() {
+            Ok(g) => Ok(MutexGuard { mx: self, inner: Some(g), model }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                mx: self,
+                inner: Some(p.into_inner()),
+                model,
+            })),
+        }
+    }
+}
+
+/// RAII guard; releases the model-level lock after the std one.
+pub struct MutexGuard<'a, T> {
+    mx: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    /// `(sched, tid, mutex id)` when acquired inside a model run.
+    model: Option<(Arc<Sched>, usize, usize)>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            Some(g) => g,
+            None => panic!("lock guard already released"),
+        }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.inner {
+            Some(g) => g,
+            None => panic!("lock guard already released"),
+        }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.inner.take() {
+            drop(g);
+            if let Some((sched, me, mid)) = self.model.take() {
+                sched.op_unlock(me, mid);
+            }
+        }
+    }
+}
+
+/// A condition variable; `std::sync::Condvar` API subset. Under the
+/// model: FIFO wakeups, no spurious wakeups, no timeouts.
+pub struct Condvar {
+    id: IdCell,
+    /// Used only outside a model run.
+    std: StdCondvar,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar { id: fresh_cell(), std: StdCondvar::new() }
+    }
+
+    fn model_id(&self, sched: &Sched) -> usize {
+        sched.with_core(|core| {
+            let mut cell = self
+                .id
+                .lock()
+                .unwrap_or_else(StdPoisonError::into_inner);
+            if cell.0 != core.epoch {
+                cell.0 = core.epoch;
+                cell.1 = Sched::register_condvar(core);
+            }
+            cell.1
+        })
+    }
+
+    pub fn wait<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        let mx = guard.mx;
+        match guard.model.take() {
+            Some((sched, me, mid)) => {
+                let cid = self.model_id(&sched);
+                // Release the std lock before the model-level
+                // release+block+reacquire; `guard` is inert now (its
+                // Drop sees both fields taken).
+                drop(guard.inner.take());
+                drop(guard);
+                sched.op_cond_wait(me, cid, mid);
+                // The model granted the lock back; the std lock is
+                // free (or its holder is unwinding) by construction.
+                match mx.data.lock() {
+                    Ok(g) => Ok(MutexGuard {
+                        mx,
+                        inner: Some(g),
+                        model: Some((sched, me, mid)),
+                    }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        mx,
+                        inner: Some(p.into_inner()),
+                        model: Some((sched, me, mid)),
+                    })),
+                }
+            }
+            None => {
+                let std_guard =
+                    guard.inner.take().expect("guard already released");
+                drop(guard);
+                match self.std.wait(std_guard) {
+                    Ok(g) => {
+                        Ok(MutexGuard { mx, inner: Some(g), model: None })
+                    }
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        mx,
+                        inner: Some(p.into_inner()),
+                        model: None,
+                    })),
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match sched::current() {
+            Some((sched, me)) => {
+                let cid = self.model_id(&sched);
+                sched.op_notify(me, cid, false);
+            }
+            None => self.std.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match sched::current() {
+            Some((sched, me)) => {
+                let cid = self.model_id(&sched);
+                sched.op_notify(me, cid, true);
+            }
+            None => self.std.notify_all(),
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+pub mod atomic {
+    //! Instrumented atomics: each access is one sequentially-consistent
+    //! decision point for the scheduler, then the std op.
+
+    pub use std::sync::atomic::Ordering;
+
+    fn hook(name: &'static str) {
+        if let Some((sched, me)) = crate::sched::current() {
+            sched.op_atomic(me, name);
+        }
+    }
+
+    #[derive(Default, Debug)]
+    pub struct AtomicUsize {
+        inner: std::sync::atomic::AtomicUsize,
+    }
+
+    impl AtomicUsize {
+        pub const fn new(v: usize) -> AtomicUsize {
+            AtomicUsize { inner: std::sync::atomic::AtomicUsize::new(v) }
+        }
+
+        pub fn load(&self, order: Ordering) -> usize {
+            hook("atomic-load");
+            self.inner.load(order)
+        }
+
+        pub fn store(&self, v: usize, order: Ordering) {
+            hook("atomic-store");
+            self.inner.store(v, order);
+        }
+
+        pub fn fetch_add(&self, v: usize, order: Ordering) -> usize {
+            hook("atomic-fetch-add");
+            self.inner.fetch_add(v, order)
+        }
+
+        pub fn fetch_max(&self, v: usize, order: Ordering) -> usize {
+            hook("atomic-fetch-max");
+            self.inner.fetch_max(v, order)
+        }
+
+        pub fn swap(&self, v: usize, order: Ordering) -> usize {
+            hook("atomic-swap");
+            self.inner.swap(v, order)
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Instrumented twins of `std::thread` spawn/join/scope.
+//!
+//! Every spawned closure runs inside a wrapper that (a) registers the
+//! thread with the scheduler and parks until first scheduled, (b)
+//! catches panics so the `std` machinery underneath never observes
+//! them (user panics are re-surfaced with `std` semantics: `join`
+//! returns `Err`, an unjoined scoped thread's panic re-raises when the
+//! scope closes), and (c) reports `finish` so joiners and the model
+//! loop wake.
+//!
+//! The scope API differs from `std` in one signature detail: the
+//! closure receives `&Scope<'scope, 'env>` under an independent
+//! borrow lifetime rather than `&'scope Scope<...>`. `std` can unify
+//! the two because it constructs the `Scope` itself; a wrapper cannot
+//! borrow a local for the caller's late-bound `'scope`. Call sites
+//! are source-compatible for everything flocora does.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex as StdMutex, PoisonError as StdPoisonError};
+
+use crate::sched::{self, AbortIteration};
+
+pub use std::thread::{available_parallelism, panicking};
+
+type PanicPayload = Box<dyn Any + Send + 'static>;
+/// One spawned thread's caught panic, if any.
+type Slot = StdMutex<Option<PanicPayload>>;
+/// A scope's not-yet-joined threads: `(model tid, panic slot)`.
+type Pending = Arc<StdMutex<Vec<(Option<usize>, Arc<Slot>)>>>;
+
+fn lock_slot(slot: &Slot) -> std::sync::MutexGuard<'_, Option<PanicPayload>> {
+    slot.lock().unwrap_or_else(StdPoisonError::into_inner)
+}
+
+/// A decision point with no side effect — lets the scheduler explore
+/// a preemption here, like `std::thread::yield_now` invites one.
+pub fn yield_now() {
+    match sched::current() {
+        Some((sched, me)) => sched.op_atomic(me, "yield"),
+        None => std::thread::yield_now(),
+    }
+}
+
+/// Run `f`: park until first scheduled, catch panics (the abort
+/// sentinel of a failed iteration is swallowed; user panics go to
+/// `slot`), report finish. Returns `Some(value)` on clean completion
+/// so the `std` join below never sees a panic.
+fn run_wrapped<T>(
+    model: Option<(Arc<sched::Sched>, usize)>,
+    slot: &Slot,
+    f: impl FnOnce() -> T,
+) -> Option<T> {
+    match model {
+        Some((sched, tid)) => {
+            sched::set_current(Some((Arc::clone(&sched), tid)));
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                sched.start_park(tid);
+                f()
+            }));
+            let ret = match out {
+                Ok(v) => Some(v),
+                Err(p) => {
+                    if p.downcast_ref::<AbortIteration>().is_none() {
+                        *lock_slot(slot) = Some(p);
+                    }
+                    None
+                }
+            };
+            sched.op_finish(tid);
+            ret
+        }
+        None => match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(v) => Some(v),
+            Err(p) => {
+                *lock_slot(slot) = Some(p);
+                None
+            }
+        },
+    }
+}
+
+pub struct JoinHandle<T> {
+    std: std::thread::JoinHandle<Option<T>>,
+    tid: Option<usize>,
+    slot: Arc<Slot>,
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let cur = sched::current();
+    let tid = cur.as_ref().map(|(sched, me)| sched.op_spawn(*me));
+    let slot: Arc<Slot> = Arc::new(StdMutex::new(None));
+    let slot2 = Arc::clone(&slot);
+    let model = cur.map(|(sched, _)| (sched, tid.expect("tid set")));
+    let std = std::thread::spawn(move || run_wrapped(model, &slot2, f));
+    JoinHandle { std, tid, slot }
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        if let (Some(tid), Some((sched, me))) =
+            (self.tid, sched::current())
+        {
+            sched.op_join(me, tid);
+        }
+        match self.std.join() {
+            Ok(Some(v)) => Ok(v),
+            Ok(None) => Err(lock_slot(&self.slot).take().unwrap_or_else(
+                || Box::new("loom: thread aborted with the iteration"),
+            )),
+            Err(p) => Err(p),
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.std.is_finished()
+    }
+}
+
+pub struct Scope<'scope, 'env: 'scope> {
+    std: &'scope std::thread::Scope<'scope, 'env>,
+    pending: Pending,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+    where
+        F: FnOnce() -> T + Send + 'scope,
+        T: Send + 'scope,
+    {
+        let cur = sched::current();
+        let tid = cur.as_ref().map(|(sched, me)| sched.op_spawn(*me));
+        let slot: Arc<Slot> = Arc::new(StdMutex::new(None));
+        self.pending
+            .lock()
+            .unwrap_or_else(StdPoisonError::into_inner)
+            .push((tid, Arc::clone(&slot)));
+        let slot2 = Arc::clone(&slot);
+        let model = cur.map(|(sched, _)| (sched, tid.expect("tid set")));
+        let std =
+            self.std.spawn(move || run_wrapped(model, &slot2, f));
+        ScopedJoinHandle {
+            std,
+            tid,
+            slot,
+            pending: Arc::clone(&self.pending),
+        }
+    }
+}
+
+pub struct ScopedJoinHandle<'scope, T> {
+    std: std::thread::ScopedJoinHandle<'scope, Option<T>>,
+    tid: Option<usize>,
+    slot: Arc<Slot>,
+    pending: Pending,
+}
+
+impl<T> ScopedJoinHandle<'_, T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        if let (Some(tid), Some((sched, me))) =
+            (self.tid, sched::current())
+        {
+            sched.op_join(me, tid);
+        }
+        // Consumed: the scope must not re-raise this thread's panic.
+        self.pending
+            .lock()
+            .unwrap_or_else(StdPoisonError::into_inner)
+            .retain(|(_, s)| !Arc::ptr_eq(s, &self.slot));
+        match self.std.join() {
+            Ok(Some(v)) => Ok(v),
+            Ok(None) => Err(lock_slot(&self.slot).take().unwrap_or_else(
+                || Box::new("loom: thread aborted with the iteration"),
+            )),
+            Err(p) => Err(p),
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.std.is_finished()
+    }
+}
+
+/// Model-joins every still-pending scoped thread when the scope
+/// closure ends (normally or by unwind) — without this, the real join
+/// inside `std::thread::scope` would wait on workers that are parked
+/// in the turnstile and nobody would ever schedule them.
+struct ScopeWind {
+    pending: Pending,
+}
+
+impl Drop for ScopeWind {
+    fn drop(&mut self) {
+        if let Some((sched, me)) = sched::current() {
+            let tids: Vec<usize> = self
+                .pending
+                .lock()
+                .unwrap_or_else(StdPoisonError::into_inner)
+                .iter()
+                .filter_map(|(tid, _)| *tid)
+                .collect();
+            for tid in tids {
+                sched.op_join(me, tid);
+            }
+        }
+    }
+}
+
+pub fn scope<'env, F, T>(f: F) -> T
+where
+    F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> T,
+{
+    let pending: Pending = Arc::new(StdMutex::new(Vec::new()));
+    let out = std::thread::scope(|s| {
+        let scope = Scope { std: s, pending: Arc::clone(&pending) };
+        let wind = ScopeWind { pending: Arc::clone(&pending) };
+        let out = f(&scope);
+        drop(wind);
+        out
+    });
+    // Every real thread is joined now; re-raise the first panic of a
+    // scoped thread nobody joined explicitly (std scope semantics).
+    if !std::thread::panicking() {
+        let entries = std::mem::take(
+            &mut *pending
+                .lock()
+                .unwrap_or_else(StdPoisonError::into_inner),
+        );
+        for (_, slot) in entries {
+            if let Some(p) = lock_slot(&slot).take() {
+                resume_unwind(p);
+            }
+        }
+    }
+    out
+}

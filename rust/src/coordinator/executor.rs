@@ -44,18 +44,18 @@
 //! before it reaches the sink — the merge never sees anything but
 //! server-shaped vectors.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
-
 use crate::compression::{Codec, Message};
 use crate::config::FlConfig;
 use crate::coordinator::hetero::{project_ranks, ClientPlan};
 use crate::coordinator::sink::RoundSink;
 use crate::coordinator::trainer::{LocalOutcome, LocalTrainer};
+use crate::coordinator::window::{BoundedWindow, StageRing};
 use crate::data::Federation;
 use crate::error::{Error, Result};
 use crate::model::Segment;
 use crate::runtime::ModelSession;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::thread;
 use crate::transport::OverlapKind;
 use crate::util::rng::Rng;
 
@@ -406,24 +406,13 @@ impl ClientExecutor for SerialExecutor {
     }
 }
 
-/// Shared state of one parallel round: a ring of `window` result slots
-/// plus the claim/drain cursors, all behind one mutex.
-struct WindowState {
-    /// Ring buffer; index `i`'s slot is `i % window`. `Some` = produced
-    /// but not yet drained.
-    slots: Vec<Option<Result<ClientResult>>>,
-    /// Next client index a worker may claim.
-    next: usize,
-    /// Results handed to the sink so far (== next index to drain).
-    drained: usize,
-    /// Set on sink/client error: workers wind down without claiming.
-    abort: bool,
-}
-
 /// Clients fan out across scoped worker threads; workers may run ahead
 /// of the in-order merge only as far as the out-of-order window, then
 /// block on a Condvar until the coordinator thread drains the oldest
-/// slot into the sink.
+/// slot into the sink. The claim/deposit/drain protocol itself lives
+/// in [`BoundedWindow`] (`coordinator::window`), where the loom suite
+/// model-checks it exhaustively — this type adds only the client work
+/// and the thread pool.
 pub struct ParallelExecutor {
     threads: usize,
     window: usize,
@@ -431,7 +420,6 @@ pub struct ParallelExecutor {
     /// `execute` (diagnostics; the streaming-memory test pins it to
     /// the window). Meaningless while an `execute` is in flight.
     peak_buffered: AtomicUsize,
-    buffered: AtomicUsize,
 }
 
 impl ParallelExecutor {
@@ -441,7 +429,6 @@ impl ParallelExecutor {
             threads,
             window: 0,
             peak_buffered: AtomicUsize::new(0),
-            buffered: AtomicUsize::new(0),
         }
     }
 
@@ -472,7 +459,7 @@ impl ParallelExecutor {
 /// means one worker per available core, and the pool never collapses
 /// to zero workers nor exceeds the work items available.
 fn pool_size(threads: usize, work: usize) -> usize {
-    let auto = std::thread::available_parallelism()
+    let auto = thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let requested = if threads == 0 { auto } else { threads };
@@ -502,7 +489,6 @@ impl ClientExecutor for ParallelExecutor {
     ) -> Result<()> {
         let n = clients.len();
         let workers = self.pool_size(n);
-        self.buffered.store(0, Ordering::Relaxed);
         self.peak_buffered.store(0, Ordering::Relaxed);
         if workers <= 1 {
             // One lane: skip thread setup, identical results by the
@@ -514,133 +500,66 @@ impl ClientExecutor for ParallelExecutor {
         // clamp so an absurd configured window can't blow the ring
         // allocation.
         let window = self.effective_window(workers).min(n);
+        let win: BoundedWindow<Result<ClientResult>> =
+            BoundedWindow::new(n, window);
 
-        let state = Mutex::new(WindowState {
-            slots: (0..window).map(|_| None).collect(),
-            next: 0,
-            drained: 0,
-            abort: false,
-        });
-        // Workers wait here when the window is full (or all work is
-        // claimed); the drainer notifies after freeing a slot.
-        let may_claim = Condvar::new();
-        // The drainer waits here for the oldest slot to fill; workers
-        // notify after storing a result.
-        let may_drain = Condvar::new();
-
-        // If a worker unwinds inside `run_client` (a bug — client work
-        // returns `Result`), its slot would never fill and the drainer
-        // would wait forever. The sentry flags the round as aborted on
-        // the way out so both the drainer and sibling workers wind
-        // down; `thread::scope` then re-raises the panic at the join.
-        struct PanicSentry<'s> {
-            state: &'s Mutex<WindowState>,
-            may_claim: &'s Condvar,
-            may_drain: &'s Condvar,
-        }
-        impl Drop for PanicSentry<'_> {
-            fn drop(&mut self) {
-                if std::thread::panicking() {
-                    if let Ok(mut st) = self.state.lock() {
-                        st.abort = true;
-                    }
-                    self.may_claim.notify_all();
-                    self.may_drain.notify_all();
-                }
-            }
-        }
-
-        std::thread::scope(|scope| {
+        let out = thread::scope(|scope| {
             for _ in 0..workers {
                 scope.spawn(|| {
-                    let _sentry = PanicSentry {
-                        state: &state,
-                        may_claim: &may_claim,
-                        may_drain: &may_drain,
-                    };
-                    loop {
-                        // Claim the next index, but never run further
-                        // ahead of the merge than the window allows —
-                        // that bound is what keeps the round's memory
-                        // O(window).
-                        let i = {
-                            let mut st = state.lock().unwrap();
-                            loop {
-                                if st.abort || st.next >= n {
-                                    return;
-                                }
-                                if st.next < st.drained + window {
-                                    st.next += 1;
-                                    break st.next - 1;
-                                }
-                                st = may_claim.wait(st).unwrap();
-                            }
-                        };
+                    // If this worker unwinds inside `run_client` (a
+                    // bug — client work returns `Result`), its slot
+                    // would never fill and the drainer would wait
+                    // forever; the sentry aborts the window on the way
+                    // out and `thread::scope` re-raises the panic at
+                    // the join.
+                    let _sentry = win.sentry();
+                    // Claim the next index, but never run further
+                    // ahead of the merge than the window allows —
+                    // that bound is what keeps the round's memory
+                    // O(window).
+                    while let Some(i) = win.claim() {
                         let res = run_client(ctx, clients[i]);
-                        let mut st = state.lock().unwrap();
-                        if st.abort {
+                        if !win.deposit(i, res) {
                             return;
                         }
-                        debug_assert!(st.slots[i % window].is_none());
-                        st.slots[i % window] = Some(res);
-                        let b =
-                            self.buffered.fetch_add(1, Ordering::Relaxed) + 1;
-                        self.peak_buffered.fetch_max(b, Ordering::Relaxed);
-                        may_drain.notify_one();
                     }
                 });
             }
 
             // The drain side gets the same guard: a sink that panics
             // (rather than returning `Err`) would otherwise leave
-            // workers parked on `may_claim` forever and the scope join
-            // would deadlock instead of propagating the panic.
-            let _sentry = PanicSentry {
-                state: &state,
-                may_claim: &may_claim,
-                may_drain: &may_drain,
-            };
+            // workers parked on the claim gate forever and the scope
+            // join would deadlock instead of propagating the panic.
+            let _sentry = win.sentry();
 
             // In-order drain on the coordinator thread: the sink sees
             // sampling order regardless of which worker finished when.
             let mut out = Ok(());
             for i in 0..n {
-                let res = {
-                    let mut st = state.lock().unwrap();
-                    loop {
-                        if let Some(r) = st.slots[i % window].take() {
-                            st.drained += 1;
-                            self.buffered.fetch_sub(1, Ordering::Relaxed);
-                            break r;
-                        }
-                        if st.abort {
-                            // A worker died without delivering; stop
-                            // draining so the scope join can re-raise
-                            // its panic.
-                            break Err(Error::invalid(
-                                "round aborted: a worker failed",
-                            ));
-                        }
-                        st = may_drain.wait(st).unwrap();
-                    }
-                };
-                // A slot may just have freed: more indices claimable.
-                may_claim.notify_all();
+                let res = win.drain(i).unwrap_or_else(|_| {
+                    // A worker died without delivering; stop draining
+                    // so the scope join can re-raise its panic.
+                    Err(Error::invalid("round aborted: a worker failed"))
+                });
                 if let Err(e) = res.and_then(|r| sink.push(i, r)) {
-                    state.lock().unwrap().abort = true;
-                    may_claim.notify_all();
+                    win.abort();
                     out = Err(e);
                     break;
                 }
             }
             out
-        })
+        });
+        self.peak_buffered
+            .store(win.peak_buffered(), Ordering::Relaxed);
+        out
     }
 }
 
 /// One ring slot of the staged pipeline: the client's progress through
 /// download → train → upload, ending in the drainable result.
+#[derive(Default)]
 enum PipeSlot {
+    #[default]
     Empty,
     /// Decoded download waiting for a compute worker.
     Fetched { down_bytes: usize, start: Vec<f32> },
@@ -652,17 +571,6 @@ enum PipeSlot {
     Uploading,
     /// Result ready for the in-order drain.
     Done(Result<ClientResult>),
-}
-
-/// Shared state of one pipelined round (single mutex + condvar; every
-/// transition broadcasts, every wait re-checks its predicate).
-struct PipeState {
-    slots: Vec<PipeSlot>,
-    /// Next client index the transport-in thread may claim.
-    next: usize,
-    /// Results handed to the sink so far.
-    drained: usize,
-    abort: bool,
 }
 
 /// The `overlap = transfer` engine: three-stage pipeline with the
@@ -683,6 +591,9 @@ struct PipeState {
 /// uses, so at most `window` clients are in flight and peak buffered
 /// results never exceed the window. Every stage function is pure in
 /// `(ctx, cid)`, so results are bit-identical to [`SerialExecutor`].
+/// The ring protocol itself lives in [`StageRing`]
+/// (`coordinator::window`), where the loom suite model-checks it —
+/// this type adds only the stage work and the thread layout.
 pub struct PipelinedExecutor {
     threads: usize,
     window: usize,
@@ -690,7 +601,6 @@ pub struct PipelinedExecutor {
     /// undrained) results in the last `execute` — diagnostics, pinned
     /// `<= window` by the streaming-memory tests.
     peak_buffered: AtomicUsize,
-    buffered: AtomicUsize,
 }
 
 impl PipelinedExecutor {
@@ -701,7 +611,6 @@ impl PipelinedExecutor {
             threads,
             window: 0,
             peak_buffered: AtomicUsize::new(0),
-            buffered: AtomicUsize::new(0),
         }
     }
 
@@ -716,10 +625,21 @@ impl PipelinedExecutor {
     pub fn peak_buffered(&self) -> usize {
         self.peak_buffered.load(Ordering::Relaxed)
     }
+}
 
-    fn note_done(&self) {
-        let b = self.buffered.fetch_add(1, Ordering::Relaxed) + 1;
-        self.peak_buffered.fetch_max(b, Ordering::Relaxed);
+/// Pull the payload out of a [`PipeSlot::Done`] slot, resetting it to
+/// [`PipeSlot::Empty`] — the drain-side extractor for [`StageRing`].
+fn take_done(slot: &mut PipeSlot) -> Option<Result<ClientResult>> {
+    match slot {
+        PipeSlot::Done(_) => {
+            let PipeSlot::Done(r) =
+                std::mem::replace(slot, PipeSlot::Empty)
+            else {
+                unreachable!("slot matched above")
+            };
+            Some(r)
+        }
+        _ => None,
     }
 }
 
@@ -736,7 +656,6 @@ impl ClientExecutor for PipelinedExecutor {
     ) -> Result<()> {
         let n = clients.len();
         let workers = pool_size(self.threads, n);
-        self.buffered.store(0, Ordering::Relaxed);
         self.peak_buffered.store(0, Ordering::Relaxed);
         if workers <= 1 && n <= 1 {
             // Nothing to overlap: skip thread setup, identical results
@@ -744,69 +663,19 @@ impl ClientExecutor for PipelinedExecutor {
             return SerialExecutor.execute(ctx, clients, sink);
         }
         let window = effective_window(self.window, workers).min(n);
+        let ring: StageRing<PipeSlot> = StageRing::new(n, window);
 
-        let state = Mutex::new(PipeState {
-            slots: (0..window).map(|_| PipeSlot::Empty).collect(),
-            next: 0,
-            drained: 0,
-            abort: false,
-        });
-        // One condvar for every stage boundary: transitions broadcast,
-        // waiters re-check their own predicate. Rounds are small (tens
-        // of clients), so the spurious-wakeup cost is noise next to a
-        // train step.
-        let cv = Condvar::new();
-
-        // Same role as the parallel executor's sentry: a panicking
-        // stage (a bug — stage work returns `Result`) must wind the
-        // whole pipeline down instead of leaving siblings parked.
-        struct PipeSentry<'s> {
-            state: &'s Mutex<PipeState>,
-            cv: &'s Condvar,
-        }
-        impl Drop for PipeSentry<'_> {
-            fn drop(&mut self) {
-                if std::thread::panicking() {
-                    if let Ok(mut st) = self.state.lock() {
-                        st.abort = true;
-                    }
-                    self.cv.notify_all();
-                }
-            }
-        }
-
-        std::thread::scope(|scope| {
+        let out = thread::scope(|scope| {
             // Transport-in: claim indices in order, decode downloads.
+            // Every participant holds a ring sentry — a panicking
+            // stage (a bug: stage work returns `Result`) must wind the
+            // whole pipeline down instead of leaving siblings parked.
             scope.spawn(|| {
-                let _sentry = PipeSentry { state: &state, cv: &cv };
-                loop {
-                    let i = {
-                        let mut st = state.lock().unwrap();
-                        loop {
-                            if st.abort || st.next >= n {
-                                return;
-                            }
-                            if st.next < st.drained + window {
-                                st.next += 1;
-                                break st.next - 1;
-                            }
-                            st = cv.wait(st).unwrap();
-                        }
-                    };
-                    let fetched = stage_download(ctx, clients[i]);
-                    let mut st = state.lock().unwrap();
-                    if st.abort {
-                        return;
-                    }
-                    debug_assert!(matches!(st.slots[i % window],
-                                           PipeSlot::Empty));
-                    st.slots[i % window] = match fetched {
-                        Err(e) => {
-                            self.note_done();
-                            PipeSlot::Done(Err(e))
-                        }
+                let _sentry = ring.sentry();
+                while let Some(i) = ring.claim() {
+                    let slot = match stage_download(ctx, clients[i]) {
+                        Err(e) => PipeSlot::Done(Err(e)),
                         Ok((down_bytes, Fetched::Cancelled)) => {
-                            self.note_done();
                             PipeSlot::Done(Ok(ClientResult {
                                 cid: clients[i],
                                 down_bytes,
@@ -818,53 +687,34 @@ impl ClientExecutor for PipelinedExecutor {
                             PipeSlot::Fetched { down_bytes, start }
                         }
                     };
-                    drop(st);
-                    cv.notify_all();
+                    let done = matches!(slot, PipeSlot::Done(_));
+                    if !ring.put(i, slot, done) {
+                        return;
+                    }
                 }
             });
 
             // Compute workers: dropout coin + local epochs only.
             for _ in 0..workers {
                 scope.spawn(|| {
-                    let _sentry = PipeSentry { state: &state, cv: &cv };
-                    loop {
-                        let (i, down_bytes, start) = {
-                            let mut st = state.lock().unwrap();
-                            loop {
-                                if st.abort || st.drained >= n {
-                                    return;
-                                }
-                                let found = (st.drained..st.next).find(|&j| {
-                                    matches!(st.slots[j % window],
-                                             PipeSlot::Fetched { .. })
-                                });
-                                if let Some(j) = found {
-                                    let slot = std::mem::replace(
-                                        &mut st.slots[j % window],
-                                        PipeSlot::Training,
-                                    );
-                                    let PipeSlot::Fetched {
-                                        down_bytes, start,
-                                    } = slot else {
-                                        unreachable!("slot checked above")
-                                    };
-                                    break (j, down_bytes, start);
-                                }
-                                st = cv.wait(st).unwrap();
+                    let _sentry = ring.sentry();
+                    while let Some((i, (down_bytes, start))) =
+                        ring.take_matching(|s| match s {
+                            PipeSlot::Fetched { .. } => {
+                                let PipeSlot::Fetched { down_bytes, start } =
+                                    std::mem::replace(s, PipeSlot::Training)
+                                else {
+                                    unreachable!("slot matched above")
+                                };
+                                Some((down_bytes, start))
                             }
-                        };
-                        let trained = stage_train(ctx, clients[i], start);
-                        let mut st = state.lock().unwrap();
-                        if st.abort {
-                            return;
-                        }
-                        st.slots[i % window] = match trained {
-                            Err(e) => {
-                                self.note_done();
-                                PipeSlot::Done(Err(e))
-                            }
+                            _ => None,
+                        })
+                    {
+                        let slot = match stage_train(ctx, clients[i], start)
+                        {
+                            Err(e) => PipeSlot::Done(Err(e)),
                             Ok(Trained::Dropped) => {
-                                self.note_done();
                                 PipeSlot::Done(Ok(ClientResult {
                                     cid: clients[i],
                                     down_bytes,
@@ -876,98 +726,65 @@ impl ClientExecutor for PipelinedExecutor {
                                 PipeSlot::TrainedUp { down_bytes, outcome }
                             }
                         };
-                        drop(st);
-                        cv.notify_all();
+                        let done = matches!(slot, PipeSlot::Done(_));
+                        if !ring.put(i, slot, done) {
+                            return;
+                        }
                     }
                 });
             }
 
             // Transport-out: encode/upload trained outcomes.
             scope.spawn(|| {
-                let _sentry = PipeSentry { state: &state, cv: &cv };
-                loop {
-                    let (i, down_bytes, outcome) = {
-                        let mut st = state.lock().unwrap();
-                        loop {
-                            if st.abort || st.drained >= n {
-                                return;
-                            }
-                            let found = (st.drained..st.next).find(|&j| {
-                                matches!(st.slots[j % window],
-                                         PipeSlot::TrainedUp { .. })
-                            });
-                            if let Some(j) = found {
-                                let slot = std::mem::replace(
-                                    &mut st.slots[j % window],
-                                    PipeSlot::Uploading,
-                                );
-                                let PipeSlot::TrainedUp {
-                                    down_bytes, outcome,
-                                } = slot else {
-                                    unreachable!("slot checked above")
-                                };
-                                break (j, down_bytes, outcome);
-                            }
-                            st = cv.wait(st).unwrap();
+                let _sentry = ring.sentry();
+                while let Some((i, (down_bytes, outcome))) =
+                    ring.take_matching(|s| match s {
+                        PipeSlot::TrainedUp { .. } => {
+                            let PipeSlot::TrainedUp { down_bytes, outcome } =
+                                std::mem::replace(s, PipeSlot::Uploading)
+                            else {
+                                unreachable!("slot matched above")
+                            };
+                            Some((down_bytes, outcome))
                         }
-                    };
-                    let res = stage_upload(ctx, clients[i], outcome)
-                        .map(|update| ClientResult {
+                        _ => None,
+                    })
+                {
+                    let res = stage_upload(ctx, clients[i], outcome).map(
+                        |update| ClientResult {
                             cid: clients[i],
                             down_bytes,
                             update: Some(update),
                             cancelled: false,
-                        });
-                    let mut st = state.lock().unwrap();
-                    if st.abort {
+                        },
+                    );
+                    if !ring.put(i, PipeSlot::Done(res), true) {
                         return;
                     }
-                    self.note_done();
-                    st.slots[i % window] = PipeSlot::Done(res);
-                    drop(st);
-                    cv.notify_all();
                 }
             });
 
             // In-order drain on the coordinator thread — the sink sees
             // sampling order regardless of stage scheduling.
-            let _sentry = PipeSentry { state: &state, cv: &cv };
+            let _sentry = ring.sentry();
             let mut out = Ok(());
             for i in 0..n {
-                let res = {
-                    let mut st = state.lock().unwrap();
-                    loop {
-                        if matches!(st.slots[i % window], PipeSlot::Done(_)) {
-                            let slot = std::mem::replace(
-                                &mut st.slots[i % window],
-                                PipeSlot::Empty,
-                            );
-                            let PipeSlot::Done(r) = slot else {
-                                unreachable!("slot checked above")
-                            };
-                            st.drained += 1;
-                            self.buffered.fetch_sub(1, Ordering::Relaxed);
-                            break r;
-                        }
-                        if st.abort {
-                            break Err(Error::invalid(
-                                "round aborted: a pipeline stage failed",
-                            ));
-                        }
-                        st = cv.wait(st).unwrap();
-                    }
-                };
-                // A slot just freed (or the round ended): wake claims.
-                cv.notify_all();
+                let res = ring.drain(i, take_done).unwrap_or_else(|_| {
+                    Err(Error::invalid(
+                        "round aborted: a pipeline stage failed",
+                    ))
+                });
                 if let Err(e) = res.and_then(|r| sink.push(i, r)) {
-                    state.lock().unwrap().abort = true;
-                    cv.notify_all();
+                    ring.abort();
                     out = Err(e);
                     break;
                 }
             }
             out
-        })
+        });
+        self.peak_buffered
+            .store(ring.peak_buffered(), Ordering::Relaxed);
+        out
     }
 }
 

@@ -39,6 +39,7 @@ pub mod sampler;
 pub mod server;
 pub mod sink;
 pub mod trainer;
+pub mod window;
 
 pub use aggregator::{adapter_pairs, AdapterPair, AggOutcome, Aggregator,
                      AggregatorKind, ExactAggregator, FedAvg,

@@ -23,6 +23,9 @@
 //! trains at its own rank tier with its tier's codec, and uploads are
 //! projected back into the server's rank space before aggregation.
 
+// det-lint: allow(wall-clock) — `run()` reports real wall-clock time in
+// `RunSummary::wall_secs`, a diagnostic column that is stripped before
+// the bit-identity diffs in sim-smoke; no simulated quantity reads it.
 use std::time::Instant;
 
 use crate::compression::{Codec, Message};
@@ -570,6 +573,8 @@ impl Simulation {
 
     /// Run the full schedule, recording evaluated rounds.
     pub fn run(&mut self, recorder: &mut Recorder) -> Result<RunSummary> {
+        // det-lint: allow(wall-clock) — start of the wall_secs stopwatch;
+        // feeds only the diagnostic `RunSummary::wall_secs` column.
         let t0 = Instant::now();
         // Drops/cancellations and client times are tallied *between*
         // records so the exported columns cover every round (and the

@@ -32,6 +32,13 @@
 //! and in sampling order, that event stream is deterministic no matter
 //! which executor (serial, windowed-parallel, or the staged
 //! `overlap = transfer` pipeline) produced the results.
+//!
+//! The single-threaded guarantee (point 3) is not taken on faith: the
+//! claim/drain protocol that funnels concurrent worker results into the
+//! one draining thread lives in [`super::window`] and is model-checked
+//! under loom (`tests/loom.rs`), including panic/abort interleavings.
+//! Sinks therefore stay lock-free by construction, and the determinism
+//! lint (`cargo xtask lint-determinism`) keeps `std::sync` out of them.
 
 use crate::coordinator::executor::{ClientExecutor, ClientResult,
                                    RoundContext};

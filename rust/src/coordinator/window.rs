@@ -1,0 +1,463 @@
+//! The round engine's concurrency protocols, extracted as standalone
+//! objects so the loom suite model-checks the *real* code.
+//!
+//! Two protocols live here, payload-generic so `tests/loom.rs` can
+//! drive them with cheap values while the executors drive them with
+//! full client results:
+//!
+//! * [`BoundedWindow`] — the parallel executor's claim/deposit/drain
+//!   window: workers claim strictly increasing indices but never run
+//!   further ahead of the in-order drain than `window` slots, deposit
+//!   results out of order into a ring, and a single drainer takes them
+//!   back out in order. Two condvars: `may_claim` (workers wait for a
+//!   slot to free) and `may_drain` (the drainer waits for the oldest
+//!   slot to fill).
+//! * [`StageRing`] — the pipelined executor's in/compute/out ring: the
+//!   same claim gate and in-order drain, but slots carry a caller-owned
+//!   stage enum and intermediate stages hand work to each other by
+//!   predicate ([`StageRing::take_matching`]). One condvar, broadcast
+//!   on every transition; waiters re-check their own predicate.
+//!
+//! Model-checked invariants (exhaustive within the preemption bound,
+//! windows 1–3 — see `tests/loom.rs`): no lost wakeups (every schedule
+//! terminates), at most `window` results buffered at once, and the
+//! panic sentry ([`BoundedWindow::sentry`] / [`StageRing::sentry`])
+//! unblocks every waiter when any participant unwinds.
+//!
+//! The executors add nothing on top but the client work itself, so
+//! what the checker proves here is what production runs.
+
+use crate::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Error returned by the drain side when the round was aborted — a
+/// participant panicked (sentry) or the caller called `abort` (sink
+/// error). The executor maps it to its own error type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Aborted;
+
+/// Lock even when poisoned: the abort path must always get through —
+/// it runs while a sibling thread is unwinding, possibly having
+/// poisoned the state mutex on its way down, and skipping the abort
+/// flag then would leave waiters parked forever.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+struct WindowState<T> {
+    /// Ring buffer; index `i`'s slot is `i % window`. `Some` =
+    /// deposited but not yet drained.
+    slots: Vec<Option<T>>,
+    /// Next index a producer may claim.
+    next: usize,
+    /// Results handed out in order so far (== next index to drain).
+    drained: usize,
+    /// Set on error/panic: producers wind down without claiming.
+    abort: bool,
+    /// Deposited-but-undrained count and its high-water mark — the
+    /// O(window) memory claim, tracked under the same mutex as the
+    /// protocol so the model checker sees it too.
+    buffered: usize,
+    peak_buffered: usize,
+}
+
+/// Bounded out-of-order production window with in-order drain — the
+/// [`ParallelExecutor`](super::executor::ParallelExecutor) protocol.
+///
+/// Roles: any number of producers loop `claim` → work → `deposit`;
+/// exactly one drainer calls `drain(0..n)` in order. Either side may
+/// `abort`; a [`sentry`](BoundedWindow::sentry) guard does so
+/// automatically on panic.
+pub struct BoundedWindow<T> {
+    state: Mutex<WindowState<T>>,
+    /// Producers wait here when the window is full; the drainer
+    /// notifies after freeing a slot.
+    may_claim: Condvar,
+    /// The drainer waits here for the oldest slot to fill; producers
+    /// notify after depositing.
+    may_drain: Condvar,
+    n: usize,
+    window: usize,
+}
+
+impl<T> BoundedWindow<T> {
+    /// A window over indices `0..n` with `window` in-flight slots.
+    pub fn new(n: usize, window: usize) -> BoundedWindow<T> {
+        assert!(window >= 1, "window must hold at least one slot");
+        BoundedWindow {
+            state: Mutex::new(WindowState {
+                slots: (0..window).map(|_| None).collect(),
+                next: 0,
+                drained: 0,
+                abort: false,
+                buffered: 0,
+                peak_buffered: 0,
+            }),
+            may_claim: Condvar::new(),
+            may_drain: Condvar::new(),
+            n,
+            window,
+        }
+    }
+
+    /// Claim the next index, blocking while the window is full.
+    /// `None` = wind down (all indices claimed, or the round aborted).
+    pub fn claim(&self) -> Option<usize> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.abort || st.next >= self.n {
+                return None;
+            }
+            if st.next < st.drained + self.window {
+                st.next += 1;
+                return Some(st.next - 1);
+            }
+            st = self.may_claim.wait(st).unwrap();
+        }
+    }
+
+    /// Deposit index `i`'s result. `false` = the round aborted while
+    /// the producer was working; the value is dropped and the producer
+    /// should wind down.
+    pub fn deposit(&self, i: usize, value: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.abort {
+            return false;
+        }
+        let slot = i % self.window;
+        debug_assert!(st.slots[slot].is_none(), "slot {i} deposited twice");
+        st.slots[slot] = Some(value);
+        st.buffered += 1;
+        st.peak_buffered = st.peak_buffered.max(st.buffered);
+        drop(st);
+        self.may_drain.notify_one();
+        true
+    }
+
+    /// Take index `i`'s result, in order, blocking until a producer
+    /// deposits it. Frees the slot (and wakes blocked producers) on
+    /// the way out. `Err(Aborted)` = a producer died without
+    /// delivering.
+    pub fn drain(&self, i: usize) -> Result<T, Aborted> {
+        let out = {
+            let mut st = self.state.lock().unwrap();
+            loop {
+                if let Some(v) = st.slots[i % self.window].take() {
+                    st.drained += 1;
+                    st.buffered -= 1;
+                    break Ok(v);
+                }
+                if st.abort {
+                    break Err(Aborted);
+                }
+                st = self.may_drain.wait(st).unwrap();
+            }
+        };
+        // A slot may just have freed: more indices claimable.
+        self.may_claim.notify_all();
+        out
+    }
+
+    /// Flag the round as aborted and wake every waiter, poisoned or
+    /// not. Idempotent; callable from any thread, including mid-panic.
+    pub fn abort(&self) {
+        lock_unpoisoned(&self.state).abort = true;
+        self.may_claim.notify_all();
+        self.may_drain.notify_all();
+    }
+
+    /// Guard that [`abort`](BoundedWindow::abort)s if dropped during a
+    /// panic — without it, a producer unwinding inside its work item
+    /// (a bug: work returns `Result`) would leave its slot forever
+    /// empty and the drainer parked, and the scope join would deadlock
+    /// instead of propagating the panic. Every participant holds one.
+    pub fn sentry(&self) -> WindowSentry<'_, T> {
+        WindowSentry { window: self }
+    }
+
+    /// High-water mark of simultaneously buffered (deposited,
+    /// undrained) results so far.
+    pub fn peak_buffered(&self) -> usize {
+        lock_unpoisoned(&self.state).peak_buffered
+    }
+}
+
+/// See [`BoundedWindow::sentry`].
+pub struct WindowSentry<'w, T> {
+    window: &'w BoundedWindow<T>,
+}
+
+impl<T> Drop for WindowSentry<'_, T> {
+    fn drop(&mut self) {
+        if crate::sync::thread::panicking() {
+            self.window.abort();
+        }
+    }
+}
+
+struct RingState<S> {
+    slots: Vec<S>,
+    next: usize,
+    drained: usize,
+    abort: bool,
+    buffered: usize,
+    peak_buffered: usize,
+}
+
+/// Staged pipeline ring — the
+/// [`PipelinedExecutor`](super::executor::PipelinedExecutor) protocol.
+///
+/// Same claim gate and in-order drain as [`BoundedWindow`], but each
+/// slot is a caller-owned stage enum (`S`): the claiming stage fills a
+/// slot with [`put`](StageRing::put), intermediate stages steal work
+/// matching their predicate with [`take_matching`](StageRing::take_matching)
+/// and put the advanced state back, and the drainer extracts terminal
+/// slots in index order. One condvar: every transition broadcasts,
+/// every waiter re-checks its own predicate (rounds are tens of
+/// clients, so spurious-wakeup cost is noise next to a train step).
+pub struct StageRing<S> {
+    state: Mutex<RingState<S>>,
+    cv: Condvar,
+    n: usize,
+    window: usize,
+}
+
+impl<S: Default> StageRing<S> {
+    /// A ring over indices `0..n` with `window` slots, each starting
+    /// at `S::default()` (the empty stage).
+    pub fn new(n: usize, window: usize) -> StageRing<S> {
+        assert!(window >= 1, "window must hold at least one slot");
+        StageRing {
+            state: Mutex::new(RingState {
+                slots: (0..window).map(|_| S::default()).collect(),
+                next: 0,
+                drained: 0,
+                abort: false,
+                buffered: 0,
+                peak_buffered: 0,
+            }),
+            cv: Condvar::new(),
+            n,
+            window,
+        }
+    }
+}
+
+impl<S> StageRing<S> {
+    /// Claim the next index (the pipeline's entry stage), blocking
+    /// while the window is full. `None` = wind down.
+    pub fn claim(&self) -> Option<usize> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.abort || st.next >= self.n {
+                return None;
+            }
+            if st.next < st.drained + self.window {
+                st.next += 1;
+                return Some(st.next - 1);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Store index `i`'s advanced stage. `done` marks a terminal slot
+    /// (counts toward the buffered high-water mark the memory claim is
+    /// about). `false` = round aborted; wind down.
+    pub fn put(&self, i: usize, slot: S, done: bool) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.abort {
+            return false;
+        }
+        if done {
+            st.buffered += 1;
+            st.peak_buffered = st.peak_buffered.max(st.buffered);
+        }
+        let idx = i % self.window;
+        st.slots[idx] = slot;
+        drop(st);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Steal the lowest in-flight slot the extractor accepts, blocking
+    /// until one appears. The extractor, called under the lock, should
+    /// swap a claim marker into the slot and return the stage payload
+    /// (`None` = not my stage, keep scanning). Returns the index with
+    /// the payload; `None` = wind down (abort, or every index already
+    /// drained).
+    pub fn take_matching<R>(
+        &self,
+        mut extract: impl FnMut(&mut S) -> Option<R>,
+    ) -> Option<(usize, R)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.abort || st.drained >= self.n {
+                return None;
+            }
+            let mut found = None;
+            for j in st.drained..st.next {
+                let idx = j % self.window;
+                if let Some(r) = extract(&mut st.slots[idx]) {
+                    found = Some((j, r));
+                    break;
+                }
+            }
+            if found.is_some() {
+                return found;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Take index `i`'s terminal payload, in order, blocking until the
+    /// extractor accepts the slot (which it should reset to empty).
+    /// `Err(Aborted)` = a stage died without delivering.
+    pub fn drain<R>(
+        &self,
+        i: usize,
+        mut extract: impl FnMut(&mut S) -> Option<R>,
+    ) -> Result<R, Aborted> {
+        let out = {
+            let mut st = self.state.lock().unwrap();
+            loop {
+                let idx = i % self.window;
+                if let Some(r) = extract(&mut st.slots[idx]) {
+                    st.drained += 1;
+                    st.buffered -= 1;
+                    break Ok(r);
+                }
+                if st.abort {
+                    break Err(Aborted);
+                }
+                st = self.cv.wait(st).unwrap();
+            }
+        };
+        // A slot just freed (or the round ended): wake claims.
+        self.cv.notify_all();
+        out
+    }
+
+    /// Flag the round as aborted and wake every waiter, poisoned or
+    /// not. Idempotent; callable from any thread, including mid-panic.
+    pub fn abort(&self) {
+        lock_unpoisoned(&self.state).abort = true;
+        self.cv.notify_all();
+    }
+
+    /// Panic guard — same role as [`BoundedWindow::sentry`].
+    pub fn sentry(&self) -> RingSentry<'_, S> {
+        RingSentry { ring: self }
+    }
+
+    /// High-water mark of simultaneously buffered terminal results.
+    pub fn peak_buffered(&self) -> usize {
+        lock_unpoisoned(&self.state).peak_buffered
+    }
+}
+
+/// See [`StageRing::sentry`].
+pub struct RingSentry<'r, S> {
+    ring: &'r StageRing<S>,
+}
+
+impl<S> Drop for RingSentry<'_, S> {
+    fn drop(&mut self) {
+        if crate::sync::thread::panicking() {
+            self.ring.abort();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_serial_roundtrip() {
+        let w: BoundedWindow<usize> = BoundedWindow::new(5, 2);
+        // Single-threaded drive: claim/deposit/drain in lockstep.
+        for i in 0..5 {
+            assert_eq!(w.claim(), Some(i));
+            assert!(w.deposit(i, 10 * i));
+            assert_eq!(w.drain(i), Ok(10 * i));
+        }
+        assert_eq!(w.claim(), None, "all indices claimed");
+        assert_eq!(w.peak_buffered(), 1);
+    }
+
+    #[test]
+    fn window_claim_gate_is_the_window() {
+        let w: BoundedWindow<()> = BoundedWindow::new(10, 3);
+        assert_eq!(w.claim(), Some(0));
+        assert_eq!(w.claim(), Some(1));
+        assert_eq!(w.claim(), Some(2));
+        // Fourth claim would block (drained=0, window=3) — drain one
+        // first. Deposit out of order to exercise the ring.
+        for i in [2, 0, 1] {
+            assert!(w.deposit(i, ()));
+        }
+        assert_eq!(w.peak_buffered(), 3);
+        assert_eq!(w.drain(0), Ok(()));
+        assert_eq!(w.claim(), Some(3));
+    }
+
+    #[test]
+    fn window_abort_unblocks_everything() {
+        let w: BoundedWindow<u8> = BoundedWindow::new(4, 2);
+        assert_eq!(w.claim(), Some(0));
+        w.abort();
+        assert_eq!(w.claim(), None);
+        assert!(!w.deposit(0, 7), "deposit after abort is rejected");
+        assert_eq!(w.drain(0), Err(Aborted));
+    }
+
+    #[derive(Default, PartialEq, Debug)]
+    enum Slot {
+        #[default]
+        Empty,
+        Fetched(u32),
+        Done(u32),
+    }
+
+    #[test]
+    fn ring_stages_hand_off_by_predicate() {
+        let r: StageRing<Slot> = StageRing::new(3, 2);
+        assert_eq!(r.claim(), Some(0));
+        assert!(r.put(0, Slot::Fetched(5), false));
+        let (i, v) = r
+            .take_matching(|s| match s {
+                Slot::Fetched(v) => {
+                    let v = *v;
+                    *s = Slot::Empty;
+                    Some(v)
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!((i, v), (0, 5));
+        assert!(r.put(0, Slot::Done(v * 2), true));
+        let got = r.drain(0, |s| match std::mem::take(s) {
+            Slot::Done(v) => Some(v),
+            other => {
+                *s = other;
+                None
+            }
+        });
+        assert_eq!(got, Ok(10));
+        assert_eq!(r.peak_buffered(), 1);
+    }
+
+    #[test]
+    fn ring_abort_unblocks_everything() {
+        let r: StageRing<Slot> = StageRing::new(3, 2);
+        assert_eq!(r.claim(), Some(0));
+        r.abort();
+        assert_eq!(r.claim(), None);
+        assert!(!r.put(0, Slot::Done(1), true));
+        assert!(r.take_matching(|_| Some(())).is_none());
+        let got: Result<u32, Aborted> = r.drain(0, |s| match s {
+            Slot::Done(v) => Some(*v),
+            _ => None,
+        });
+        assert_eq!(got, Err(Aborted));
+    }
+}

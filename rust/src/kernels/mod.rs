@@ -150,6 +150,21 @@ pub fn dequant(codes: &[u8], scale: f32, zp: f32, dst: &mut [f32]) {
     }
 }
 
+/// Scalar reference for [`dequant_axpy`]: the fused fold one element
+/// at a time — same three float ops per element, same operand order.
+pub fn dequant_axpy_ref(
+    codes: &[u8],
+    scale: f32,
+    zp: f32,
+    w: f32,
+    acc: &mut [f32],
+) {
+    assert_eq!(codes.len(), acc.len(), "dequant_axpy length mismatch");
+    for (&c, a) in codes.iter().zip(acc.iter_mut()) {
+        *a += w * ((c as f32 - zp) * scale);
+    }
+}
+
 /// Fused dequantize-and-accumulate: `acc[i] += w * ((codes[i] - zp) *
 /// scale)` — the zero-copy merge fold. Bit-identical to [`dequant`]
 /// into a temporary followed by [`axpy`]: per element the same three
@@ -199,6 +214,15 @@ pub fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
     }
     for (a, &b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
         *a += w * b;
+    }
+}
+
+/// Scalar reference for [`axpy_from_le`]: decode one little-endian
+/// f32 at a time and fold it in — same per-element arithmetic.
+pub fn axpy_from_le_ref(bytes: &[u8], w: f32, acc: &mut [f32]) {
+    assert_eq!(bytes.len(), acc.len() * 4, "axpy_from_le length mismatch");
+    for (b, a) in bytes.chunks_exact(4).zip(acc.iter_mut()) {
+        *a += w * f32::from_le_bytes(b.try_into().unwrap());
     }
 }
 
@@ -263,6 +287,8 @@ pub fn vadd(a: &[f32], b: &[f32]) -> Vec<f32> {
 /// Codes packed per byte at `bits` per code: `floor(8 / bits)`.
 /// Widths that do not divide 8 (3, 5, 6, 7) waste the remainder bits
 /// of each byte rather than splitting codes across bytes.
+// det-lint: allow(kernel-ref) — size arithmetic, not a fast path;
+// there is no loop to hold a scalar reference against.
 #[inline]
 pub fn codes_per_byte(bits: u32) -> usize {
     assert!(
@@ -273,6 +299,8 @@ pub fn codes_per_byte(bits: u32) -> usize {
 }
 
 /// Packed byte length for `n` codes at `bits` per code.
+// det-lint: allow(kernel-ref) — size arithmetic, not a fast path;
+// there is no loop to hold a scalar reference against.
 pub fn packed_len(n: usize, bits: u32) -> usize {
     n.div_ceil(codes_per_byte(bits))
 }
@@ -570,8 +598,13 @@ pub const WATERFILL_PAR_MIN: usize = 4096;
 /// Recompute both pipes of a shared link (down + up) — the per-event
 /// hot call in `transport::sim`. Sequential below
 /// [`WATERFILL_PAR_MIN`] flows; above it the two independent fills
-/// run on scoped threads (the pipes share no state, so the result is
-/// identical either way).
+/// run on scoped threads via the [`crate::sync`] shim (the pipes
+/// share no state, so the result is identical either way — and the
+/// loom build swaps in instrumented threads here like everywhere
+/// else).
+// det-lint: allow(kernel-ref) — a parallel *composition* of
+// `waterfill`, whose scalar reference (`waterfill_ref`) already
+// exists; the sequential branch below IS the reference behavior.
 #[allow(clippy::too_many_arguments)]
 pub fn waterfill_pair(
     down_caps: &[f64],
@@ -582,7 +615,7 @@ pub fn waterfill_pair(
     up_scratch: &mut Vec<u32>,
 ) {
     if down_caps.len().min(up_caps.len()) >= WATERFILL_PAR_MIN {
-        std::thread::scope(|s| {
+        crate::sync::thread::scope(|s| {
             s.spawn(|| waterfill(down_caps, down_rates, down_scratch));
             waterfill(up_caps, up_rates, up_scratch);
         });
@@ -804,6 +837,38 @@ mod tests {
         waterfill_ref(&uc, &mut ur2);
         assert_eq!(dr, dr2);
         assert_eq!(ur, ur2);
+    }
+
+    #[test]
+    fn dequant_axpy_matches_ref_all_tails() {
+        for n in 0..100 {
+            let v = randv(n, 5000 + n as u64);
+            let (lo, hi) = minmax(&v);
+            let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+            let zp = -lo / scale;
+            let mut codes = vec![0u8; n];
+            quant_codes(&v, lo, scale, 255.0, &mut codes);
+
+            let mut a = randv(n, 6000 + n as u64);
+            let mut b = a.clone();
+            dequant_axpy(&codes, scale, zp, 0.73, &mut a);
+            dequant_axpy_ref(&codes, scale, zp, 0.73, &mut b);
+            assert!(bits_eq(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_from_le_matches_ref_all_tails() {
+        for n in 0..100 {
+            let v = randv(n, 7000 + n as u64);
+            let bytes: Vec<u8> =
+                v.iter().flat_map(|x| x.to_le_bytes()).collect();
+            let mut a = randv(n, 8000 + n as u64);
+            let mut b = a.clone();
+            axpy_from_le(&bytes, -0.41, &mut a);
+            axpy_from_le_ref(&bytes, -0.41, &mut b);
+            assert!(bits_eq(&a, &b), "n={n}");
+        }
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod sync;
 pub mod tensor;
 pub mod transport;
 pub mod util;

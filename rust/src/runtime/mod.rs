@@ -38,11 +38,15 @@
 pub mod manifest;
 pub mod synthetic;
 
+// Keyed access only (compile-or-fetch by artifact file name) — the
+// cache is never iterated, so hash order is unobservable; HashMap is
+// fine here and `lint-determinism`'s map-iter rule only polices the
+// coordinator/transport settle paths.
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::sync::{Arc, Mutex};
 pub use manifest::{Manifest, QuantOracle, SpecEntry};
 
 /// Artifact-directory sentinel that selects the synthetic backend

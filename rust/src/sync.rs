@@ -1,0 +1,57 @@
+//! The crate's single doorway to concurrency primitives — and the
+//! hook the loom model checker enters through.
+//!
+//! Every concurrency site in flocora (`coordinator::executor`'s
+//! bounded window and pipelined ring, `compression::sparse`'s residual
+//! map, `runtime`'s executable cache, `kernels::waterfill_pair`'s
+//! scoped split) imports `Mutex`/`Condvar`/atomics/`Arc`/`thread` from
+//! *here*, never from `std::sync` directly. Normally these re-exports
+//! are exactly `std`'s — zero cost, zero behavior change. Under
+//! `RUSTFLAGS="--cfg loom"` they swap for the vendored `loom` model
+//! checker's instrumented twins, and `tests/loom.rs` exhaustively
+//! explores every thread interleaving of the real protocol code
+//! (bounded by a CHESS-style preemption budget — see `rust/loom`).
+//!
+//! The `cargo xtask lint-determinism` rule `std-sync` enforces the
+//! funnel statically: a `std::sync`/`std::thread` import anywhere else
+//! in `src/` fails CI, so a new concurrency site cannot silently opt
+//! out of model checking.
+//!
+//! Only the names flocora actually uses are re-exported — the shim is
+//! an inventory of the crate's concurrency surface, not a facade over
+//! all of `std::sync`. Add a name here (and loom coverage for its call
+//! site) before using it.
+
+// det-lint: allow(std-sync) — this module IS the shim the rule
+// funnels everything through; its whole point is to name std::sync.
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard,
+                    PoisonError};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    // det-lint: allow(std-sync) — shim re-export (see module docs).
+    pub use std::sync::atomic::{AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub mod thread {
+    // det-lint: allow(std-sync) — shim re-export (see module docs).
+    pub use std::thread::{available_parallelism, panicking, scope,
+                          spawn, JoinHandle, Scope, ScopedJoinHandle};
+}
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard,
+                     PoisonError};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{AtomicUsize, Ordering};
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use loom::thread::{available_parallelism, panicking, scope,
+                           spawn, JoinHandle, Scope, ScopedJoinHandle};
+}

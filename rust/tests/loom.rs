@@ -1,0 +1,255 @@
+//! Loom model-check suite: exhaustively explores thread interleavings
+//! (within a CHESS-style preemption bound, default 2) of the round
+//! engine's concurrency protocols and of the one stateful codec.
+//!
+//! Compiled and run only under the loom cfg:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom
+//! ```
+//!
+//! Under that cfg the `flocora::sync` shim swaps every Mutex/Condvar/
+//! atomic/thread for the instrumented twins in the vendored `loom`
+//! crate, so the code being checked here — `BoundedWindow`,
+//! `StageRing`, `SparseEfCodec::encode_client` — is the exact code
+//! production runs, not a model of it.
+//!
+//! What a passing run proves, for every schedule explored:
+//!
+//! * **No lost wakeups** — every test terminates. Model condvars never
+//!   wake spuriously, so a forgotten `notify` shows up as a deadlock
+//!   here even though a real condvar would usually paper over it.
+//! * **Bounded memory** — `peak_buffered() <= window` holds on every
+//!   schedule, not just the ones CI happened to run.
+//! * **Panic safety** — a participant unwinding mid-protocol (the
+//!   sentry path) unblocks every waiter and surfaces as an `Aborted`
+//!   drain plus the original panic, never as a hang.
+//! * **Determinism under concurrency** — concurrent `encode_client`
+//!   calls produce bit-identical payloads and residuals to the serial
+//!   reference, regardless of interleaving.
+//!
+//! Knobs: `LOOM_PREEMPTION_BOUND` (number, or `none` for unbounded
+//! DFS) and `LOOM_MAX_ITERATIONS` (schedule cap).
+#![cfg(loom)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use flocora::compression::{Codec, SparseEfCodec};
+use flocora::coordinator::window::{Aborted, BoundedWindow, StageRing};
+use flocora::sync::thread;
+
+// ---------------------------------------------------------------------------
+// BoundedWindow: the parallel executor's claim/deposit/drain protocol
+// ---------------------------------------------------------------------------
+
+/// Two producers and one drainer over 3 indices, for every window in
+/// 1..=3. Termination under every schedule is the no-lost-wakeup
+/// proof (window 1 with 2 producers forces the full-window wait on
+/// `may_claim`; the in-order drain forces the empty-slot wait on
+/// `may_drain`); the peak check is the O(window) memory claim.
+#[test]
+fn window_claim_drain_terminates_and_bounds_buffering() {
+    const N: usize = 3;
+    for window in 1..=3usize {
+        loom::model(move || {
+            let win: BoundedWindow<usize> = BoundedWindow::new(N, window);
+            thread::scope(|s| {
+                for _ in 0..2 {
+                    s.spawn(|| {
+                        let _sentry = win.sentry();
+                        while let Some(i) = win.claim() {
+                            if !win.deposit(i, 10 * i) {
+                                break;
+                            }
+                        }
+                    });
+                }
+                let _sentry = win.sentry();
+                for i in 0..N {
+                    assert_eq!(win.drain(i), Ok(10 * i), "window={window}");
+                }
+            });
+            let peak = win.peak_buffered();
+            assert!(
+                (1..=window).contains(&peak),
+                "peak_buffered {peak} escaped window {window}"
+            );
+        });
+    }
+}
+
+/// A producer panics inside its work item. The sentry must flag the
+/// abort and wake the drainer on every schedule — the drainer sees
+/// `Err(Aborted)` for both indices (never a value, never a hang), and
+/// the scope join re-raises the producer's panic.
+#[test]
+fn window_sentry_turns_a_producer_panic_into_aborted_drains() {
+    loom::model(|| {
+        let win: BoundedWindow<usize> = BoundedWindow::new(2, 2);
+        let mut results = Vec::new();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            thread::scope(|s| {
+                s.spawn(|| {
+                    let _sentry = win.sentry();
+                    let _ = win.claim();
+                    panic!("client work exploded");
+                });
+                let _sentry = win.sentry();
+                for i in 0..2 {
+                    results.push(win.drain(i));
+                }
+            });
+        }));
+        assert!(caught.is_err(), "scope must re-raise the worker panic");
+        assert_eq!(results, [Err(Aborted), Err(Aborted)]);
+    });
+}
+
+/// `abort` must wake a producer that is parked on a full window —
+/// with window 1 and index 0 never drained, the spawned claim can
+/// only return via the abort path. A missing `may_claim` notify in
+/// `abort` shows up here as a deadlock.
+#[test]
+fn window_abort_unblocks_a_parked_claimer() {
+    loom::model(|| {
+        let win: BoundedWindow<u8> = BoundedWindow::new(3, 1);
+        thread::scope(|s| {
+            assert_eq!(win.claim(), Some(0));
+            s.spawn(|| {
+                assert_eq!(win.claim(), None, "abort must free this claim");
+            });
+            win.abort();
+        });
+        assert_eq!(win.drain(0), Err(Aborted));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// StageRing: the pipelined executor's staged hand-off protocol
+// ---------------------------------------------------------------------------
+
+/// Mirrors the executor's `PipeSlot` shape: claim fills `Fetched`, a
+/// second stage steals it by predicate and advances it to `Done`, the
+/// drainer extracts in index order.
+#[derive(Default, Debug, PartialEq)]
+enum Slot {
+    #[default]
+    Empty,
+    Fetched(usize),
+    Training,
+    Done(usize),
+}
+
+fn take_done(s: &mut Slot) -> Option<usize> {
+    match std::mem::take(s) {
+        Slot::Done(v) => Some(v),
+        other => {
+            *s = other;
+            None
+        }
+    }
+}
+
+/// A 3-stage pipeline (fetch thread, train thread, draining root) over
+/// 2 indices. Every schedule must deliver both results, in order, with
+/// the stage hand-offs riding the single broadcast condvar — a lost
+/// broadcast anywhere (put, drain) deadlocks some schedule.
+#[test]
+fn ring_three_stage_pipeline_delivers_in_order() {
+    loom::model(|| {
+        const N: usize = 2;
+        let ring: StageRing<Slot> = StageRing::new(N, 2);
+        thread::scope(|s| {
+            s.spawn(|| {
+                let _sentry = ring.sentry();
+                while let Some(i) = ring.claim() {
+                    if !ring.put(i, Slot::Fetched(10 + i), false) {
+                        break;
+                    }
+                }
+            });
+            s.spawn(|| {
+                let _sentry = ring.sentry();
+                while let Some((i, v)) = ring.take_matching(|s| match s {
+                    Slot::Fetched(v) => {
+                        let v = *v;
+                        *s = Slot::Training;
+                        Some(v)
+                    }
+                    _ => None,
+                }) {
+                    if !ring.put(i, Slot::Done(2 * v), true) {
+                        break;
+                    }
+                }
+            });
+            let _sentry = ring.sentry();
+            for i in 0..N {
+                assert_eq!(ring.drain(i, take_done), Ok(2 * (10 + i)));
+            }
+        });
+        let peak = ring.peak_buffered();
+        assert!((1..=2).contains(&peak), "peak_buffered {peak}");
+    });
+}
+
+/// A stage panics mid-pipeline: the ring's sentry must abort, the
+/// drainer must see `Err(Aborted)` on every schedule, and the panic
+/// must come back out of the scope.
+#[test]
+fn ring_sentry_turns_a_stage_panic_into_aborted_drains() {
+    loom::model(|| {
+        let ring: StageRing<Slot> = StageRing::new(1, 1);
+        let mut got = None;
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            thread::scope(|s| {
+                s.spawn(|| {
+                    let _sentry = ring.sentry();
+                    let _ = ring.claim();
+                    panic!("train step exploded");
+                });
+                let _sentry = ring.sentry();
+                got = Some(ring.drain(0, take_done));
+            });
+        }));
+        assert!(caught.is_err(), "scope must re-raise the stage panic");
+        assert_eq!(got, Some(Err(Aborted)));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// SparseEfCodec: concurrent stateful uploads
+// ---------------------------------------------------------------------------
+
+/// Two clients upload concurrently through one `SparseEfCodec`. The
+/// residual map is shared mutable state behind the shim's mutex; the
+/// claim is that *any* interleaving of the two uploads produces
+/// payloads and residual accumulators bit-identical to running them
+/// serially — client streams must not be able to observe scheduling.
+#[test]
+fn sparse_ef_concurrent_uploads_match_the_serial_reference() {
+    const V1: [f32; 4] = [0.5, -2.0, 0.25, 1.0];
+    const V2: [f32; 4] = [-1.5, 0.125, 3.0, -0.75];
+
+    let expected = {
+        let codec = SparseEfCodec::new(0.5);
+        let p1 = codec.encode_client(1, &V1, &[]).unwrap().payload;
+        let p2 = codec.encode_client(2, &V2, &[]).unwrap().payload;
+        (p1, p2, codec.residual(1).unwrap(), codec.residual(2).unwrap())
+    };
+
+    loom::model(move || {
+        let codec = SparseEfCodec::new(0.5);
+        let (p1, p2) = thread::scope(|s| {
+            let h1 = s
+                .spawn(|| codec.encode_client(1, &V1, &[]).unwrap().payload);
+            let h2 = s
+                .spawn(|| codec.encode_client(2, &V2, &[]).unwrap().payload);
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert_eq!(p1, expected.0, "client 1 payload depends on schedule");
+        assert_eq!(p2, expected.1, "client 2 payload depends on schedule");
+        assert_eq!(codec.residual(1).unwrap(), expected.2);
+        assert_eq!(codec.residual(2).unwrap(), expected.3);
+    });
+}

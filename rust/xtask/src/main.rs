@@ -1,0 +1,688 @@
+//! `cargo xtask lint-determinism` — a custom static lint that keeps
+//! the nondeterminism out of `rust/src`.
+//!
+//! The simulator's contract is that every preset/variant pair produces
+//! bit-identical artifacts across runs, machines, and thread counts.
+//! The compiler cannot check that, but most regressions arrive through
+//! a handful of well-known doors. This lint bolts those doors shut:
+//!
+//! * `std-sync` — no direct `std::sync` / `std::thread` /
+//!   `core::sync`: all concurrency must route through the
+//!   `crate::sync` shim so the loom model checker sees it.
+//! * `map-iter` — no `HashMap` / `HashSet` in coordinator or
+//!   transport settle paths: their iteration order is nondeterministic.
+//! * `wall-clock` — no `Instant` / `SystemTime` outside
+//!   `util/benchkit.rs` and `main.rs`: simulated time comes from the
+//!   transport model, never the host clock.
+//! * `rand-crate` — no ambient RNG anywhere: randomness flows from
+//!   `Rng::for_client(seed, round, cid)` coordinates only.
+//! * `kernel-ref` — every public fast-path kernel in
+//!   `kernels/mod.rs` needs a `_ref` reference twin so tests can pin
+//!   the optimized path bit-for-bit against scalar code.
+//!
+//! Escape hatch: `// det-lint: allow(<rule>) — <justification>` on the
+//! offending line, or anywhere in the unbroken run of comment /
+//! attribute lines immediately above it (a blank line breaks the run).
+//! An allow with no justification, an allow naming an unknown rule,
+//! and a stale allow that suppresses nothing are themselves
+//! violations — escapes must stay explained and alive.
+//!
+//! Token-level by design: comments, strings, and char literals are
+//! stripped first, then rules match whole tokens, so prose about
+//! `std::sync` (like this paragraph) never trips the lint.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const RULES: [&str; 5] =
+    ["std-sync", "map-iter", "wall-clock", "rand-crate", "kernel-ref"];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint-determinism") => {
+            let src = args
+                .iter()
+                .position(|a| a == "--src")
+                .and_then(|i| args.get(i + 1))
+                .map(PathBuf::from)
+                .unwrap_or_else(default_src);
+            run_lint(&src)
+        }
+        _ => {
+            eprintln!(
+                "usage: cargo xtask lint-determinism [--src <dir>]"
+            );
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// `rust/src`, located relative to this crate so the alias works from
+/// any working directory.
+fn default_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level below the workspace root")
+        .join("src")
+}
+
+fn run_lint(src: &Path) -> ExitCode {
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(src, &mut files) {
+        eprintln!("lint-determinism: cannot walk {}: {e}", src.display());
+        return ExitCode::from(2);
+    }
+    files.sort();
+
+    let mut total = 0usize;
+    for path in &files {
+        let raw = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!(
+                    "lint-determinism: cannot read {}: {e}",
+                    path.display()
+                );
+                return ExitCode::from(2);
+            }
+        };
+        let rel = path
+            .strip_prefix(src)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        for v in analyze(&rel, &raw) {
+            println!(
+                "src/{rel}:{}: [{}] {}",
+                v.line, v.rule, v.message
+            );
+            total += 1;
+        }
+    }
+
+    if total > 0 {
+        println!(
+            "lint-determinism: {total} violation(s) across {} file(s)",
+            files.len()
+        );
+        ExitCode::from(1)
+    } else {
+        println!(
+            "lint-determinism: clean ({} file(s) scanned)",
+            files.len()
+        );
+        ExitCode::SUCCESS
+    }
+}
+
+fn collect_rs_files(
+    dir: &Path,
+    out: &mut Vec<PathBuf>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+struct Violation {
+    line: usize,
+    rule: String,
+    message: String,
+}
+
+struct Allow {
+    line: usize,
+    rule: String,
+    justified: bool,
+    used: bool,
+}
+
+/// Lint one file. `rel` is the path relative to `src/` with forward
+/// slashes (rule scoping keys off it); `raw` is the file contents.
+fn analyze(rel: &str, raw: &str) -> Vec<Violation> {
+    let stripped = strip_code(raw);
+    let raw_lines: Vec<&str> = raw.lines().collect();
+    let code_lines: Vec<&str> = stripped.lines().collect();
+
+    // A line that may carry or extend an allow run: comment or
+    // attribute. Blank lines break the run.
+    let comment_or_attr: Vec<bool> = raw_lines
+        .iter()
+        .map(|l| {
+            let t = l.trim_start();
+            t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![")
+        })
+        .collect();
+
+    let mut allows = parse_allows(&raw_lines);
+    let mut violations = Vec::new();
+
+    // --- token rules -------------------------------------------------
+    let map_iter_scoped =
+        rel.starts_with("coordinator/") || rel.starts_with("transport/");
+    let wall_clock_exempt = rel == "util/benchkit.rs" || rel == "main.rs";
+
+    for (idx, line) in code_lines.iter().enumerate() {
+        let lno = idx + 1;
+        if has_path_token(line, "std::sync")
+            || has_path_token(line, "std::thread")
+            || has_path_token(line, "core::sync")
+        {
+            flag(
+                &mut violations,
+                &mut allows,
+                &comment_or_attr,
+                lno,
+                "std-sync",
+                "direct std::sync/std::thread use — route concurrency \
+                 through the crate::sync shim so loom can model it",
+            );
+        }
+        if map_iter_scoped
+            && (has_ident(line, "HashMap") || has_ident(line, "HashSet"))
+        {
+            flag(
+                &mut violations,
+                &mut allows,
+                &comment_or_attr,
+                lno,
+                "map-iter",
+                "HashMap/HashSet in a coordinator/transport path — \
+                 iteration order is nondeterministic; use \
+                 BTreeMap/BTreeSet or a sorted Vec",
+            );
+        }
+        if !wall_clock_exempt
+            && (has_ident(line, "Instant") || has_ident(line, "SystemTime"))
+        {
+            flag(
+                &mut violations,
+                &mut allows,
+                &comment_or_attr,
+                lno,
+                "wall-clock",
+                "host clock outside util::benchkit / the CLI — \
+                 simulated time must come from the transport model",
+            );
+        }
+        if has_path_token(line, "rand::")
+            || has_ident(line, "thread_rng")
+            || has_ident(line, "fastrand")
+            || has_ident(line, "getrandom")
+        {
+            flag(
+                &mut violations,
+                &mut allows,
+                &comment_or_attr,
+                lno,
+                "rand-crate",
+                "ambient RNG — all randomness must flow from \
+                 util::rng::Rng::for_client coordinates",
+            );
+        }
+    }
+
+    // --- kernel-ref --------------------------------------------------
+    if rel == "kernels/mod.rs" {
+        let fns = public_fns(&code_lines);
+        let names: Vec<&str> =
+            fns.iter().map(|(_, n)| n.as_str()).collect();
+        for (lno, name) in &fns {
+            if name.ends_with("_ref") {
+                continue;
+            }
+            let direct = format!("{name}_ref");
+            let base = name.strip_suffix("_into").unwrap_or(name);
+            let stripped_twin = format!("{base}_ref");
+            if names.contains(&direct.as_str())
+                || names.contains(&stripped_twin.as_str())
+            {
+                continue;
+            }
+            flag(
+                &mut violations,
+                &mut allows,
+                &comment_or_attr,
+                *lno,
+                "kernel-ref",
+                &format!(
+                    "pub kernel `{name}` has no `{direct}` reference \
+                     twin to pin bit-identity against"
+                ),
+            );
+        }
+    }
+
+    // --- allow hygiene -----------------------------------------------
+    for a in &allows {
+        if !RULES.contains(&a.rule.as_str()) {
+            violations.push(Violation {
+                line: a.line,
+                rule: "unknown-rule".into(),
+                message: format!(
+                    "det-lint allow names unknown rule `{}`",
+                    a.rule
+                ),
+            });
+        } else if !a.used {
+            violations.push(Violation {
+                line: a.line,
+                rule: "stale-allow".into(),
+                message: format!(
+                    "det-lint allow({}) suppresses nothing — remove it",
+                    a.rule
+                ),
+            });
+        }
+    }
+
+    violations.sort_by_key(|v| v.line);
+    violations
+}
+
+/// Record a violation at `lno` unless a live allow covers it; an allow
+/// missing its justification is reported instead of honored (but still
+/// counts as used, so it is not double-reported as stale).
+fn flag(
+    violations: &mut Vec<Violation>,
+    allows: &mut [Allow],
+    comment_or_attr: &[bool],
+    lno: usize,
+    rule: &str,
+    message: &str,
+) {
+    match find_allow(allows, comment_or_attr, rule, lno) {
+        Some(i) => {
+            allows[i].used = true;
+            if !allows[i].justified {
+                violations.push(Violation {
+                    line: allows[i].line,
+                    rule: rule.into(),
+                    message: format!(
+                        "det-lint allow({rule}) has no justification — \
+                         explain why the escape is sound"
+                    ),
+                });
+            }
+        }
+        None => violations.push(Violation {
+            line: lno,
+            rule: rule.into(),
+            message: message.into(),
+        }),
+    }
+}
+
+/// An allow covers line `lno` if it sits on `lno` itself or anywhere
+/// in the unbroken run of comment/attribute lines immediately above it.
+fn find_allow(
+    allows: &[Allow],
+    comment_or_attr: &[bool],
+    rule: &str,
+    lno: usize,
+) -> Option<usize> {
+    let mut candidate = lno;
+    loop {
+        if let Some(i) = allows
+            .iter()
+            .position(|a| a.line == candidate && a.rule == rule)
+        {
+            return Some(i);
+        }
+        if candidate <= 1 || !comment_or_attr[candidate - 2] {
+            return None;
+        }
+        candidate -= 1;
+    }
+}
+
+/// Scan raw lines for `det-lint: allow(<rule>)` markers. Justification
+/// is whatever follows the closing paren, minus leading punctuation;
+/// it must be substantive (>= 10 chars), not a bare dash.
+fn parse_allows(raw_lines: &[&str]) -> Vec<Allow> {
+    const MARK: &str = "det-lint: allow(";
+    let mut out = Vec::new();
+    for (idx, line) in raw_lines.iter().enumerate() {
+        let Some(pos) = line.find(MARK) else { continue };
+        let rest = &line[pos + MARK.len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_string();
+        let tail = rest[close + 1..]
+            .trim_start_matches(|c: char| {
+                c.is_whitespace() || "—–-:,.".contains(c)
+            })
+            .trim();
+        out.push(Allow {
+            line: idx + 1,
+            rule,
+            justified: tail.chars().count() >= 10,
+            used: false,
+        });
+    }
+    out
+}
+
+/// Lines whose (stripped) text declares a `pub fn`, with the name.
+fn public_fns(code_lines: &[&str]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (idx, line) in code_lines.iter().enumerate() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("pub fn ") else { continue };
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            out.push((idx + 1, name));
+        }
+    }
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whole-identifier match: `Instant` must not match `Instantiate`.
+fn has_ident(line: &str, ident: &str) -> bool {
+    find_token(line, ident, true)
+}
+
+/// Path-prefix match: `std::sync` matches `std::sync::Mutex` but not
+/// `mystd::sync`; `rand::` matches `rand::thread_rng` but not
+/// `operand::x`.
+fn has_path_token(line: &str, tok: &str) -> bool {
+    find_token(line, tok, false)
+}
+
+fn find_token(line: &str, tok: &str, whole_ident: bool) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(tok) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_byte(bytes[p - 1]);
+        let end = p + tok.len();
+        let after_ok = !whole_ident
+            || end >= bytes.len()
+            || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// Replace comments, string/char-literal contents, and raw strings
+/// with spaces, preserving every newline so line numbers survive.
+fn strip_code(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = b[i];
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+        } else if c == 'r'
+            && i + 1 < n
+            && (b[i + 1] == '"' || b[i + 1] == '#')
+            && (i == 0 || !is_ident_byte(b[i - 1] as u8))
+        {
+            // Raw string r"..." / r#"..."# (any hash count).
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                out.push(' '); // the r
+                for _ in 0..hashes {
+                    out.push(' ');
+                }
+                out.push(' '); // the opening quote
+                j += 1;
+                'raw: while j < n {
+                    if b[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#'
+                        {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                            }
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    out.push(blank(b[j]));
+                    j += 1;
+                }
+                i = j;
+            } else {
+                out.push(c);
+                i += 1;
+            }
+        } else if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(blank(b[i + 1]));
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Lifetime or char literal. `'a'` is a char; `'a,`/`'a>`
+            // is a lifetime (next char identifier-ish, the one after
+            // not a closing quote).
+            let is_lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                out.push(c);
+                i += 1;
+            } else {
+                out.push(' ');
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' && i + 1 < n {
+                        out.push(' ');
+                        out.push(blank(b[i + 1]));
+                        i += 2;
+                    } else if b[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    } else if b[i] == '\n' {
+                        // Not a char literal after all; bail out.
+                        break;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(rel: &str, src: &str) -> Vec<String> {
+        analyze(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn strip_removes_comments_strings_and_chars() {
+        let src = "let a = \"std::sync\"; // std::sync\n\
+                   let b = 'x'; /* HashMap */ let c: Vec<&'static str>;\n";
+        let s = strip_code(src);
+        assert!(!s.contains("std::sync"));
+        assert!(!s.contains("HashMap"));
+        assert!(s.contains("'static"), "lifetimes must survive: {s}");
+        assert_eq!(s.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn strip_handles_raw_strings() {
+        let s = strip_code("let re = r#\"Instant \"quoted\" \"#;\nInstant");
+        assert_eq!(s.matches("Instant").count(), 1);
+    }
+
+    #[test]
+    fn std_sync_fires_and_crate_sync_does_not() {
+        assert_eq!(
+            rules_hit("foo.rs", "use std::sync::Mutex;\n"),
+            ["std-sync"]
+        );
+        assert!(rules_hit("foo.rs", "use crate::sync::Mutex;\n").is_empty());
+        assert_eq!(
+            rules_hit("foo.rs", "std::thread::spawn(|| ());\n"),
+            ["std-sync"]
+        );
+    }
+
+    #[test]
+    fn map_iter_is_scoped_to_coordinator_and_transport() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_hit("coordinator/server.rs", src), ["map-iter"]);
+        assert_eq!(rules_hit("transport/sim.rs", src), ["map-iter"]);
+        assert!(rules_hit("runtime/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_exempts_benchkit_and_cli() {
+        let src = "let t = std::time::Instant::now();\n";
+        assert_eq!(rules_hit("compression/lora.rs", src), ["wall-clock"]);
+        assert!(rules_hit("util/benchkit.rs", src).is_empty());
+        assert!(rules_hit("main.rs", src).is_empty());
+        // "Instantiate" is a different identifier.
+        assert!(rules_hit("foo.rs", "fn Instantiate() {}\n").is_empty());
+    }
+
+    #[test]
+    fn rand_crate_fires_everywhere() {
+        assert_eq!(
+            rules_hit("util/rng.rs", "let x = rand::random::<f32>();\n"),
+            ["rand-crate"]
+        );
+        assert_eq!(
+            rules_hit("foo.rs", "let r = thread_rng();\n"),
+            ["rand-crate"]
+        );
+        // `operand::` must not match `rand::`.
+        assert!(rules_hit("foo.rs", "use operand::x;\n").is_empty());
+    }
+
+    #[test]
+    fn allow_on_same_line_and_in_comment_run_suppresses() {
+        let same = "use std::sync::Mutex; \
+                    // det-lint: allow(std-sync) — shim re-export only\n";
+        assert!(rules_hit("sync.rs", same).is_empty());
+
+        let run = "// det-lint: allow(std-sync) — shim re-export only\n\
+                   // continuation of the explanation\n\
+                   #[cfg(not(loom))]\n\
+                   pub use std::sync::Mutex;\n";
+        assert!(rules_hit("sync.rs", run).is_empty());
+
+        // A blank line breaks the run: the allow goes stale and the
+        // violation stands.
+        let broken = "// det-lint: allow(std-sync) — shim re-export only\n\
+                      \n\
+                      pub use std::sync::Mutex;\n";
+        let hits = rules_hit("sync.rs", broken);
+        assert!(hits.contains(&"std-sync".to_string()), "{hits:?}");
+        assert!(hits.contains(&"stale-allow".to_string()), "{hits:?}");
+    }
+
+    #[test]
+    fn allow_without_justification_is_reported() {
+        let src = "// det-lint: allow(std-sync)\n\
+                   pub use std::sync::Mutex;\n";
+        let v = analyze("sync.rs", src);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("justification"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn stale_and_unknown_allows_are_violations() {
+        let src = "// det-lint: allow(wall-clock) — nothing here uses it\n\
+                   // det-lint: allow(no-such-rule) — bogus\n\
+                   fn quiet() {}\n";
+        let mut hits = rules_hit("foo.rs", src);
+        hits.sort();
+        assert_eq!(hits, ["stale-allow", "unknown-rule"]);
+    }
+
+    #[test]
+    fn kernel_ref_requires_a_reference_twin() {
+        let ok = "pub fn axpy(a: &mut [f32]) {}\n\
+                  pub fn axpy_ref(a: &mut [f32]) {}\n\
+                  pub fn pack_into(o: &mut Vec<u8>) {}\n\
+                  pub fn pack_ref(o: &mut Vec<u8>) {}\n";
+        assert!(rules_hit("kernels/mod.rs", ok).is_empty());
+
+        let missing = "pub fn fused_madd(a: &mut [f32]) {}\n";
+        assert_eq!(rules_hit("kernels/mod.rs", missing), ["kernel-ref"]);
+        // Outside kernels/mod.rs the rule does not apply.
+        assert!(rules_hit("kernels/simd.rs", missing).is_empty());
+    }
+
+    #[test]
+    fn kernel_ref_allow_rides_the_doc_comment_run() {
+        let src = "/// Size arithmetic only; nothing to diverge.\n\
+                   // det-lint: allow(kernel-ref) — pure size arithmetic, \
+                   no float path to pin\n\
+                   #[inline]\n\
+                   pub fn packed_len(n: usize) -> usize { n }\n";
+        assert!(rules_hit("kernels/mod.rs", src).is_empty());
+    }
+}
