@@ -1,0 +1,81 @@
+//! Coordinator-scale benchmark: rounds/second as the registered
+//! population grows from 10k to 1M clients, at 1 and at `scale_bench`'s
+//! 8 aggregator shards.
+//!
+//! This is the tentpole number for the sharded coordinator: the lazy
+//! federation keeps 1M registered clients at one fork seed each
+//! (`data::partition::LAZY_THRESHOLD`), and the shard fan-out spreads
+//! the 10k-sampled round's fold/ledger/stage work across threads
+//! while staying bit-identical to `shards = 1`. Rows price the
+//! synthetic engine (the same surrogate CI's sim-smoke pins), so the
+//! trajectory tracks coordinator overhead, not PJRT throughput.
+//!
+//! With `FLOCORA_BENCH_JSON=<path>` the run emits the
+//! `BENCH_scale.json` trajectory file the CI perf-smoke job uploads.
+//! Knobs: `FLOCORA_BENCH_SCALE_ITERS` (timed rounds per row, default
+//! 2) and `FLOCORA_BENCH_SCALE_MAX_REGISTERED` (skip larger rows —
+//! skipped rows are printed, never silently dropped).
+
+use flocora::config::presets;
+use flocora::coordinator::Simulation;
+use flocora::runtime::Engine;
+use flocora::util::benchkit::{bench, env_usize, header};
+use flocora::util::json::{self, Json};
+
+fn row_entry(registered: usize, sampled: usize, shards: usize,
+             rounds_per_s: f64) -> Json {
+    json::obj(vec![
+        ("registered", json::num(registered as f64)),
+        ("sampled", json::num(sampled as f64)),
+        ("shards", json::num(shards as f64)),
+        ("rounds_per_s", json::num(rounds_per_s)),
+    ])
+}
+
+fn main() {
+    println!("{}", header());
+    let iters = env_usize("FLOCORA_BENCH_SCALE_ITERS", 2);
+    let cap = env_usize("FLOCORA_BENCH_SCALE_MAX_REGISTERED", usize::MAX);
+    let engine = Engine::synthetic();
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("{:<12} {:>10} {:>7} {:>12}",
+             "registered", "sampled", "shards", "rounds/s");
+    for (registered, sampled) in
+        [(10_000usize, 1_000usize), (100_000, 10_000), (1_000_000, 10_000)]
+    {
+        if registered > cap {
+            println!("{registered:<12} (skipped: above \
+                      FLOCORA_BENCH_SCALE_MAX_REGISTERED={cap})");
+            continue;
+        }
+        for shards in [1usize, 8] {
+            let mut cfg = presets::scale_bench();
+            cfg.num_clients = registered;
+            cfg.clients_per_round = sampled;
+            cfg.shards = shards;
+            let mut sim = Simulation::new(&engine, cfg).expect("sim");
+            let st = bench(
+                &format!("round {registered}reg {sampled}spl s={shards}"),
+                1, iters, || { sim.round().unwrap(); });
+            let rps = 1.0 / st.mean_s;
+            println!("{registered:<12} {sampled:>10} {shards:>7} \
+                      {rps:>12.3}");
+            rows.push(row_entry(registered, sampled, shards, rps));
+        }
+    }
+
+    // Written when FLOCORA_BENCH_JSON names a path (CI perf-smoke sets
+    // it); the committed BENCH_scale.json at the repo root is the
+    // baseline the trajectory is read against.
+    if let Ok(path) = std::env::var("FLOCORA_BENCH_JSON") {
+        let doc = json::obj(vec![
+            ("schema", json::s("flocora-bench-scale-v1")),
+            ("rows", json::arr(rows)),
+        ]);
+        std::fs::write(&path, doc.to_string() + "\n")
+            .expect("write FLOCORA_BENCH_JSON");
+        println!("wrote {path}");
+    }
+    println!("\nscale bench OK");
+}

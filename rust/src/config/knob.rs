@@ -1,0 +1,189 @@
+//! The knob protocol: one parse/label contract for every enum-valued
+//! config key.
+//!
+//! Each selection knob (`executor`, `sampler`, `aggregator`,
+//! `time_model`, `codec`, …) used to hand-roll its own
+//! `parse`/`label` pair plus a bespoke `ok_or_else` error at every
+//! call site. [`Knob`] pins the contract in one place: a knob is
+//! `FromStr + Display` with the round-trip law `parse(display(k)) ==
+//! k` (checked for every implementor by this module's shared
+//! property test), and [`parse_knob`] renders the one canonical error
+//! shape — ``unknown <key> `<value>` (<choices>)`` — that
+//! `config::set`, the TOML loader and the CLI all surface (the loader
+//! and CLI route through [`FlConfig::set`](super::FlConfig::set),
+//! presets construct the enums directly, so every entry point shares
+//! this code path).
+//!
+//! The historical inherent `parse`/`label` methods remain the
+//! implementation; the trait impls delegate, so existing callers keep
+//! compiling while new code can be generic over knobs.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::compression::CodecKind;
+use crate::coordinator::aggregator::AggregatorKind;
+use crate::coordinator::executor::ExecutorKind;
+use crate::coordinator::sampler::SamplerKind;
+use crate::error::{Error, Result};
+use crate::transport::{NetworkKind, OverlapKind, ProfileKind, Sharing,
+                       TimeModelKind};
+
+/// An enum-valued config knob: parseable, printable, and round-trip
+/// stable (`parse(display(k)) == k` per variant).
+pub trait Knob: Sized + FromStr + fmt::Display {
+    /// Config key this knob answers to (used in error messages).
+    const NAME: &'static str;
+    /// Human-readable choices list (used in error messages).
+    const CHOICES: &'static str;
+    /// Representative variants for the shared round-trip test — every
+    /// unit variant, plus parameterized ones at non-default values.
+    fn variants() -> Vec<Self>;
+}
+
+/// Parse a knob value with the canonical config-error shape:
+/// ``unknown <key> `<value>` (<choices>)``.
+pub fn parse_knob<K: Knob>(value: &str) -> Result<K> {
+    value.parse().map_err(|_| {
+        Error::parse(format!(
+            "unknown {} `{value}` ({})",
+            K::NAME,
+            K::CHOICES
+        ))
+    })
+}
+
+/// Wire one kind up to the knob protocol by delegating to its
+/// inherent `parse`/`label`.
+macro_rules! impl_knob {
+    ($ty:ty, $name:literal, $choices:literal, [$($variant:expr),+ $(,)?]) => {
+        impl FromStr for $ty {
+            type Err = ();
+            fn from_str(s: &str) -> std::result::Result<Self, ()> {
+                <$ty>::parse(s).ok_or(())
+            }
+        }
+
+        impl fmt::Display for $ty {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str(&self.label())
+            }
+        }
+
+        impl Knob for $ty {
+            const NAME: &'static str = $name;
+            const CHOICES: &'static str = $choices;
+            fn variants() -> Vec<Self> {
+                vec![$($variant),+]
+            }
+        }
+    };
+}
+
+impl_knob!(ExecutorKind, "executor", "serial|parallel",
+           [ExecutorKind::Serial, ExecutorKind::Parallel]);
+impl_knob!(SamplerKind, "sampler", "uniform|latency_biased|oversample_k",
+           [SamplerKind::Uniform, SamplerKind::LatencyBiased,
+            SamplerKind::OversampleK]);
+impl_knob!(AggregatorKind, "aggregator", "fedavg|svt|exact",
+           [AggregatorKind::FedAvg, AggregatorKind::Svt,
+            AggregatorKind::Exact]);
+impl_knob!(TimeModelKind, "time_model", "closed|event",
+           [TimeModelKind::Closed, TimeModelKind::Event]);
+impl_knob!(NetworkKind, "network", "edge_lte|wifi",
+           [NetworkKind::EdgeLte, NetworkKind::Wifi]);
+impl_knob!(Sharing, "net_sharing", "dedicated|shared",
+           [Sharing::Dedicated, Sharing::Shared]);
+impl_knob!(OverlapKind, "overlap", "none|transfer",
+           [OverlapKind::None, OverlapKind::Transfer]);
+impl_knob!(CodecKind, "codec",
+           "fp32|q8|q4|q2|topk:<keep>|zerofl:<sp>:<mr>|sparse_ef:<keep>",
+           [CodecKind::Fp32, CodecKind::Affine(8), CodecKind::Affine(4),
+            CodecKind::Affine(2), CodecKind::TopK(0.5),
+            CodecKind::ZeroFl(0.9, 0.2), CodecKind::SparseEf(0.5)]);
+
+// `ProfileKind::File` labels as bare "file" for display tables, but
+// `Display` owes the round-trip law the parseable `file:PATH` form;
+// the macro delegates `Display` to `label()`, so this knob is wired
+// by hand.
+impl FromStr for ProfileKind {
+    type Err = ();
+    fn from_str(s: &str) -> std::result::Result<Self, ()> {
+        ProfileKind::parse(s).ok_or(())
+    }
+}
+
+impl fmt::Display for ProfileKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // Full parseable spec — `label()` stays the bare "file"
+            // for display tables, but `Display` owes round-trippable
+            // output.
+            ProfileKind::File(path) => write!(f, "file:{path}"),
+            other => f.write_str(other.label()),
+        }
+    }
+}
+
+impl Knob for ProfileKind {
+    const NAME: &'static str = "client_profiles";
+    const CHOICES: &'static str = "uniform|tiered|file:PATH";
+    fn variants() -> Vec<Self> {
+        vec![
+            ProfileKind::Uniform,
+            ProfileKind::Tiered,
+            ProfileKind::File("fleet.toml".into()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The shared round-trip law every knob must satisfy.
+    fn round_trips<K: Knob + PartialEq + fmt::Debug>() {
+        let variants = K::variants();
+        assert!(!variants.is_empty(), "{} lists no variants", K::NAME);
+        for k in variants {
+            let shown = k.to_string();
+            let back: K = parse_knob(&shown).unwrap_or_else(|e| {
+                panic!("{} `{shown}` failed to re-parse: {e}", K::NAME)
+            });
+            assert_eq!(back, k, "{} round-trip via `{shown}`", K::NAME);
+        }
+        assert!(parse_knob::<K>("definitely-not-a-choice").is_err());
+    }
+
+    #[test]
+    fn every_knob_round_trips() {
+        round_trips::<ExecutorKind>();
+        round_trips::<SamplerKind>();
+        round_trips::<AggregatorKind>();
+        round_trips::<TimeModelKind>();
+        round_trips::<NetworkKind>();
+        round_trips::<Sharing>();
+        round_trips::<OverlapKind>();
+        round_trips::<CodecKind>();
+        round_trips::<ProfileKind>();
+    }
+
+    #[test]
+    fn parse_errors_carry_key_and_choices() {
+        let err = parse_knob::<ExecutorKind>("turbo")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown executor `turbo`"), "{err}");
+        assert!(err.contains("serial|parallel"), "{err}");
+        let err = parse_knob::<CodecKind>("q3").unwrap_err().to_string();
+        assert!(err.contains("unknown codec `q3`"), "{err}");
+    }
+
+    #[test]
+    fn file_profile_displays_its_full_spec() {
+        let k = ProfileKind::File("fleet.toml".into());
+        assert_eq!(k.to_string(), "file:fleet.toml");
+        // The bare display label stays "file" for tables.
+        assert_eq!(k.label(), "file");
+    }
+}

@@ -3,6 +3,7 @@
 //! runs are launchable as `flocora train --config exp.toml` with CLI
 //! overrides on top.
 
+pub mod knob;
 pub mod loader;
 pub mod presets;
 
@@ -13,6 +14,8 @@ use crate::coordinator::sampler::SamplerKind;
 use crate::error::{Error, Result};
 use crate::transport::{NetworkKind, OverlapKind, ProfileKind, Sharing,
                        TimeModelKind, DEFAULT_COMPUTE_BASE_S};
+
+pub use knob::{parse_knob, Knob};
 
 /// Full description of one FL run.
 #[derive(Debug, Clone)]
@@ -56,6 +59,13 @@ pub struct FlConfig {
     /// can be buffered at once; any value is bit-identical. Ignored by
     /// the serial executor.
     pub window: usize,
+    /// Aggregator shards: the round's sampled clients split into this
+    /// many contiguous, block-aligned partitions, each folding into
+    /// its own aggregator/ledger/stage-log on its own thread; the
+    /// coordinator merges partials through the canonical block tree
+    /// (see `coordinator::shard`). Any value is bit-identical — 1
+    /// (the default) is the historical single-sink round.
+    pub shards: usize,
     /// Link profile behind the simulated time-on-wire report
     /// (`edge_lte | wifi`).
     pub network: NetworkKind,
@@ -142,6 +152,7 @@ impl Default for FlConfig {
             executor: ExecutorKind::Serial,
             threads: 0,
             window: 0,
+            shards: 1,
             network: NetworkKind::EdgeLte,
             net_sharing: Sharing::Dedicated,
             overlap: OverlapKind::None,
@@ -226,6 +237,9 @@ impl FlConfig {
         if self.chunk_kb == 0 {
             return Err(Error::invalid("chunk_kb must be > 0"));
         }
+        if self.shards == 0 {
+            return Err(Error::invalid("shards must be >= 1"));
+        }
         if self.hetero_ranks.iter().any(|&r| r == 0) {
             return Err(Error::invalid("hetero_ranks entries must be > 0"));
         }
@@ -271,54 +285,18 @@ impl FlConfig {
             "lr_decay" => self.lr_decay = p(key, value)?,
             "threads" => self.threads = p(key, value)?,
             "window" => self.window = p(key, value)?,
-            "network" => {
-                self.network = NetworkKind::parse(value).ok_or_else(|| {
-                    Error::parse(format!(
-                        "unknown network `{value}` (edge_lte|wifi)"
-                    ))
-                })?
-            }
-            "net_sharing" => {
-                self.net_sharing = Sharing::parse(value).ok_or_else(|| {
-                    Error::parse(format!(
-                        "unknown net_sharing `{value}` (dedicated|shared)"
-                    ))
-                })?
-            }
-            "overlap" => {
-                self.overlap = OverlapKind::parse(value).ok_or_else(|| {
-                    Error::parse(format!(
-                        "unknown overlap `{value}` (none|transfer)"
-                    ))
-                })?
-            }
-            "sampler" => {
-                self.sampler = SamplerKind::parse(value).ok_or_else(|| {
-                    Error::parse(format!(
-                        "unknown sampler `{value}` \
-                         (uniform|latency_biased|oversample_k)"
-                    ))
-                })?
-            }
+            "shards" => self.shards = p(key, value)?,
+            // Enum-valued keys all route through the knob protocol —
+            // one parse path and one error shape for the loader, the
+            // CLI and direct `set` callers (see `config::knob`).
+            "network" => self.network = parse_knob(value)?,
+            "net_sharing" => self.net_sharing = parse_knob(value)?,
+            "overlap" => self.overlap = parse_knob(value)?,
+            "sampler" => self.sampler = parse_knob(value)?,
             "oversample_beta" => self.oversample_beta = p(key, value)?,
-            "client_profiles" => {
-                self.client_profiles =
-                    ProfileKind::parse(value).ok_or_else(|| {
-                        Error::parse(format!(
-                            "unknown client_profiles `{value}` \
-                             (uniform|tiered|file:PATH)"
-                        ))
-                    })?
-            }
+            "client_profiles" => self.client_profiles = parse_knob(value)?,
             "compute_base_s" => self.compute_base_s = p(key, value)?,
-            "time_model" => {
-                self.time_model =
-                    TimeModelKind::parse(value).ok_or_else(|| {
-                        Error::parse(format!(
-                            "unknown time_model `{value}` (closed|event)"
-                        ))
-                    })?
-            }
+            "time_model" => self.time_model = parse_knob(value)?,
             "chunk_kb" => self.chunk_kb = p(key, value)?,
             "stage_queue" => self.stage_queue = p(key, value)?,
             "hetero_ranks" => {
@@ -330,27 +308,9 @@ impl FlConfig {
                 self.hetero_codecs =
                     parse_list(key, value, CodecKind::parse)?
             }
-            "executor" => {
-                self.executor = ExecutorKind::parse(value).ok_or_else(|| {
-                    Error::parse(format!(
-                        "unknown executor `{value}` (serial|parallel)"
-                    ))
-                })?
-            }
-            "codec" => {
-                self.codec = CodecKind::parse(value).ok_or_else(|| {
-                    Error::parse(format!("unknown codec `{value}`"))
-                })?
-            }
-            "aggregator" => {
-                self.aggregator =
-                    AggregatorKind::parse(value).ok_or_else(|| {
-                        Error::parse(format!(
-                            "unknown aggregator `{value}` \
-                             (fedavg|svt|exact)"
-                        ))
-                    })?
-            }
+            "executor" => self.executor = parse_knob(value)?,
+            "codec" => self.codec = parse_knob(value)?,
+            "aggregator" => self.aggregator = parse_knob(value)?,
             "svt_energy" => self.svt_energy = p(key, value)?,
             _ => return Err(Error::parse(format!("unknown config key `{key}`"))),
         }
@@ -538,6 +498,19 @@ mod tests {
         }
         c.set("svt_energy", "1.0").unwrap();
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn shards_knob_parses_and_validates() {
+        let mut c = FlConfig::default();
+        assert_eq!(c.shards, 1);
+        c.set("shards", "4").unwrap();
+        assert_eq!(c.shards, 4);
+        c.validate().unwrap();
+        assert!(c.set("shards", "x").is_err());
+        // shards = 0 survives parsing but fails validation.
+        c.set("shards", "0").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -191,6 +191,34 @@ pub fn sparse_ef_micro() -> FlConfig {
     scaled_micro("micro8_lora_fc_r4", 4, CodecKind::SparseEf(0.25))
 }
 
+/// Registration-scale throughput regime: 1M registered clients, 10k
+/// sampled per round, 8 aggregator shards. This is the coordinator
+/// scaling benchmark behind `BENCH_scale.json` (rounds/sec at
+/// 10k/100k/1M registered clients), not a training experiment — one
+/// round, one local epoch, a handful of samples per client, and the
+/// uniform sampler (the latency-biased one prices every registered
+/// client per draw, which is O(n·k) at this scale). The federation
+/// sits above [`crate::data::LAZY_THRESHOLD`], so client datasets
+/// materialize on demand from fork seeds instead of 1M upfront
+/// allocations.
+pub fn scale_bench() -> FlConfig {
+    FlConfig {
+        tag: "micro8_lora_fc_r4".into(),
+        num_clients: 1_000_000,
+        clients_per_round: 10_000,
+        rounds: 1,
+        local_epochs: 1,
+        lr: 0.02,
+        lora_alpha: 64.0,
+        samples_per_client: 8,
+        test_samples: 64,
+        eval_every: 1,
+        executor: ExecutorKind::Parallel,
+        shards: 8,
+        ..FlConfig::default()
+    }
+}
+
 /// Look a preset up by CLI name (`flocora train --preset NAME`).
 pub fn by_name(name: &str) -> Option<FlConfig> {
     match name {
@@ -207,6 +235,7 @@ pub fn by_name(name: &str) -> Option<FlConfig> {
         "event_micro" => Some(event_micro()),
         "svt_micro" => Some(svt_micro()),
         "sparse_ef_micro" => Some(sparse_ef_micro()),
+        "scale_bench" => Some(scale_bench()),
         _ => None,
     }
 }
@@ -300,10 +329,22 @@ mod tests {
     }
 
     #[test]
+    fn scale_bench_is_sharded_and_lazy() {
+        let cfg = scale_bench();
+        cfg.validate().unwrap();
+        assert!(cfg.shards > 1);
+        assert!(cfg.num_clients >= crate::data::LAZY_THRESHOLD);
+        assert_eq!(cfg.sampler, SamplerKind::Uniform,
+                   "latency-biased sampling is O(n·k) at this scale");
+        assert_eq!(cfg.rounds, 1, "a throughput probe, not a run");
+    }
+
+    #[test]
     fn presets_resolve_by_name() {
         for name in ["paper_resnet8", "paper_resnet18", "scaled_micro",
                      "scaled_tiny", "hetero_micro", "straggler_micro",
-                     "event_micro", "svt_micro", "sparse_ef_micro"] {
+                     "event_micro", "svt_micro", "sparse_ef_micro",
+                     "scale_bench"] {
             let cfg = by_name(name).unwrap_or_else(|| {
                 panic!("preset {name} missing")
             });

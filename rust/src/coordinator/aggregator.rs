@@ -1,10 +1,33 @@
 //! The aggregation zoo: FedAvg plus factor-aware LoRA aggregators.
 //!
 //! `w_{t+1} = Σ_k (n_k / n) w_k` (paper Eq. 1's minimizer step) is the
-//! baseline [`FedAvg`]; its accumulator is f64-free by design — the
-//! paper's method aggregates in the same precision the messages arrive
-//! in (f32), and the weighted accumulation is the per-round O(K·P) hot
-//! loop (DESIGN.md §7).
+//! baseline [`FedAvg`]; the weighted accumulation is the per-round
+//! O(K·P) hot loop (DESIGN.md §7).
+//!
+//! **One upload entry point.** Every aggregator consumes uploads
+//! through [`Aggregator::fold`] taking a [`ClientUpdate`] — dense or
+//! still-encoded — so call sites (the server's shard merge, the
+//! executors) never choose a decode path themselves. Dense-mean
+//! aggregation keeps the zero-copy
+//! [`Codec::decode_into`](crate::compression::Codec::decode_into)
+//! fast path internally; factor-aware modes materialize the vector
+//! (they slice adapter factors out of it).
+//!
+//! **Shard-ready folding.** Each fold carries its client's global
+//! *sampling slot*; the accumulator groups slots into fixed blocks of
+//! [`SHARD_BLOCK`](crate::coordinator::shard::SHARD_BLOCK) and keeps
+//! one serial (sampling-order) partial sum per block. Finishing
+//! merges block partials pairwise in the canonical tree
+//! ([`tree_reduce`](crate::coordinator::shard::tree_reduce)) over the
+//! ascending non-empty block list. Because shard partitions are
+//! block-aligned, concatenating shard-local partials in shard order
+//! reproduces exactly the block list a single aggregator would hold —
+//! so [`AggregatorKind::finish_partials`] is byte-identical at any
+//! shard count, and rounds of ≤ `SHARD_BLOCK` clients (every
+//! historical preset) are bit-for-bit the pre-shard serial fold.
+//! (The slot parameter is why `fold` takes three arguments where the
+//! obvious API takes two: dropped clients never fold, so the block a
+//! contribution lands in cannot be recovered from the fold count.)
 //!
 //! Averaging LoRA factors independently is *biased*: the mean of the
 //! products `Σ w_k L_k R_k / W` is not the product of the means
@@ -24,75 +47,178 @@
 //!   A·B averaging bias). A single-contributor round is bit-for-bit
 //!   FedAvg — the mean of one product *is* the product of one mean.
 //!
-//! Both run on the coordinator thread after the round's contributions
-//! merge, in f64, with deterministic loop order — executor choice and
-//! window size cannot perturb the result. Non-adapter segments (norms,
-//! fc head) always take the plain FedAvg path.
+//! Both stack factors in sampling order per shard; shard stacks
+//! concatenate in shard order (= global sampling order, partitions
+//! are contiguous) before the *single* coordinator-side SVD, so the
+//! refactor is independent of the shard count, the executor, and the
+//! window size. Non-adapter segments (norms, fc head) always take the
+//! plain FedAvg path.
 
 use crate::compression::{Codec, Message};
 use crate::coordinator::hetero::rank_geometry;
+use crate::coordinator::shard::{block_of, tree_reduce};
 use crate::error::{Error, Result};
 use crate::model::Segment;
 use crate::tensor;
 
-/// Streaming weighted-average accumulator.
-pub struct FedAvg {
+/// One client's upload, as handed to [`Aggregator::fold`]: either the
+/// dense server-space vector or the still-encoded wire message plus
+/// what's needed to decode it. The aggregator picks the decode
+/// strategy (zero-copy fold vs materialize), not the call site.
+pub enum ClientUpdate<'a> {
+    /// Decoded dense vector in the server's rank space.
+    Dense(&'a [f32]),
+    /// Still-encoded upload; dense-mean aggregators fold it zero-copy
+    /// via [`Codec::decode_into`], factor-aware ones materialize.
+    Encoded {
+        codec: &'a dyn Codec,
+        msg: &'a Message,
+        segments: &'a [Segment],
+    },
+}
+
+/// One fold block's accumulator: the serial weighted partial sum of
+/// the contributions whose sampling slots fall in block `index`.
+struct FoldBlock {
+    index: usize,
     acc: Vec<f32>,
-    total_weight: f64,
+    weight: f64,
+}
+
+/// Streaming weighted-average accumulator, block-structured for the
+/// sharded coordinator (see the module docs): one serial f32 partial
+/// per fold block, merged pairwise in canonical block order at
+/// finish. A single-block accumulator (≤ 64 sequential slots) is
+/// bit-for-bit the historical flat fold.
+pub struct FedAvg {
+    dim: usize,
+    /// Non-empty block partials, ascending by block index.
+    blocks: Vec<FoldBlock>,
+    /// Next sampling slot for the sequential [`FedAvg::add`] path.
+    next_slot: usize,
 }
 
 impl FedAvg {
     pub fn new(dim: usize) -> FedAvg {
-        FedAvg { acc: vec![0.0; dim], total_weight: 0.0 }
+        FedAvg { dim, blocks: Vec::new(), next_slot: 0 }
     }
 
-    /// Add one client's vector with sample-count weight `n_k`.
-    pub fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
-        if v.len() != self.acc.len() {
-            return Err(Error::invalid(format!(
-                "aggregator dim {} vs contribution {}",
-                self.acc.len(),
-                v.len()
-            )));
-        }
+    fn check_weight(weight: f64) -> Result<()> {
         if !(weight > 0.0) {
             return Err(Error::invalid(format!("bad weight {weight}")));
         }
-        tensor::axpy_weighted(&mut self.acc, v, weight as f32);
-        self.total_weight += weight;
+        Ok(())
+    }
+
+    /// The accumulator for `slot`'s block, created zeroed on first
+    /// touch. Slots arrive in sampling order within a shard, so in
+    /// practice this appends; the binary search keeps the list
+    /// correct (and ascending) for arbitrary fold orders too.
+    fn block_mut(&mut self, slot: usize) -> &mut FoldBlock {
+        let index = block_of(slot);
+        let pos = match self
+            .blocks
+            .binary_search_by(|b| b.index.cmp(&index))
+        {
+            Ok(pos) => pos,
+            Err(pos) => {
+                self.blocks.insert(
+                    pos,
+                    FoldBlock {
+                        index,
+                        acc: vec![0.0; self.dim],
+                        weight: 0.0,
+                    },
+                );
+                pos
+            }
+        };
+        &mut self.blocks[pos]
+    }
+
+    /// Fold one client's dense vector at its global sampling slot
+    /// with sample-count weight `n_k`.
+    pub fn fold_dense(
+        &mut self,
+        slot: usize,
+        v: &[f32],
+        weight: f64,
+    ) -> Result<()> {
+        if v.len() != self.dim {
+            return Err(Error::invalid(format!(
+                "aggregator dim {} vs contribution {}",
+                self.dim,
+                v.len()
+            )));
+        }
+        Self::check_weight(weight)?;
+        let block = self.block_mut(slot);
+        tensor::axpy_weighted(&mut block.acc, v, weight as f32);
+        block.weight += weight;
         Ok(())
     }
 
     /// Zero-copy fold of a still-encoded upload: the codec's
     /// [`Codec::decode_into`] streams `weight * decoded` straight into
-    /// the accumulator. Same validations, same arithmetic, no
-    /// intermediate vector.
-    pub fn add_encoded(
+    /// the slot's block accumulator. Same validations, same
+    /// arithmetic, no intermediate vector.
+    pub fn fold_encoded(
         &mut self,
+        slot: usize,
         codec: &dyn Codec,
         msg: &Message,
         segments: &[Segment],
         weight: f64,
     ) -> Result<()> {
-        if !(weight > 0.0) {
-            return Err(Error::invalid(format!("bad weight {weight}")));
-        }
-        codec.decode_into(msg, segments, &mut self.acc, weight as f32)?;
-        self.total_weight += weight;
+        Self::check_weight(weight)?;
+        let block = self.block_mut(slot);
+        codec.decode_into(msg, segments, &mut block.acc, weight as f32)?;
+        block.weight += weight;
         Ok(())
     }
 
-    pub fn contributions(&self) -> f64 {
-        self.total_weight
+    /// Sequential convenience fold: slots assigned 0, 1, 2, … in call
+    /// order (benches, property tests, reference loops). Identical to
+    /// the historical flat accumulator for up to `SHARD_BLOCK` adds.
+    pub fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
+        let slot = self.next_slot;
+        self.fold_dense(slot, v, weight)?;
+        self.next_slot = slot + 1;
+        Ok(())
     }
 
-    /// Finish: divide by total weight.
-    pub fn finish(mut self) -> Result<Vec<f32>> {
-        if self.total_weight <= 0.0 {
+    /// Total weight contributed so far: per-block serial weight sums,
+    /// tree-merged in canonical block order (the same reduction
+    /// [`FedAvg::finish`] divides by).
+    pub fn contributions(&self) -> f64 {
+        let weights: Vec<f64> =
+            self.blocks.iter().map(|b| b.weight).collect();
+        let (total, _depth) = tree_reduce(weights, |a, b| *a += b);
+        total.unwrap_or(0.0)
+    }
+
+    /// Consume the block partials into `(Σ w_k v_k, Σ w_k, depth)`
+    /// via the canonical pairwise tree; `depth` is the merge-tree
+    /// depth (0 for a single block).
+    fn merge_blocks(self) -> Result<(Vec<f32>, f64, usize)> {
+        let (merged, depth) = tree_reduce(self.blocks, |a, b| {
+            tensor::axpy_weighted(&mut a.acc, &b.acc, 1.0);
+            a.weight += b.weight;
+        });
+        match merged {
+            None => Err(Error::invalid("aggregating zero contributions")),
+            Some(b) => Ok((b.acc, b.weight, depth)),
+        }
+    }
+
+    /// Finish: tree-merge the block partials, divide by total weight.
+    pub fn finish(self) -> Result<Vec<f32>> {
+        let (mut acc, total_weight, _depth) = self.merge_blocks()?;
+        if total_weight <= 0.0 {
             return Err(Error::invalid("aggregating zero contributions"));
         }
-        tensor::scale(&mut self.acc, (1.0 / self.total_weight) as f32);
-        Ok(self.acc)
+        tensor::scale(&mut acc, (1.0 / total_weight) as f32);
+        Ok(acc)
     }
 }
 
@@ -107,34 +233,50 @@ pub struct AggOutcome {
     pub eff_rank: f64,
 }
 
+/// One shard's aggregation partial, extracted by
+/// [`Aggregator::into_partial`] and merged on the coordinator thread
+/// by [`AggregatorKind::finish_partials`]. Opaque: the block partials
+/// and factor stacks inside are meaningful only to the kind that
+/// produced them.
+pub struct AggPartial {
+    blocks: Vec<FoldBlock>,
+    /// Per-pair factor stacks in shard-local sampling order (empty
+    /// for plain FedAvg and the svt τ ≥ 1.0 passthrough).
+    stacks: Vec<PairStack>,
+    /// Contributors this shard folded (factor-aware modes only; the
+    /// global single-contributor passthrough needs the sum).
+    clients: usize,
+}
+
 /// One round's server-side merge strategy, behind a common seam so the
 /// round engine can swap FedAvg for factor-aware modes
 /// (`aggregator = fedavg|svt|exact`).
 pub trait Aggregator: Send {
-    /// Add one client's trainable vector with sample-count weight.
-    fn add(&mut self, v: &[f32], weight: f64) -> Result<()>;
-    /// Fold one still-encoded client upload. The default materializes
-    /// via [`Codec::decode`] and forwards to [`Aggregator::add`];
-    /// plain-mean aggregators override it with the zero-copy
-    /// [`Codec::decode_into`] fold (bit-identical — same per-element
-    /// ops, same order — the decoded vector just never exists).
-    /// Factor-aware aggregators keep the default: they need the dense
-    /// vector to slice adapter factors out of.
-    fn add_encoded(
+    /// Fold one client's upload — dense or still-encoded — at its
+    /// global sampling `slot`, with sample-count weight `n_k`. The
+    /// implementation picks the decode strategy: dense-mean modes
+    /// fold encoded uploads zero-copy via
+    /// [`Codec::decode_into`](crate::compression::Codec::decode_into)
+    /// (bit-identical to decode-then-fold — same per-element ops,
+    /// same order — the decoded vector just never exists);
+    /// factor-aware modes materialize, because they slice adapter
+    /// factors out of the dense vector.
+    fn fold(
         &mut self,
-        codec: &dyn Codec,
-        msg: &Message,
-        segments: &[Segment],
+        slot: usize,
+        update: ClientUpdate<'_>,
         weight: f64,
-    ) -> Result<()> {
-        let v = codec.decode(msg, segments)?;
-        self.add(&v, weight)
-    }
+    ) -> Result<()>;
     /// Total weight contributed so far.
     fn contributions(&self) -> f64;
     /// Consume the accumulator and produce the new global vector plus
-    /// the round's effective-rank report.
+    /// the round's effective-rank report. Equivalent to extracting
+    /// this aggregator's single partial and finishing it — kept for
+    /// unsharded callers (tests, benches).
     fn finish(self: Box<Self>) -> Result<AggOutcome>;
+    /// Extract this shard's partial for the coordinator-side merge
+    /// ([`AggregatorKind::finish_partials`]).
+    fn into_partial(self: Box<Self>) -> AggPartial;
 }
 
 /// One LoRA adapter pair located inside the flat trainable vector:
@@ -220,7 +362,7 @@ impl AggregatorKind {
         }
     }
 
-    /// Build a fresh per-round aggregator for a `dim`-element trainable
+    /// Build a fresh per-shard aggregator for a `dim`-element trainable
     /// vector whose adapter pairs are `pairs` (precomputed once per
     /// run via [`adapter_pairs`]). `svt_energy` is only read by
     /// [`AggregatorKind::Svt`].
@@ -245,6 +387,68 @@ impl AggregatorKind {
             }
         }
     }
+
+    /// Merge per-shard partials (in canonical shard order) into the
+    /// round outcome: concatenate the shards' block partials and
+    /// factor stacks — block-aligned contiguous partitions make the
+    /// concatenation exactly the list a single aggregator would hold
+    /// — then run one tree merge and (for `svt | exact`) one SVD
+    /// refactor on the coordinator thread. Returns the outcome and
+    /// the block merge-tree depth. Byte-identical to boxing one
+    /// aggregator over the whole round, at any shard count.
+    pub fn finish_partials(
+        &self,
+        dim: usize,
+        pairs: &[AdapterPair],
+        svt_energy: f64,
+        partials: Vec<AggPartial>,
+    ) -> Result<(AggOutcome, usize)> {
+        let mut fed = FedAvg::new(dim);
+        let mut stacks: Vec<PairStack> =
+            pairs.iter().map(|_| PairStack::default()).collect();
+        let mut clients = 0usize;
+        for partial in partials {
+            debug_assert!(
+                fed.blocks.last().map_or(true, |prev| {
+                    partial
+                        .blocks
+                        .first()
+                        .map_or(true, |next| prev.index < next.index)
+                }),
+                "shard partials must merge in canonical shard order"
+            );
+            fed.blocks.extend(partial.blocks);
+            clients += partial.clients;
+            for (dst, src) in stacks.iter_mut().zip(partial.stacks) {
+                dst.left_cols.extend(src.left_cols);
+                dst.right_rows.extend(src.right_rows);
+            }
+        }
+        let total_weight = fed.contributions();
+        let (mut acc, _w, depth) = fed.merge_blocks()?;
+        if total_weight <= 0.0 {
+            return Err(Error::invalid("aggregating zero contributions"));
+        }
+        tensor::scale(&mut acc, (1.0 / total_weight) as f32);
+        let passthrough = match self {
+            AggregatorKind::FedAvg => true,
+            AggregatorKind::Svt => svt_energy >= 1.0,
+            AggregatorKind::Exact => false,
+        };
+        let outcome = finish_stacked(
+            acc,
+            pairs,
+            stacks,
+            clients,
+            total_weight,
+            match self {
+                AggregatorKind::Svt => Some(svt_energy.min(1.0)),
+                _ => None,
+            },
+            passthrough,
+        )?;
+        Ok((outcome, depth))
+    }
 }
 
 /// Mean server rank over adapter pairs — what a FedAvg round
@@ -265,18 +469,20 @@ struct FedAvgAggregator {
 }
 
 impl Aggregator for FedAvgAggregator {
-    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
-        self.inner.add(v, weight)
-    }
-
-    fn add_encoded(
+    fn fold(
         &mut self,
-        codec: &dyn Codec,
-        msg: &Message,
-        segments: &[Segment],
+        slot: usize,
+        update: ClientUpdate<'_>,
         weight: f64,
     ) -> Result<()> {
-        self.inner.add_encoded(codec, msg, segments, weight)
+        match update {
+            ClientUpdate::Dense(v) => {
+                self.inner.fold_dense(slot, v, weight)
+            }
+            ClientUpdate::Encoded { codec, msg, segments } => self
+                .inner
+                .fold_encoded(slot, codec, msg, segments, weight),
+        }
     }
 
     fn contributions(&self) -> f64 {
@@ -284,7 +490,18 @@ impl Aggregator for FedAvgAggregator {
     }
 
     fn finish(self: Box<Self>) -> Result<AggOutcome> {
-        Ok(AggOutcome { global: self.inner.finish()?, eff_rank: self.eff_rank })
+        Ok(AggOutcome {
+            global: self.inner.finish()?,
+            eff_rank: self.eff_rank,
+        })
+    }
+
+    fn into_partial(self: Box<Self>) -> AggPartial {
+        AggPartial {
+            blocks: self.inner.blocks,
+            stacks: Vec::new(),
+            clients: 0,
+        }
     }
 }
 
@@ -292,7 +509,9 @@ impl Aggregator for FedAvgAggregator {
 /// pre-scaled by the client weight) and matching right rows
 /// (`inner`-long). Column `j` of the conceptual `outer × m` left stack
 /// pairs with row `j` of the `m × inner` right stack, so
-/// `Σ_k w_k L_k R_k = L_stack · R_stack` exactly.
+/// `Σ_k w_k L_k R_k = L_stack · R_stack` exactly. Stacking is pure
+/// appends in sampling order, which is what lets shard-local stacks
+/// concatenate into the global stack.
 #[derive(Default)]
 struct PairStack {
     left_cols: Vec<Vec<f64>>,
@@ -331,8 +550,13 @@ impl SvtAggregator {
 }
 
 impl Aggregator for SvtAggregator {
-    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
-        self.0.add(v, weight)
+    fn fold(
+        &mut self,
+        slot: usize,
+        update: ClientUpdate<'_>,
+        weight: f64,
+    ) -> Result<()> {
+        self.0.fold(slot, update, weight)
     }
 
     fn contributions(&self) -> f64 {
@@ -341,6 +565,10 @@ impl Aggregator for SvtAggregator {
 
     fn finish(self: Box<Self>) -> Result<AggOutcome> {
         self.0.finish()
+    }
+
+    fn into_partial(self: Box<Self>) -> AggPartial {
+        self.0.into_partial()
     }
 }
 
@@ -356,8 +584,13 @@ impl ExactAggregator {
 }
 
 impl Aggregator for ExactAggregator {
-    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
-        self.0.add(v, weight)
+    fn fold(
+        &mut self,
+        slot: usize,
+        update: ClientUpdate<'_>,
+        weight: f64,
+    ) -> Result<()> {
+        self.0.fold(slot, update, weight)
     }
 
     fn contributions(&self) -> f64 {
@@ -366,6 +599,10 @@ impl Aggregator for ExactAggregator {
 
     fn finish(self: Box<Self>) -> Result<AggOutcome> {
         self.0.finish()
+    }
+
+    fn into_partial(self: Box<Self>) -> AggPartial {
+        self.0.into_partial()
     }
 }
 
@@ -386,12 +623,37 @@ impl StackedAggregator {
         }
     }
 
-    fn add(&mut self, v: &[f32], weight: f64) -> Result<()> {
-        self.mean.add(v, weight)?;
-        self.clients += 1;
+    fn fold(
+        &mut self,
+        slot: usize,
+        update: ClientUpdate<'_>,
+        weight: f64,
+    ) -> Result<()> {
         if self.passthrough {
-            return Ok(());
+            // No stacking: the zero-copy encoded fold is safe (and
+            // bitwise-FedAvg is the passthrough's definition).
+            self.clients += 1;
+            return match update {
+                ClientUpdate::Dense(v) => {
+                    self.mean.fold_dense(slot, v, weight)
+                }
+                ClientUpdate::Encoded { codec, msg, segments } => self
+                    .mean
+                    .fold_encoded(slot, codec, msg, segments, weight),
+            };
         }
+        // Factor stacking needs the dense vector; materialize encoded
+        // uploads here, once, behind the seam.
+        let materialized;
+        let v: &[f32] = match update {
+            ClientUpdate::Dense(v) => v,
+            ClientUpdate::Encoded { codec, msg, segments } => {
+                materialized = codec.decode(msg, segments)?;
+                &materialized
+            }
+        };
+        self.mean.fold_dense(slot, v, weight)?;
+        self.clients += 1;
         for (pair, stack) in self.pairs.iter().zip(self.stacks.iter_mut()) {
             let r = pair.rank;
             for j in 0..r {
@@ -419,32 +681,58 @@ impl StackedAggregator {
 
     fn finish(self: StackedAggregator) -> Result<AggOutcome> {
         let total_weight = self.mean.contributions();
-        let mut global = self.mean.finish()?;
-        // Passthrough cases are bit-for-bit FedAvg: τ ≥ 1.0, a
-        // non-adapter layout, or a single contributor (the mean of one
-        // product is the product of one mean). The rank report still
-        // covers the pairs — it is the static server rank then.
-        if self.passthrough || self.pairs.is_empty() || self.clients <= 1 {
-            return Ok(AggOutcome {
-                global,
-                eff_rank: static_rank(&self.pairs),
-            });
-        }
-        let mut rank_sum = 0.0;
-        for (pair, stack) in self.pairs.iter().zip(self.stacks.into_iter()) {
-            rank_sum += refactor_pair(
-                &mut global,
-                pair,
-                stack,
-                total_weight,
-                self.energy,
-            ) as f64;
-        }
-        Ok(AggOutcome {
+        let global = self.mean.finish()?;
+        finish_stacked(
             global,
-            eff_rank: rank_sum / self.pairs.len() as f64,
-        })
+            &self.pairs,
+            self.stacks,
+            self.clients,
+            total_weight,
+            self.energy,
+            self.passthrough,
+        )
     }
+
+    fn into_partial(self) -> AggPartial {
+        AggPartial {
+            blocks: self.mean.blocks,
+            stacks: self.stacks,
+            clients: self.clients,
+        }
+    }
+}
+
+/// The factor-refactor tail shared by the unsharded `finish` and the
+/// coordinator-side [`AggregatorKind::finish_partials`]: takes the
+/// already-divided mean vector and the (possibly concatenated) factor
+/// stacks, and either passes the mean through or refactors each pair.
+fn finish_stacked(
+    mut global: Vec<f32>,
+    pairs: &[AdapterPair],
+    stacks: Vec<PairStack>,
+    clients: usize,
+    total_weight: f64,
+    energy: Option<f64>,
+    passthrough: bool,
+) -> Result<AggOutcome> {
+    // Passthrough cases are bit-for-bit FedAvg: τ ≥ 1.0, a
+    // non-adapter layout, or a single contributor (the mean of one
+    // product is the product of one mean). The rank report still
+    // covers the pairs — it is the static server rank then.
+    if passthrough || pairs.is_empty() || clients <= 1 {
+        return Ok(AggOutcome { global, eff_rank: static_rank(pairs) });
+    }
+    let mut rank_sum = 0.0;
+    for (pair, stack) in pairs.iter().zip(stacks.into_iter()) {
+        rank_sum += refactor_pair(
+            &mut global,
+            pair,
+            stack,
+            total_weight,
+            energy,
+        ) as f64;
+    }
+    Ok(AggOutcome { global, eff_rank: rank_sum / pairs.len() as f64 })
 }
 
 /// Refactor one adapter pair's stacked contribution into at most
@@ -456,7 +744,8 @@ impl StackedAggregator {
 /// QR of both sides (`L_s = Q_l T_l`, `R_sᵀ = Q_r T_r`) reduces the
 /// SVD to the small `m × m` core `M = T_l T_rᵀ = U Σ Vᵀ`, giving
 /// `P̄ = (Q_l U) (Σ/W) (Q_r V)ᵀ` — computed entirely in f64 on the
-/// coordinator thread, so the result is independent of executor mode.
+/// coordinator thread, so the result is independent of executor mode
+/// and shard count.
 fn refactor_pair(
     global: &mut [f32],
     pair: &AdapterPair,
@@ -643,6 +932,7 @@ fn jacobi_svd(a: &mut [Vec<f64>]) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::shard::{shard_slices, SHARD_BLOCK};
     use crate::model::{build_spec, ModelCfg, ParamKind, Variant};
     use crate::util::rng::Rng;
 
@@ -695,6 +985,7 @@ mod tests {
         let mut agg = FedAvg::new(2);
         agg.add(&[1.0, 0.0], 1.0).unwrap();
         agg.add(&[4.0, 3.0], 3.0).unwrap();
+        assert_eq!(agg.contributions(), 4.0);
         let out = agg.finish().unwrap();
         assert_eq!(out, vec![3.25, 2.25]);
     }
@@ -723,10 +1014,118 @@ mod tests {
             [AggregatorKind::FedAvg, AggregatorKind::Svt, AggregatorKind::Exact]
         {
             let mut agg = kind.build(2, &[], 0.9);
-            assert!(agg.add(&[1.0], 1.0).is_err(), "{kind:?}");
-            assert!(agg.add(&[1.0, 2.0], -1.0).is_err(), "{kind:?}");
+            assert!(
+                agg.fold(0, ClientUpdate::Dense(&[1.0]), 1.0).is_err(),
+                "{kind:?}"
+            );
+            assert!(
+                agg.fold(0, ClientUpdate::Dense(&[1.0, 2.0]), -1.0)
+                    .is_err(),
+                "{kind:?}"
+            );
             assert!(kind.build(2, &[], 0.9).finish().is_err(), "{kind:?}");
+            // And the sharded merge rejects an all-empty round too.
+            assert!(kind
+                .finish_partials(2, &[], 0.9, vec![
+                    kind.build(2, &[], 0.9).into_partial()
+                ])
+                .is_err());
         }
+    }
+
+    /// Sharding the fold stream over block-aligned partitions and
+    /// merging the partials is byte-identical to one aggregator — for
+    /// every kind, including streams longer than one fold block.
+    #[test]
+    fn finish_partials_is_bitwise_identical_to_single_fold() {
+        let segs = lora_segments(4);
+        let pairs = adapter_pairs(&segs);
+        let n: usize = segs.iter().map(|s| s.numel).sum();
+        // 3 blocks' worth of clients, some slots skipped (dropouts).
+        let total_slots = 2 * SHARD_BLOCK + 17;
+        let updates: Vec<Option<(Vec<f32>, f64)>> = (0..total_slots)
+            .map(|slot| {
+                if slot % 11 == 3 {
+                    None // dropped: no fold at this slot
+                } else {
+                    Some((
+                        randv(n, 100 + slot as u64),
+                        1.0 + (slot % 5) as f64,
+                    ))
+                }
+            })
+            .collect();
+        for kind in
+            [AggregatorKind::FedAvg, AggregatorKind::Svt, AggregatorKind::Exact]
+        {
+            let tau = 0.8;
+            let reference = {
+                let mut agg = kind.build(n, &pairs, tau);
+                for (slot, u) in updates.iter().enumerate() {
+                    if let Some((v, w)) = u {
+                        agg.fold(slot, ClientUpdate::Dense(v), *w)
+                            .unwrap();
+                    }
+                }
+                kind.finish_partials(
+                    n,
+                    &pairs,
+                    tau,
+                    vec![agg.into_partial()],
+                )
+                .unwrap()
+            };
+            for shards in [2usize, 3, 7] {
+                let mut partials = Vec::new();
+                for range in shard_slices(total_slots, shards) {
+                    let mut agg = kind.build(n, &pairs, tau);
+                    for slot in range {
+                        if let Some((v, w)) = &updates[slot] {
+                            agg.fold(slot, ClientUpdate::Dense(v), *w)
+                                .unwrap();
+                        }
+                    }
+                    partials.push(agg.into_partial());
+                }
+                let got = kind
+                    .finish_partials(n, &pairs, tau, partials)
+                    .unwrap();
+                assert_eq!(
+                    reference.0.global, got.0.global,
+                    "{kind:?} shards={shards}"
+                );
+                assert_eq!(reference.0.eff_rank, got.0.eff_rank);
+                assert_eq!(
+                    reference.1, got.1,
+                    "merge depth must be shard-invariant"
+                );
+            }
+        }
+    }
+
+    /// The unsharded trait `finish` and `finish_partials` over one
+    /// partial agree bitwise, and single-block streams reproduce the
+    /// historical flat fold (left-fold in slot order).
+    #[test]
+    fn single_block_fold_matches_flat_reference() {
+        let n = 64;
+        let vs: Vec<Vec<f32>> =
+            (0..8).map(|i| randv(n, 40 + i as u64)).collect();
+        // Flat reference: the pre-block serial fold.
+        let mut acc = vec![0.0f32; n];
+        let mut total = 0.0f64;
+        for (i, v) in vs.iter().enumerate() {
+            let w = 1.0 + i as f64;
+            tensor::axpy_weighted(&mut acc, v, w as f32);
+            total += w;
+        }
+        tensor::scale(&mut acc, (1.0 / total) as f32);
+        let mut agg = AggregatorKind::FedAvg.build(n, &[], 0.9);
+        for (i, v) in vs.iter().enumerate() {
+            agg.fold(i, ClientUpdate::Dense(v), 1.0 + i as f64).unwrap();
+        }
+        let out = agg.finish().unwrap();
+        assert_eq!(out.global, acc);
     }
 
     #[test]
@@ -775,8 +1174,8 @@ mod tests {
         let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
         let mut svt = AggregatorKind::Svt.build(n, &pairs, 1.0);
         for agg in [&mut fed, &mut svt] {
-            agg.add(&a, 2.0).unwrap();
-            agg.add(&b, 3.0).unwrap();
+            agg.fold(0, ClientUpdate::Dense(&a), 2.0).unwrap();
+            agg.fold(1, ClientUpdate::Dense(&b), 3.0).unwrap();
         }
         let fed = fed.finish().unwrap();
         let svt = svt.finish().unwrap();
@@ -793,8 +1192,8 @@ mod tests {
         let v = randv(n, 7);
         let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
         let mut exact = AggregatorKind::Exact.build(n, &pairs, 0.9);
-        fed.add(&v, 5.0).unwrap();
-        exact.add(&v, 5.0).unwrap();
+        fed.fold(0, ClientUpdate::Dense(&v), 5.0).unwrap();
+        exact.fold(0, ClientUpdate::Dense(&v), 5.0).unwrap();
         let fed = fed.finish().unwrap();
         let exact = exact.finish().unwrap();
         assert_eq!(fed.global, exact.global);
@@ -835,8 +1234,8 @@ mod tests {
         let mut exact = AggregatorKind::Exact.build(n, &pairs, 0.9);
         let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
         for agg in [&mut exact, &mut fed] {
-            agg.add(&c1, 1.0).unwrap();
-            agg.add(&c2, 1.0).unwrap();
+            agg.fold(0, ClientUpdate::Dense(&c1), 1.0).unwrap();
+            agg.fold(1, ClientUpdate::Dense(&c2), 1.0).unwrap();
         }
         let exact = exact.finish().unwrap();
         let got = pair_product(&exact.global, &pair);
@@ -880,8 +1279,8 @@ mod tests {
         let pairs = vec![pair];
         let run = |tau: f64| {
             let mut agg = AggregatorKind::Svt.build(n, &pairs, tau);
-            agg.add(&c1, 1.0).unwrap();
-            agg.add(&c2, 1.0).unwrap();
+            agg.fold(0, ClientUpdate::Dense(&c1), 1.0).unwrap();
+            agg.fold(1, ClientUpdate::Dense(&c2), 1.0).unwrap();
             agg.finish().unwrap()
         };
         let low = run(0.5);
@@ -906,8 +1305,8 @@ mod tests {
         let mut fed = AggregatorKind::FedAvg.build(n, &pairs, 0.9);
         let mut exact = AggregatorKind::Exact.build(n, &pairs, 0.9);
         for agg in [&mut fed, &mut exact] {
-            agg.add(&a, 1.0).unwrap();
-            agg.add(&b, 4.0).unwrap();
+            agg.fold(0, ClientUpdate::Dense(&a), 1.0).unwrap();
+            agg.fold(1, ClientUpdate::Dense(&b), 4.0).unwrap();
         }
         let fed = fed.finish().unwrap();
         let exact = exact.finish().unwrap();
@@ -934,7 +1333,8 @@ mod tests {
         let run = || {
             let mut agg = AggregatorKind::Svt.build(n, &pairs, 0.8);
             for (i, v) in vs.iter().enumerate() {
-                agg.add(v, 1.0 + i as f64).unwrap();
+                agg.fold(i, ClientUpdate::Dense(v), 1.0 + i as f64)
+                    .unwrap();
             }
             agg.finish().unwrap()
         };

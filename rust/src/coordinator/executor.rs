@@ -277,7 +277,7 @@ fn stage_train(ctx: &RoundContext<'_>, cid: usize, start: Vec<f32>)
     let trainer = LocalTrainer { lora_scale, ..ctx.trainer };
     let outcome = trainer.run(
         session,
-        &ctx.federation.clients[cid],
+        &ctx.federation.client(cid),
         ctx.frozen,
         start,
         &mut crng,
@@ -455,10 +455,11 @@ impl ParallelExecutor {
     }
 }
 
-/// Worker-pool sizing shared by the fan-out executors: `threads == 0`
-/// means one worker per available core, and the pool never collapses
-/// to zero workers nor exceeds the work items available.
-fn pool_size(threads: usize, work: usize) -> usize {
+/// Worker-pool sizing shared by the fan-out executors (and the shard
+/// fan-out in `coordinator::server`): `threads == 0` means one worker
+/// per available core, and the pool never collapses to zero workers
+/// nor exceeds the work items available.
+pub(crate) fn pool_size(threads: usize, work: usize) -> usize {
     let auto = thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);

@@ -11,12 +11,22 @@
 //! Per-client work is delegated to the configured
 //! [`ClientExecutor`](crate::coordinator::executor::ClientExecutor)
 //! (serial reference or windowed thread-pool), which **streams** each
-//! result into the server's in-place merge
+//! result into an in-place shard merge
 //! ([`RoundSink`](crate::coordinator::sink::RoundSink)) in sampling
-//! order: ledger entries, aggregator adds (`aggregator =
-//! fedavg|svt|exact`), dropout counts and network loads fold in as
+//! order: ledger entries, aggregator folds (`aggregator =
+//! fedavg|svt|exact`), dropout counts and stage events fold in as
 //! each client's slot drains, so a round's peak memory is
-//! O(params + window) and the executors stay bit-identical.
+//! O(shards × params + window) and the executors stay bit-identical.
+//!
+//! With `shards = N` the sampled clients split into N contiguous,
+//! block-aligned partitions (see [`crate::coordinator::shard`]); each
+//! shard runs its own sink — own aggregator, own ledger bucket, own
+//! stage-event log — on its own thread, and the coordinator merges
+//! the partials in canonical shard order: event logs replay into one
+//! transport stage in sampling order, integer ledgers absorb
+//! order-free, and the aggregator block partials reduce through the
+//! canonical merge tree. `shards = 1` and `shards = N` are
+//! byte-identical by construction.
 //!
 //! With `hetero_ranks` configured, the round runs a
 //! [`ClientPlan`](crate::coordinator::hetero::ClientPlan): each client
@@ -31,10 +41,12 @@ use std::time::Instant;
 use crate::compression::{Codec, Message};
 use crate::config::FlConfig;
 use crate::coordinator::aggregator::{adapter_pairs, AdapterPair,
-                                     Aggregator};
-use crate::coordinator::executor::{ClientExecutor, ClientResult,
+                                     Aggregator, ClientUpdate as AggUpdate};
+use crate::coordinator::executor::{pool_size, ClientExecutor, ClientResult,
                                    Downloads, RoundContext, UpdateVector};
 use crate::coordinator::hetero::{ClientPlan, PlanTier};
+use crate::coordinator::shard::{run_partitioned, shard_slices, stat_fold,
+                                stat_merge, StatBlock};
 use crate::coordinator::sampler::{LatencyBiasedSampler, OversampleSampler,
                                   Sampler, SamplerKind, UniformSampler};
 use crate::coordinator::sink::RoundSink;
@@ -106,6 +118,13 @@ pub struct RunSummary {
     /// energy threshold kept under `svt`; 0.0 for layouts with no
     /// adapter pairs.
     pub mean_eff_rank: f64,
+    /// Deepest canonical block-merge tree any aggregated round needed
+    /// (0 when every round's survivors fit one fold block, i.e. the
+    /// historical serial fold). Shard-invariant by construction: the
+    /// tree shape depends only on the non-empty block list, never on
+    /// the `shards` knob — so it survives the sim-smoke bit-identity
+    /// diffs.
+    pub merge_depth: usize,
 }
 
 /// One federated-learning simulation.
@@ -186,6 +205,12 @@ pub struct Simulation {
     /// Effective rank the most recent aggregated round broadcast (NaN
     /// while no round has aggregated, and after a lost round).
     last_round_eff_rank: f64,
+    /// Deepest block-merge tree over the run (see `coordinator::shard`).
+    merge_depth: usize,
+    /// Wall-clock seconds each shard spent settling its partial in the
+    /// most recent round, in shard order — a stdout diagnostic, never
+    /// exported (it would break the bit-identity diffs).
+    last_round_shard_settle_s: Vec<f64>,
     /// Clients that failed mid-round (failure injection diagnostics).
     pub dropped_clients: u64,
     /// Clients the server cancelled after their round already had K
@@ -323,6 +348,8 @@ impl Simulation {
             last_round_queue_peak: 0,
             agg_pairs,
             last_round_eff_rank: f64::NAN,
+            merge_depth: 0,
+            last_round_shard_settle_s: Vec::new(),
             dropped_clients: 0,
             cancelled_clients: 0,
         })
@@ -360,6 +387,13 @@ impl Simulation {
     /// The per-client profile table of this federation.
     pub fn profiles(&self) -> &ClientProfiles {
         &self.profiles
+    }
+
+    /// Wall-clock seconds each shard spent settling its partial in the
+    /// most recent round, in canonical shard order. Diagnostic only —
+    /// it never feeds a simulated quantity or an exported column.
+    pub fn last_round_shard_settle_s(&self) -> &[f64] {
+        &self.last_round_shard_settle_s
     }
 
     /// Swap the link profile used for the simulated round-time report
@@ -438,33 +472,16 @@ impl Simulation {
         let lr = self.cfg.lr
             * self.cfg.lr_decay.powi(self.rounds_done as i32);
 
-        // (2)+(3)+(4) per-client work streams into the in-place merge:
-        // ledger entries, FedAvg adds, dropout counts and stage events
-        // fold in as each client's slot drains, in sampling order —
-        // byte-for-byte the same whichever executor (or window)
-        // produced the results, and never a buffered Vec of updates.
-        // Wire time is charged by the transport stage, which owns the
-        // link clock and the round's load accumulator.
-        let mut merge = RoundMerge {
-            expected: &client_ids,
-            plan: self.plan.as_ref(),
-            codec: self.codec.as_ref(),
-            segments: &self.session.spec.trainable_segments,
-            ledger: &mut self.ledger,
-            tier_bytes: &mut self.tier_bytes,
-            stage: TransferStage::begin_round(&self.net, &self.profiles,
-                                              &*self.time_model),
-            agg: self.cfg.aggregator.build(
-                self.global.len(),
-                &self.agg_pairs,
-                self.cfg.svt_energy,
-            ),
-            loss_sum: 0.0,
-            acc_sum: 0.0,
-            survivors: 0,
-            dropped: 0,
-            cancelled: 0,
-        };
+        // (2)+(3)+(4) per-client work streams into per-shard in-place
+        // merges: ledger entries, aggregator folds, dropout counts and
+        // stage events fold in as each client's slot drains, in
+        // sampling order — byte-for-byte the same whichever executor
+        // (or window, or shard count) produced the results, and never
+        // a buffered Vec of updates. Each shard owns its sink, its
+        // aggregator, its ledger bucket and its event log on its own
+        // thread; wire time is charged afterwards by the one
+        // coordinator-side transport stage, which owns the link clock
+        // and the round's load accumulator.
         let ctx = RoundContext {
             session: &self.session,
             codec: self.codec.as_ref(),
@@ -481,11 +498,79 @@ impl Simulation {
             plan: self.plan.as_ref(),
             cancelled: &cancelled_ids,
         };
-        self.executor.execute(&ctx, &client_ids, &mut merge)?;
+        let shards = self.cfg.shards;
+        let ranges = shard_slices(client_ids.len(), shards);
+        let executor = self.executor.as_ref();
+        let plan = self.plan.as_ref();
+        let codec = self.codec.as_ref();
+        let n_tiers = self.tier_bytes.len();
+        let agg_kind = self.cfg.aggregator;
+        let svt_energy = self.cfg.svt_energy;
+        let dim = self.global.len();
+        let agg_pairs = &self.agg_pairs;
+        let shard_merges =
+            run_partitioned(shards, pool_size(0, shards), |j| {
+                let slice = &client_ids[ranges[j].clone()];
+                let mut merge = ShardMerge {
+                    expected: slice,
+                    base_slot: ranges[j].start,
+                    plan,
+                    codec,
+                    segments,
+                    ledger: {
+                        let mut l = CommLedger::new();
+                        l.begin_round();
+                        l
+                    },
+                    tier_bytes: vec![0; n_tiers],
+                    events: Vec::new(),
+                    agg: agg_kind.build(dim, agg_pairs, svt_energy),
+                    stats: Vec::new(),
+                    survivors: 0,
+                    dropped: 0,
+                    cancelled: 0,
+                    settle_s: 0.0,
+                };
+                // det-lint: allow(wall-clock) — per-shard settle
+                // stopwatch; a stdout-only diagnostic, no simulated
+                // quantity or exported column reads it.
+                let t = Instant::now();
+                executor.execute(&ctx, slice, &mut merge)?;
+                merge.settle_s = t.elapsed().as_secs_f64();
+                Ok(merge)
+            })?;
 
-        let RoundMerge {
-            agg, stage, loss_sum, acc_sum, survivors, dropped, cancelled, ..
-        } = merge;
+        // Coordinator-side merge, in canonical shard order. Shard
+        // partitions are contiguous in sampling order, so replaying
+        // the shard event logs back-to-back feeds the one transport
+        // stage the exact unsharded event stream; the integer ledgers
+        // absorb order-free; aggregator partials and stat blocks
+        // concatenate into the global ascending block list for the
+        // canonical tree merge.
+        let mut stage = TransferStage::begin_round(&self.net, &self.profiles,
+                                                   &*self.time_model);
+        let mut partials = Vec::with_capacity(shard_merges.len());
+        let mut stats: Vec<StatBlock> = Vec::new();
+        let mut settle_s = Vec::with_capacity(shard_merges.len());
+        let (mut survivors, mut dropped, mut cancelled) =
+            (0usize, 0u64, 0u64);
+        for shard in shard_merges {
+            for ev in &shard.events {
+                stage.push(*ev);
+            }
+            self.ledger.absorb_round(&shard.ledger);
+            for (total, part) in
+                self.tier_bytes.iter_mut().zip(&shard.tier_bytes)
+            {
+                *total += part;
+            }
+            survivors += shard.survivors;
+            dropped += shard.dropped;
+            cancelled += shard.cancelled;
+            stats.extend(shard.stats);
+            partials.push(shard.agg.into_partial());
+            settle_s.push(shard.settle_s);
+        }
         let transport = stage.finish();
         self.sim_net_serial_s += transport.serial_s;
         self.sim_net_parallel_s += transport.parallel_s;
@@ -500,6 +585,7 @@ impl Simulation {
         self.cancelled_clients += cancelled;
         self.last_round_cancelled = cancelled;
         self.last_round_times = transport.times;
+        self.last_round_shard_settle_s = settle_s;
 
         self.rounds_done += 1;
         if survivors == 0 {
@@ -509,9 +595,16 @@ impl Simulation {
             self.last_round_eff_rank = f64::NAN;
             return Ok((f64::NAN, f64::NAN));
         }
-        let outcome = agg.finish()?;
+        let (outcome, depth) = self.cfg.aggregator.finish_partials(
+            dim,
+            &self.agg_pairs,
+            self.cfg.svt_energy,
+            partials,
+        )?;
+        self.merge_depth = self.merge_depth.max(depth);
         self.global = outcome.global;
         self.last_round_eff_rank = outcome.eff_rank;
+        let (loss_sum, acc_sum) = stat_merge(stats);
         let k = survivors as f64;
         Ok((loss_sum / k, acc_sum / k))
     }
@@ -673,39 +766,53 @@ impl Simulation {
             } else {
                 0.0
             },
+            merge_depth: self.merge_depth,
         })
     }
 }
 
-/// The server's in-place round merge: one [`RoundSink`] holding the
-/// round's accumulators. Every push folds one client straight into the
-/// ledger and the configured [`Aggregator`] (`fedavg|svt|exact`), and
-/// narrates the client's round to the transport stage as
-/// [`StageEvent`]s — wire-time charging lives there now, not in the
-/// merge. The decoded update is freed as soon as its `agg.add`
-/// returns; factor-aware aggregators do their refactor work inside
-/// `finish`, on the coordinator thread, after the merge completes.
-struct RoundMerge<'a> {
+/// One shard's in-place merge: the [`RoundSink`] holding that shard's
+/// accumulators. Every push folds one client straight into the shard's
+/// ledger bucket and its [`Aggregator`] (`fedavg|svt|exact`), and logs
+/// the client's round as [`StageEvent`]s for the coordinator to replay
+/// into the one transport stage — wire-time charging lives there, not
+/// in the merge. The decoded update is freed as soon as its
+/// `agg.fold` returns; factor-aware aggregators do their refactor
+/// work inside `finish_partials`, on the coordinator thread, after
+/// every shard settles. A shard merge owns all its state (no `&mut`
+/// into the server), so shards run on their own threads behind
+/// `coordinator::shard::run_partitioned`.
+struct ShardMerge<'a> {
+    /// This shard's slice of the sampled ids (sampling order).
     expected: &'a [usize],
+    /// Global sampling slot of shard-local index 0 — block-aligned by
+    /// [`shard_slices`], so `base_slot + index` routes every fold to
+    /// its partition-invariant block.
+    base_slot: usize,
     plan: Option<&'a ClientPlan>,
     /// Server-rank codec + segment layout, for folding still-encoded
-    /// uploads straight into the aggregator (`Aggregator::add_encoded`).
+    /// uploads straight into the aggregator (zero-copy `decode_into`).
     codec: &'a dyn Codec,
     segments: &'a [Segment],
-    ledger: &'a mut CommLedger,
-    tier_bytes: &'a mut [u64],
-    /// The round's transport accountant (owns the link clock and the
-    /// load accumulator; see `transport::stage`).
-    stage: TransferStage<'a>,
+    /// Shard-local ledger (one round bucket); the coordinator absorbs
+    /// it via [`CommLedger::absorb_round`].
+    ledger: CommLedger,
+    /// Shard-local per-tier byte counters, summed into the server's.
+    tier_bytes: Vec<u64>,
+    /// The shard's transport narration, replayed by the coordinator in
+    /// shard order (see `transport::stage`).
+    events: Vec<StageEvent>,
     agg: Box<dyn Aggregator>,
-    loss_sum: f64,
-    acc_sum: f64,
+    /// Per-block train loss/acc partials (`shard::stat_fold`).
+    stats: Vec<StatBlock>,
     survivors: usize,
     dropped: u64,
     cancelled: u64,
+    /// Wall-clock settle time, filled after `execute` returns.
+    settle_s: f64,
 }
 
-impl RoundSink for RoundMerge<'_> {
+impl RoundSink for ShardMerge<'_> {
     fn push(&mut self, index: usize, res: ClientResult) -> Result<()> {
         // The merge relies on positional order == sampling order; an
         // executor violating the contract must fail loud — in release
@@ -720,7 +827,7 @@ impl RoundSink for RoundMerge<'_> {
             )));
         }
         self.ledger.record(Direction::Down, res.down_bytes);
-        self.stage.push(StageEvent::Download {
+        self.events.push(StageEvent::Download {
             cid: res.cid,
             bytes: res.down_bytes,
         });
@@ -730,31 +837,32 @@ impl RoundSink for RoundMerge<'_> {
             // but the round never waits for it — under `overlap =
             // transfer` the cut lands mid-transfer.
             self.cancelled += 1;
-            self.stage.push(StageEvent::Cancelled { cid: res.cid });
+            self.events.push(StageEvent::Cancelled { cid: res.cid });
             0
         } else {
             match res.update {
                 None => {
                     self.dropped += 1;
-                    self.stage.push(StageEvent::Dropped { cid: res.cid });
+                    self.events.push(StageEvent::Dropped { cid: res.cid });
                     0
                 }
                 Some(up) => {
+                    let slot = self.base_slot + index;
                     self.survivors += 1;
                     self.ledger.record(Direction::Up, up.up_bytes);
-                    self.loss_sum += up.mean_loss;
-                    self.acc_sum += up.mean_acc;
-                    match &up.params {
-                        UpdateVector::Dense(v) => {
-                            self.agg.add(v, up.weight)?;
-                        }
-                        UpdateVector::Encoded(msg) => {
-                            self.agg.add_encoded(self.codec, msg,
-                                                 self.segments, up.weight)?;
-                        }
-                    }
-                    self.stage.push(StageEvent::Train { cid: res.cid });
-                    self.stage.push(StageEvent::Upload {
+                    stat_fold(&mut self.stats, slot, up.mean_loss,
+                              up.mean_acc);
+                    let update = match &up.params {
+                        UpdateVector::Dense(v) => AggUpdate::Dense(v),
+                        UpdateVector::Encoded(msg) => AggUpdate::Encoded {
+                            codec: self.codec,
+                            msg,
+                            segments: self.segments,
+                        },
+                    };
+                    self.agg.fold(slot, update, up.weight)?;
+                    self.events.push(StageEvent::Train { cid: res.cid });
+                    self.events.push(StageEvent::Upload {
                         cid: res.cid,
                         bytes: up.up_bytes,
                     });

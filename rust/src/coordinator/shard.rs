@@ -1,0 +1,326 @@
+//! Shard plumbing for the hierarchical coordinator: block-aligned
+//! cid-partitions, the canonical tree merge, and the shard thread pool.
+//!
+//! One `RoundSink` on one coordinator thread was the last serial
+//! bottleneck (ROADMAP: "Sharded hierarchical coordinator"). The
+//! `shards` knob splits a round's sampled clients into N contiguous
+//! partitions; each shard folds its clients into its own aggregator,
+//! ledger bucket and stage-event log on its own thread (behind the
+//! `flocora::sync` shim), and the coordinator merges the shard
+//! partials in canonical shard order.
+//!
+//! **Why the merge is exact.** Sum-of-sums is exact for the integer
+//! ledger counters, but f32/f64 addition is *not* associative, so a
+//! naive per-shard partial sum would drift bitwise as the shard count
+//! changes. The fix is a fixed *fold-block* structure that exists
+//! independently of the partition: sampling slots are grouped into
+//! blocks of [`SHARD_BLOCK`] slots, every accumulator folds serially
+//! *within* a block (in sampling order), and block partials merge
+//! pairwise in a canonical tree over the ascending non-empty block
+//! list. Shard boundaries are always block-aligned
+//! ([`shard_slices`]), so the set of block partials — and therefore
+//! the merge tree and every rounding step in it — is identical for
+//! any shard count. `shards = 1` vs `shards = N` is byte-identical by
+//! construction, and rounds of at most `SHARD_BLOCK` clients occupy a
+//! single block, making the whole scheme bit-for-bit the historical
+//! serial fold.
+//!
+//! Factor-aware aggregators (`svt | exact`) ride the same seam by
+//! concatenating shard-local factor stacks in shard order — shard
+//! partitions are contiguous in sampling order, so the concatenation
+//! *is* the global sampling-order stack and the single
+//! coordinator-side SVD sees identical input (see
+//! `coordinator::aggregator`).
+//!
+//! NOTE for `lint-determinism`: merge loops in this module iterate
+//! `Vec`s in index order only — never hash maps — because the merge
+//! order is part of the bit-identity contract. The map-iter lint rule
+//! covers this file (it scopes to `coordinator/` + `transport/`).
+
+use std::ops::Range;
+
+use crate::coordinator::window::BoundedWindow;
+use crate::error::{Error, Result};
+use crate::sync::thread;
+
+/// Sampling slots per fold block. Rounds with at most this many
+/// sampled clients fold in a single block — zero merge arithmetic —
+/// which keeps every historical preset bit-for-bit identical to the
+/// pre-shard serial fold.
+pub const SHARD_BLOCK: usize = 64;
+
+/// The fold block a global sampling slot belongs to.
+pub fn block_of(slot: usize) -> usize {
+    slot / SHARD_BLOCK
+}
+
+/// Partition `n_slots` sampling slots into `shards` contiguous,
+/// block-aligned ranges (trailing shards may be empty when there are
+/// fewer blocks than shards). The union covers `0..n_slots` exactly
+/// and every boundary is a multiple of [`SHARD_BLOCK`], so the
+/// per-block fold state is independent of the shard count.
+pub fn shard_slices(n_slots: usize, shards: usize) -> Vec<Range<usize>> {
+    assert!(shards >= 1, "shards must be >= 1");
+    let nblocks = (n_slots + SHARD_BLOCK - 1) / SHARD_BLOCK;
+    (0..shards)
+        .map(|j| {
+            let b0 = j * nblocks / shards;
+            let b1 = (j + 1) * nblocks / shards;
+            (b0 * SHARD_BLOCK).min(n_slots)..(b1 * SHARD_BLOCK).min(n_slots)
+        })
+        .collect()
+}
+
+/// Pairwise tree reduction in canonical order: each round merges
+/// adjacent pairs `(0,1), (2,3), …` (an odd tail carries up
+/// unmerged) until one item remains. Returns the merged item and the
+/// tree depth (number of merge rounds; 0 for zero or one item). The
+/// tree shape depends only on the item count, so callers that feed it
+/// the ascending non-empty block list get a partition-invariant
+/// reduction.
+pub fn tree_reduce<T>(
+    items: Vec<T>,
+    mut merge: impl FnMut(&mut T, T),
+) -> (Option<T>, usize) {
+    let mut items = items;
+    let mut depth = 0;
+    while items.len() > 1 {
+        depth += 1;
+        let mut next = Vec::with_capacity((items.len() + 1) / 2);
+        let mut it = items.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                merge(&mut a, b);
+            }
+            next.push(a);
+        }
+        items = next;
+    }
+    (items.pop(), depth)
+}
+
+/// Per-block partial of the round's f64 client statistics (train
+/// loss/accuracy sums). Same block structure as the aggregator's fold
+/// blocks, same canonical tree — so the round means are byte-identical
+/// at any shard count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StatBlock {
+    pub index: usize,
+    pub loss_sum: f64,
+    pub acc_sum: f64,
+}
+
+/// Fold one surviving client's stats into an ascending block list
+/// (slots arrive in sampling order within a shard, so blocks append
+/// in ascending index order).
+pub fn stat_fold(
+    blocks: &mut Vec<StatBlock>,
+    slot: usize,
+    loss: f64,
+    acc: f64,
+) {
+    let index = block_of(slot);
+    match blocks.last_mut() {
+        Some(b) if b.index == index => {
+            b.loss_sum += loss;
+            b.acc_sum += acc;
+        }
+        _ => {
+            debug_assert!(
+                blocks.last().map_or(true, |b| b.index < index),
+                "stat blocks must fold in ascending slot order"
+            );
+            blocks.push(StatBlock { index, loss_sum: loss, acc_sum: acc });
+        }
+    }
+}
+
+/// Tree-merge concatenated per-shard stat blocks (already in ascending
+/// global block order) into the round's `(loss_sum, acc_sum)`.
+pub fn stat_merge(blocks: Vec<StatBlock>) -> (f64, f64) {
+    let (merged, _depth) = tree_reduce(blocks, |a, b| {
+        a.loss_sum += b.loss_sum;
+        a.acc_sum += b.acc_sum;
+    });
+    merged.map_or((0.0, 0.0), |b| (b.loss_sum, b.acc_sum))
+}
+
+/// Run `work(j)` for every shard `j in 0..shards` and return the
+/// results in shard order. With more than one shard and more than one
+/// worker, shards fan out across scoped threads behind the
+/// `flocora::sync` shim using the same claim/deposit/drain handshake
+/// as the parallel executor ([`BoundedWindow`] with `window = shards`:
+/// every shard may be in flight at once); the calling thread drains
+/// partials in canonical shard order. Worker count never affects the
+/// returned values — each shard's work is independent and results are
+/// keyed by shard index — so `shards = N` is bit-identical whether it
+/// ran inline or threaded (the loom suite model-checks the handshake).
+pub fn run_partitioned<T: Send>(
+    shards: usize,
+    workers: usize,
+    work: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    assert!(shards >= 1, "shards must be >= 1");
+    if shards == 1 || workers <= 1 {
+        let mut out = Vec::with_capacity(shards);
+        for j in 0..shards {
+            out.push(work(j)?);
+        }
+        return Ok(out);
+    }
+    let workers = workers.min(shards);
+    let win: BoundedWindow<Result<T>> = BoundedWindow::new(shards, shards);
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                // A panicking shard (a bug — shard work returns
+                // `Result`) must abort the window so the drain side
+                // can stop waiting and the scope join re-raises.
+                let _sentry = win.sentry();
+                while let Some(j) = win.claim() {
+                    let res = work(j);
+                    if !win.deposit(j, res) {
+                        return;
+                    }
+                }
+            });
+        }
+        // Drain partials in canonical shard order on the coordinator
+        // thread — the merge order is part of the bit-identity
+        // contract.
+        let _sentry = win.sentry();
+        let mut out = Vec::with_capacity(shards);
+        for j in 0..shards {
+            let res = win.drain(j).unwrap_or_else(|_| {
+                Err(Error::invalid("round aborted: a shard worker failed"))
+            });
+            match res {
+                Ok(t) => out.push(t),
+                Err(e) => {
+                    win.abort();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(out)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slices_cover_and_align() {
+        for &(n, shards) in &[
+            (0usize, 1usize),
+            (0, 3),
+            (8, 1),
+            (8, 3),
+            (64, 2),
+            (65, 2),
+            (100, 3),
+            (1000, 7),
+            (10_000, 8),
+        ] {
+            let slices = shard_slices(n, shards);
+            assert_eq!(slices.len(), shards);
+            let mut cursor = 0;
+            for r in &slices {
+                assert_eq!(r.start, cursor, "contiguous ({n}, {shards})");
+                assert!(r.start % SHARD_BLOCK == 0 || r.start == n);
+                cursor = r.end;
+            }
+            assert_eq!(cursor, n, "union covers 0..n ({n}, {shards})");
+            // Every interior boundary is block-aligned.
+            for r in &slices {
+                if r.end != n {
+                    assert_eq!(r.end % SHARD_BLOCK, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slices_are_partition_invariant_on_blocks() {
+        // The multiset of blocks each slot maps to never depends on
+        // the shard count: concatenating shard-local block lists in
+        // shard order reproduces the global ascending block list.
+        let n = 333;
+        let global: Vec<usize> = (0..n).map(block_of).collect();
+        for shards in [1, 2, 3, 7] {
+            let mut concat = Vec::new();
+            for r in shard_slices(n, shards) {
+                concat.extend(r.map(block_of));
+            }
+            assert_eq!(concat, global, "shards = {shards}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_shape_and_depth() {
+        let (one, d) = tree_reduce(vec![5i64], |a, b| *a += b);
+        assert_eq!((one, d), (Some(5), 0));
+        let (none, d) = tree_reduce(Vec::<i64>::new(), |a, b| *a += b);
+        assert_eq!((none, d), (None, 0));
+        // Merge order is observable through a non-commutative op.
+        let items: Vec<Vec<u32>> = (0..5).map(|i| vec![i]).collect();
+        let (merged, depth) = tree_reduce(items, |a, b| a.extend(b));
+        // Rounds: [01, 23, 4] -> [0123, 4] -> [01234]: depth 3.
+        assert_eq!(merged.unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(depth, 3);
+        let (_, d8) = tree_reduce(vec![0u8; 8], |_a, _b| {});
+        assert_eq!(d8, 3);
+    }
+
+    #[test]
+    fn stat_blocks_match_any_partition() {
+        // Folding stats per shard and tree-merging the concatenation
+        // gives the same bits for every shard count.
+        let n = 200;
+        let stats: Vec<(f64, f64)> = (0..n)
+            .map(|i| {
+                let x = (i as f64).sin();
+                (x * 0.1, x.abs())
+            })
+            .collect();
+        let reference = {
+            let mut blocks = Vec::new();
+            for (slot, &(l, a)) in stats.iter().enumerate() {
+                stat_fold(&mut blocks, slot, l, a);
+            }
+            stat_merge(blocks)
+        };
+        for shards in [1, 2, 3, 7] {
+            let mut concat = Vec::new();
+            for r in shard_slices(n, shards) {
+                let mut local = Vec::new();
+                for slot in r {
+                    let (l, a) = stats[slot];
+                    stat_fold(&mut local, slot, l, a);
+                }
+                concat.extend(local);
+            }
+            let merged = stat_merge(concat);
+            assert_eq!(merged.0.to_bits(), reference.0.to_bits());
+            assert_eq!(merged.1.to_bits(), reference.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn run_partitioned_orders_and_propagates_errors() {
+        for workers in [1, 2, 4] {
+            let got =
+                run_partitioned(5, workers, |j| Ok(j * 10)).unwrap();
+            assert_eq!(got, vec![0, 10, 20, 30, 40]);
+        }
+        let err = run_partitioned::<usize>(3, 2, |j| {
+            if j == 1 {
+                Err(Error::invalid("shard 1 failed"))
+            } else {
+                Ok(j)
+            }
+        });
+        assert!(err.is_err());
+    }
+}

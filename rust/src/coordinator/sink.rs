@@ -3,59 +3,85 @@
 //! [`super::executor::ClientExecutor::execute`] does not return a
 //! `Vec` of results — it pushes each [`ClientResult`] into a
 //! [`RoundSink`] as soon as that client's slot comes up in sampling
-//! order. The server's merge (ledger entries, FedAvg adds, dropout
-//! counts, network-load accounting) therefore runs *incrementally*,
-//! and a round's peak memory is O(params + out-of-order window)
-//! instead of O(clients_per_round × params).
+//! order. The server's merge (ledger entries, aggregator folds,
+//! dropout counts, network-load accounting) therefore runs
+//! *incrementally*, and a round's peak memory is O(params +
+//! out-of-order window) instead of O(clients_per_round × params).
 //!
-//! **Sink contract.** For a round over `clients` (the sampling-order
-//! id slice):
+//! **Sink contract.** For one `execute` over `clients` (a
+//! sampling-order id slice):
 //!
 //! 1. `push(index, result)` is called exactly once per index, with
 //!    `index` strictly increasing from 0 to `clients.len() - 1`;
 //! 2. `result.cid == clients[index]` — results arrive in sampling
 //!    order no matter how the executor scheduled the work;
-//! 3. every call happens on the thread that called `execute` (the
-//!    coordinator thread), so a sink needs no synchronization;
+//! 3. every call happens on the thread that called `execute`, so a
+//!    sink needs no synchronization;
 //! 4. an `Err` from `push` aborts the round: the executor stops
 //!    draining, winds down its workers, and propagates the error.
 //!
-//! Implementations: the server's in-place merge
+//! **Sharding contract.** Under the sharded coordinator
+//! (`shards > 1`; see `coordinator::shard`) a round runs one sink
+//! *per shard*: each shard's executor call covers one contiguous,
+//! block-aligned partition of the sampled clients, its sink sees
+//! *shard-local* indices `0..partition.len()` (point 1 applies per
+//! shard), and possibly a different thread per shard — but still
+//! exactly one thread per sink, so sinks stay lock-free. The
+//! coordinator owns the cross-shard merge, in canonical shard order;
+//! a sink must never aggregate across shards itself. [`collect_round`]
+//! is the reference implementation of that ownership rule: callers
+//! hand it one boxed sink per shard and it partitions the clients
+//! with [`shard_slices`](crate::coordinator::shard::shard_slices).
+//!
+//! Implementations: the server's in-place shard merge
 //! (`coordinator::server`), [`VecSink`] for tests and callers that
 //! genuinely want the batch-collect behaviour back.
 //!
-//! The server's merge additionally narrates each drained result to the
-//! simulated transport stage as
+//! The server's merge additionally narrates each drained result as
 //! [`StageEvent`](crate::transport::StageEvent)s (download → train →
-//! upload / dropped / cancelled) — wire-time charging lives in
-//! `transport::stage`, not in sinks. Because pushes are single-threaded
-//! and in sampling order, that event stream is deterministic no matter
-//! which executor (serial, windowed-parallel, or the staged
-//! `overlap = transfer` pipeline) produced the results.
+//! upload / dropped / cancelled), replayed into the simulated
+//! transport stage on the coordinator thread — wire-time charging
+//! lives in `transport::stage`, not in sinks. Because pushes are
+//! single-threaded per shard and in sampling order, that event stream
+//! is deterministic no matter which executor (serial,
+//! windowed-parallel, or the staged `overlap = transfer` pipeline)
+//! produced the results.
 //!
-//! The single-threaded guarantee (point 3) is not taken on faith: the
-//! claim/drain protocol that funnels concurrent worker results into the
-//! one draining thread lives in [`super::window`] and is model-checked
-//! under loom (`tests/loom.rs`), including panic/abort interleavings.
-//! Sinks therefore stay lock-free by construction, and the determinism
-//! lint (`cargo xtask lint-determinism`) keeps `std::sync` out of them.
+//! The one-thread-per-sink guarantee (point 3) is not taken on faith:
+//! the claim/drain protocol that funnels concurrent worker results
+//! into the one draining thread lives in [`super::window`] and is
+//! model-checked under loom (`tests/loom.rs`) — as is the shard
+//! claim/merge handshake (`coordinator::shard::run_partitioned`) —
+//! including panic/abort interleavings. Sinks therefore stay
+//! lock-free by construction, and the determinism lint
+//! (`cargo xtask lint-determinism`) keeps `std::sync` out of them.
 
 use crate::coordinator::executor::{ClientExecutor, ClientResult,
                                    RoundContext};
+use crate::coordinator::shard::shard_slices;
 use crate::error::Result;
 
-/// Receives one round's client results, in sampling order.
+/// Receives one shard's client results, in sampling order.
 pub trait RoundSink {
-    /// Accept the result for `clients[index]`. See the module docs for
-    /// the exact ordering/threading contract.
+    /// Accept the result for `clients[index]` (`index` is shard-local
+    /// under the sharded coordinator). See the module docs for the
+    /// exact ordering/threading contract.
     fn push(&mut self, index: usize, result: ClientResult) -> Result<()>;
+}
+
+/// Forwarding impl so callers can lend a sink to the boxed-slice APIs
+/// (`Box::new(&mut my_sink)`) and keep reading it afterwards.
+impl<S: RoundSink + ?Sized> RoundSink for &mut S {
+    fn push(&mut self, index: usize, result: ClientResult) -> Result<()> {
+        (**self).push(index, result)
+    }
 }
 
 /// The batch-collect behaviour as a sink: buffers every result.
 ///
 /// This is what the pre-streaming engine did implicitly; keep it for
-/// tests and tools that want the whole round in hand. Production
-/// merges should stream instead.
+/// tests and tools that want the whole round (or shard) in hand.
+/// Production merges should stream instead.
 #[derive(Debug, Default)]
 pub struct VecSink {
     pub results: Vec<ClientResult>,
@@ -76,9 +102,40 @@ impl RoundSink for VecSink {
     }
 }
 
-/// Run a round and collect every result into a `Vec` — the old
-/// batch-collect `execute` signature as a helper.
+/// Run a round under the sharded ownership rule: one sink per shard.
+///
+/// The sampled `clients` are partitioned into `sinks.len()`
+/// contiguous block-aligned ranges
+/// ([`shard_slices`](crate::coordinator::shard::shard_slices)) and
+/// each partition executes into its own sink with shard-local
+/// indices. This helper runs the shards serially — it enforces and
+/// documents the *ownership* contract (shard-local indices, no
+/// cross-shard aggregation in sinks); the threaded fan-out lives in
+/// `coordinator::shard::run_partitioned`, which the server composes
+/// with per-shard merges. One sink degrades to exactly the historical
+/// single-sink round.
 pub fn collect_round(
+    executor: &dyn ClientExecutor,
+    ctx: &RoundContext<'_>,
+    clients: &[usize],
+    sinks: &mut [Box<dyn RoundSink + '_>],
+) -> Result<()> {
+    assert!(!sinks.is_empty(), "collect_round needs at least one sink");
+    let ranges = shard_slices(clients.len(), sinks.len());
+    for (range, sink) in ranges.into_iter().zip(sinks.iter_mut()) {
+        executor.execute(ctx, &clients[range], sink.as_mut())?;
+    }
+    Ok(())
+}
+
+/// Run a round and collect every result into a `Vec` — the old
+/// single-sink batch-collect helper.
+#[deprecated(
+    note = "use `collect_round` with one boxed sink per shard (a \
+            single `Box::new(&mut VecSink::new())` reproduces this \
+            behaviour); see the sharding contract in the module docs"
+)]
+pub fn collect_round_vec(
     executor: &dyn ClientExecutor,
     ctx: &RoundContext<'_>,
     clients: &[usize],
@@ -107,5 +164,24 @@ mod tests {
         assert_eq!(sink.results.len(), 3);
         assert!(sink.results.iter().enumerate()
                     .all(|(i, r)| r.cid == 10 + i));
+    }
+
+    #[test]
+    fn borrowed_sinks_forward_and_survive_the_box() {
+        let mut sink = VecSink::new();
+        {
+            let mut boxed: Box<dyn RoundSink + '_> =
+                Box::new(&mut sink);
+            boxed
+                .push(0, ClientResult {
+                    cid: 42,
+                    down_bytes: 1,
+                    update: None,
+                    cancelled: false,
+                })
+                .unwrap();
+        }
+        assert_eq!(sink.results.len(), 1);
+        assert_eq!(sink.results[0].cid, 42);
     }
 }

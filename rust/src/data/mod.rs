@@ -15,4 +15,4 @@ pub mod partition;
 
 pub use batcher::BatchIter;
 pub use cifar_s::{gen_image, TestSet};
-pub use partition::{lda_partition, ClientData, Federation};
+pub use partition::{lda_partition, ClientData, Federation, LAZY_THRESHOLD};

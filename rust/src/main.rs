@@ -61,7 +61,8 @@ fn print_usage() {
          \x20               [--aggregator fedavg|svt|exact]\n\
          \x20               [--svt_energy TAU]\n\
          \x20               [--executor serial|parallel] [--threads N]\n\
-         \x20               [--window N] [--overlap none|transfer]\n\
+         \x20               [--window N] [--shards N]\n\
+         \x20               [--overlap none|transfer]\n\
          \x20               [--network edge_lte|wifi]\n\
          \x20               [--net_sharing dedicated|shared]\n\
          \x20               [--sampler uniform|latency_biased|oversample_k]\n\
@@ -99,7 +100,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
             Error::invalid(format!(
                 "unknown preset `{name}` (paper_resnet8|paper_resnet18|\
                  scaled_micro|scaled_tiny|hetero_micro|straggler_micro|\
-                 event_micro|svt_micro|sparse_ef_micro)"
+                 event_micro|svt_micro|sparse_ef_micro|scale_bench)"
             ))
         })?,
         None => FlConfig::default(),
@@ -136,7 +137,8 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     println!(
         "run: tag={} codec={} aggregator={} clients={} ({}/round) rounds={} \
          epochs={} lr={} alpha={} lda={} seed={} executor={} threads={} \
-         window={} overlap={} network={}:{} sampler={} profiles={}{}{}",
+         window={} shards={} overlap={} network={}:{} sampler={} \
+         profiles={}{}{}",
         cfg.tag, cfg.codec.label(), cfg.aggregator.label(),
         cfg.num_clients, cfg.clients_per_round,
         cfg.rounds, cfg.local_epochs, cfg.lr, cfg.lora_alpha, cfg.lda_alpha,
@@ -145,6 +147,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         else { cfg.threads.to_string() },
         if cfg.window == 0 { "auto".to_string() }
         else { cfg.window.to_string() },
+        cfg.shards,
         cfg.overlap.label(),
         cfg.network.label(), cfg.net_sharing.label(),
         cfg.sampler.label(), cfg.client_profiles.label(), hetero,
@@ -188,6 +191,19 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
             "aggregation: {} mean effective rank {:.2} over {} rounds",
             sim.config().aggregator.label(), summary.mean_eff_rank,
             summary.rounds
+        );
+    }
+    if sim.config().shards > 1 {
+        let settle = sim.last_round_shard_settle_s();
+        println!(
+            "shards: {} (merge depth {}), last-round settle [{}]",
+            sim.config().shards,
+            summary.merge_depth,
+            settle
+                .iter()
+                .map(|s| format!("{s:.3}s"))
+                .collect::<Vec<_>>()
+                .join(", ")
         );
     }
     if sim.config().time_model == TimeModelKind::Event {

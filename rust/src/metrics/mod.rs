@@ -201,6 +201,10 @@ pub fn run_json(rec: &Recorder, summary: &RunSummary, dropped: u64) -> Json {
                 ("sim_client_p50_s", fnum(summary.sim_client_p50_s)),
                 ("sim_client_max_s", fnum(summary.sim_client_max_s)),
                 ("mean_eff_rank", fnum(summary.mean_eff_rank)),
+                // Deterministic and shard-invariant (depends only on
+                // the non-empty block count), so it sits inside the
+                // diffed region — before the stripped `wall_s`.
+                ("merge_depth", num(summary.merge_depth as f64)),
                 ("wall_s", fnum(summary.wall_s)),
             ]),
         ),

@@ -65,6 +65,24 @@ impl CommLedger {
         self.per_round.push(0);
     }
 
+    /// Fold one shard's round ledger into this ledger's current
+    /// round bucket. Every counter is an integer sum, so sum-of-sums
+    /// is exact here — the coordinator still absorbs shards in
+    /// canonical shard order, which keeps the (already
+    /// order-insensitive) totals trivially bit-identical to the
+    /// unsharded interleaved recording.
+    pub fn absorb_round(&mut self, shard: &CommLedger) {
+        self.up_bytes += shard.up_bytes;
+        self.down_bytes += shard.down_bytes;
+        self.up_msgs += shard.up_msgs;
+        self.down_msgs += shard.down_msgs;
+        let bytes: u64 = shard.per_round.iter().sum();
+        match self.per_round.last_mut() {
+            Some(last) => *last += bytes,
+            None => self.per_round.push(bytes),
+        }
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.up_bytes + self.down_bytes
     }
@@ -168,6 +186,39 @@ mod tests {
         d.record(Direction::Down, 100);
         assert_eq!(d.per_client_tcc(2), 200.0);
         assert_eq!(CommLedger::new().per_client_tcc(3), 0.0);
+    }
+
+    #[test]
+    fn absorb_round_matches_interleaved_recording() {
+        // Unsharded reference: one ledger records every message.
+        let mut reference = CommLedger::new();
+        reference.begin_round();
+        for i in 0..10usize {
+            reference.record(Direction::Down, 1000 + i);
+            if i % 3 != 0 {
+                reference.record(Direction::Up, 500 + i);
+            }
+        }
+        // Sharded: two shard ledgers split the clients, absorbed in
+        // shard order into a round bucket.
+        let mut merged = CommLedger::new();
+        merged.begin_round();
+        for shard_clients in [0..6usize, 6..10] {
+            let mut shard = CommLedger::new();
+            shard.begin_round();
+            for i in shard_clients {
+                shard.record(Direction::Down, 1000 + i);
+                if i % 3 != 0 {
+                    shard.record(Direction::Up, 500 + i);
+                }
+            }
+            merged.absorb_round(&shard);
+        }
+        assert_eq!(merged.up_bytes, reference.up_bytes);
+        assert_eq!(merged.down_bytes, reference.down_bytes);
+        assert_eq!(merged.up_msgs, reference.up_msgs);
+        assert_eq!(merged.down_msgs, reference.down_msgs);
+        assert_eq!(merged.per_round, reference.per_round);
     }
 
     #[test]

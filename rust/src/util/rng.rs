@@ -34,7 +34,15 @@ impl Rng {
     /// must be identical regardless of iteration or thread order, use
     /// [`Rng::derive`] instead.
     pub fn fork(&mut self, tag: u64) -> Rng {
-        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+        Rng::new(self.fork_seed(tag))
+    }
+
+    /// The seed [`Rng::fork`] would build its child from, without
+    /// constructing the child. Lets callers precompute a table of fork
+    /// seeds cheaply (u64 each) and materialize the actual streams on
+    /// demand — `Rng::new(fork_seed(t))` is bit-identical to `fork(t)`.
+    pub fn fork_seed(&mut self, tag: u64) -> u64 {
+        self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15)
     }
 
     /// Derive a stream purely from immutable coordinates — no parent

@@ -13,7 +13,7 @@ use flocora::compression::{AffineCodec, Codec, CodecKind, SparseEfCodec,
                            TopKCodec};
 use flocora::config::{presets, FlConfig};
 use flocora::coordinator::{adapter_pairs, Aggregator, AggregatorKind,
-                           ExecutorKind, Simulation};
+                           ClientUpdate, ExecutorKind, Simulation};
 use flocora::metrics::Recorder;
 use flocora::model::{build_spec, ModelCfg, Segment, Variant};
 use flocora::runtime::Engine;
@@ -156,7 +156,7 @@ fn svt_rank_and_bytes_grow_with_retained_energy() {
     let run = |tau: f64| {
         let mut agg = AggregatorKind::Svt.build(n, &pairs, tau);
         for (i, v) in clients.iter().enumerate() {
-            agg.add(v, 1.0 + i as f64).unwrap();
+            agg.fold(i, ClientUpdate::Dense(v), 1.0 + i as f64).unwrap();
         }
         agg.finish().unwrap()
     };

@@ -118,6 +118,11 @@ fn with_window(mut cfg: FlConfig, window: usize) -> FlConfig {
     cfg
 }
 
+fn with_shards(mut cfg: FlConfig, shards: usize) -> FlConfig {
+    cfg.shards = shards;
+    cfg
+}
+
 fn assert_identical(a: &Observed, b: &Observed, what: &str) {
     // Bit-identity everywhere: f32 params compared exactly, f64 metrics
     // compared exactly. Any executor-order dependence shows up here.
@@ -303,6 +308,51 @@ fn peak_buffered_results_never_exceed_window() {
             peak <= window,
             "window {window}: {peak} results buffered simultaneously"
         );
+    }
+}
+
+#[test]
+fn shard_counts_are_bit_identical_on_the_real_backend() {
+    // The sharded coordinator against the PJRT artifacts: every shard
+    // count in {1, 2, 3, 7} replays the unsharded serial round
+    // bit-for-bit, whichever executor runs inside the shards.
+    let baseline = run(with_executor(base_cfg(), ExecutorKind::Serial, 0));
+    for shards in [1usize, 2, 3, 7] {
+        let serial = run(with_shards(
+            with_executor(base_cfg(), ExecutorKind::Serial, 0), shards));
+        let parallel = run(with_shards(
+            with_executor(base_cfg(), ExecutorKind::Parallel, 3), shards));
+        let windowed =
+            run(with_shards(with_window(base_cfg(), 2), shards));
+        assert_identical(&baseline, &serial,
+                         &format!("shards={shards}: serial"));
+        assert_identical(&baseline, &parallel,
+                         &format!("shards={shards}: parallel"));
+        assert_identical(&baseline, &windowed,
+                         &format!("shards={shards}: window=2"));
+    }
+}
+
+#[test]
+fn shard_identity_survives_dropout_stragglers_and_hetero() {
+    // The ragged regimes on the real backend: dropout skips aggregator
+    // folds mid-block, the straggler preset cancels oversampled
+    // clients, hetero tiers project ranks — the shard partition must
+    // stay invisible through all of them.
+    let mut dropout = base_cfg();
+    dropout.dropout = 0.4;
+    dropout.rounds = 4;
+    for (what, cfg) in [("dropout", dropout),
+                        ("straggler", straggler_cfg()),
+                        ("hetero", hetero_cfg())] {
+        let one = run(with_executor(cfg.clone(), ExecutorKind::Serial, 0));
+        for shards in [2usize, 3, 7] {
+            let n = run(with_shards(
+                with_executor(cfg.clone(), ExecutorKind::Parallel, 3),
+                shards,
+            ));
+            assert_identical(&one, &n, &format!("{what}: shards={shards}"));
+        }
     }
 }
 

@@ -11,8 +11,9 @@
 //! Under that cfg the `flocora::sync` shim swaps every Mutex/Condvar/
 //! atomic/thread for the instrumented twins in the vendored `loom`
 //! crate, so the code being checked here — `BoundedWindow`,
-//! `StageRing`, `SparseEfCodec::encode_client` — is the exact code
-//! production runs, not a model of it.
+//! `StageRing`, `shard::run_partitioned`,
+//! `SparseEfCodec::encode_client` — is the exact code production
+//! runs, not a model of it.
 //!
 //! What a passing run proves, for every schedule explored:
 //!
@@ -35,8 +36,10 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use flocora::compression::{Codec, SparseEfCodec};
+use flocora::coordinator::shard::run_partitioned;
 use flocora::coordinator::window::{Aborted, BoundedWindow, StageRing};
 use flocora::sync::thread;
+use flocora::Error;
 
 // ---------------------------------------------------------------------------
 // BoundedWindow: the parallel executor's claim/deposit/drain protocol
@@ -214,6 +217,62 @@ fn ring_sentry_turns_a_stage_panic_into_aborted_drains() {
         }));
         assert!(caught.is_err(), "scope must re-raise the stage panic");
         assert_eq!(got, Some(Err(Aborted)));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// shard::run_partitioned: the sharded coordinator's claim/merge handshake
+// ---------------------------------------------------------------------------
+
+/// Two shards on two workers: whatever the schedule, the coordinator
+/// drains both partials and returns them in canonical shard order —
+/// the order the cross-shard merge depends on for bit-identity.
+/// Termination everywhere is the no-lost-wakeup proof for the
+/// shard-sized window (`window = shards`, so claims never park; only
+/// the in-order drain waits).
+#[test]
+fn shard_handshake_drains_partials_in_canonical_order() {
+    loom::model(|| {
+        let got = run_partitioned(2, 2, |j| Ok(100 + j)).unwrap();
+        assert_eq!(got, vec![100, 101]);
+    });
+}
+
+/// A failing shard must abort the round on every schedule: the
+/// coordinator sees the shard's `Err` at its canonical drain slot
+/// (never a hang, never a partial merge) and the other worker's claim
+/// loop winds down through the abort path.
+#[test]
+fn shard_handshake_propagates_a_shard_error() {
+    loom::model(|| {
+        let err = run_partitioned::<usize>(2, 2, |j| {
+            if j == 1 {
+                Err(Error::invalid("shard 1 failed"))
+            } else {
+                Ok(j)
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("shard 1 failed"), "{err}");
+    });
+}
+
+/// A shard *panicking* (a bug — shard work reports failure via
+/// `Result`) must still never hang the coordinator: the sentry flags
+/// the abort, the drain surfaces it, and the scope join re-raises the
+/// panic out of `run_partitioned`.
+#[test]
+fn shard_handshake_survives_a_panicking_shard() {
+    loom::model(|| {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run_partitioned::<usize>(2, 2, |j| {
+                if j == 1 {
+                    panic!("shard work exploded");
+                }
+                Ok(j)
+            })
+        }));
+        assert!(caught.is_err(), "the shard panic must re-raise");
     });
 }
 

@@ -15,8 +15,8 @@ use flocora::config::{presets, FlConfig};
 use flocora::coordinator::executor::{ClientResult, Downloads,
                                      PipelinedExecutor, RoundContext};
 use flocora::coordinator::sink::RoundSink;
-use flocora::coordinator::{ClientExecutor, ExecutorKind, LocalTrainer,
-                           SamplerKind, Simulation};
+use flocora::coordinator::{AggregatorKind, ClientExecutor, ExecutorKind,
+                           LocalTrainer, SamplerKind, Simulation, VecSink};
 use flocora::data::lda_partition;
 use flocora::metrics::Recorder;
 use flocora::runtime::Engine;
@@ -83,6 +83,7 @@ struct Observed {
     queue_block_s: f64,
     sim_client_p50_s: f64,
     sim_client_max_s: f64,
+    merge_depth: usize,
     record_pipelined_sum: f64,
     record_wait_sum: f64,
     record_event_sum: f64,
@@ -111,6 +112,7 @@ fn run(cfg: FlConfig) -> Observed {
         queue_block_s: summary.queue_block_s,
         sim_client_p50_s: summary.sim_client_p50_s,
         sim_client_max_s: summary.sim_client_max_s,
+        merge_depth: summary.merge_depth,
         record_pipelined_sum: rec.rounds.iter()
             .map(|r| r.sim_net_pipelined_s).sum(),
         record_wait_sum: rec.rounds.iter()
@@ -151,6 +153,10 @@ fn assert_identical(a: &Observed, b: &Observed, what: &str) {
     assert_eq!(a.queue_block_s, b.queue_block_s, "{what}: queue block");
     assert_eq!(a.sim_client_p50_s, b.sim_client_p50_s, "{what}: p50");
     assert_eq!(a.sim_client_max_s, b.sim_client_max_s, "{what}: max");
+    // The merge tree's shape depends only on the non-empty fold
+    // blocks, never on the shard partition — so its depth is part of
+    // the bit-identity contract.
+    assert_eq!(a.merge_depth, b.merge_depth, "{what}: merge depth");
     assert!(
         a.final_train_loss == b.final_train_loss
             || (a.final_train_loss.is_nan() && b.final_train_loss.is_nan()),
@@ -288,6 +294,126 @@ fn hetero_tiers_identical_under_overlap() {
                "tier bytes must partition total traffic");
 }
 
+// ---------------------------------------------------------------------------
+// Sharded-coordinator identity: the partition must be invisible
+// ---------------------------------------------------------------------------
+
+fn with_shards(mut cfg: FlConfig, shards: usize) -> FlConfig {
+    cfg.shards = shards;
+    cfg
+}
+
+#[test]
+fn shard_count_never_perturbs_the_round() {
+    // The tentpole acceptance bar at synthetic size: splitting the
+    // round into N aggregator shards is bit-for-bit invisible. shards
+    // ∈ {1, 2, 3, 7} leave every observable identical to the unsharded
+    // serial fold across serial / parallel / windowed-pipelined
+    // executors — including the degenerate partitions (7 shards over a
+    // 4-client round) where most shards own zero clients.
+    let baseline = run(with_exec(base_cfg(), ExecutorKind::Serial, 0, 0,
+                                 OverlapKind::None));
+    for shards in [1usize, 2, 3, 7] {
+        let serial = run(with_shards(
+            with_exec(base_cfg(), ExecutorKind::Serial, 0, 0,
+                      OverlapKind::None),
+            shards,
+        ));
+        let parallel = run(with_shards(
+            with_exec(base_cfg(), ExecutorKind::Parallel, 3, 0,
+                      OverlapKind::None),
+            shards,
+        ));
+        let windowed = run(with_shards(
+            with_exec(base_cfg(), ExecutorKind::Parallel, 3, 2,
+                      OverlapKind::Transfer),
+            shards,
+        ));
+        assert_identical(&baseline, &serial,
+                         &format!("shards={shards}: serial"));
+        assert_identical(&baseline, &parallel,
+                         &format!("shards={shards}: parallel"));
+        assert_identical(&baseline, &windowed,
+                         &format!("shards={shards}: windowed"));
+    }
+}
+
+#[test]
+fn shard_identity_holds_under_dropout_stragglers_and_hetero() {
+    // The ragged regimes: dropout skips folds mid-block, stragglers
+    // cancel oversampled clients, hetero tiers pad ranks — in each,
+    // every shard count must reproduce the unsharded stream exactly.
+    let mut dropout = base_cfg();
+    dropout.dropout = 0.4;
+    dropout.rounds = 4;
+    for (what, cfg) in [("dropout", dropout),
+                        ("straggler", straggler_cfg()),
+                        ("hetero", hetero_cfg())] {
+        let one = run(with_exec(cfg.clone(), ExecutorKind::Serial, 0, 0,
+                                OverlapKind::None));
+        for shards in [2usize, 3, 7] {
+            let n = run(with_shards(
+                with_exec(cfg.clone(), ExecutorKind::Parallel, 3, 2,
+                          OverlapKind::Transfer),
+                shards,
+            ));
+            assert_identical(&one, &n, &format!("{what}: shards={shards}"));
+        }
+    }
+}
+
+#[test]
+fn shard_identity_holds_for_every_codec_and_aggregator() {
+    // The factor-aware aggregators defer their SVD to the coordinator
+    // (shards stack factors, never decompose), and encoded uploads
+    // decode inside the shard merge — so codec × aggregator is the
+    // matrix where a sharding bug would surface as drift.
+    for codec in ["fp32", "q8", "topk:0.5", "sparse_ef:0.5"] {
+        for agg in [AggregatorKind::FedAvg, AggregatorKind::Svt,
+                    AggregatorKind::Exact] {
+            let mut cfg = base_cfg();
+            cfg.codec = CodecKind::parse(codec).unwrap();
+            cfg.aggregator = agg;
+            let one = run(with_exec(cfg.clone(), ExecutorKind::Serial, 0,
+                                    0, OverlapKind::None));
+            let sharded = run(with_shards(
+                with_exec(cfg, ExecutorKind::Parallel, 3, 0,
+                          OverlapKind::None),
+                3,
+            ));
+            assert_identical(
+                &one,
+                &sharded,
+                &format!("{codec} × {}: shards=3", agg.label()),
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_merge_tree_fires_above_one_block() {
+    // Rounds wider than SHARD_BLOCK sampled clients span several fold
+    // blocks, so the coordinator genuinely tree-merges partials. The
+    // tree is partition-invariant: every shard count reports the same
+    // positive depth and the same bytes/trajectory as one shard.
+    let mut cfg = base_cfg();
+    cfg.num_clients = 96;
+    cfg.clients_per_round = 80;
+    cfg.rounds = 2;
+    let one = run(with_exec(cfg.clone(), ExecutorKind::Serial, 0, 0,
+                            OverlapKind::None));
+    assert!(one.merge_depth > 0,
+            "an 80-client round never split a fold block");
+    for shards in [2usize, 5] {
+        let n = run(with_shards(
+            with_exec(cfg.clone(), ExecutorKind::Parallel, 3, 0,
+                      OverlapKind::None),
+            shards,
+        ));
+        assert_identical(&one, &n, &format!("80 clients, shards={shards}"));
+    }
+}
+
 #[test]
 fn latency_biased_identical_under_overlap() {
     let mut cfg = straggler_cfg();
@@ -401,7 +527,8 @@ fn json_export_round_trips_every_field() {
         "sim_net_serial_s", "sim_net_parallel_s", "sim_net_pipelined_s",
         "transfer_wait_s", "sim_net_event_s", "queue_peak",
         "queue_block_s", "cancelled_clients", "dropped_clients",
-        "sim_client_p50_s", "sim_client_max_s", "mean_eff_rank", "wall_s",
+        "sim_client_p50_s", "sim_client_max_s", "mean_eff_rank",
+        "merge_depth", "wall_s",
     ];
     for key in expect_summary {
         assert!(summary_keys.contains(&key), "summary lost `{key}`");
@@ -552,9 +679,12 @@ fn pipelined_respects_planned_cancellations() {
     };
     let clients: Vec<usize> = (0..8).collect();
     let exec = PipelinedExecutor::new(3).with_window(2);
-    let results =
-        flocora::coordinator::sink::collect_round(&exec, &ctx, &clients)
-            .unwrap();
+    let mut sink = VecSink::new();
+    flocora::coordinator::sink::collect_round(
+        &exec, &ctx, &clients,
+        &mut [Box::new(&mut sink) as Box<dyn RoundSink>])
+        .unwrap();
+    let results = sink.results;
     assert_eq!(results.len(), 8);
     for r in &results {
         let expect_cancel = cancelled.contains(&r.cid);

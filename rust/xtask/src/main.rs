@@ -594,6 +594,9 @@ mod tests {
         let src = "use std::collections::HashMap;\n";
         assert_eq!(rules_hit("coordinator/server.rs", src), ["map-iter"]);
         assert_eq!(rules_hit("transport/sim.rs", src), ["map-iter"]);
+        // The shard-merge path: its merge order is the bit-identity
+        // contract, so the rule must keep covering it.
+        assert_eq!(rules_hit("coordinator/shard.rs", src), ["map-iter"]);
         assert!(rules_hit("runtime/mod.rs", src).is_empty());
     }
 
