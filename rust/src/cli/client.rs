@@ -1,0 +1,122 @@
+//! `flocora client` — a wire-mode worker process.
+//!
+//! Connects to a `flocora serve` coordinator, learns the run config
+//! from the Hello handshake (no local config flags — the server is
+//! the single source of truth), and hosts an inclusive range of
+//! client ids: every round it claims each hosted slot, downloads the
+//! encoded broadcast, trains through the same
+//! [`run_client`](crate::coordinator::run_client) stage composition
+//! the in-process executors use, and uploads the encoded delta.
+//!
+//! `--kill_at R:C` is fault injection for the dropout-parity tests:
+//! the process hangs up right after downloading for that slot, then
+//! reconnects — the server must account the slot exactly like a
+//! simulated `drop_plan` entry.
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::transport::wire::{run_client_loop, ClientOpts};
+
+/// Parse `LO-HI` (inclusive) or `N` (a single id).
+fn parse_cids(s: &str) -> Result<(usize, usize)> {
+    let bad = || {
+        Error::parse(format!(
+            "bad --wire_cids `{s}` (want LO-HI, inclusive, or a \
+             single id)"
+        ))
+    };
+    match s.split_once('-') {
+        None => {
+            let one = s.trim().parse().map_err(|_| bad())?;
+            Ok((one, one))
+        }
+        Some((lo, hi)) => {
+            let lo = lo.trim().parse().map_err(|_| bad())?;
+            let hi = hi.trim().parse().map_err(|_| bad())?;
+            Ok((lo, hi))
+        }
+    }
+}
+
+/// Parse the `ROUND:CID` kill coordinate.
+fn parse_kill(s: &str) -> Result<(usize, usize)> {
+    let bad =
+        || Error::parse(format!("bad --kill_at `{s}` (want ROUND:CID)"));
+    let (r, c) = s.split_once(':').ok_or_else(bad)?;
+    let r = r.trim().parse().map_err(|_| bad())?;
+    let c = c.trim().parse().map_err(|_| bad())?;
+    Ok((r, c))
+}
+
+pub fn cmd_client(args: &Args, artifacts: &str) -> Result<()> {
+    let connect = args.str_or("wire_connect", "127.0.0.1:7070");
+    let cids = args.opt_str("wire_cids").ok_or_else(|| {
+        Error::invalid(
+            "--wire_cids LO-HI is required (the inclusive client-id \
+             range this process hosts)",
+        )
+    })?;
+    let (lo, hi) = parse_cids(&cids)?;
+    let retries = args.parse_opt("wire_retries")?.unwrap_or(5);
+    let backoff_ms = args.parse_opt("wire_backoff_ms")?.unwrap_or(200);
+    let kill_at = match args.opt_str("kill_at") {
+        Some(spec) => Some(parse_kill(&spec)?),
+        None => None,
+    };
+    let unused = args.unused();
+    if !unused.is_empty() {
+        return Err(Error::parse(format!("unknown options: {unused:?}")));
+    }
+
+    let opts = ClientOpts {
+        connect,
+        lo,
+        hi,
+        retries,
+        backoff_ms,
+        kill_at,
+        artifacts: artifacts.to_string(),
+    };
+    println!(
+        "client: {} cids {}-{}{}",
+        opts.connect,
+        lo,
+        hi,
+        match kill_at {
+            Some((r, c)) => format!(" kill_at={r}:{c}"),
+            None => String::new(),
+        }
+    );
+    let report = run_client_loop(&opts)?;
+    println!(
+        "client cids {}-{}: {} claims, {} uploads, {} self-drops{}",
+        lo,
+        hi,
+        report.claims,
+        report.uploads,
+        report.self_drops,
+        if report.killed { ", killed once (fault injection)" } else { "" }
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cid_ranges_parse() {
+        assert_eq!(parse_cids("0-3").unwrap(), (0, 3));
+        assert_eq!(parse_cids(" 4 - 4 ").unwrap(), (4, 4));
+        assert_eq!(parse_cids("7").unwrap(), (7, 7));
+        assert!(parse_cids("a-b").is_err());
+        assert!(parse_cids("").is_err());
+    }
+
+    #[test]
+    fn kill_coordinates_parse() {
+        assert_eq!(parse_kill("1:3").unwrap(), (1, 3));
+        assert!(parse_kill("13").is_err());
+        assert!(parse_kill("1:x").is_err());
+    }
+}

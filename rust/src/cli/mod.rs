@@ -1,10 +1,49 @@
 //! Hand-rolled CLI argument parser (the offline vendor set has no
 //! `clap`): `binary <subcommand> [--key value]... [--flag]...` with
-//! typed accessors and unknown-argument rejection.
+//! typed accessors and unknown-argument rejection — plus the wire-mode
+//! subcommands ([`serve`], [`client`]) and the shared preset/config/
+//! override assembly every training-shaped subcommand uses.
+
+pub mod client;
+pub mod serve;
 
 use std::collections::BTreeMap;
 
+use crate::config::{loader, presets, FlConfig};
 use crate::error::{Error, Result};
+
+/// Assemble a run config the way `flocora train` does: named preset,
+/// then config file (on top of the preset if both are given), then
+/// every remaining `--key value` override, then validation. `reserved`
+/// lists the option keys the calling subcommand consumes itself
+/// (`csv`, `json`, `wire_*`, ...) so they are not forwarded to
+/// [`FlConfig::set`]; `config`, `preset` and `artifacts` are always
+/// reserved.
+pub fn assemble_config(args: &Args, reserved: &[&str]) -> Result<FlConfig> {
+    let mut cfg = match args.opt_str("preset") {
+        Some(name) => presets::by_name(&name).ok_or_else(|| {
+            Error::invalid(format!(
+                "unknown preset `{name}` (paper_resnet8|paper_resnet18|\
+                 scaled_micro|scaled_tiny|hetero_micro|straggler_micro|\
+                 event_micro|svt_micro|sparse_ef_micro|scale_bench)"
+            ))
+        })?,
+        None => FlConfig::default(),
+    };
+    if let Some(path) = args.opt_str("config") {
+        loader::apply_file(&mut cfg, path)?;
+    }
+    for (k, v) in args.options().clone() {
+        if k == "config" || k == "preset" || k == "artifacts"
+            || reserved.contains(&k.as_str())
+        {
+            continue;
+        }
+        cfg.set(&k, &v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
 
 /// Parsed command line.
 #[derive(Debug, Default)]

@@ -1,0 +1,93 @@
+//! `flocora serve` — the networked coordinator.
+//!
+//! Binds a TCP listener, then runs the same federated schedule
+//! `flocora train` runs, except that each round's sampled clients are
+//! claimed, downloaded and uploaded by remote `flocora client`
+//! processes over the wire protocol
+//! ([`crate::transport::wire`]). The exported CSV/JSON artifacts are
+//! byte-identical to an in-process `flocora train` of the same
+//! preset/seed once the wall-clock fields are stripped — CI's
+//! `wire-smoke` job diffs exactly that.
+
+use std::net::TcpListener;
+
+use crate::cli::{assemble_config, Args};
+use crate::error::Result;
+use crate::metrics::{run_json, Recorder};
+use crate::runtime::Engine;
+use crate::transport::wire::{serve_on, ServeOpts};
+
+/// Option keys `serve` consumes itself (not forwarded to the config).
+const RESERVED: [&str; 6] = [
+    "csv",
+    "json",
+    "wire_listen",
+    "wire_lease_ms",
+    "wire_round_timeout_ms",
+    "wire_on_timeout",
+];
+
+pub fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
+    let listen = args.str_or("wire_listen", "127.0.0.1:7070");
+    let opts = ServeOpts {
+        lease_ms: args.parse_opt("wire_lease_ms")?.unwrap_or(30_000),
+        round_timeout_ms: args
+            .parse_opt("wire_round_timeout_ms")?
+            .unwrap_or(60_000),
+        on_timeout: args
+            .parse_opt("wire_on_timeout")?
+            .unwrap_or_default(),
+    };
+    let csv = args.opt_str("csv");
+    let json = args.opt_str("json");
+    let cfg = assemble_config(args, &RESERVED)?;
+
+    let engine = Engine::new(artifacts)?;
+    let listener = TcpListener::bind(&listen)?;
+    println!(
+        "serve: {} tag={} codec={} aggregator={} clients={} ({}/round) \
+         rounds={} seed={} lease={}ms round_timeout={}ms on_timeout={}{}",
+        listener.local_addr()?,
+        cfg.tag,
+        cfg.codec.label(),
+        cfg.aggregator.label(),
+        cfg.num_clients,
+        cfg.clients_per_round,
+        cfg.rounds,
+        cfg.seed,
+        opts.lease_ms,
+        opts.round_timeout_ms,
+        opts.on_timeout.label(),
+        if engine.is_synthetic() { " backend=synthetic" } else { "" }
+    );
+
+    // The recorder keeps `train`'s name so the JSON document is
+    // byte-identical to `flocora train --json` on the same run.
+    let mut rec = Recorder::new("train");
+    let (summary, dropped) = serve_on(listener, &engine, cfg, &opts, &mut rec)?;
+    for r in &rec.rounds {
+        println!(
+            "round {:>4}  acc {:.4}  test_loss {:.4}  train_loss {:.4}  \
+             comm {:.2} MB",
+            r.round, r.test_acc, r.test_loss, r.train_loss,
+            r.cum_bytes as f64 / 1e6
+        );
+    }
+    println!(
+        "final acc {:.4} (tail {:.4})  msg {:.1} kB  {} cancelled  \
+         {} dropped",
+        summary.final_acc, summary.tail_acc,
+        summary.mean_up_msg_bytes / 1e3, summary.cancelled_clients,
+        dropped
+    );
+    if let Some(path) = csv {
+        rec.write_csv(&path)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = json {
+        let doc = run_json(&rec, &summary, dropped);
+        std::fs::write(&path, doc.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

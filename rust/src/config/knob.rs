@@ -27,7 +27,7 @@ use crate::coordinator::executor::ExecutorKind;
 use crate::coordinator::sampler::SamplerKind;
 use crate::error::{Error, Result};
 use crate::transport::{NetworkKind, OverlapKind, ProfileKind, Sharing,
-                       TimeModelKind};
+                       TimeModelKind, WireFaultPolicy};
 
 /// An enum-valued config knob: parseable, printable, and round-trip
 /// stable (`parse(display(k)) == k` per variant).
@@ -101,6 +101,8 @@ impl_knob!(CodecKind, "codec",
            [CodecKind::Fp32, CodecKind::Affine(8), CodecKind::Affine(4),
             CodecKind::Affine(2), CodecKind::TopK(0.5),
             CodecKind::ZeroFl(0.9, 0.2), CodecKind::SparseEf(0.5)]);
+impl_knob!(WireFaultPolicy, "wire_on_timeout", "drop|abort",
+           [WireFaultPolicy::Drop, WireFaultPolicy::Abort]);
 
 // `ProfileKind::File` labels as bare "file" for display tables, but
 // `Display` owes the round-trip law the parseable `file:PATH` form;
@@ -166,6 +168,7 @@ mod tests {
         round_trips::<OverlapKind>();
         round_trips::<CodecKind>();
         round_trips::<ProfileKind>();
+        round_trips::<WireFaultPolicy>();
     }
 
     #[test]

@@ -129,6 +129,15 @@ pub struct FlConfig {
     /// τ of the total. τ = 1.0 is bit-for-bit FedAvg. Ignored by the
     /// other aggregators.
     pub svt_energy: f64,
+    /// Deterministic failure injection: `(round, cid)` coordinates at
+    /// which a sampled client drops after its download, before its
+    /// upload (`drop_plan = "1:3,4:0"`). Checked after the `dropout`
+    /// coin so the RNG stream is untouched; the wire parity tests use
+    /// it as the in-process reference for a killed remote client.
+    /// Empty (the default) disables. Incompatible with
+    /// `sampler = oversample_k` (the cancellation planner does not
+    /// replay planned drops).
+    pub drop_plan: Vec<(usize, usize)>,
 }
 
 impl Default for FlConfig {
@@ -167,6 +176,7 @@ impl Default for FlConfig {
             hetero_codecs: Vec::new(),
             aggregator: AggregatorKind::FedAvg,
             svt_energy: 0.9,
+            drop_plan: Vec::new(),
         }
     }
 }
@@ -258,6 +268,25 @@ impl FlConfig {
         {
             return Err(Error::invalid("svt_energy must be in (0, 1]"));
         }
+        if !self.drop_plan.is_empty()
+            && self.sampler == SamplerKind::OversampleK
+        {
+            // The oversampling cancellation planner predicts expected
+            // survivors by replaying the dropout coin only; a planned
+            // drop it cannot see would skew the cut.
+            return Err(Error::invalid(
+                "drop_plan is incompatible with sampler = oversample_k",
+            ));
+        }
+        if self.drop_plan.iter().any(|&(r, c)| {
+            r >= self.rounds || c >= self.num_clients
+        }) {
+            return Err(Error::invalid(format!(
+                "drop_plan entries must be round:cid within \
+                 [0, {})×[0, {})",
+                self.rounds, self.num_clients
+            )));
+        }
         Ok(())
     }
 
@@ -312,10 +341,86 @@ impl FlConfig {
             "codec" => self.codec = parse_knob(value)?,
             "aggregator" => self.aggregator = parse_knob(value)?,
             "svt_energy" => self.svt_energy = p(key, value)?,
+            "drop_plan" => {
+                self.drop_plan = parse_list(key, value, |v| {
+                    let (r, c) = v.split_once(':')?;
+                    Some((r.trim().parse().ok()?, c.trim().parse().ok()?))
+                })?
+            }
             _ => return Err(Error::parse(format!("unknown config key `{key}`"))),
         }
         Ok(())
     }
+
+    /// Serialize every field as loader-format `key = value` lines —
+    /// the config blob the wire server hands to clients at `Hello`.
+    /// The round-trip law (`apply_str(default, to_blob(cfg)) == cfg`)
+    /// is what lets a remote client rebuild the *exact* federation —
+    /// same LDA partition, same RNG coordinates, same codec — from the
+    /// blob alone; the config-blob test pins it field by field.
+    pub fn to_blob(&self) -> String {
+        let mut out = String::new();
+        let mut kv = |k: &str, v: String| {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&v);
+            out.push('\n');
+        };
+        // Float fields rely on Display's shortest-round-trip rendering
+        // (`0.1_f32` prints as `0.1` and re-parses to the same bits).
+        kv("tag", format!("\"{}\"", self.tag));
+        kv("num_clients", self.num_clients.to_string());
+        kv("clients_per_round", self.clients_per_round.to_string());
+        kv("rounds", self.rounds.to_string());
+        kv("local_epochs", self.local_epochs.to_string());
+        kv("lr", self.lr.to_string());
+        kv("lora_alpha", self.lora_alpha.to_string());
+        kv("codec", self.codec.to_string());
+        kv("lda_alpha", self.lda_alpha.to_string());
+        kv("samples_per_client", self.samples_per_client.to_string());
+        kv("test_samples", self.test_samples.to_string());
+        kv("seed", self.seed.to_string());
+        kv("eval_every", self.eval_every.to_string());
+        kv("dropout", self.dropout.to_string());
+        kv("lr_decay", self.lr_decay.to_string());
+        kv("executor", self.executor.to_string());
+        kv("threads", self.threads.to_string());
+        kv("window", self.window.to_string());
+        kv("shards", self.shards.to_string());
+        kv("network", self.network.to_string());
+        kv("net_sharing", self.net_sharing.to_string());
+        kv("overlap", self.overlap.to_string());
+        kv("sampler", self.sampler.to_string());
+        kv("oversample_beta", self.oversample_beta.to_string());
+        kv("client_profiles", self.client_profiles.to_string());
+        kv("compute_base_s", self.compute_base_s.to_string());
+        kv("time_model", self.time_model.to_string());
+        kv("chunk_kb", self.chunk_kb.to_string());
+        kv("stage_queue", self.stage_queue.to_string());
+        kv(
+            "hetero_ranks",
+            join_or_none(self.hetero_ranks.iter().map(usize::to_string)),
+        );
+        kv(
+            "hetero_codecs",
+            join_or_none(self.hetero_codecs.iter()
+                .map(CodecKind::to_string)),
+        );
+        kv("aggregator", self.aggregator.to_string());
+        kv("svt_energy", self.svt_energy.to_string());
+        kv(
+            "drop_plan",
+            join_or_none(self.drop_plan.iter()
+                .map(|(r, c)| format!("{r}:{c}"))),
+        );
+        out
+    }
+}
+
+/// Comma-join for list-valued keys; the loader reads `none` as empty.
+fn join_or_none(items: impl Iterator<Item = String>) -> String {
+    let joined = items.collect::<Vec<_>>().join(",");
+    if joined.is_empty() { "none".into() } else { joined }
 }
 
 #[cfg(test)]
@@ -511,6 +616,85 @@ mod tests {
         // shards = 0 survives parsing but fails validation.
         c.set("shards", "0").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn drop_plan_parses_and_validates() {
+        let mut c = FlConfig::default();
+        assert!(c.drop_plan.is_empty());
+        c.set("drop_plan", "1:3, 4:0").unwrap();
+        assert_eq!(c.drop_plan, vec![(1, 3), (4, 0)]);
+        c.validate().unwrap();
+        // `none` clears.
+        c.set("drop_plan", "none").unwrap();
+        assert!(c.drop_plan.is_empty());
+        assert!(c.set("drop_plan", "1:x").is_err());
+        assert!(c.set("drop_plan", "7").is_err());
+        // Out-of-range coordinates survive parsing, fail validation.
+        c.set("drop_plan", "99:0").unwrap();
+        assert!(c.validate().is_err());
+        c.set("drop_plan", "0:99").unwrap();
+        assert!(c.validate().is_err());
+        // Planned drops cannot mix with the oversampling planner.
+        c.set("drop_plan", "1:1").unwrap();
+        c.set("sampler", "oversample_k").unwrap();
+        assert!(c.validate().is_err());
+        c.set("sampler", "uniform").unwrap();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn blob_round_trips_every_field() {
+        // A config with every field off its default; the blob applied
+        // to a default must reproduce it exactly (the wire client
+        // rebuilds its federation from nothing but this blob).
+        let mut cfg = FlConfig::default();
+        for (k, v) in [
+            ("tag", "micro8_lora_fc_r8"),
+            ("num_clients", "24"),
+            ("clients_per_round", "6"),
+            ("rounds", "9"),
+            ("local_epochs", "3"),
+            ("lr", "0.013"),
+            ("lora_alpha", "48.5"),
+            ("codec", "sparse_ef:0.25"),
+            ("lda_alpha", "0.31"),
+            ("samples_per_client", "20"),
+            ("test_samples", "50"),
+            ("seed", "977"),
+            ("eval_every", "3"),
+            ("dropout", "0.12"),
+            ("lr_decay", "0.97"),
+            ("executor", "parallel"),
+            ("threads", "3"),
+            ("window", "5"),
+            ("shards", "2"),
+            ("network", "wifi"),
+            ("net_sharing", "shared"),
+            ("overlap", "transfer"),
+            ("sampler", "latency_biased"),
+            ("oversample_beta", "0.4"),
+            ("client_profiles", "tiered"),
+            ("compute_base_s", "0.75"),
+            ("time_model", "event"),
+            ("chunk_kb", "32"),
+            ("stage_queue", "7"),
+            ("hetero_ranks", "2,4"),
+            ("hetero_codecs", "q4,q8"),
+            ("aggregator", "svt"),
+            ("svt_energy", "0.85"),
+            ("drop_plan", "1:3,4:0"),
+        ] {
+            cfg.set(k, v).unwrap();
+        }
+        let mut back = FlConfig::default();
+        loader::apply_str(&mut back, &cfg.to_blob()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+        // And the default round-trips too (list fields emit `none`).
+        let mut dflt = FlConfig::default();
+        loader::apply_str(&mut dflt, &FlConfig::default().to_blob())
+            .unwrap();
+        assert_eq!(format!("{dflt:?}"), format!("{:?}", FlConfig::default()));
     }
 
     #[test]

@@ -274,6 +274,14 @@ fn stage_train(ctx: &RoundContext<'_>, cid: usize, start: Vec<f32>)
     if ctx.cfg.dropout > 0.0 && crng.f64() < ctx.cfg.dropout {
         return Ok(Trained::Dropped);
     }
+    // Deterministic failure injection (`drop_plan = round:cid,...`):
+    // checked *after* the dropout coin so the RNG stream is untouched
+    // — a planned drop is bit-identical to the same client crashing
+    // after its download, which is exactly what a killed wire client
+    // looks like to the server (the parity tests lean on this).
+    if ctx.cfg.drop_plan.iter().any(|&(r, c)| r == ctx.round && c == cid) {
+        return Ok(Trained::Dropped);
+    }
     let trainer = LocalTrainer { lora_scale, ..ctx.trainer };
     let outcome = trainer.run(
         session,
@@ -331,8 +339,11 @@ fn stage_upload(ctx: &RoundContext<'_>, cid: usize, outcome: LocalOutcome)
 /// inline: download-decode → (maybe drop) → local train →
 /// encode-upload. Shared verbatim by the serial and parallel executors
 /// so they cannot diverge behaviorally; the pipelined executor runs
-/// the *same* stage functions, just on different threads.
-fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
+/// the *same* stage functions, just on different threads. Public
+/// because the wire client (`transport::wire`) runs this exact
+/// function against a context rebuilt from the announced round plan —
+/// one client-work path, whether the result crosses a socket or not.
+pub fn run_client(ctx: &RoundContext<'_>, cid: usize) -> Result<ClientResult> {
     let (down_bytes, fetched) = stage_download(ctx, cid)?;
     let start = match fetched {
         Fetched::Cancelled => {

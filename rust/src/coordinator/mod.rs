@@ -45,12 +45,12 @@ pub mod window;
 pub use aggregator::{adapter_pairs, AdapterPair, AggOutcome, AggPartial,
                      Aggregator, AggregatorKind, ClientUpdate,
                      ExactAggregator, FedAvg, SvtAggregator};
-pub use executor::{ClientExecutor, ExecutorKind, ParallelExecutor,
-                   PipelinedExecutor, SerialExecutor};
+pub use executor::{run_client, ClientExecutor, ExecutorKind,
+                   ParallelExecutor, PipelinedExecutor, SerialExecutor};
 pub use hetero::{ClientPlan, PlanTier};
 pub use sampler::{LatencyBiasedSampler, OversampleSampler, Sampler,
                   SamplerKind, UniformSampler};
-pub use server::{RunSummary, Simulation};
+pub use server::{RoundPlan, RunSummary, Simulation};
 pub use shard::{shard_slices, SHARD_BLOCK};
 pub use sink::{collect_round, RoundSink, VecSink};
 pub use trainer::LocalTrainer;

@@ -127,6 +127,33 @@ pub struct RunSummary {
     pub merge_depth: usize,
 }
 
+/// One planned communication round: every decision the coordinator
+/// makes *before* any client work runs — the ledger bucket is opened,
+/// the broadcast is encoded, the clients are sampled and the
+/// cancellations are planned. Produced by [`Simulation::plan_round`],
+/// consumed by [`Simulation::merge_round`]; [`Simulation::round`] is
+/// literally that composition. The wire server
+/// ([`crate::transport::wire`]) announces exactly this plan to remote
+/// clients, so in-process and networked rounds share one decision
+/// path — the core of the wire mode's byte-identity argument.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    /// Round index (`rounds_done` at planning time).
+    pub round: usize,
+    /// This round's learning rate under the multiplicative schedule.
+    pub lr: f32,
+    /// Sampled client ids, sorted ascending — the merge's slot order.
+    pub client_ids: Vec<usize>,
+    /// Sorted ids the server pre-decided to cancel (oversampling
+    /// strategies return more ids than the round accepts).
+    pub cancelled_ids: Vec<usize>,
+    /// The one shared encoded download (homogeneous rounds).
+    pub shared_msg: Option<Message>,
+    /// Per-tier encoded downloads (heterogeneous rounds); empty
+    /// otherwise. Exactly one of `shared_msg` / `tier_msgs` is set.
+    pub tier_msgs: Vec<Message>,
+}
+
 /// One federated-learning simulation.
 ///
 /// ```no_run
@@ -436,6 +463,16 @@ impl Simulation {
     /// the round is lost but the federation survives with its global
     /// state unchanged).
     pub fn round(&mut self) -> Result<(f64, f64)> {
+        let rp = self.plan_round()?;
+        self.merge_round(&rp, None)
+    }
+
+    /// Open the next round on the coordinator: begin the ledger
+    /// bucket, encode the download(s), sample the clients and plan the
+    /// cancellations. Advances the sampler stream exactly once, so
+    /// `plan_round` + [`Simulation::merge_round`] is bit-identical to
+    /// [`Simulation::round`] — which is literally that composition.
+    pub fn plan_round(&mut self) -> Result<RoundPlan> {
         self.ledger.begin_round();
         let segments = &self.session.spec.trainable_segments;
 
@@ -451,10 +488,6 @@ impl Simulation {
                     (None, plan.encode_downloads(&self.global, segments)?)
                 }
             };
-        let downloads = match &shared_msg {
-            Some(msg) => Downloads::Homogeneous(msg),
-            None => Downloads::Tiered(&tier_msgs),
-        };
         let client_ids = self.sampler.sample(self.cfg.clients_per_round);
         // Oversampling strategies return more ids than the round
         // needs; plan which stragglers to cancel *now*, from expected
@@ -471,6 +504,43 @@ impl Simulation {
         // Per-round learning rate under the multiplicative schedule.
         let lr = self.cfg.lr
             * self.cfg.lr_decay.powi(self.rounds_done as i32);
+        Ok(RoundPlan {
+            round: self.rounds_done,
+            lr,
+            client_ids,
+            cancelled_ids,
+            shared_msg,
+            tier_msgs,
+        })
+    }
+
+    /// Merge one planned round: fan the per-client work out through an
+    /// executor, stream the results into the per-shard merges, charge
+    /// the transport stage and aggregate the survivors. `external`
+    /// overrides the configured executor for this round — the wire
+    /// server hands in a replay executor fed from socket-delivered
+    /// uploads, so remote results flow through the *same* shard merge,
+    /// ledger and aggregator code as in-process ones; `None` runs the
+    /// configured executor.
+    pub fn merge_round(
+        &mut self,
+        rp: &RoundPlan,
+        external: Option<&dyn ClientExecutor>,
+    ) -> Result<(f64, f64)> {
+        if rp.round != self.rounds_done {
+            return Err(Error::invalid(format!(
+                "merge_round got a plan for round {} but the simulation \
+                 is at round {}",
+                rp.round, self.rounds_done
+            )));
+        }
+        let segments = &self.session.spec.trainable_segments;
+        let downloads = match &rp.shared_msg {
+            Some(msg) => Downloads::Homogeneous(msg),
+            None => Downloads::Tiered(&rp.tier_msgs),
+        };
+        let client_ids = &rp.client_ids;
+        let lr = rp.lr;
 
         // (2)+(3)+(4) per-client work streams into per-shard in-place
         // merges: ledger entries, aggregator folds, dropout counts and
@@ -494,13 +564,13 @@ impl Simulation {
                 lora_scale: self.lora_scale,
             },
             cfg: &self.cfg,
-            round: self.rounds_done,
+            round: rp.round,
             plan: self.plan.as_ref(),
-            cancelled: &cancelled_ids,
+            cancelled: &rp.cancelled_ids,
         };
         let shards = self.cfg.shards;
         let ranges = shard_slices(client_ids.len(), shards);
-        let executor = self.executor.as_ref();
+        let executor = external.unwrap_or(self.executor.as_ref());
         let plan = self.plan.as_ref();
         let codec = self.codec.as_ref();
         let n_tiers = self.tier_bytes.len();
@@ -666,6 +736,23 @@ impl Simulation {
 
     /// Run the full schedule, recording evaluated rounds.
     pub fn run(&mut self, recorder: &mut Recorder) -> Result<RunSummary> {
+        self.run_with(recorder, |sim| sim.round())
+    }
+
+    /// Run the full schedule with a caller-supplied round driver. The
+    /// driver is called once per scheduled round and must leave the
+    /// simulation exactly one round further (the obvious driver is
+    /// `|sim| sim.round()`, which is what [`Simulation::run`] passes);
+    /// the wire server's driver plans the round, gathers the remote
+    /// results and calls [`Simulation::merge_round`]. Everything else
+    /// — evaluation cadence, record windows, the summary — is this one
+    /// code path, so a wire run's records are byte-identical to an
+    /// in-process run's by construction.
+    pub fn run_with(
+        &mut self,
+        recorder: &mut Recorder,
+        mut round_fn: impl FnMut(&mut Simulation) -> Result<(f64, f64)>,
+    ) -> Result<RunSummary> {
         // det-lint: allow(wall-clock) — start of the wall_secs stopwatch;
         // feeds only the diagnostic `RunSummary::wall_secs` column.
         let t0 = Instant::now();
@@ -689,7 +776,7 @@ impl Simulation {
         let (mut eff_sum_window, mut eff_rounds_window) = (0.0f64, 0u64);
         let (mut eff_sum_run, mut eff_rounds_run) = (0.0f64, 0u64);
         for r in 0..self.cfg.rounds {
-            let (train_loss, _train_acc) = self.round()?;
+            let (train_loss, _train_acc) = round_fn(self)?;
             self.last_train_loss = train_loss;
             drops_since_record += self.last_round_dropped;
             cancelled_since_record += self.last_round_cancelled;

@@ -128,23 +128,6 @@ pub fn collect_round(
     Ok(())
 }
 
-/// Run a round and collect every result into a `Vec` — the old
-/// single-sink batch-collect helper.
-#[deprecated(
-    note = "use `collect_round` with one boxed sink per shard (a \
-            single `Box::new(&mut VecSink::new())` reproduces this \
-            behaviour); see the sharding contract in the module docs"
-)]
-pub fn collect_round_vec(
-    executor: &dyn ClientExecutor,
-    ctx: &RoundContext<'_>,
-    clients: &[usize],
-) -> Result<Vec<ClientResult>> {
-    let mut sink = VecSink::new();
-    executor.execute(ctx, clients, &mut sink)?;
-    Ok(sink.results)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

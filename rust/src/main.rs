@@ -3,6 +3,11 @@
 //! Subcommands:
 //! * `train`        — run one federated simulation (config file and/or
 //!   `--key value` overrides), optional CSV convergence export.
+//! * `serve`        — run the same schedule as a networked TCP
+//!   coordinator; remote `client` processes do the training
+//!   (byte-identical artifacts, see `transport::wire`).
+//! * `client`       — a wire-mode worker hosting a client-id range
+//!   against a `serve` coordinator.
 //! * `tables`       — print the analytic reproductions of Table I/III/IV
 //!   side by side with the paper's numbers.
 //! * `inspect`      — list the artifact manifest (specs, sizes, files).
@@ -10,9 +15,8 @@
 //!   pallas quant kernel (HLO oracle), all bit widths.
 //! * `bench-step`   — time the PJRT train step for a spec.
 
-use flocora::cli::Args;
+use flocora::cli::{assemble_config, Args};
 use flocora::compression::Codec;
-use flocora::config::{loader, presets, FlConfig};
 use flocora::coordinator::Simulation;
 use flocora::error::{Error, Result};
 use flocora::experiments::tables;
@@ -36,6 +40,10 @@ fn run(argv: Vec<String>) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args, &artifacts),
+        Some("serve") => flocora::cli::serve::cmd_serve(&args, &artifacts),
+        Some("client") => {
+            flocora::cli::client::cmd_client(&args, &artifacts)
+        }
         Some("tables") => cmd_tables(&args),
         Some("inspect") => cmd_inspect(&args, &artifacts),
         Some("quant-parity") => cmd_quant_parity(&args, &artifacts),
@@ -74,6 +82,17 @@ fn print_usage() {
          \x20               [--hetero_ranks 2,4,8] [--hetero_codecs ...] ...\n\
          \x20               (--artifacts synthetic runs the PJRT-free\n\
          \x20               surrogate backend — what CI's sim-smoke uses)\n\
+         \x20 serve         networked coordinator: same schedule, flags\n\
+         \x20               and artifacts as `train`, but remote clients\n\
+         \x20               do the work (byte-identical runs)\n\
+         \x20               [--wire_listen HOST:PORT] [--wire_lease_ms N]\n\
+         \x20               [--wire_round_timeout_ms N]\n\
+         \x20               [--wire_on_timeout drop|abort]\n\
+         \x20 client        wire-mode worker (config comes from the\n\
+         \x20               server's hello handshake)\n\
+         \x20               --wire_cids LO-HI [--wire_connect HOST:PORT]\n\
+         \x20               [--wire_retries N] [--wire_backoff_ms N]\n\
+         \x20               [--kill_at ROUND:CID]\n\
          \x20 tables        print analytic Table I/III/IV + the\n\
          \x20               aggregation-zoo bytes table\n\
          \x20               [--table all|1|2|3|4|zoo]\n\
@@ -93,33 +112,12 @@ fn strict(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
-    // Base config: named preset, config file (on top of the preset, if
-    // both are given), then --key value overrides.
-    let mut cfg = match args.opt_str("preset") {
-        Some(name) => presets::by_name(&name).ok_or_else(|| {
-            Error::invalid(format!(
-                "unknown preset `{name}` (paper_resnet8|paper_resnet18|\
-                 scaled_micro|scaled_tiny|hetero_micro|straggler_micro|\
-                 event_micro|svt_micro|sparse_ef_micro|scale_bench)"
-            ))
-        })?,
-        None => FlConfig::default(),
-    };
-    if let Some(path) = args.opt_str("config") {
-        loader::apply_file(&mut cfg, path)?;
-    }
     let csv = args.opt_str("csv");
     let json = args.opt_str("json");
-    // Any remaining --key value pairs are config overrides.
-    for (k, v) in args.options().clone() {
-        if k == "config" || k == "csv" || k == "json" || k == "artifacts"
-            || k == "preset"
-        {
-            continue;
-        }
-        cfg.set(&k, &v)?;
-    }
-    cfg.validate()?;
+    // Base config: named preset, config file (on top of the preset, if
+    // both are given), then --key value overrides — shared with
+    // `serve` so wire runs assemble the exact same config.
+    let cfg = assemble_config(args, &["csv", "json"])?;
 
     let engine = Engine::new(artifacts)?;
     let hetero = if cfg.hetero_ranks.is_empty() {

@@ -217,6 +217,28 @@ pub fn run_json(rec: &Recorder, summary: &RunSummary, dropped: u64) -> Json {
     ])
 }
 
+/// Recursively remove the wall-clock fields (`wall_s`, `wall_ms`)
+/// from a run document — the only non-deterministic values in a
+/// [`run_json`] export. The in-process version of CI's
+/// `jq 'del(.summary.wall_s) | del(.rounds[].wall_ms)'`: the wire
+/// loopback tests strip both documents with this and assert the
+/// remainder is byte-identical.
+pub fn strip_wall(j: &Json) -> Json {
+    match j {
+        Json::Arr(items) => {
+            Json::Arr(items.iter().map(strip_wall).collect())
+        }
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .filter(|(k, _)| k.as_str() != "wall_s"
+                    && k.as_str() != "wall_ms")
+                .map(|(k, v)| (k.clone(), strip_wall(v)))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
 /// Median (p50) of a sample; 0.0 for an empty slice. Used for the
 /// per-round straggler stats (median simulated client time).
 pub fn p50(xs: &[f64]) -> f64 {
@@ -394,6 +416,32 @@ mod tests {
             .at(&["train_loss"])
             .unwrap()
             .is_null());
+    }
+
+    #[test]
+    fn strip_wall_removes_every_wall_field_and_nothing_else() {
+        let j = rec().to_json();
+        let stripped = strip_wall(&j);
+        let text = stripped.to_string();
+        assert!(!text.contains("wall_ms"), "{text}");
+        assert!(!text.contains("wall_s"), "{text}");
+        // Everything else survives, values intact.
+        let rounds = stripped.at(&["rounds"]).unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 5);
+        assert_eq!(
+            rounds[2].at(&["cancelled"]).unwrap().as_usize().unwrap(),
+            2
+        );
+        // Two identical runs differing only in wall time strip equal.
+        let mut other = rec();
+        for r in &mut other.rounds {
+            r.wall_ms += 123.0;
+        }
+        assert_ne!(j.to_string(), other.to_json().to_string());
+        assert_eq!(
+            strip_wall(&j).to_string(),
+            strip_wall(&other.to_json()).to_string()
+        );
     }
 
     #[test]

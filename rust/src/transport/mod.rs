@@ -4,13 +4,16 @@
 //! transport stage that charges wire time from stage events so
 //! transfer/compute overlap is modellable (`overlap = transfer`), and
 //! the discrete-event simulator that replays those events at chunk
-//! granularity (`time_model = event`).
+//! granularity (`time_model = event`). [`wire`] is the one module
+//! here that moves *real* bytes: a TCP coordinator/client pair
+//! byte-identical to the in-process simulator.
 
 pub mod accounting;
 pub mod network;
 pub mod profile;
 pub mod sim;
 pub mod stage;
+pub mod wire;
 
 pub use accounting::{tcc_equation2, CommLedger, Direction};
 pub use network::{NetworkKind, NetworkModel, RoundLoad, Sharing};
@@ -19,3 +22,8 @@ pub use profile::{ClientProfile, ClientProfiles, ProfileKind,
 pub use sim::{simulate_round, ClientLoad, ClosedTimeModel, EventTimeModel,
               SimParams, TimeEstimate, TimeModel, TimeModelKind};
 pub use stage::{OverlapKind, RoundTransport, StageEvent, TransferStage};
+pub use wire::{run_client_loop, serve_on, ClaimGrant, ClaimTable,
+               ClientOpts, ClientReport, Frame, ServeOpts,
+               WireFaultPolicy, MAX_FRAME_LEN, STATUS_ACK,
+               STATUS_DROPPED, STATUS_FINISHED, WIRE_MAGIC,
+               WIRE_VERSION};

@@ -1,0 +1,1661 @@
+//! Real networked wire mode: a TCP coordinator and client speaking a
+//! versioned, length-prefixed frame protocol — byte-identical to the
+//! in-process simulator.
+//!
+//! **Why this exists.** Everything else in `transport/` *simulates*
+//! wire time; this module actually moves the bytes. [`serve_on`] runs
+//! the full [`Simulation`] round loop, but instead of executing the
+//! sampled clients itself it *announces* each
+//! [`RoundPlan`] over TCP, serves the codec-encoded
+//! broadcast as a download, gathers the encoded uploads into a
+//! [`ClaimTable`], and feeds them through
+//! [`Simulation::merge_round`] via a replay executor — so remote
+//! results flow through the exact shard merge, ledger, transport-stage
+//! and aggregator code an in-process run uses. [`run_client_loop`]
+//! is the other half: it rebuilds the federation from the served
+//! config blob and runs the *same*
+//! [`run_client`] stage composition the executors run.
+//!
+//! **Byte-identity argument.** A run's bits are a function of (a) the
+//! coordinator's round decisions (sampler stream, encoded broadcast,
+//! planned cancellations, lr schedule) and (b) each client's result
+//! (all randomness from `Rng::for_client(seed, round, cid)`), folded
+//! in sampling order. (a) lives in [`Simulation::plan_round`], shared
+//! verbatim; (b) is `run_client`, shared verbatim, with the encoded
+//! upload bytes crossing the socket untouched and `f64` stats moved
+//! bit-exactly (`to_bits`/`from_bits`). The replay executor delivers
+//! results in slot order, so the merge cannot tell a socket from a
+//! thread. The loopback tests (`tests/wire.rs`) and the CI
+//! `wire-smoke` job pin this: wall-stripped JSON from a wire run
+//! diffs empty against `Simulation::run`.
+//!
+//! **Frame grammar.** Every frame is an 8-byte header — magic
+//! `F1 0C`, version, type, `u32` little-endian body length (capped at
+//! [`MAX_FRAME_LEN`] *before* any allocation) — followed by the body.
+//! Integers are little-endian, floats cross as IEEE-754 bits, strings
+//! are `u32`-length-prefixed UTF-8, and the final `payload`/text field
+//! of a frame is the body remainder. The conversation is strict
+//! lockstep: every client frame gets exactly one server reply.
+//!
+//! **Robustness.** Claims carry a lease: a client that stops
+//! heartbeating (or whose connection drops) is settled as a dropout —
+//! mapping onto the same `StageEvent::Dropped` accounting the
+//! simulator's failure injection uses, so a killed wire client is
+//! bit-identical to a `drop_plan` entry. A round that outlives
+//! `round_timeout_ms` either force-drops the stragglers
+//! ([`WireFaultPolicy::Drop`]) or aborts the run
+//! ([`WireFaultPolicy::Abort`]). All server concurrency routes
+//! through `crate::sync`, so the claim-table handshake stays inside
+//! the loom-checkable surface.
+
+// Wall-clock (`Instant`) is deliberately real in this file — remote
+// clients crash in wall-clock time, not simulated time — so it sits on
+// the determinism lint's wall-clock exempt list (`cargo xtask
+// lint-determinism`). Nothing here feeds a simulated quantity, and the
+// exported records are wall-stripped before any bit-identity diff.
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::compression::Message;
+use crate::config::{loader, FlConfig};
+use crate::coordinator::executor::{run_client, ClientExecutor, ClientResult,
+                                   ClientUpdate, Downloads, RoundContext,
+                                   UpdateVector};
+use crate::coordinator::sink::RoundSink;
+use crate::coordinator::trainer::LocalTrainer;
+use crate::coordinator::{RoundPlan, RunSummary, Simulation};
+use crate::data::lda_partition;
+use crate::error::{Error, Result};
+use crate::metrics::Recorder;
+use crate::runtime::Engine;
+use crate::sync::thread;
+use crate::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// First two header bytes of every frame.
+pub const WIRE_MAGIC: [u8; 2] = [0xF1, 0x0C];
+/// Protocol version this build speaks (header byte 3).
+pub const WIRE_VERSION: u8 = 1;
+/// Fixed frame header size: magic, version, type, `u32` body length.
+pub const HEADER_LEN: usize = 8;
+/// Hard cap on a frame body, checked against the length prefix
+/// *before* any allocation — a hostile or corrupt peer cannot make
+/// the receiver reserve gigabytes.
+pub const MAX_FRAME_LEN: usize = 256 << 20;
+
+/// `Complete` status: the server accepted the client's frame.
+pub const STATUS_ACK: u8 = 0;
+/// `Complete` status from a client: it failed before uploading.
+pub const STATUS_DROPPED: u8 = 1;
+/// `Complete` status from the server: the run is over, disconnect.
+pub const STATUS_FINISHED: u8 = 2;
+
+/// One protocol frame. Client→server: `Hello` (empty), `Register`,
+/// `Claim`, `Download` (empty payload = request), `Upload`,
+/// `Complete(DROPPED)`, `Heartbeat`. Server→client: `Hello` (config
+/// blob), `Register` (echo), `Plan`, `Download` (broadcast bytes),
+/// `Complete(ACK|FINISHED)`, `Heartbeat` (echo), `Abort`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Handshake; the server's reply carries the full config blob
+    /// ([`FlConfig::to_blob`]) the client rebuilds its federation from.
+    Hello { config: String },
+    /// The inclusive client-id range this connection hosts.
+    Register { lo: u64, hi: u64 },
+    /// Ask for this client's slot in a round.
+    Claim { round: u64, cid: u64 },
+    /// The server's claim verdict: sampled (and, if so, pre-cancelled).
+    Plan { round: u64, cid: u64, sampled: bool, cancelled: bool },
+    /// Broadcast download; the request form has empty codec/payload.
+    Download { round: u64, cid: u64, codec: String, payload: Vec<u8> },
+    /// An encoded client update plus its FedAvg stats.
+    Upload {
+        round: u64,
+        cid: u64,
+        weight: f64,
+        mean_loss: f64,
+        mean_acc: f64,
+        codec: String,
+        payload: Vec<u8>,
+    },
+    /// Round closure for one client (see the `STATUS_*` constants).
+    Complete { round: u64, cid: u64, status: u8 },
+    /// Lease keep-alive; the server echoes it.
+    Heartbeat { round: u64, cid: u64 },
+    /// Fatal: the sender is giving up on this conversation.
+    Abort { reason: String },
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked reader over one frame body. Every accessor returns
+/// a typed [`Error::Parse`] instead of panicking, so arbitrary bytes
+/// are safe to decode (the fuzz tests in `tests/wire.rs` lean on it).
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let have = self.b.len() - self.pos;
+        if have < n {
+            return Err(Error::parse(format!(
+                "wire frame truncated: need {n} byte(s) at offset {}, \
+                 have {have}",
+                self.pos
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(Error::parse(format!(
+                "wire bool must be 0 or 1, got {v}"
+            ))),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str_prefixed(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::parse("wire string is not UTF-8"))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.b[self.pos..];
+        self.pos = self.b.len();
+        s
+    }
+
+    fn rest_str(&mut self) -> Result<String> {
+        String::from_utf8(self.rest().to_vec())
+            .map_err(|_| Error::parse("wire string is not UTF-8"))
+    }
+
+    fn finish(self, frame: Frame) -> Result<Frame> {
+        if self.pos != self.b.len() {
+            return Err(Error::parse(format!(
+                "wire frame has {} trailing byte(s) after its {} body",
+                self.b.len() - self.pos,
+                frame.kind()
+            )));
+        }
+        Ok(frame)
+    }
+}
+
+/// Validate a frame header; returns `(type, body_len)`. The length cap
+/// is enforced here, before the caller allocates anything.
+fn check_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize)> {
+    if h[0] != WIRE_MAGIC[0] || h[1] != WIRE_MAGIC[1] {
+        return Err(Error::parse(format!(
+            "bad wire magic {:02x} {:02x} (want {:02x} {:02x})",
+            h[0], h[1], WIRE_MAGIC[0], WIRE_MAGIC[1]
+        )));
+    }
+    if h[2] != WIRE_VERSION {
+        return Err(Error::parse(format!(
+            "wire protocol version {} (this build speaks {WIRE_VERSION})",
+            h[2]
+        )));
+    }
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(Error::invalid(format!(
+            "wire frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap"
+        )));
+    }
+    Ok((h[3], len))
+}
+
+fn decode_body(typ: u8, body: &[u8]) -> Result<Frame> {
+    let mut c = Cursor { b: body, pos: 0 };
+    let frame = match typ {
+        1 => Frame::Hello { config: c.rest_str()? },
+        2 => Frame::Register { lo: c.u64()?, hi: c.u64()? },
+        3 => Frame::Claim { round: c.u64()?, cid: c.u64()? },
+        4 => Frame::Plan {
+            round: c.u64()?,
+            cid: c.u64()?,
+            sampled: c.bool()?,
+            cancelled: c.bool()?,
+        },
+        5 => Frame::Download {
+            round: c.u64()?,
+            cid: c.u64()?,
+            codec: c.str_prefixed()?,
+            payload: c.rest().to_vec(),
+        },
+        6 => Frame::Upload {
+            round: c.u64()?,
+            cid: c.u64()?,
+            weight: c.f64()?,
+            mean_loss: c.f64()?,
+            mean_acc: c.f64()?,
+            codec: c.str_prefixed()?,
+            payload: c.rest().to_vec(),
+        },
+        7 => Frame::Complete {
+            round: c.u64()?,
+            cid: c.u64()?,
+            status: c.u8()?,
+        },
+        8 => Frame::Heartbeat { round: c.u64()?, cid: c.u64()? },
+        9 => Frame::Abort { reason: c.rest_str()? },
+        t => {
+            return Err(Error::parse(format!(
+                "unknown wire frame type {t}"
+            )))
+        }
+    };
+    c.finish(frame)
+}
+
+impl Frame {
+    /// Short name for errors and logs (never the payload itself).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::Register { .. } => "register",
+            Frame::Claim { .. } => "claim",
+            Frame::Plan { .. } => "plan",
+            Frame::Download { .. } => "download",
+            Frame::Upload { .. } => "upload",
+            Frame::Complete { .. } => "complete",
+            Frame::Heartbeat { .. } => "heartbeat",
+            Frame::Abort { .. } => "abort",
+        }
+    }
+
+    fn type_id(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::Register { .. } => 2,
+            Frame::Claim { .. } => 3,
+            Frame::Plan { .. } => 4,
+            Frame::Download { .. } => 5,
+            Frame::Upload { .. } => 6,
+            Frame::Complete { .. } => 7,
+            Frame::Heartbeat { .. } => 8,
+            Frame::Abort { .. } => 9,
+        }
+    }
+
+    /// Serialize to header + body bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Hello { config } => {
+                body.extend_from_slice(config.as_bytes());
+            }
+            Frame::Register { lo, hi } => {
+                put_u64(&mut body, *lo);
+                put_u64(&mut body, *hi);
+            }
+            Frame::Claim { round, cid }
+            | Frame::Heartbeat { round, cid } => {
+                put_u64(&mut body, *round);
+                put_u64(&mut body, *cid);
+            }
+            Frame::Plan { round, cid, sampled, cancelled } => {
+                put_u64(&mut body, *round);
+                put_u64(&mut body, *cid);
+                body.push(u8::from(*sampled));
+                body.push(u8::from(*cancelled));
+            }
+            Frame::Download { round, cid, codec, payload } => {
+                put_u64(&mut body, *round);
+                put_u64(&mut body, *cid);
+                put_str(&mut body, codec);
+                body.extend_from_slice(payload);
+            }
+            Frame::Upload {
+                round,
+                cid,
+                weight,
+                mean_loss,
+                mean_acc,
+                codec,
+                payload,
+            } => {
+                put_u64(&mut body, *round);
+                put_u64(&mut body, *cid);
+                put_f64(&mut body, *weight);
+                put_f64(&mut body, *mean_loss);
+                put_f64(&mut body, *mean_acc);
+                put_str(&mut body, codec);
+                body.extend_from_slice(payload);
+            }
+            Frame::Complete { round, cid, status } => {
+                put_u64(&mut body, *round);
+                put_u64(&mut body, *cid);
+                body.push(*status);
+            }
+            Frame::Abort { reason } => {
+                body.extend_from_slice(reason.as_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+        out.push(WIRE_MAGIC[0]);
+        out.push(WIRE_MAGIC[1]);
+        out.push(WIRE_VERSION);
+        out.push(self.type_id());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one complete frame from a byte slice (header included).
+    /// Never panics on arbitrary input: truncation, bad magic/version,
+    /// an oversized length prefix, an unknown type, trailing bytes and
+    /// malformed strings all come back as typed errors.
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        if bytes.len() < HEADER_LEN {
+            return Err(Error::parse(format!(
+                "wire frame shorter than its {HEADER_LEN}-byte header"
+            )));
+        }
+        let mut header = [0u8; HEADER_LEN];
+        header.copy_from_slice(&bytes[..HEADER_LEN]);
+        let (typ, len) = check_header(&header)?;
+        let body = &bytes[HEADER_LEN..];
+        if body.len() != len {
+            return Err(Error::parse(format!(
+                "wire frame length prefix says {len} byte(s), found {}",
+                body.len()
+            )));
+        }
+        decode_body(typ, body)
+    }
+}
+
+/// Serialize and flush one frame.
+fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    w.write_all(&frame.encode())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Fill `buf`, surviving read timeouts: the server's handler sockets
+/// poll with a short timeout so they can observe shutdown, and a
+/// timeout mid-frame must *keep* the partial bytes and continue (a
+/// plain `read_exact` would corrupt the stream framing). Returns
+/// `Ok(false)` on a clean EOF (or shutdown) at a frame boundary;
+/// mid-frame EOF is a typed `UnexpectedEof`.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shared: Option<&Shared>,
+) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(Error::Io(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut
+                ) =>
+            {
+                if let Some(shared) = shared {
+                    if lock(&shared.state).shutdown {
+                        if got == 0 {
+                            return Ok(false);
+                        }
+                        return Err(Error::Io(std::io::Error::new(
+                            ErrorKind::TimedOut,
+                            "server shutting down mid-frame",
+                        )));
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame off the stream; `Ok(None)` means the peer hung up
+/// (or the server is shutting down) at a frame boundary.
+fn read_frame_poll(
+    stream: &mut TcpStream,
+    shared: Option<&Shared>,
+) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    if !read_full(stream, &mut header, shared)? {
+        return Ok(None);
+    }
+    let (typ, len) = check_header(&header)?;
+    let mut body = vec![0u8; len];
+    if !read_full(stream, &mut body, shared)? {
+        return Err(Error::Io(std::io::Error::new(
+            ErrorKind::UnexpectedEof,
+            "connection closed mid-frame",
+        )));
+    }
+    decode_body(typ, &body).map(Some)
+}
+
+/// What to do when a round outlives `round_timeout_ms`
+/// (`wire_on_timeout` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFaultPolicy {
+    /// Force-drop every unsettled slot and complete the round — the
+    /// networked analogue of the simulator's failure injection.
+    #[default]
+    Drop,
+    /// Abort the whole run with an error.
+    Abort,
+}
+
+impl WireFaultPolicy {
+    /// Parse `drop | abort`.
+    pub fn parse(s: &str) -> Option<WireFaultPolicy> {
+        match s {
+            "drop" => Some(WireFaultPolicy::Drop),
+            "abort" => Some(WireFaultPolicy::Abort),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WireFaultPolicy::Drop => "drop",
+            WireFaultPolicy::Abort => "abort",
+        }
+    }
+}
+
+/// One slot of a gathering round.
+#[derive(Debug)]
+enum Slot {
+    /// Sampled, nobody has claimed it yet.
+    Open,
+    /// A connection owns it until the lease deadline.
+    Claimed { lease_deadline_ms: u64 },
+    /// The result is in (upload, drop, or pre-planned cancellation).
+    Settled(ClientResult),
+}
+
+/// Outcome of a [`ClaimTable::claim`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClaimGrant {
+    /// The slot is yours; train and upload (or report a drop).
+    Granted,
+    /// This client is not in the round's sample.
+    NotSampled,
+    /// Sampled but pre-cancelled by the coordinator (oversampling cut)
+    /// — nothing to do, the server already accounted the download.
+    Cancelled,
+    /// The slot is already claimed or settled — a protocol violation.
+    Conflict,
+}
+
+/// The gathering state of one announced round: one slot per sampled
+/// client, in sampling order. Pure data plus injected `now_ms`
+/// timestamps — no clock, no socket — so its lease/expiry state
+/// machine unit-tests deterministically (`tests/wire.rs`).
+///
+/// Cancelled slots are pre-settled at construction with the same
+/// `ClientResult` shape the in-process executors produce (download
+/// charged, no update, `cancelled: true`), because a pre-cancelled
+/// wire client never downloads — the coordinator accounts it.
+#[derive(Debug)]
+pub struct ClaimTable {
+    round: usize,
+    /// Sampled ids, sorted ascending (the sampler contract) — slot
+    /// order is sampling order, which is the merge's fold order.
+    ids: Vec<usize>,
+    slots: Vec<Slot>,
+    /// Broadcast size every slot charges as its download.
+    down_bytes: usize,
+    lease_ms: u64,
+}
+
+impl ClaimTable {
+    pub fn new(
+        round: usize,
+        client_ids: &[usize],
+        cancelled_ids: &[usize],
+        down_bytes: usize,
+        lease_ms: u64,
+    ) -> ClaimTable {
+        let slots = client_ids
+            .iter()
+            .map(|&cid| {
+                if cancelled_ids.binary_search(&cid).is_ok() {
+                    Slot::Settled(ClientResult {
+                        cid,
+                        down_bytes,
+                        update: None,
+                        cancelled: true,
+                    })
+                } else {
+                    Slot::Open
+                }
+            })
+            .collect();
+        ClaimTable {
+            round,
+            ids: client_ids.to_vec(),
+            slots,
+            down_bytes,
+            lease_ms,
+        }
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn down_bytes(&self) -> usize {
+        self.down_bytes
+    }
+
+    fn idx(&self, cid: usize) -> Option<usize> {
+        self.ids.binary_search(&cid).ok()
+    }
+
+    fn dropped_result(cid: usize, down_bytes: usize) -> ClientResult {
+        ClientResult { cid, down_bytes, update: None, cancelled: false }
+    }
+
+    /// Try to claim `cid`'s slot, leasing it until
+    /// `now_ms + lease_ms`.
+    pub fn claim(&mut self, cid: usize, now_ms: u64) -> ClaimGrant {
+        let Some(i) = self.idx(cid) else {
+            return ClaimGrant::NotSampled;
+        };
+        match &self.slots[i] {
+            Slot::Open => {
+                self.slots[i] = Slot::Claimed {
+                    lease_deadline_ms: now_ms + self.lease_ms,
+                };
+                ClaimGrant::Granted
+            }
+            Slot::Settled(r) if r.cancelled => ClaimGrant::Cancelled,
+            _ => ClaimGrant::Conflict,
+        }
+    }
+
+    /// Extend a live lease; `false` if the slot holds no live claim.
+    pub fn heartbeat(&mut self, cid: usize, now_ms: u64) -> bool {
+        let Some(i) = self.idx(cid) else { return false };
+        match &mut self.slots[i] {
+            Slot::Claimed { lease_deadline_ms } => {
+                *lease_deadline_ms = now_ms + self.lease_ms;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Deliver a claimed slot's result; `false` if there is no live
+    /// claim to settle (a late upload after a lease expiry must not
+    /// double-count — the drop already stands).
+    pub fn settle(&mut self, cid: usize, res: ClientResult) -> bool {
+        let Some(i) = self.idx(cid) else { return false };
+        if !matches!(self.slots[i], Slot::Claimed { .. }) {
+            return false;
+        }
+        self.slots[i] = Slot::Settled(res);
+        true
+    }
+
+    /// Settle a live claim as a dropout (the client hung up, or told
+    /// us so with `Complete(DROPPED)`).
+    pub fn drop_claim(&mut self, cid: usize) -> bool {
+        let res = Self::dropped_result(cid, self.down_bytes);
+        self.settle(cid, res)
+    }
+
+    /// Settle every lease-expired claim as a dropout; returns how
+    /// many expired.
+    pub fn expire(&mut self, now_ms: u64) -> usize {
+        let down_bytes = self.down_bytes;
+        let mut n = 0;
+        for (slot, &cid) in self.slots.iter_mut().zip(&self.ids) {
+            match *slot {
+                Slot::Claimed { lease_deadline_ms }
+                    if lease_deadline_ms <= now_ms =>
+                {
+                    *slot = Slot::Settled(Self::dropped_result(
+                        cid, down_bytes,
+                    ));
+                    n += 1;
+                }
+                _ => {}
+            }
+        }
+        n
+    }
+
+    /// Round-deadline policy `drop`: every unsettled slot — claimed
+    /// or never claimed — becomes a dropout, exactly like the
+    /// simulator's failure injection, and the round completes without
+    /// the stragglers.
+    pub fn force_drop(&mut self) -> usize {
+        let down_bytes = self.down_bytes;
+        let mut n = 0;
+        for (slot, &cid) in self.slots.iter_mut().zip(&self.ids) {
+            if !matches!(slot, Slot::Settled(_)) {
+                *slot =
+                    Slot::Settled(Self::dropped_result(cid, down_bytes));
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Every slot settled?
+    pub fn complete(&self) -> bool {
+        self.slots.iter().all(|s| matches!(s, Slot::Settled(_)))
+    }
+
+    /// The settled results in slot (sampling) order; errors if the
+    /// table is read out before completion.
+    pub fn into_results(self) -> Result<Vec<ClientResult>> {
+        let round = self.round;
+        self.slots
+            .into_iter()
+            .map(|s| match s {
+                Slot::Settled(r) => Ok(r),
+                _ => Err(Error::invalid(format!(
+                    "round {round} claim table read out before \
+                     completion"
+                ))),
+            })
+            .collect()
+    }
+}
+
+/// Hands socket-delivered results to the shard merge in slot order —
+/// the executor the wire server passes to
+/// [`Simulation::merge_round`]. Keyed by cid so the sharded fan-out
+/// (each shard asks for its own contiguous slice, possibly from its
+/// own thread) finds its results regardless of partitioning.
+struct ReplayExecutor {
+    results: Mutex<BTreeMap<usize, ClientResult>>,
+}
+
+impl ReplayExecutor {
+    fn new(results: Vec<ClientResult>) -> ReplayExecutor {
+        ReplayExecutor {
+            results: Mutex::new(
+                results.into_iter().map(|r| (r.cid, r)).collect(),
+            ),
+        }
+    }
+}
+
+impl ClientExecutor for ReplayExecutor {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn execute(
+        &self,
+        _ctx: &RoundContext<'_>,
+        clients: &[usize],
+        sink: &mut dyn RoundSink,
+    ) -> Result<()> {
+        for (i, &cid) in clients.iter().enumerate() {
+            let res =
+                lock(&self.results).remove(&cid).ok_or_else(|| {
+                    Error::invalid(format!(
+                        "replay executor has no result for client {cid}"
+                    ))
+                })?;
+            sink.push(i, res)?;
+        }
+        Ok(())
+    }
+}
+
+/// Monotonic millisecond clock for leases and deadlines.
+struct WireClock {
+    start: Instant,
+}
+
+impl WireClock {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+}
+
+/// Server tunables (`flocora serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Claim lease: a client silent this long is settled as a drop.
+    pub lease_ms: u64,
+    /// Whole-round deadline before `on_timeout` applies.
+    pub round_timeout_ms: u64,
+    pub on_timeout: WireFaultPolicy,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            lease_ms: 30_000,
+            round_timeout_ms: 60_000,
+            on_timeout: WireFaultPolicy::Drop,
+        }
+    }
+}
+
+/// Mutable server state behind the one mutex; the condvar signals
+/// round installs, settles and shutdown.
+struct WireState {
+    /// The round currently gathering, if any.
+    cur: Option<ClaimTable>,
+    /// The broadcast message served while `cur` is live.
+    download: Option<Message>,
+    /// First round index not yet merged — claims below it are stale.
+    next_round: usize,
+    finished: bool,
+    aborted: Option<String>,
+    shutdown: bool,
+    /// Live handler connections (graceful-drain accounting).
+    conns: usize,
+}
+
+struct Shared {
+    state: Mutex<WireState>,
+    cv: Condvar,
+    config_blob: String,
+    num_clients: usize,
+    clock: WireClock,
+}
+
+/// Lock a mutex, riding over poisoning: a panicking handler must not
+/// wedge the coordinator (the state it guards is valid at every
+/// release point).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Short condvar wait. Under the real `std` primitives this is a
+/// timed wait so deadline/expiry checks make progress even with no
+/// traffic; under loom (which models no time) it degrades to a plain
+/// wait — the protocol must therefore never *rely* on the timeout
+/// for correctness, only for liveness of the wall-clock checks.
+#[cfg(not(loom))]
+fn wait_brief<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(g, Duration::from_millis(25)) {
+        Ok((g, _)) => g,
+        Err(p) => p.into_inner().0,
+    }
+}
+
+#[cfg(loom)]
+fn wait_brief<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Run the full federated schedule as a networked coordinator on an
+/// already-bound listener. Returns the run summary plus the dropped
+/// count (everything `run_json` needs), with `rec` holding the same
+/// evaluated-round records an in-process run produces — byte-identical
+/// once wall-clock fields are stripped.
+pub fn serve_on(
+    listener: TcpListener,
+    engine: &Engine,
+    cfg: FlConfig,
+    opts: &ServeOpts,
+    rec: &mut Recorder,
+) -> Result<(RunSummary, u64)> {
+    cfg.validate()?;
+    if !cfg.hetero_ranks.is_empty() {
+        return Err(Error::invalid(
+            "wire mode serves homogeneous federations only \
+             (hetero_ranks must be empty)",
+        ));
+    }
+    let config_blob = cfg.to_blob();
+    let num_clients = cfg.num_clients;
+    let mut sim = Simulation::new(engine, cfg)?;
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        state: Mutex::new(WireState {
+            cur: None,
+            download: None,
+            next_round: 0,
+            finished: false,
+            aborted: None,
+            shutdown: false,
+            conns: 0,
+        }),
+        cv: Condvar::new(),
+        config_blob,
+        num_clients,
+        clock: WireClock { start: Instant::now() },
+    });
+
+    let handles: Arc<Mutex<JoinSet>> = Arc::new(Mutex::new(Vec::new()));
+    let acceptor = {
+        let shared = Arc::clone(&shared);
+        let handles = Arc::clone(&handles);
+        thread::spawn(move || accept_loop(listener, &shared, &handles))
+    };
+
+    let result =
+        sim.run_with(rec, |sim| drive_round(sim, &shared, opts));
+
+    finish(&shared, &result, opts.round_timeout_ms);
+    // The acceptor is parked in `accept`; a self-connection wakes it
+    // so it can observe the shutdown flag and return.
+    let _ = TcpStream::connect(addr);
+    let _ = acceptor.join();
+    let joins = std::mem::take(&mut *lock(&handles));
+    for h in joins {
+        let _ = h.join();
+    }
+    let summary = result?;
+    Ok((summary, sim.dropped_clients))
+}
+
+/// One wire round: announce the plan, gather the uploads, merge.
+fn drive_round(
+    sim: &mut Simulation,
+    shared: &Shared,
+    opts: &ServeOpts,
+) -> Result<(f64, f64)> {
+    let rp: RoundPlan = sim.plan_round()?;
+    let msg = rp.shared_msg.clone().ok_or_else(|| {
+        Error::invalid("wire round produced no broadcast message")
+    })?;
+    let down_bytes = msg.size_bytes();
+    let table = ClaimTable::new(
+        rp.round,
+        &rp.client_ids,
+        &rp.cancelled_ids,
+        down_bytes,
+        opts.lease_ms,
+    );
+    {
+        let mut st = lock(&shared.state);
+        st.cur = Some(table);
+        st.download = Some(msg);
+    }
+    shared.cv.notify_all();
+
+    let deadline = shared.clock.now_ms() + opts.round_timeout_ms;
+    let results = loop {
+        let mut st = lock(&shared.state);
+        let now = shared.clock.now_ms();
+        let table =
+            st.cur.as_mut().expect("round table installed above");
+        table.expire(now);
+        if table.complete() {
+            let table = st.cur.take().expect("checked above");
+            st.download = None;
+            st.next_round = rp.round + 1;
+            drop(st);
+            shared.cv.notify_all();
+            break table.into_results()?;
+        }
+        if now >= deadline {
+            match opts.on_timeout {
+                WireFaultPolicy::Drop => {
+                    table.force_drop();
+                    continue;
+                }
+                WireFaultPolicy::Abort => {
+                    return Err(Error::invalid(format!(
+                        "wire round {} timed out after {} ms with \
+                         unsettled clients",
+                        rp.round, opts.round_timeout_ms
+                    )));
+                }
+            }
+        }
+        let _st = wait_brief(&shared.cv, st);
+    };
+    let replay = ReplayExecutor::new(results);
+    sim.merge_round(&rp, Some(&replay))
+}
+
+/// Post-run teardown: publish the outcome, give connected clients a
+/// drain window to read their final replies and hang up, then cut the
+/// handlers off.
+fn finish(
+    shared: &Shared,
+    result: &Result<RunSummary>,
+    drain_ms: u64,
+) {
+    let mut st = lock(&shared.state);
+    if let Err(e) = result {
+        st.aborted = Some(e.to_string());
+    }
+    st.finished = true;
+    shared.cv.notify_all();
+    let deadline = shared.clock.now_ms() + drain_ms;
+    while st.conns > 0 && shared.clock.now_ms() < deadline {
+        st = wait_brief(&shared.cv, st);
+    }
+    st.shutdown = true;
+    drop(st);
+    shared.cv.notify_all();
+}
+
+/// Handler threads spawned by the acceptor, joined at shutdown.
+type JoinSet = Vec<thread::JoinHandle<()>>;
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: &Arc<Shared>,
+    handles: &Mutex<JoinSet>,
+) {
+    loop {
+        let conn = listener.accept();
+        if lock(&shared.state).shutdown {
+            return;
+        }
+        let Ok((stream, _)) = conn else { continue };
+        lock(&shared.state).conns += 1;
+        let shared = Arc::clone(shared);
+        let h = thread::spawn(move || {
+            handle_conn(stream, &shared);
+            lock(&shared.state).conns -= 1;
+            shared.cv.notify_all();
+        });
+        lock(handles).push(h);
+    }
+}
+
+/// One connection's request/reply loop. On exit — clean hang-up,
+/// protocol error, or shutdown — any claims this connection still
+/// holds are settled as dropouts (the crash path the kill tests
+/// exercise).
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.set_nodelay(true);
+    let mut claimed: Vec<(usize, usize)> = Vec::new();
+    loop {
+        let frame = match read_frame_poll(&mut stream, Some(shared)) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                let _ = write_frame(
+                    &mut stream,
+                    &Frame::Abort { reason: e.to_string() },
+                );
+                break;
+            }
+        };
+        let reply = match handle_frame(frame, shared, &mut claimed) {
+            Ok(reply) => reply,
+            Err(e) => Frame::Abort { reason: e.to_string() },
+        };
+        let abort = matches!(reply, Frame::Abort { .. });
+        if write_frame(&mut stream, &reply).is_err() || abort {
+            break;
+        }
+    }
+    settle_orphans(shared, &claimed);
+}
+
+/// Dispatch one client frame to its reply.
+fn handle_frame(
+    frame: Frame,
+    shared: &Shared,
+    claimed: &mut Vec<(usize, usize)>,
+) -> Result<Frame> {
+    match frame {
+        Frame::Hello { .. } => Ok(Frame::Hello {
+            config: shared.config_blob.clone(),
+        }),
+        Frame::Register { lo, hi } => {
+            if lo > hi || hi as usize >= shared.num_clients {
+                return Err(Error::invalid(format!(
+                    "register range {lo}-{hi} outside the \
+                     federation's 0-{}",
+                    shared.num_clients - 1
+                )));
+            }
+            Ok(Frame::Register { lo, hi })
+        }
+        Frame::Claim { round, cid } => {
+            claim_reply(shared, round, cid, claimed)
+        }
+        Frame::Download { round, cid, .. } => {
+            download_reply(shared, round, cid)
+        }
+        Frame::Upload {
+            round,
+            cid,
+            weight,
+            mean_loss,
+            mean_acc,
+            codec,
+            payload,
+        } => {
+            let (r, c) = (round as usize, cid as usize);
+            let up_bytes = payload.len();
+            let mut st = lock(&shared.state);
+            let Some(table) =
+                st.cur.as_mut().filter(|t| t.round() == r)
+            else {
+                return Err(Error::invalid(format!(
+                    "upload for round {round}, which is not gathering"
+                )));
+            };
+            let res = ClientResult {
+                cid: c,
+                down_bytes: table.down_bytes(),
+                update: Some(ClientUpdate {
+                    params: UpdateVector::Encoded(Message {
+                        payload,
+                        codec,
+                    }),
+                    weight,
+                    up_bytes,
+                    mean_loss,
+                    mean_acc,
+                }),
+                cancelled: false,
+            };
+            if !table.settle(c, res) {
+                return Err(Error::invalid(format!(
+                    "upload from client {cid} round {round}: no live \
+                     claim (lease expired?)"
+                )));
+            }
+            drop(st);
+            shared.cv.notify_all();
+            claimed.retain(|&(cr, cc)| !(cr == r && cc == c));
+            Ok(Frame::Complete { round, cid, status: STATUS_ACK })
+        }
+        Frame::Complete { round, cid, status } => {
+            if status != STATUS_DROPPED {
+                return Err(Error::invalid(format!(
+                    "client sent complete status {status}; only a \
+                     dropped notice ({STATUS_DROPPED}) flows upstream"
+                )));
+            }
+            let (r, c) = (round as usize, cid as usize);
+            let mut st = lock(&shared.state);
+            let ok = st
+                .cur
+                .as_mut()
+                .filter(|t| t.round() == r)
+                .is_some_and(|t| t.drop_claim(c));
+            drop(st);
+            if !ok {
+                return Err(Error::invalid(format!(
+                    "drop notice from client {cid} round {round}: no \
+                     live claim"
+                )));
+            }
+            shared.cv.notify_all();
+            claimed.retain(|&(cr, cc)| !(cr == r && cc == c));
+            Ok(Frame::Complete { round, cid, status: STATUS_ACK })
+        }
+        Frame::Heartbeat { round, cid } => {
+            let mut st = lock(&shared.state);
+            let now = shared.clock.now_ms();
+            if let Some(t) =
+                st.cur.as_mut().filter(|t| t.round() == round as usize)
+            {
+                t.heartbeat(cid as usize, now);
+            }
+            Ok(Frame::Heartbeat { round, cid })
+        }
+        Frame::Abort { reason } => {
+            Err(Error::invalid(format!("client aborted: {reason}")))
+        }
+        other => Err(Error::invalid(format!(
+            "unexpected {} frame from a client",
+            other.kind()
+        ))),
+    }
+}
+
+/// Answer a claim, blocking until the requested round is gathering
+/// (or known to be over/stale).
+fn claim_reply(
+    shared: &Shared,
+    round: u64,
+    cid: u64,
+    claimed: &mut Vec<(usize, usize)>,
+) -> Result<Frame> {
+    let r = round as usize;
+    let c = cid as usize;
+    let mut st = lock(&shared.state);
+    loop {
+        if let Some(reason) = &st.aborted {
+            return Ok(Frame::Abort { reason: reason.clone() });
+        }
+        if let Some(table) =
+            st.cur.as_mut().filter(|t| t.round() == r)
+        {
+            let now = shared.clock.now_ms();
+            return match table.claim(c, now) {
+                ClaimGrant::Granted => {
+                    claimed.push((r, c));
+                    Ok(Frame::Plan {
+                        round,
+                        cid,
+                        sampled: true,
+                        cancelled: false,
+                    })
+                }
+                ClaimGrant::Cancelled => Ok(Frame::Plan {
+                    round,
+                    cid,
+                    sampled: true,
+                    cancelled: true,
+                }),
+                ClaimGrant::NotSampled => Ok(Frame::Plan {
+                    round,
+                    cid,
+                    sampled: false,
+                    cancelled: false,
+                }),
+                ClaimGrant::Conflict => Err(Error::invalid(format!(
+                    "client {cid} claimed an already-taken slot in \
+                     round {round}"
+                ))),
+            };
+        }
+        if r < st.next_round {
+            // Already merged (or merging): whatever this client's slot
+            // was — unsampled, or force-dropped at the deadline — the
+            // round is spoken for and there is nothing left to do.
+            return Ok(Frame::Plan {
+                round,
+                cid,
+                sampled: false,
+                cancelled: false,
+            });
+        }
+        if st.finished || st.shutdown {
+            return Ok(Frame::Complete {
+                round,
+                cid,
+                status: STATUS_FINISHED,
+            });
+        }
+        st = wait_brief(&shared.cv, st);
+    }
+}
+
+/// Serve the broadcast download for a live claim (and extend its
+/// lease — pulling the message is proof of life).
+fn download_reply(shared: &Shared, round: u64, cid: u64) -> Result<Frame> {
+    let r = round as usize;
+    let mut st = lock(&shared.state);
+    let now = shared.clock.now_ms();
+    let live = st
+        .cur
+        .as_mut()
+        .filter(|t| t.round() == r)
+        .is_some_and(|t| t.heartbeat(cid as usize, now));
+    if !live {
+        return Err(Error::invalid(format!(
+            "download for round {round} client {cid}: no live claim"
+        )));
+    }
+    let msg = st
+        .download
+        .as_ref()
+        .expect("download present while a round gathers");
+    Ok(Frame::Download {
+        round,
+        cid,
+        codec: msg.codec.clone(),
+        payload: msg.payload.clone(),
+    })
+}
+
+/// Settle any claims a dead connection still holds as dropouts.
+fn settle_orphans(shared: &Shared, claimed: &[(usize, usize)]) {
+    if claimed.is_empty() {
+        return;
+    }
+    let mut settled = false;
+    let mut st = lock(&shared.state);
+    for &(round, cid) in claimed {
+        if let Some(t) =
+            st.cur.as_mut().filter(|t| t.round() == round)
+        {
+            settled |= t.drop_claim(cid);
+        }
+    }
+    drop(st);
+    if settled {
+        shared.cv.notify_all();
+    }
+}
+
+/// Client tunables (`flocora client` flags).
+#[derive(Debug, Clone)]
+pub struct ClientOpts {
+    /// `host:port` of the coordinator.
+    pub connect: String,
+    /// Inclusive client-id range this process hosts.
+    pub lo: usize,
+    pub hi: usize,
+    /// Extra connect attempts after the first fails.
+    pub retries: u32,
+    /// Base backoff between attempts (doubles, capped).
+    pub backoff_ms: u64,
+    /// Fault injection: hang up right after downloading for this
+    /// `(round, cid)` — the server must account it as a dropout.
+    pub kill_at: Option<(usize, usize)>,
+    /// Artifacts directory (`synthetic` for the synthetic backend).
+    pub artifacts: String,
+}
+
+impl Default for ClientOpts {
+    fn default() -> ClientOpts {
+        ClientOpts {
+            connect: "127.0.0.1:7070".into(),
+            lo: 0,
+            hi: 0,
+            retries: 5,
+            backoff_ms: 200,
+            kill_at: None,
+            artifacts: "synthetic".into(),
+        }
+    }
+}
+
+/// What a client process did, for operator logs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClientReport {
+    /// Claims granted (slots this process trained or was killed in).
+    pub claims: usize,
+    pub uploads: usize,
+    /// Voluntary dropouts (the dropout coin / `drop_plan`).
+    pub self_drops: usize,
+    /// The `kill_at` injection fired.
+    pub killed: bool,
+}
+
+fn connect_with_retry(opts: &ClientOpts) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..=opts.retries {
+        if attempt > 0 {
+            let backoff =
+                opts.backoff_ms << (attempt - 1).min(4);
+            // det-lint: allow(std-sync) — client-side connect backoff
+            // sleeps real time between attempts; nothing simulated
+            // (or loom-modelled) depends on it.
+            std::thread::sleep(Duration::from_millis(backoff));
+        }
+        match TcpStream::connect(&opts.connect) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(Error::invalid(format!(
+        "cannot reach {} after {} attempt(s): {}",
+        opts.connect,
+        opts.retries + 1,
+        last.map_or_else(|| "no attempt made".into(), |e| e.to_string())
+    )))
+}
+
+fn unexpected(frame: &Frame, stage: &str) -> Error {
+    Error::invalid(format!(
+        "unexpected {} frame during {stage}",
+        frame.kind()
+    ))
+}
+
+/// Blocking read of the server's lockstep reply.
+fn read_reply(stream: &mut TcpStream) -> Result<Frame> {
+    read_frame_poll(stream, None)?.ok_or_else(|| {
+        Error::Io(std::io::Error::new(
+            ErrorKind::UnexpectedEof,
+            "server closed the connection",
+        ))
+    })
+}
+
+/// Hello handshake: fetch the config blob and rebuild the run config.
+fn hello_handshake(stream: &mut TcpStream) -> Result<FlConfig> {
+    write_frame(stream, &Frame::Hello { config: String::new() })?;
+    let blob = match read_reply(stream)? {
+        Frame::Hello { config } => config,
+        other => return Err(unexpected(&other, "hello")),
+    };
+    let mut cfg = FlConfig::default();
+    loader::apply_str(&mut cfg, &blob)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn register(stream: &mut TcpStream, opts: &ClientOpts) -> Result<()> {
+    write_frame(
+        stream,
+        &Frame::Register { lo: opts.lo as u64, hi: opts.hi as u64 },
+    )?;
+    match read_reply(stream)? {
+        Frame::Register { .. } => Ok(()),
+        Frame::Abort { reason } => Err(Error::invalid(format!(
+            "server rejected registration: {reason}"
+        ))),
+        other => Err(unexpected(&other, "register")),
+    }
+}
+
+/// Run a wire client hosting cids `lo..=hi`: register, then for every
+/// round claim each hosted slot, download, train via the *same*
+/// [`run_client`] the in-process executors run, and upload (or report
+/// the dropout coin's verdict). Returns when the server says the run
+/// is finished or every round has been visited.
+pub fn run_client_loop(opts: &ClientOpts) -> Result<ClientReport> {
+    if opts.lo > opts.hi {
+        return Err(Error::invalid(format!(
+            "client id range {}-{} is empty",
+            opts.lo, opts.hi
+        )));
+    }
+    let mut stream = connect_with_retry(opts)?;
+    let cfg = hello_handshake(&mut stream)?;
+    register(&mut stream, opts)?;
+
+    let engine = Engine::new(&opts.artifacts)?;
+    let session = engine.session(&cfg.tag)?;
+    let spec = &session.spec;
+    // Bit-for-bit the federation the server built: same LDA partition
+    // coordinates, same frozen base from the same init artifact/seed.
+    let federation = lda_partition(
+        cfg.num_clients,
+        cfg.samples_per_client,
+        spec.num_classes,
+        spec.image_size,
+        cfg.lda_alpha,
+        cfg.seed,
+    );
+    let (_global, frozen) = session.init(cfg.seed)?;
+    // One codec instance for the whole run: stateful codecs (sparse
+    // error feedback) key their residuals by cid, and this process
+    // hosts its cids exclusively — so the residual streams match the
+    // server-side simulation exactly.
+    let codec = cfg.codec.build();
+    let lora_scale = cfg.lora_scale(spec.rank);
+
+    let mut report = ClientReport::default();
+    let mut killed_at: Option<(usize, usize)> = None;
+    for round in 0..cfg.rounds {
+        for cid in opts.lo..=opts.hi {
+            if killed_at == Some((round, cid)) {
+                // The pre-kill connection already claimed this slot;
+                // the server settled it as a dropout on our EOF.
+                continue;
+            }
+            write_frame(
+                &mut stream,
+                &Frame::Claim {
+                    round: round as u64,
+                    cid: cid as u64,
+                },
+            )?;
+            match read_reply(&mut stream)? {
+                Frame::Complete { status: STATUS_FINISHED, .. } => {
+                    return Ok(report)
+                }
+                Frame::Plan { sampled: false, .. } => continue,
+                Frame::Plan { cancelled: true, .. } => continue,
+                Frame::Plan { .. } => {}
+                Frame::Abort { reason } => {
+                    return Err(Error::invalid(format!(
+                        "server aborted: {reason}"
+                    )))
+                }
+                other => return Err(unexpected(&other, "claim")),
+            }
+            report.claims += 1;
+
+            write_frame(
+                &mut stream,
+                &Frame::Download {
+                    round: round as u64,
+                    cid: cid as u64,
+                    codec: String::new(),
+                    payload: Vec::new(),
+                },
+            )?;
+            let msg = match read_reply(&mut stream)? {
+                Frame::Download { codec, payload, .. } => {
+                    Message { payload, codec }
+                }
+                Frame::Abort { reason } => {
+                    return Err(Error::invalid(format!(
+                        "server aborted: {reason}"
+                    )))
+                }
+                other => return Err(unexpected(&other, "download")),
+            };
+            // Keep the lease warm before the training stretch.
+            write_frame(
+                &mut stream,
+                &Frame::Heartbeat {
+                    round: round as u64,
+                    cid: cid as u64,
+                },
+            )?;
+            match read_reply(&mut stream)? {
+                Frame::Heartbeat { .. } => {}
+                other => return Err(unexpected(&other, "heartbeat")),
+            }
+
+            if opts.kill_at == Some((round, cid)) {
+                // Fault injection: vanish mid-round. The server's EOF
+                // path settles this slot as a drop — bit-identical to
+                // a sim-side `drop_plan` entry — then this process
+                // comes back as a fresh connection for its remaining
+                // slots.
+                drop(stream);
+                report.killed = true;
+                killed_at = Some((round, cid));
+                stream = connect_with_retry(opts)?;
+                let _ = hello_handshake(&mut stream)?;
+                register(&mut stream, opts)?;
+                continue;
+            }
+
+            let lr = cfg.lr * cfg.lr_decay.powi(round as i32);
+            let ctx = RoundContext {
+                session: &session,
+                codec: codec.as_ref(),
+                federation: &federation,
+                frozen: &frozen,
+                downloads: Downloads::Homogeneous(&msg),
+                trainer: LocalTrainer {
+                    local_epochs: cfg.local_epochs,
+                    lr,
+                    lora_scale,
+                },
+                cfg: &cfg,
+                round,
+                plan: None,
+                // The server pre-settles planned cancellations, so a
+                // slot that reaches this client is never cancelled.
+                cancelled: &[],
+            };
+            let result = run_client(&ctx, cid)?;
+            match result.update {
+                None => {
+                    report.self_drops += 1;
+                    write_frame(
+                        &mut stream,
+                        &Frame::Complete {
+                            round: round as u64,
+                            cid: cid as u64,
+                            status: STATUS_DROPPED,
+                        },
+                    )?;
+                }
+                Some(up) => {
+                    let UpdateVector::Encoded(up_msg) = up.params
+                    else {
+                        return Err(Error::invalid(
+                            "homogeneous client produced a dense \
+                             update",
+                        ));
+                    };
+                    report.uploads += 1;
+                    write_frame(
+                        &mut stream,
+                        &Frame::Upload {
+                            round: round as u64,
+                            cid: cid as u64,
+                            weight: up.weight,
+                            mean_loss: up.mean_loss,
+                            mean_acc: up.mean_acc,
+                            codec: up_msg.codec,
+                            payload: up_msg.payload,
+                        },
+                    )?;
+                }
+            }
+            match read_reply(&mut stream)? {
+                Frame::Complete { status: STATUS_ACK, .. } => {}
+                Frame::Abort { reason } => {
+                    return Err(Error::invalid(format!(
+                        "server aborted: {reason}"
+                    )))
+                }
+                other => return Err(unexpected(&other, "round close")),
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_rejects_magic_version_and_oversize() {
+        let good = Frame::Claim { round: 1, cid: 2 }.encode();
+        assert_eq!(good[0], WIRE_MAGIC[0]);
+        let mut h = [0u8; HEADER_LEN];
+        h.copy_from_slice(&good[..HEADER_LEN]);
+        assert!(check_header(&h).is_ok());
+
+        let mut bad_magic = h;
+        bad_magic[0] ^= 0xFF;
+        assert!(check_header(&bad_magic).is_err());
+
+        let mut bad_version = h;
+        bad_version[2] = WIRE_VERSION + 1;
+        assert!(check_header(&bad_version).is_err());
+
+        let mut oversize = h;
+        oversize[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = check_header(&oversize).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "{err}");
+    }
+
+    #[test]
+    fn claim_table_lifecycle() {
+        let mut t = ClaimTable::new(3, &[1, 4, 7], &[4], 100, 1_000);
+        assert_eq!(t.round(), 3);
+        assert!(!t.complete());
+        assert_eq!(t.claim(2, 0), ClaimGrant::NotSampled);
+        assert_eq!(t.claim(4, 0), ClaimGrant::Cancelled);
+        assert_eq!(t.claim(1, 0), ClaimGrant::Granted);
+        assert_eq!(t.claim(1, 0), ClaimGrant::Conflict);
+        // Heartbeat extends the lease past the original deadline.
+        assert!(t.heartbeat(1, 500));
+        assert_eq!(t.expire(1_200), 0);
+        assert_eq!(t.expire(1_600), 1);
+        // The expired slot settled as a drop; the open one remains.
+        assert_eq!(t.claim(7, 0), ClaimGrant::Granted);
+        assert!(t.drop_claim(7));
+        assert!(t.complete());
+        let res = t.into_results().unwrap();
+        assert_eq!(
+            res.iter().map(|r| r.cid).collect::<Vec<_>>(),
+            [1, 4, 7]
+        );
+        assert!(res[1].cancelled);
+        assert!(res.iter().all(|r| r.down_bytes == 100));
+        assert!(res.iter().all(|r| r.update.is_none()));
+    }
+
+    #[test]
+    fn fault_policy_parses() {
+        assert_eq!(
+            WireFaultPolicy::parse("drop"),
+            Some(WireFaultPolicy::Drop)
+        );
+        assert_eq!(
+            WireFaultPolicy::parse("abort"),
+            Some(WireFaultPolicy::Abort)
+        );
+        assert_eq!(WireFaultPolicy::parse("panic"), None);
+        assert_eq!(WireFaultPolicy::Drop.label(), "drop");
+    }
+}

@@ -1,0 +1,370 @@
+//! Wire-mode keystone tests: the networked coordinator/client pair
+//! must be **byte-identical** to the in-process simulator.
+//!
+//! Three layers:
+//!
+//! 1. frame-codec property/fuzz tests — every frame round-trips;
+//!    truncation at every byte offset, bad magic/version, oversized
+//!    length prefixes, unknown types, trailing bytes, malformed
+//!    strings and bad bools all come back as typed errors, never
+//!    panics or huge allocations;
+//! 2. claim-table lease/expiry state-machine tests with injected
+//!    timestamps;
+//! 3. loopback runs — N client threads against an in-process
+//!    `serve_on` over real TCP, wall-stripped `run_json` asserted
+//!    byte-equal to `Simulation::run` of the same config, across
+//!    aggregators × codecs, plus a killed-client round asserted
+//!    byte-equal to the simulator's `drop_plan` injection.
+
+use std::net::TcpListener;
+use std::thread;
+
+use flocora::config::FlConfig;
+use flocora::coordinator::executor::ClientResult;
+use flocora::coordinator::Simulation;
+use flocora::metrics::{run_json, strip_wall, Recorder};
+use flocora::runtime::Engine;
+use flocora::transport::wire::{run_client_loop, serve_on, ClaimTable,
+                               ClientOpts, ClientReport, Frame, ServeOpts,
+                               HEADER_LEN, MAX_FRAME_LEN, WIRE_VERSION};
+
+// --- 1. frame codec ---------------------------------------------------
+
+fn sample_frames() -> Vec<Frame> {
+    vec![
+        Frame::Hello { config: "rounds = 3\nseed = 7\n".into() },
+        Frame::Hello { config: String::new() },
+        Frame::Register { lo: 0, hi: 7 },
+        Frame::Claim { round: 2, cid: 5 },
+        Frame::Plan { round: 2, cid: 5, sampled: true, cancelled: false },
+        Frame::Plan { round: 0, cid: 0, sampled: false, cancelled: true },
+        Frame::Download {
+            round: 1,
+            cid: 3,
+            codec: "q4".into(),
+            payload: vec![0, 1, 2, 254, 255],
+        },
+        Frame::Download {
+            round: 0,
+            cid: 0,
+            codec: String::new(),
+            payload: Vec::new(),
+        },
+        Frame::Upload {
+            round: 9,
+            cid: 1,
+            weight: 16.0,
+            mean_loss: 2.302,
+            mean_acc: 0.125,
+            codec: "sparse_ef:0.5".into(),
+            payload: (0..=255).collect(),
+        },
+        Frame::Complete { round: 1, cid: 2, status: 2 },
+        Frame::Heartbeat { round: 4, cid: 4 },
+        Frame::Abort { reason: "lease expired".into() },
+    ]
+}
+
+#[test]
+fn every_frame_round_trips() {
+    for frame in sample_frames() {
+        let bytes = frame.encode();
+        let back = Frame::decode(&bytes)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", frame.kind()));
+        assert_eq!(back, frame);
+    }
+}
+
+#[test]
+fn truncation_at_every_offset_is_a_typed_error() {
+    for frame in sample_frames() {
+        let bytes = frame.encode();
+        for len in 0..bytes.len() {
+            let res = Frame::decode(&bytes[..len]);
+            assert!(
+                res.is_err(),
+                "{} truncated to {len}/{} decoded",
+                frame.kind(),
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    for frame in sample_frames() {
+        // Grow the *body* while keeping the length prefix honest-sized:
+        // a frame followed by garbage must not silently decode.
+        let mut bytes = frame.encode();
+        bytes.push(0xAB);
+        assert!(
+            Frame::decode(&bytes).is_err(),
+            "{} with a trailing byte decoded",
+            frame.kind()
+        );
+    }
+}
+
+#[test]
+fn bad_magic_and_version_are_rejected() {
+    let good = Frame::Heartbeat { round: 0, cid: 0 }.encode();
+    for byte in 0..2 {
+        let mut bad = good.clone();
+        bad[byte] ^= 0x01;
+        assert!(Frame::decode(&bad).is_err(), "magic byte {byte}");
+    }
+    let mut bad = good.clone();
+    bad[2] = WIRE_VERSION + 1;
+    let err = Frame::decode(&bad).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn oversized_length_prefix_is_capped_before_allocation() {
+    // An 8-byte header claiming a multi-GB body must fail on the cap
+    // check, not attempt the allocation (the slice is only 8 bytes, but
+    // the error must be the cap, proving the check precedes any use of
+    // the length).
+    let mut header = Frame::Heartbeat { round: 0, cid: 0 }.encode();
+    header.truncate(HEADER_LEN);
+    let huge = (MAX_FRAME_LEN as u32) + 1;
+    header[4..8].copy_from_slice(&huge.to_le_bytes());
+    let err = Frame::decode(&header).unwrap_err().to_string();
+    assert!(err.contains("cap"), "{err}");
+}
+
+#[test]
+fn unknown_frame_type_is_rejected() {
+    let mut bytes = Frame::Heartbeat { round: 0, cid: 0 }.encode();
+    bytes[3] = 42;
+    let err = Frame::decode(&bytes).unwrap_err().to_string();
+    assert!(err.contains("unknown wire frame type 42"), "{err}");
+}
+
+#[test]
+fn bad_bool_and_bad_utf8_are_rejected() {
+    // Plan's `sampled` byte set to 2 (body layout: round u64, cid u64,
+    // sampled u8, cancelled u8).
+    let mut plan = Frame::Plan {
+        round: 1,
+        cid: 2,
+        sampled: true,
+        cancelled: false,
+    }
+    .encode();
+    plan[HEADER_LEN + 16] = 2;
+    let err = Frame::decode(&plan).unwrap_err().to_string();
+    assert!(err.contains("bool"), "{err}");
+
+    // Hello body that is not UTF-8.
+    let mut hello = Frame::Hello { config: "ab".into() }.encode();
+    hello[HEADER_LEN] = 0xFF;
+    hello[HEADER_LEN + 1] = 0xFE;
+    let err = Frame::decode(&hello).unwrap_err().to_string();
+    assert!(err.contains("UTF-8"), "{err}");
+}
+
+#[test]
+fn upload_stats_cross_the_wire_bit_exactly() {
+    // f64 stats travel as IEEE bits — even NaN payloads (a fully
+    // dropped shard's mean loss) must survive bit-for-bit.
+    let frame = Frame::Upload {
+        round: 0,
+        cid: 0,
+        weight: 12.0,
+        mean_loss: f64::NAN,
+        mean_acc: f64::from_bits(0x3FF0_0000_0000_0001),
+        codec: "fp32".into(),
+        payload: vec![1, 2, 3],
+    };
+    let Frame::Upload { mean_loss, mean_acc, .. } =
+        Frame::decode(&frame.encode()).unwrap()
+    else {
+        panic!("decoded to a different frame type");
+    };
+    assert_eq!(mean_loss.to_bits(), f64::NAN.to_bits());
+    assert_eq!(mean_acc.to_bits(), 0x3FF0_0000_0000_0001);
+}
+
+// --- 2. claim table ---------------------------------------------------
+
+#[test]
+fn late_upload_after_lease_expiry_does_not_double_count() {
+    let mut t = ClaimTable::new(0, &[2, 5], &[], 64, 100);
+    t.claim(2, 0);
+    t.claim(5, 0);
+    // Client 2's lease runs out; its slot settles as a drop.
+    assert_eq!(t.expire(150), 1);
+    // The straggler's upload arrives anyway — refused: the drop stands.
+    let late = ClientResult {
+        cid: 2,
+        down_bytes: 64,
+        update: None,
+        cancelled: false,
+    };
+    assert!(!t.settle(2, late));
+    assert!(t.drop_claim(5));
+    let res = t.into_results().unwrap();
+    assert_eq!(res.len(), 2);
+    assert!(res.iter().all(|r| r.update.is_none() && !r.cancelled));
+}
+
+#[test]
+fn force_drop_settles_claimed_and_unclaimed_slots() {
+    let mut t = ClaimTable::new(1, &[0, 1, 2], &[1], 8, 1_000);
+    t.claim(0, 0);
+    // Slot 2 was never claimed; slot 1 is a pre-settled cancellation.
+    assert!(!t.complete());
+    assert_eq!(t.force_drop(), 2);
+    assert!(t.complete());
+    let res = t.into_results().unwrap();
+    assert!(res[1].cancelled);
+    assert!(!res[0].cancelled && !res[2].cancelled);
+}
+
+#[test]
+fn reading_out_an_incomplete_table_is_an_error() {
+    let mut t = ClaimTable::new(0, &[3], &[], 8, 1_000);
+    t.claim(3, 0);
+    assert!(t.into_results().is_err());
+}
+
+// --- 3. loopback byte-identity ---------------------------------------
+
+fn tiny_cfg(aggregator: &str, codec: &str) -> FlConfig {
+    let mut cfg = FlConfig {
+        tag: "micro8_lora_fc_r4".into(),
+        num_clients: 6,
+        clients_per_round: 3,
+        rounds: 3,
+        local_epochs: 1,
+        samples_per_client: 12,
+        test_samples: 24,
+        seed: 77,
+        ..FlConfig::default()
+    };
+    cfg.set("aggregator", aggregator).unwrap();
+    cfg.set("codec", codec).unwrap();
+    cfg
+}
+
+/// In-process reference: `Simulation::run`, exported exactly like
+/// `flocora train --json`, wall-stripped.
+fn sim_json(cfg: FlConfig) -> (String, u64) {
+    let engine = Engine::synthetic();
+    let mut sim = Simulation::new(&engine, cfg).unwrap();
+    let mut rec = Recorder::new("train");
+    let summary = sim.run(&mut rec).unwrap();
+    let dropped = sim.dropped_clients;
+    (strip_wall(&run_json(&rec, &summary, dropped)).to_string(), dropped)
+}
+
+/// Wire run: `serve_on` on a loopback listener plus one OS thread per
+/// client process, each hosting an id range (and optionally killing
+/// itself at a (round, cid) coordinate). Returns the wall-stripped
+/// JSON, the dropped count, and the client reports.
+fn wire_json(
+    cfg: FlConfig,
+    splits: &[(usize, usize)],
+    kill_at: Option<(usize, usize)>,
+) -> (String, u64, Vec<ClientReport>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let engine = Engine::synthetic();
+    let opts = ServeOpts::default();
+    let mut rec = Recorder::new("train");
+    let (served, reports) = thread::scope(|s| {
+        let server =
+            s.spawn(|| serve_on(listener, &engine, cfg, &opts, &mut rec));
+        let clients: Vec<_> = splits
+            .iter()
+            .map(|&(lo, hi)| {
+                let connect = addr.to_string();
+                s.spawn(move || {
+                    run_client_loop(&ClientOpts {
+                        connect,
+                        lo,
+                        hi,
+                        retries: 10,
+                        backoff_ms: 25,
+                        kill_at: kill_at
+                            .filter(|&(_, c)| c >= lo && c <= hi),
+                        artifacts: "synthetic".into(),
+                    })
+                })
+            })
+            .collect();
+        let reports: Vec<ClientReport> = clients
+            .into_iter()
+            .map(|c| c.join().unwrap().unwrap())
+            .collect();
+        (server.join().unwrap().unwrap(), reports)
+    });
+    let (summary, dropped) = served;
+    (
+        strip_wall(&run_json(&rec, &summary, dropped)).to_string(),
+        dropped,
+        reports,
+    )
+}
+
+#[test]
+fn loopback_matches_in_process_across_aggregators_and_codecs() {
+    for aggregator in ["fedavg", "svt", "exact"] {
+        for codec in ["fp32", "q4", "sparse_ef:0.5"] {
+            let (sim, sim_dropped) = sim_json(tiny_cfg(aggregator, codec));
+            let (wire, wire_dropped, reports) =
+                wire_json(tiny_cfg(aggregator, codec), &[(0, 2), (3, 5)],
+                          None);
+            assert_eq!(
+                sim, wire,
+                "wire run diverged from the simulator for \
+                 {aggregator}/{codec}"
+            );
+            assert_eq!(sim_dropped, wire_dropped);
+            // 3 sampled slots per round × 3 rounds, nobody dropped.
+            let uploads: usize = reports.iter().map(|r| r.uploads).sum();
+            assert_eq!(uploads, 9, "{aggregator}/{codec}");
+        }
+    }
+}
+
+#[test]
+fn killed_client_matches_the_simulators_drop_plan() {
+    // Every client is sampled every round (4 of 4), so the kill
+    // coordinate is guaranteed to be a live slot.
+    let mk = || {
+        let mut cfg = FlConfig {
+            tag: "micro8_lora_fc_r4".into(),
+            num_clients: 4,
+            clients_per_round: 4,
+            rounds: 3,
+            local_epochs: 1,
+            samples_per_client: 12,
+            test_samples: 24,
+            seed: 91,
+            ..FlConfig::default()
+        };
+        cfg.set("codec", "q8").unwrap();
+        cfg
+    };
+    // Simulator side: planned drop of client 2 in round 1.
+    let mut sim_cfg = mk();
+    sim_cfg.set("drop_plan", "1:2").unwrap();
+    let (sim, sim_dropped) = sim_json(sim_cfg);
+    // Wire side: the process hosting client 2 hangs up after its
+    // round-1 download, then reconnects.
+    let (wire, wire_dropped, reports) =
+        wire_json(mk(), &[(0, 1), (2, 3)], Some((1, 2)));
+    assert_eq!(sim_dropped, 1);
+    assert_eq!(wire_dropped, 1);
+    assert_eq!(
+        sim, wire,
+        "a killed wire client must be byte-identical to drop_plan"
+    );
+    assert_eq!(reports.iter().filter(|r| r.killed).count(), 1);
+    // 12 slots total, one lost to the kill.
+    let uploads: usize = reports.iter().map(|r| r.uploads).sum();
+    assert_eq!(uploads, 11);
+}

@@ -12,8 +12,12 @@
 //! * `map-iter` — no `HashMap` / `HashSet` in coordinator or
 //!   transport settle paths: their iteration order is nondeterministic.
 //! * `wall-clock` — no `Instant` / `SystemTime` outside
-//!   `util/benchkit.rs` and `main.rs`: simulated time comes from the
-//!   transport model, never the host clock.
+//!   `util/benchkit.rs`, `main.rs`, the CLI command modules
+//!   (`cli/`), and `transport/wire.rs`: simulated time comes from
+//!   the transport model, never the host clock. (The wire module is
+//!   the deliberate exception — real sockets lease claims and expire
+//!   stragglers in real time; its exports are wall-stripped before
+//!   any bit-identity comparison.)
 //! * `rand-crate` — no ambient RNG anywhere: randomness flows from
 //!   `Rng::for_client(seed, round, cid)` coordinates only.
 //! * `kernel-ref` — every public fast-path kernel in
@@ -167,7 +171,10 @@ fn analyze(rel: &str, raw: &str) -> Vec<Violation> {
     // --- token rules -------------------------------------------------
     let map_iter_scoped =
         rel.starts_with("coordinator/") || rel.starts_with("transport/");
-    let wall_clock_exempt = rel == "util/benchkit.rs" || rel == "main.rs";
+    let wall_clock_exempt = rel == "util/benchkit.rs"
+        || rel == "main.rs"
+        || rel == "transport/wire.rs"
+        || rel.starts_with("cli/");
 
     for (idx, line) in code_lines.iter().enumerate() {
         let lno = idx + 1;
@@ -208,8 +215,9 @@ fn analyze(rel: &str, raw: &str) -> Vec<Violation> {
                 &comment_or_attr,
                 lno,
                 "wall-clock",
-                "host clock outside util::benchkit / the CLI — \
-                 simulated time must come from the transport model",
+                "host clock outside util::benchkit / the CLI / the \
+                 wire transport — simulated time must come from the \
+                 transport model",
             );
         }
         if has_path_token(line, "rand::")
@@ -608,6 +616,25 @@ mod tests {
         assert!(rules_hit("main.rs", src).is_empty());
         // "Instantiate" is a different identifier.
         assert!(rules_hit("foo.rs", "fn Instantiate() {}\n").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_exempts_wire_but_not_its_neighbours() {
+        let src = "let deadline = Instant::now();\n";
+        // The real-socket transport and the CLI command modules lease
+        // and retry in genuine wall-clock time — exempt by path.
+        assert!(rules_hit("transport/wire.rs", src).is_empty());
+        assert!(rules_hit("cli/serve.rs", src).is_empty());
+        assert!(rules_hit("cli/client.rs", src).is_empty());
+        assert!(rules_hit("cli/mod.rs", src).is_empty());
+        // The exemption must not leak into the simulated-transport or
+        // coordinator paths next door.
+        assert_eq!(rules_hit("transport/stage.rs", src), ["wall-clock"]);
+        assert_eq!(rules_hit("transport/sim.rs", src), ["wall-clock"]);
+        assert_eq!(
+            rules_hit("coordinator/server.rs", src),
+            ["wall-clock"]
+        );
     }
 
     #[test]
